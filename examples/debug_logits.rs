@@ -1,0 +1,42 @@
+//! Debug: feed the exported graph the *clean* weights directly (no PCM) and
+//! print the first logits row, to compare against the python reference.
+
+use analognets::nn::expand_dw_dense;
+use analognets::runtime::{ArtifactStore, HostTensor};
+
+fn main() -> anyhow::Result<()> {
+    let store = ArtifactStore::open_default()?;
+    let vid = std::env::args().nth(1).unwrap_or("kws_full_e10_8b".into());
+    let meta = store.meta(&vid)?;
+    let tensors = store.weights(&vid)?;
+    let ds = store.dataset("kws")?;
+    let batch = 128;
+    let exe = store.executable(&vid, meta.trained_adc_bits.unwrap_or(8), batch)?;
+    let (ih, iw, ic) = meta.input_hwc;
+
+    let mut inputs = Vec::new();
+    inputs.push(HostTensor::new(vec![batch, ih, iw, ic],
+                                ds.padded_batch(0, batch)));
+    for (t, lm) in tensors.iter().zip(meta.layers.iter()) {
+        let t = if lm.kind == analognets::nn::LayerKind::Dw3x3 && lm.analog {
+            expand_dw_dense(t)
+        } else {
+            t.clone()
+        };
+        inputs.push(HostTensor::new(t.shape.clone(), t.data.clone()));
+    }
+    inputs.push(HostTensor::new(vec![meta.layers.len()],
+                                vec![1.0; meta.layers.len()]));
+    let logits = exe.run(&inputs)?;
+    println!("logits row0: {:?}", &logits[..meta.num_classes]);
+    let mut correct = 0;
+    for (i, row) in logits.chunks_exact(meta.num_classes).enumerate() {
+        let pred = row.iter().enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0 as u32;
+        correct += (pred == ds.y[i]) as usize;
+    }
+    println!("clean-weight HLO acc: {}/{batch}", correct);
+    println!("x[0][..8] = {:?}", &ds.x[..8]);
+    println!("y[..8] = {:?}", &ds.y[..8]);
+    Ok(())
+}

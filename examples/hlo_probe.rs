@@ -1,0 +1,30 @@
+//! Debug probe: run an arbitrary exported HLO with all-ones inputs of the
+//! shapes given in a JSON spec, print output stats.
+//!   hlo_probe /tmp/bisect_specs.json /tmp/bisect_<name>.hlo.txt <name>
+
+use analognets::runtime::{HostTensor, Runtime};
+use analognets::util::json;
+
+fn main() -> anyhow::Result<()> {
+    let mut args = std::env::args().skip(1);
+    let specs = json::parse_file(std::path::Path::new(&args.next().unwrap()))?;
+    let hlo = args.next().unwrap();
+    let name = args.next().unwrap();
+    let shapes = specs.req(&name)?.as_arr()?;
+    let rt = Runtime::cpu()?;
+    let exe = rt.load_hlo(std::path::Path::new(&hlo))?;
+    let mut inputs = Vec::new();
+    for s in shapes {
+        let dims = s.usizes()?;
+        let n: usize = dims.iter().product();
+        // deterministic non-trivial data
+        let data: Vec<f32> = (0..n).map(|i| ((i % 13) as f32 - 6.0) / 7.0).collect();
+        inputs.push(HostTensor::new(dims, data));
+    }
+    let out = exe.run(&inputs)?;
+    let sum: f64 = out.iter().map(|x| *x as f64).sum();
+    let nz = out.iter().filter(|x| x.abs() > 1e-9).count();
+    println!("{name}: len={} sum={sum:.4} nonzero={nz} head={:?}",
+             out.len(), &out[..out.len().min(6)]);
+    Ok(())
+}

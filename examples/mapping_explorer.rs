@@ -1,0 +1,62 @@
+//! Mapping explorer: interactive view of how each model lands on the CiM
+//! array, and what utilization/performance different array geometries give —
+//! the co-design loop the paper's Future Work section suggests.
+//!
+//!   cargo run --release --example mapping_explorer [-- --vid <vid>]
+
+use analognets::crossbar::ArrayGeom;
+use analognets::mapping::{layout, map_model, split_map_model};
+use analognets::runtime::ArtifactStore;
+use analognets::timing::{model_perf, EnergyModel};
+use analognets::util::cli::Args;
+use analognets::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let store = ArtifactStore::open_default()?;
+    let em = EnergyModel::default();
+
+    let vids: Vec<String> = match args.opt("vid") {
+        Some(v) => vec![v.to_string()],
+        None => vec!["kws_full_e10_8b".into(), "vww_full_e10_8b".into(),
+                     "micro_noise_e10".into()],
+    };
+
+    for vid in &vids {
+        let meta = store.meta(vid)?;
+        println!("\n################ {vid} ################");
+        let m = map_model(&meta, ArrayGeom::AON)?;
+        print!("{}", layout::ascii_map(&m, 64, 20));
+
+        let mut t = Table::new(
+            &format!("{vid}: geometry sweep (8-bit)"),
+            &["geometry", "fits whole?", "eff util %", "inf/s"],
+        );
+        for (label, rows, cols) in [("1024x512", 1024, 512),
+                                    ("512x512", 512, 512),
+                                    ("2048x256", 2048, 256),
+                                    ("256x256", 256, 256),
+                                    ("128x128", 128, 128),
+                                    ("64x64", 64, 64)] {
+            let geom = ArrayGeom::new(rows, cols);
+            match map_model(&meta, geom) {
+                Ok(mm) => {
+                    let p = model_perf(&mm, 8, &em);
+                    t.row(&[label.into(), "yes".into(),
+                            format!("{:.1}", 100.0 * mm.effective_utilization()),
+                            format!("{:.0}", p.inf_per_sec)]);
+                }
+                Err(_) => {
+                    let s = split_map_model(&meta, geom);
+                    let r = analognets::timing::perf::split_inference_rate(&s, 8, &em);
+                    t.row(&[label.into(),
+                            format!("no ({} tiles)", s.alloc_tiles()),
+                            format!("{:.1}", 100.0 * s.effective_utilization()),
+                            format!("{r:.0}")]);
+                }
+            }
+        }
+        t.print();
+    }
+    Ok(())
+}

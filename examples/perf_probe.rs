@@ -1,0 +1,58 @@
+//! Perf probe (no artifacts needed): measures the L3 substrate hot paths —
+//! the PCM weight-refresh loop before/after optimization, and the native
+//! GEMM. Used for the EXPERIMENTS.md §Perf iteration log.
+//!
+//!   cargo run --release --example perf_probe
+
+use analognets::pcm::{device, PcmParams, ProgrammedWeights};
+use analognets::simulator::gemm;
+use analognets::util::rng::Rng;
+use std::time::Instant;
+
+fn main() {
+    let mut rng = Rng::new(5);
+    // AnalogNet-KWS-sized deployment: 307k weights
+    let (rows, cols) = (1008usize, 305usize);
+    let n_w = rows * cols; // ~307k: AnalogNet-KWS-sized deployment
+    let w: Vec<f32> = (0..n_w).map(|_| rng.gauss(0.0, 0.2) as f32).collect();
+    let p = PcmParams::default();
+    let prog = ProgrammedWeights::program(&w, rows, cols, 0.0, &p, &mut rng);
+
+    // BEFORE: the naive per-device path (device::read with powf/ln/sqrt
+    // per device) — kept in device.rs as the reference implementation
+    let t0 = Instant::now();
+    let mut acc = 0f64;
+    for rep in 0..3 {
+        let t = 86_400.0;
+        for i in 0..n_w {
+            acc += device::read(prog.gp_pos[i] as f64, prog.gt_pos[i] as f64,
+                                prog.nu_pos[i] as f64, t, &p, &mut rng);
+            acc += device::read(prog.gp_neg[i] as f64, prog.gt_neg[i] as f64,
+                                prog.nu_neg[i] as f64, t, &p, &mut rng);
+        }
+        let _ = rep;
+    }
+    let naive_ms = t0.elapsed().as_secs_f64() * 1e3 / 3.0;
+    println!("PCM refresh naive (per-device read): {naive_ms:.1} ms ({acc:.1})");
+
+    // AFTER: the hoisted/cached read_weights hot path
+    let t0 = Instant::now();
+    for _ in 0..3 {
+        let r = prog.read_weights(86_400.0, &p, &mut rng);
+        std::hint::black_box(&r);
+    }
+    let fast_ms = t0.elapsed().as_secs_f64() * 1e3 / 3.0;
+    println!("PCM refresh optimized (read_weights): {fast_ms:.1} ms \
+              ({:.2}x)", naive_ms / fast_ms);
+
+    // native GEMM roofline on this box
+    let (m, k, n) = (2048usize, 576usize, 128usize);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.gauss(0.0, 1.0) as f32).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.gauss(0.0, 1.0) as f32).collect();
+    let t0 = Instant::now();
+    let c = gemm::gemm(&a, &b, m, k, n);
+    let ms = t0.elapsed().as_secs_f64() * 1e3;
+    std::hint::black_box(&c);
+    println!("native GEMM {m}x{k}x{n}: {ms:.1} ms = {:.2} GFLOP/s",
+             2.0 * (m * k * n) as f64 / ms / 1e6);
+}

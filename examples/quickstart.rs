@@ -1,0 +1,45 @@
+//! Quickstart: load the standalone L1 CiM kernel (pallas -> HLO) and run a
+//! single analog matrix-vector product through the PJRT runtime.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use analognets::nn::manifest::artifacts_dir;
+use analognets::quant;
+use analognets::runtime::{HostTensor, Runtime};
+use analognets::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let path = artifacts_dir().join("cim_mvm.hlo.txt");
+    anyhow::ensure!(path.exists(), "run `make artifacts` first ({} missing)",
+                    path.display());
+
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let exe = rt.load_hlo(&path)?;
+    println!("compiled {}", exe.name);
+
+    // the exported demo kernel is x[256,432] @ w[432,128] with r_dac=1,
+    // r_adc=8 at 9/8-bit DAC/ADC — one AnalogNet-KWS-sized layer
+    let (m, k, n) = (256usize, 432usize, 128usize);
+    let mut rng = Rng::new(42);
+    let x: Vec<f32> = (0..m * k).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+    let w: Vec<f32> = (0..k * n).map(|_| rng.gauss(0.0, 0.05) as f32).collect();
+
+    let out = exe.run(&[
+        HostTensor::new(vec![m, k], x.clone()),
+        HostTensor::new(vec![k, n], w.clone()),
+    ])?;
+    println!("ran CiM MVM: [{m}x{k}] @ [{k}x{n}] -> {} outputs", out.len());
+
+    // cross-check one output against the quantizer contract
+    let mut acc = 0f64;
+    for kk in 0..k {
+        acc += quant::fake_quant(x[kk], 1.0, 9) as f64 * w[kk * n] as f64;
+    }
+    let want = quant::fake_quant(acc as f32, 8.0, 8);
+    println!("out[0,0] = {:.5} (host re-computation: {want:.5})", out[0]);
+    anyhow::ensure!((out[0] - want).abs() <= 8.0 / 127.0 + 1e-5,
+                    "kernel result mismatch");
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,269 @@
+"""AOT driver: train (with caching) and export every artifact bundle.
+
+Run once via ``make artifacts``; Python never appears on the request path
+afterwards.  ``--sweep`` additionally trains the Figure-7 eta sweep.
+
+Artifacts per variant (see DESIGN.md section 7):
+    <vid>.meta.json            layer table + ranges + digital affines
+    <vid>.weights.bin          compact trained clipped weights (ANWT)
+    <vid>_<bits>b_b<batch>.hlo.txt   inference graphs
+plus <task>_test.bin datasets, cim_mvm.hlo.txt, manifest.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from . import config, data, export, heuristics, train as T
+from .config import EVAL_BATCH, SERVE_BATCHES, TrainCfg
+from .models import get_model
+
+# Step budgets are scaled to the synthetic tasks (they converge in a couple
+# hundred steps) and to the single-core build machine; the paper's
+# 100/200-epoch schedules are unnecessary here.
+KWS_TCFG = TrainCfg(steps_stage1=150, steps_stage2=120, batch=32,
+                    lr_stage1=3e-3, lr_stage2=3e-4)
+VWW_TCFG = TrainCfg(steps_stage1=150, steps_stage2=120, batch=16,
+                    lr_stage1=3e-3, lr_stage2=3e-4)
+
+
+def log(*a):
+    print(*a, flush=True)
+
+
+# ---------------------------------------------------------------------------
+# Training cache (np.savez of the flattened Trained struct)
+# ---------------------------------------------------------------------------
+
+def _cache_key(model_name: str, variant: str, tcfg: TrainCfg) -> str:
+    t = tcfg.scaled()
+    if variant == "base":
+        # stage 1 is independent of eta/bits: shared by all stage-2 variants
+        return f"{model_name}__base__s{t.steps_stage1}__seed{t.seed}"
+    return (f"{model_name}__{variant}__s{t.steps_stage1}-{t.steps_stage2}"
+            f"__e{t.eta}__b{t.adc_bits}__seed{t.seed}")
+
+
+def save_trained(path: str, tr: T.Trained) -> None:
+    flat: Dict[str, np.ndarray] = {}
+    for li, p in enumerate(tr.params):
+        for k, v in p.items():
+            flat[f"p{li}/{k}"] = v
+    for li, s in enumerate(tr.bn_state):
+        for k, v in s.items():
+            flat[f"s{li}/{k}"] = v
+    flat["clips"] = tr.clips
+    if tr.ranges is not None:
+        flat["ranges/s"] = tr.ranges["s"]
+        flat["ranges/r_adc"] = tr.ranges["r_adc"]
+    flat["meta"] = np.array([tr.fp_test_acc, tr.eta,
+                             -1.0 if tr.adc_bits is None else tr.adc_bits])
+    np.savez(path, **flat)
+
+
+def load_trained(path: str, model) -> Optional[T.Trained]:
+    if not os.path.exists(path):
+        return None
+    z = np.load(path)
+    params, bn_state = [], []
+    for li in range(len(model.layers)):
+        params.append({k.split("/")[1]: z[k] for k in z.files
+                       if k.startswith(f"p{li}/")})
+        bn_state.append({k.split("/")[1]: z[k] for k in z.files
+                         if k.startswith(f"s{li}/")})
+    ranges = None
+    if "ranges/s" in z.files:
+        ranges = {"s": z["ranges/s"], "r_adc": z["ranges/r_adc"]}
+    acc, eta, bits = [float(v) for v in z["meta"]]
+    return T.Trained(model=model, params=params, bn_state=bn_state,
+                     clips=z["clips"], ranges=ranges,
+                     adc_bits=None if bits < 0 else int(bits),
+                     fp_test_acc=acc, eta=eta)
+
+
+def get_trained(model_name: str, task: str, variant: str, tcfg: TrainCfg,
+                cache_dir: str) -> T.Trained:
+    model = get_model(model_name)
+    key = _cache_key(model_name, variant, tcfg)
+    path = os.path.join(cache_dir, key + ".npz")
+    tr = load_trained(path, model)
+    if tr is not None:
+        log(f"[cache] hit {key} (fp acc {tr.fp_test_acc*100:.2f}%)")
+        return tr
+    if variant == "base":
+        tr = T.run_stage1(model, task, tcfg, log=log)
+    else:
+        stage1 = get_trained(model_name, task, "base", tcfg, cache_dir)
+        tr = T.run_stage2(model, task, tcfg, stage1, variant, log=log)
+    save_trained(path, tr)
+    return tr
+
+
+# ---------------------------------------------------------------------------
+# Per-variant export
+# ---------------------------------------------------------------------------
+
+def export_variant(vid: str, tr: T.Trained, task: str, out_dir: str,
+                   bits_list: List[int], batches: Dict[int, List[int]],
+                   digital_dw: bool = False) -> dict:
+    """Export one bundle; returns its manifest entry."""
+    model = tr.model
+    if digital_dw:
+        new_layers = tuple(
+            dataclasses.replace(l, analog=False) if l.kind == "dw3x3" else l
+            for l in model.layers)
+        model = dataclasses.replace(model, layers=new_layers)
+        tr = dataclasses.replace(tr, model=model)
+
+    infos = export.layer_export_info(tr)
+    heur = None
+    if tr.ranges is None:
+        xcal, _ = data.load(task, "train")
+        heur = heuristics.calibrate_ranges(
+            model, [{k: np.asarray(v) for k, v in p.items()}
+                    for p in tr.params],
+            tr.bn_state, tr.clips, xcal[:256])
+    hlo_files = {}
+    for bits in bits_list:
+        export.resolve_ranges(tr, infos, bits, heur)
+        for batch in batches.get(bits, [EVAL_BATCH]):
+            name = f"{vid}_{bits}b_b{batch}.hlo.txt"
+            t0 = time.time()
+            export.export_hlo(model, infos, bits, batch,
+                              os.path.join(out_dir, name))
+            log(f"[hlo] {name} ({time.time()-t0:.1f}s)")
+            hlo_files[f"{bits}b_b{batch}"] = name
+    # meta/weights use the ranges of the *last* resolve; re-resolve at 8b for
+    # a deterministic meta (per-bitwidth ranges are identical for heuristic
+    # variants and bitwidth-specific HLOs already bake their own).
+    export.resolve_ranges(tr, infos, bits_list[0], heur)
+    export.write_weights_bin(os.path.join(out_dir, f"{vid}.weights.bin"), infos)
+    export.write_meta_json(
+        os.path.join(out_dir, f"{vid}.meta.json"), model, infos, tr, vid,
+        hlo_files, export.layer_input_hws(model))
+    return {"vid": vid, "task": task, "model": model.name,
+            "variant_kind": vid.split("_")[1] if "_" in vid else vid,
+            "eta": tr.eta, "trained_bits": tr.adc_bits,
+            "fp_test_acc": tr.fp_test_acc,
+            "meta": f"{vid}.meta.json",
+            "weights": f"{vid}.weights.bin", "hlo": hlo_files}
+
+
+# ---------------------------------------------------------------------------
+# Main build plan
+# ---------------------------------------------------------------------------
+
+def build(out_dir: str, sweep: bool, only: Optional[str] = None) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    cache_dir = os.path.join(out_dir, "cache")
+    os.makedirs(cache_dir, exist_ok=True)
+
+    manifest: List[dict] = []
+
+    def want(vid: str) -> bool:
+        return only is None or only in vid
+
+    # -- datasets ----------------------------------------------------------
+    for task in ("kws", "vww"):
+        p = os.path.join(out_dir, f"{task}_test.bin")
+        if not os.path.exists(p):
+            x, y = data.load(task, "test")
+            data.write_dataset_bin(p, x, y)
+            log(f"[data] wrote {p} ({x.shape})")
+
+    # -- standalone L1 kernel ----------------------------------------------
+    demo = os.path.join(out_dir, "cim_mvm.hlo.txt")
+    if not os.path.exists(demo):
+        export.export_cim_mvm_demo(demo)
+        log(f"[hlo] {demo}")
+
+    all_bits = [8, 6, 4]
+
+    def plan_task(task: str, model_name: str, prefix: str, tcfg: TrainCfg):
+        # baseline: stage-1 weights, heuristic ranges, all bitwidths
+        vid = f"{prefix}_base"
+        if want(vid):
+            tr = get_trained(model_name, task, "base", tcfg, cache_dir)
+            manifest.append(export_variant(
+                vid, tr, task, out_dir, all_bits, {}))
+        # vanilla noise injection (Joshi et al.)
+        vid = f"{prefix}_noise_e10"
+        if want(vid):
+            tr = get_trained(model_name, task, "noise", tcfg, cache_dir)
+            manifest.append(export_variant(
+                vid, tr, task, out_dir, all_bits, {}))
+        # full method, one trained model per bitwidth
+        etas = [0.10]
+        if sweep:
+            etas = ([0.02, 0.05, 0.10, 0.20] if task == "kws"
+                    else [0.05, 0.10, 0.20])
+        for eta in etas:
+            for bits in all_bits:
+                e = int(round(eta * 100))
+                vid = f"{prefix}_full_e{e}_{bits}b"
+                if not want(vid):
+                    continue
+                tc = dataclasses.replace(tcfg, eta=eta, adc_bits=bits)
+                tr = get_trained(model_name, task, "full", tc, cache_dir)
+                batches = {}
+                if eta == 0.10 and bits == 8:
+                    batches = {8: [EVAL_BATCH] + list(SERVE_BATCHES)}
+                manifest.append(export_variant(
+                    vid, tr, task, out_dir, [bits], batches))
+
+    plan_task("kws", "analognet_kws", "kws", KWS_TCFG)
+    plan_task("vww", "analognet_vww", "vww", VWW_TCFG)
+
+    # -- VWW bottleneck ablation (Table 1 last row) -------------------------
+    for bits in all_bits:
+        vid = f"vwwbott_full_e10_{bits}b"
+        if want(vid):
+            tc = dataclasses.replace(VWW_TCFG, adc_bits=bits)
+            tr = get_trained("analognet_vww_bottleneck", "vww", "full", tc,
+                             cache_dir)
+            manifest.append(export_variant(vid, tr, "vww", out_dir, [bits], {}))
+
+    # -- MicroNet-KWS-S depthwise baseline (Fig 9 / Table 3 / Fig 11) -------
+    vid = "micro_noise_e10"
+    if want(vid):
+        tr = get_trained("micronet_kws_s", "kws", "noise", KWS_TCFG, cache_dir)
+        manifest.append(export_variant(vid, tr, "kws", out_dir, all_bits, {}))
+        # depthwise-on-digital-processor ablation shares the same weights
+        manifest.append(export_variant(
+            "microdig_noise_e10", tr, "kws", out_dir, all_bits, {},
+            digital_dw=True))
+
+    mpath = os.path.join(out_dir, "manifest.json")
+    existing = []
+    if only is not None and os.path.exists(mpath):
+        with open(mpath) as f:
+            existing = [e for e in json.load(f)
+                        if all(e["vid"] != m["vid"] for m in manifest)]
+    with open(mpath, "w") as f:
+        json.dump(existing + manifest, f, indent=1)
+    log(f"[done] {len(manifest)} variants -> {mpath}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--sweep", action="store_true",
+                    help="also train the Figure-7 eta sweep variants")
+    ap.add_argument("--only", default=None,
+                    help="only (re)build variants whose id contains this")
+    args = ap.parse_args()
+    t0 = time.time()
+    build(args.out, args.sweep, args.only)
+    log(f"[aot] total {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""CiM-aware model forward pass (the L2 training/eval graph, Figure 4).
+
+One function drives every training configuration in the paper:
+
+* stage 1: weight clipping only (``clips`` given, ``eta=0``, ``ranges=None``)
+* 'vanilla noise injection' (Joshi et al., 2020): ``eta>0``, ``ranges=None``
+* full AnalogNets training: ``eta>0`` + DAC/ADC quantizers with the learnable
+  per-layer ADC ranges and the shared analog gain ``S`` (eq. 5).
+
+The per-layer pipeline mirrors the hardware order exactly:
+DAC-quantize -> analog GEMM (noisy clipped weights) -> ADC-quantize ->
+digital BN -> ReLU.  Depthwise layers (MicroNet baseline) use the compact
+einsum path during training; their dense CiM expansion only matters at
+deployment and is handled by the exporter / Rust evaluator.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import noise as N
+from . import quantizers as Q
+from .config import ModelCfg, dac_bits
+
+
+def forward(
+    model: ModelCfg,
+    params: List[Dict[str, jnp.ndarray]],
+    state: List[Dict[str, jnp.ndarray]],
+    x: jnp.ndarray,
+    *,
+    train: bool,
+    key: Optional[jax.Array] = None,
+    eta: float = 0.0,
+    clips: Optional[Sequence[Tuple[jnp.ndarray, jnp.ndarray]]] = None,
+    ranges: Optional[Dict[str, jnp.ndarray]] = None,
+    adc_bits: int = 8,
+    qnoise_p: float = 0.0,
+) -> Tuple[jnp.ndarray, List[Dict[str, jnp.ndarray]]]:
+    """Run the model; returns (logits, new_bn_state).
+
+    ``ranges``: {"s": scalar, "r_adc": [scalar per layer]} enables the
+    DAC/ADC quantizer nodes. ``clips``: per-layer static (w_min, w_max).
+    """
+    if (eta > 0.0 or qnoise_p > 0.0) and key is None:
+        raise ValueError("stochastic forward needs a PRNG key")
+    b_adc = adc_bits
+    b_dac = dac_bits(adc_bits)
+    new_state: List[Dict[str, jnp.ndarray]] = []
+    h = x
+    for li, cfg in enumerate(model.layers):
+        p = params[li]
+        w0 = p["w"]
+
+        # ---- weight conditioning: clip (eq. 2) + noise injection (eq. 1)
+        if clips is not None:
+            w_min, w_max = clips[li]
+            if eta > 0.0:
+                key, sub = jax.random.split(key)
+                w = N.inject(w0, w_min, w_max, eta, sub)
+            else:
+                w = w0 + jax.lax.stop_gradient(
+                    N.clip_weights(w0, w_min, w_max) - w0
+                )
+        else:
+            w = w0
+
+        if cfg.kind == "dw3x3":
+            # compact/exact path (training only; CiM expansion at deploy time)
+            assert ranges is None, "quantized training not supported for dw"
+            y = L.apply_dw_compact(h, w, cfg.stride)
+            n, ho, wo = y.shape[0], y.shape[1], y.shape[2]
+            ch = cfg.in_ch
+        else:
+            if cfg.kind == "dense":
+                h = jnp.mean(h, axis=(1, 2))        # global average pool
+            m = L.layer_input_matrix(h, cfg)
+
+            # ---- DAC -> analog GEMM -> ADC
+            if ranges is not None and cfg.analog:
+                w_max_l = jnp.maximum(jnp.abs(clips[li][0]),
+                                      jnp.abs(clips[li][1]))
+                r_adc = ranges["r_adc"][li]
+                r_dac = Q.dac_range(r_adc, ranges["s"], w_max_l)
+                mq = Q.fake_quant(m, r_dac, b_dac)
+                if qnoise_p > 0.0:
+                    key, sub = jax.random.split(key)
+                    mq = Q.quant_noise(m, mq, qnoise_p, sub)
+                a = jnp.dot(mq, w, preferred_element_type=jnp.float32)
+                aq = Q.fake_quant(a, r_adc, b_adc)
+                if qnoise_p > 0.0:
+                    key, sub = jax.random.split(key)
+                    aq = Q.quant_noise(a, aq, qnoise_p, sub)
+                a = aq
+            else:
+                a = jnp.dot(m, w, preferred_element_type=jnp.float32)
+
+            if cfg.kind == "dense":
+                y = a + p["bias"]
+                n, ho, wo, ch = y.shape[0], 1, 1, cfg.out_ch
+            else:
+                hh, ww = L.out_hw(h.shape[1], h.shape[2], cfg)
+                y = a.reshape(h.shape[0], hh, ww, cfg.out_ch)
+                n, ho, wo, ch = y.shape
+                del n, ho, wo, ch
+
+        # ---- digital domain: BN + ReLU
+        if cfg.bn:
+            if train:
+                y, st = L.bn_train(y, p["gamma"], p["beta"], state[li])
+            else:
+                st = state[li]
+                y = L.bn_apply(y, p["gamma"], p["beta"], st["mean"], st["var"])
+            new_state.append(st)
+        else:
+            new_state.append({})
+        if cfg.relu:
+            y = jax.nn.relu(y)
+        h = y
+
+    return h, new_state
+
+
+def loss_fn(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def accuracy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean((jnp.argmax(logits, axis=1) == labels).astype(jnp.float32))

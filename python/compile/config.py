@@ -1,0 +1,136 @@
+"""Central configuration for models, training and export.
+
+Everything that the paper specifies numerically lives here so the
+experiments are driven from one place (and so the Rust side, which reads
+the exported ``meta.json``, never has to guess).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import List, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# CiM array geometry (Section 5 / Table 2)
+# ---------------------------------------------------------------------------
+ARRAY_ROWS = 1024
+ARRAY_COLS = 512
+ADC_MUX = 4                     # 4-input analog mux on the bitlines
+G_MAX_US = 25.0                 # max device conductance, micro-Siemens
+
+# PWM DAC cycle time per activation precision (Table 2)
+T_CIM_NS = {8: 130.0, 6: 34.0, 4: 10.0}
+T_DIGITAL_NS = 1.25             # 800 MHz digital pipeline
+
+# ---------------------------------------------------------------------------
+# Training hyper-parameters (Section 4.2 / 6.1)
+# ---------------------------------------------------------------------------
+QUANT_NOISE_P = 0.5             # stochastic quantization-noise probability
+S_GRAD_CLIP = 0.01              # gradient clipping threshold on the ADC gain S
+RANGE_LR_INIT = 1e-3            # quantizer-range LR, exponential decay ...
+RANGE_LR_FINAL = 1e-4           # ... to this value
+CLIP_SIGMA = 2.0                # weight clipping at +/- 2 sigma
+SIGMA_UPDATE_EVERY = 10         # stage-1 recomputes sigma every 10 steps
+
+# DAC gets one more bit than the ADC (eq. 3)
+def dac_bits(adc_bits: int) -> int:
+    return adc_bits + 1
+
+
+# Appendix C heuristics
+HEUR_IN_PERCENTILE = 99.995
+HEUR_N_STD_OUT = 4.0
+
+FAST = os.environ.get("FAST", "0") not in ("", "0", "false")
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerCfg:
+    """One CiM-mapped layer (a conv expressed as an im2col GEMM, or a dense).
+
+    kind: 'conv3x3' | 'conv1x1' | 'dw3x3' | 'dense'
+    stride: (sh, sw) for convs
+    analog: False => executed on a digital processor (exact weights, no
+            DAC/ADC quantization) -- used for the Fig. 9 depthwise-in-digital
+            ablation.
+    residual_from: index of an earlier layer whose *output* is added to this
+            layer's output (digital domain), or None.
+    """
+
+    name: str
+    kind: str
+    in_ch: int
+    out_ch: int
+    stride: Tuple[int, int] = (1, 1)
+    relu: bool = True
+    bn: bool = True
+    analog: bool = True
+    residual_from: Optional[int] = None
+
+    @property
+    def k(self) -> int:
+        """im2col GEMM inner dimension (crossbar rows for this layer)."""
+        if self.kind == "conv3x3":
+            return 9 * self.in_ch
+        if self.kind == "dw3x3":
+            return 9 * self.in_ch       # dense-expanded form
+        if self.kind == "conv1x1":
+            return self.in_ch
+        if self.kind == "dense":
+            return self.in_ch
+        raise ValueError(self.kind)
+
+    @property
+    def weight_shape(self) -> Tuple[int, int]:
+        if self.kind == "dw3x3":
+            return (9, self.in_ch)      # stored compactly; expanded on map
+        return (self.k, self.out_ch)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    name: str
+    input_hwc: Tuple[int, int, int]
+    num_classes: int
+    layers: Tuple[LayerCfg, ...]
+
+    def param_count(self) -> int:
+        n = 0
+        for l in self.layers:
+            r, c = l.weight_shape
+            n += r * c
+        n += self.num_classes  # final dense bias
+        return n
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainCfg:
+    steps_stage1: int
+    steps_stage2: int
+    batch: int
+    lr_stage1: float
+    lr_stage2: float           # 1/10 of stage-1 LR per the paper
+    eta: float = 0.10          # training noise-injection level (eq. 1)
+    adc_bits: int = 8
+    seed: int = 0
+
+    def scaled(self) -> "TrainCfg":
+        """FAST mode: shrink step counts for CI / smoke runs."""
+        if not FAST:
+            return self
+        return dataclasses.replace(
+            self,
+            steps_stage1=max(40, self.steps_stage1 // 10),
+            steps_stage2=max(40, self.steps_stage2 // 10),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Dataset sizes (synthetic substitutes; see DESIGN.md "Substitutions")
+# ---------------------------------------------------------------------------
+KWS_TRAIN, KWS_TEST, KWS_CLASSES = 4096, 1024, 12
+VWW_TRAIN, VWW_TEST, VWW_CLASSES = 2048, 512, 2
+
+EVAL_BATCH = 128                # batch size of the exported evaluation graphs
+SERVE_BATCHES = (1, 8, 32)      # batch sizes of the exported serving graphs

@@ -1,0 +1,176 @@
+"""Synthetic stand-ins for Google Speech Commands V2 and Visual Wake Words.
+
+The real datasets are not available in this offline environment (repro gate);
+per DESIGN.md we substitute procedural datasets with the *same tensor shapes*
+and a difficulty calibrated so that the paper's relative effects (noise
+robustness orderings, bitwidth degradation) are exercised on the identical
+code path.
+
+Both generators are deterministic given a seed, and the test split is
+exported to ``artifacts/<task>_test.bin`` for the Rust side.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Tuple
+
+import numpy as np
+
+from . import config
+
+
+def _smooth2d(rng: np.random.Generator, h: int, w: int, passes: int = 2) -> np.ndarray:
+    """Low-frequency random field in [-1, 1] (box-blurred white noise)."""
+    x = rng.standard_normal((h, w))
+    for _ in range(passes):
+        x = (
+            x
+            + np.roll(x, 1, 0) + np.roll(x, -1, 0)
+            + np.roll(x, 1, 1) + np.roll(x, -1, 1)
+        ) / 5.0
+    x -= x.mean()
+    m = np.abs(x).max()
+    return x / (m + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# KWS: 12-way "spectrogram" classification, 49x10x1 (MFCC-shaped)
+# ---------------------------------------------------------------------------
+
+def kws_prototypes(seed: int = 1234) -> np.ndarray:
+    """One fixed smooth time-frequency prototype per keyword class."""
+    rng = np.random.default_rng(seed)
+    h, w, _ = (49, 10, 1)
+    protos = np.stack(
+        [_smooth2d(rng, h, w, passes=3) for _ in range(config.KWS_CLASSES)]
+    )
+    return protos.astype(np.float32)
+
+
+def make_kws(n: int, seed: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Return (x[n,49,10,1] float32, y[n] int32)."""
+    protos = kws_prototypes()
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, config.KWS_CLASSES, size=n).astype(np.int32)
+    xs = np.empty((n, 49, 10, 1), np.float32)
+    for i in range(n):
+        p = protos[y[i]]
+        # temporal jitter: roll along the time axis
+        shift = int(rng.integers(-5, 6))
+        p = np.roll(p, shift, axis=0)
+        amp = rng.uniform(0.8, 1.25)
+        noise = rng.standard_normal((49, 10)) * 0.45
+        xs[i, :, :, 0] = amp * p + noise
+    return xs, y
+
+
+# ---------------------------------------------------------------------------
+# VWW: binary "person present" task, 100x100x3
+# ---------------------------------------------------------------------------
+
+def _draw_blob(img: np.ndarray, cy: float, cx: float, ry: float, rx: float,
+               val: np.ndarray) -> None:
+    h, w, _ = img.shape
+    yy, xx = np.mgrid[0:h, 0:w]
+    mask = ((yy - cy) / ry) ** 2 + ((xx - cx) / rx) ** 2 <= 1.0
+    img[mask] = img[mask] * 0.3 + 0.7 * val
+
+
+def _person(rng: np.random.Generator, img: np.ndarray) -> None:
+    """A 'person': vertically elongated torso ellipse + head circle."""
+    h, w, _ = img.shape
+    scale = rng.uniform(0.5, 1.4)
+    cy = rng.uniform(0.35 * h, 0.8 * h)
+    cx = rng.uniform(0.15 * w, 0.85 * w)
+    tone = rng.uniform(-1.0, 1.0, size=3).astype(np.float32)
+    torso_ry, torso_rx = 14 * scale, 5 * scale
+    _draw_blob(img, cy, cx, torso_ry, torso_rx, tone)
+    _draw_blob(img, cy - torso_ry - 4 * scale, cx, 4 * scale, 4 * scale, tone)
+
+
+def _clutter(rng: np.random.Generator, img: np.ndarray) -> None:
+    """Background distractors: horizontal blobs and boxes (never person-shaped)."""
+    h, w, _ = img.shape
+    for _ in range(int(rng.integers(2, 6))):
+        tone = rng.uniform(-1.0, 1.0, size=3).astype(np.float32)
+        if rng.uniform() < 0.5:
+            ry = rng.uniform(2, 6)
+            rx = ry * rng.uniform(1.8, 4.0)   # horizontal: aspect flipped
+            _draw_blob(img, rng.uniform(0, h), rng.uniform(0, w), ry, rx, tone)
+        else:
+            y0, x0 = int(rng.integers(0, h - 12)), int(rng.integers(0, w - 12))
+            dy, dx = int(rng.integers(6, 12)), int(rng.integers(6, 12))
+            img[y0:y0 + dy, x0:x0 + dx] = (
+                img[y0:y0 + dy, x0:x0 + dx] * 0.4 + 0.6 * tone
+            )
+
+
+def make_vww(n: int, seed: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Return (x[n,100,100,3] float32 in [-1,1], y[n] int32)."""
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, 2, size=n).astype(np.int32)
+    xs = np.empty((n, 100, 100, 3), np.float32)
+    for i in range(n):
+        img = np.repeat(
+            _smooth2d(rng, 100, 100, passes=2)[..., None], 3, axis=2
+        ).astype(np.float32) * 0.4
+        _clutter(rng, img)
+        if y[i] == 1:
+            for _ in range(int(rng.integers(1, 3))):
+                _person(rng, img)
+        img += rng.standard_normal(img.shape).astype(np.float32) * 0.08
+        xs[i] = np.clip(img, -1.0, 1.0)
+    return xs, y
+
+
+# ---------------------------------------------------------------------------
+# Dataset accessors + binary export (shared format with rust/src/datasets)
+# ---------------------------------------------------------------------------
+
+_CACHE: dict = {}
+
+
+def load(task: str, split: str) -> Tuple[np.ndarray, np.ndarray]:
+    """Dataset accessor, memoized (procedural generation is not free and the
+    trainer/calibrator/evaluator all ask for the same splits)."""
+    key = (task, split)
+    if key in _CACHE:
+        return _CACHE[key]
+    if task == "kws":
+        n = config.KWS_TRAIN if split == "train" else config.KWS_TEST
+        out = make_kws(n, seed=100 if split == "train" else 101)
+    elif task == "vww":
+        n = config.VWW_TRAIN if split == "train" else config.VWW_TEST
+        out = make_vww(n, seed=200 if split == "train" else 201)
+    else:
+        raise ValueError(task)
+    _CACHE[key] = out
+    return out
+
+
+MAGIC = b"ANDS"
+
+
+def write_dataset_bin(path: str, x: np.ndarray, y: np.ndarray) -> None:
+    """Flat little-endian binary: magic, n, ndim, dims..., f32 data, u32 labels."""
+    x = np.ascontiguousarray(x, np.float32)
+    y = np.ascontiguousarray(y, np.uint32)
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", x.shape[0], x.ndim - 1))
+        for d in x.shape[1:]:
+            f.write(struct.pack("<I", d))
+        f.write(x.tobytes())
+        f.write(y.tobytes())
+
+
+def read_dataset_bin(path: str) -> Tuple[np.ndarray, np.ndarray]:
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC
+        n, nd = struct.unpack("<II", f.read(8))
+        dims = [struct.unpack("<I", f.read(4))[0] for _ in range(nd)]
+        x = np.frombuffer(f.read(4 * n * int(np.prod(dims))), np.float32)
+        x = x.reshape([n] + dims).copy()
+        y = np.frombuffer(f.read(4 * n), np.uint32).astype(np.int32)
+    return x, y

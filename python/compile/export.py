@@ -1,0 +1,254 @@
+"""AOT export: inference graphs (HLO text), weights, metadata, datasets.
+
+The exported graph signature is the contract with ``rust/src/runtime``:
+
+    (x[B,...], w_0, ..., w_{L-1}, gdc[L]) -> (logits[B, classes],)
+
+* weights enter as runtime *parameters* so the Rust PCM substrate can feed
+  drifted/noisy effective weights without recompiling;
+* quantizer ranges and folded-BN digital affines are baked as constants;
+* ``gdc`` is the per-layer global-drift-compensation scale, applied digitally
+  *after* the ADC (order matters — see DESIGN.md section 4);
+* HLO **text** is the interchange format: the crate's xla_extension 0.5.1
+  rejects jax>=0.5 serialized protos (64-bit instruction ids), while the text
+  parser reassigns ids and round-trips cleanly.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import struct
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import layers as L
+from .config import ModelCfg, dac_bits
+from .kernels.cim_mvm import cim_mvm
+from .train import Trained
+
+WEIGHTS_MAGIC = b"ANWT"
+
+# Interpret-mode pallas becomes an HLO while-loop over the grid; bigger M
+# blocks = fewer loop iterations on the CPU backend. 2048 keeps the weight
+# tile + activation tile well inside a realistic VMEM budget for every layer
+# (see EXPERIMENTS.md §Perf L1).
+EXPORT_BLOCK_M = 2048
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants is ESSENTIAL: the default printer elides big
+    # constants (e.g. the folded-BN per-channel affines) as `{...}`, which
+    # xla_extension 0.5.1's text parser silently reads back as zeros.
+    return comp.as_hlo_text(True)
+
+
+# ---------------------------------------------------------------------------
+# Per-variant export bundle
+# ---------------------------------------------------------------------------
+
+def layer_export_info(trained: Trained) -> List[dict]:
+    """Per-layer constants: folded BN affine, clipped weights, scales."""
+    model = trained.model
+    out = []
+    for li, cfg in enumerate(model.layers):
+        p = trained.params[li]
+        w = np.clip(p["w"], trained.clips[li, 0], trained.clips[li, 1])
+        w = np.asarray(w, np.float32)
+        w_scale = float(np.max(np.abs(w))) or 1.0
+        if cfg.bn:
+            st = trained.bn_state[li]
+            scale, bias = L.bn_fold(p["gamma"], p["beta"], st["mean"], st["var"])
+        else:
+            scale = np.ones((cfg.out_ch,), np.float32)
+            bias = np.asarray(p.get("bias", np.zeros(cfg.out_ch)), np.float32)
+        out.append({
+            "cfg": cfg,
+            "w": w,                       # compact trained weights
+            "w_scale": w_scale,           # max|W|: conductance <-> weight map
+            "w_max": float(max(abs(trained.clips[li, 0]),
+                               abs(trained.clips[li, 1]))),
+            "dig_scale": np.asarray(scale, np.float32),
+            "dig_bias": np.asarray(bias, np.float32),
+        })
+    return out
+
+
+def resolve_ranges(trained: Trained, infos: List[dict], adc_bits: int,
+                   heuristic: Optional[Dict[str, List[float]]]) -> None:
+    """Attach per-layer (r_dac, r_adc) to each layer info, either from the
+    trained (S, r_ADC,l) parameters (eq. 5) or from the Appendix C heuristics.
+    """
+    if trained.ranges is not None:
+        s = abs(float(trained.ranges["s"]))
+        for li, info in enumerate(infos):
+            r_adc = abs(float(trained.ranges["r_adc"][li])) + 1e-9
+            info["r_adc"] = r_adc
+            info["r_dac"] = r_adc * s / info["w_max"]
+    else:
+        assert heuristic is not None, "untrained ranges need calibration"
+        for li, info in enumerate(infos):
+            info["r_dac"] = float(heuristic["r_dac"][li])
+            info["r_adc"] = float(heuristic["r_adc"][li])
+
+
+def build_infer_fn(model: ModelCfg, infos: List[dict], adc_bits: int):
+    """Inference graph: pallas CiM kernel per analog layer + digital post-ops."""
+    b_dac = dac_bits(adc_bits)
+    nl = len(model.layers)
+
+    def fn(x, *rest):
+        ws = rest[:nl]
+        gdc = rest[nl]
+        h = x
+        for li, info in enumerate(infos):
+            cfg = info["cfg"]
+            w = ws[li]
+            if cfg.kind == "dw3x3" and not cfg.analog:
+                # Fig. 9 ablation: depthwise on a digital processor (exact)
+                y = L.apply_dw_compact(h, w, cfg.stride)
+            else:
+                if cfg.kind == "dense":
+                    h = jnp.mean(h, axis=(1, 2))
+                m = L.layer_input_matrix(h, cfg)
+                if cfg.analog:
+                    # avoid padding waste: full-N blocks, M blocks capped
+                    bm = min(EXPORT_BLOCK_M, -((-m.shape[0]) // 128) * 128)
+                    a = cim_mvm(
+                        m, w,
+                        r_dac=info["r_dac"], r_adc=info["r_adc"],
+                        dac_bits=b_dac, adc_bits=adc_bits,
+                        block_m=bm, block_n=int(w.shape[1]),
+                    )
+                    a = a * gdc[li]
+                else:
+                    a = jnp.dot(m, w, preferred_element_type=jnp.float32)
+                if cfg.kind == "dense":
+                    y = a
+                else:
+                    hh, ww = L.out_hw(h.shape[1], h.shape[2], cfg)
+                    y = a.reshape(h.shape[0], hh, ww, cfg.out_ch)
+            y = y * info["dig_scale"] + info["dig_bias"]
+            if cfg.relu:
+                y = jax.nn.relu(y)
+            h = y
+        return (h,)
+
+    return fn
+
+
+def graph_weight_shape(cfg, analog_dw_dense: bool = True):
+    """Shape of the weight *input* in the exported graph."""
+    if cfg.kind == "dw3x3" and cfg.analog and analog_dw_dense:
+        return (9 * cfg.in_ch, cfg.out_ch)    # dense CiM expansion
+    return cfg.weight_shape
+
+
+def export_hlo(model: ModelCfg, infos: List[dict], adc_bits: int,
+               batch: int, path: str) -> None:
+    fn = build_infer_fn(model, infos, adc_bits)
+    h, w_, c = model.input_hwc
+    specs = [jax.ShapeDtypeStruct((batch, h, w_, c), jnp.float32)]
+    for info in infos:
+        specs.append(jax.ShapeDtypeStruct(
+            graph_weight_shape(info["cfg"]), jnp.float32))
+    specs.append(jax.ShapeDtypeStruct((len(infos),), jnp.float32))
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+
+
+# ---------------------------------------------------------------------------
+# Binary weights + JSON metadata
+# ---------------------------------------------------------------------------
+
+def write_weights_bin(path: str, infos: List[dict]) -> None:
+    """ANWT: little-endian; per tensor: ndim, dims..., f32 data (compact form)."""
+    with open(path, "wb") as f:
+        f.write(WEIGHTS_MAGIC)
+        f.write(struct.pack("<I", len(infos)))
+        for info in infos:
+            w = np.ascontiguousarray(info["w"], np.float32)
+            f.write(struct.pack("<I", w.ndim))
+            for d in w.shape:
+                f.write(struct.pack("<I", d))
+            f.write(w.tobytes())
+
+
+def write_meta_json(path: str, model: ModelCfg, infos: List[dict],
+                    trained: Trained, variant: str,
+                    hlo_files: Dict[str, str],
+                    input_hw_per_layer: List[tuple]) -> None:
+    layers_js = []
+    for li, info in enumerate(infos):
+        cfg = info["cfg"]
+        hin, win = input_hw_per_layer[li]
+        hout, wout = L.out_hw(hin, win, cfg) if cfg.kind != "dense" else (1, 1)
+        layers_js.append({
+            "name": cfg.name,
+            "kind": cfg.kind,
+            "in_ch": cfg.in_ch,
+            "out_ch": cfg.out_ch,
+            "stride": list(cfg.stride),
+            "relu": cfg.relu,
+            "analog": cfg.analog,
+            "in_h": hin, "in_w": win, "out_h": hout, "out_w": wout,
+            "k_gemm": cfg.k,
+            "weight_shape": list(info["w"].shape),
+            "graph_weight_shape": list(graph_weight_shape(cfg)),
+            "w_scale": info["w_scale"],
+            "w_max": info["w_max"],
+            "r_dac": info["r_dac"],
+            "r_adc": info["r_adc"],
+            "dig_scale": [float(v) for v in info["dig_scale"]],
+            "dig_bias": [float(v) for v in info["dig_bias"]],
+        })
+    js = {
+        "model": model.name,
+        "variant": variant,
+        "input_hwc": list(model.input_hwc),
+        "num_classes": model.num_classes,
+        "eta": trained.eta,
+        "fp_test_acc": trained.fp_test_acc,
+        "trained_adc_bits": trained.adc_bits,
+        "layers": layers_js,
+        "hlo": hlo_files,     # {"<bits>b_b<batch>": "file.hlo.txt"}
+    }
+    with open(path, "w") as f:
+        json.dump(js, f, indent=1)
+
+
+def layer_input_hws(model: ModelCfg) -> List[tuple]:
+    h, w, _ = model.input_hwc
+    out = []
+    for cfg in model.layers:
+        out.append((h, w))
+        if cfg.kind != "dense":
+            h, w = L.out_hw(h, w, cfg)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Standalone L1 kernel export (quickstart + bench_runtime)
+# ---------------------------------------------------------------------------
+
+def export_cim_mvm_demo(path: str, m: int = 256, k: int = 432, n: int = 128,
+                        adc_bits: int = 8) -> None:
+    def fn(x, w):
+        return (cim_mvm(x, w, r_dac=1.0, r_adc=8.0,
+                        dac_bits=dac_bits(adc_bits), adc_bits=adc_bits,
+                        block_m=128, block_n=128),)
+    specs = (jax.ShapeDtypeStruct((m, k), jnp.float32),
+             jax.ShapeDtypeStruct((k, n), jnp.float32))
+    lowered = jax.jit(fn).lower(*specs)
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))

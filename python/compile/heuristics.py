@@ -1,0 +1,73 @@
+"""Heuristic DAC/ADC range selection (Appendix C).
+
+Used for the ablation variants that were *not* trained with quantizer nodes
+('baseline, no re-training' and 'vanilla noise injection'): the DAC range of
+layer ``l`` is the 99.995th percentile of its input activations on a
+calibration batch, and the ADC range covers ``n_std_out = 4`` standard
+deviations of the pre-activation distribution (the pre-activation-space
+equivalent of the paper's conductance-space eq. 7 — see DESIGN.md S9).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import cim, layers as L
+from .config import HEUR_IN_PERCENTILE, HEUR_N_STD_OUT, ModelCfg
+
+
+def calibrate_ranges(model: ModelCfg, params, bn_state, clips: np.ndarray,
+                     x_calib: np.ndarray) -> Dict[str, List[float]]:
+    """Run a clean FP forward pass and record per-layer range statistics.
+
+    Returns {"r_dac": [L], "r_adc": [L]} in the same units the quantizer
+    nodes use (activations / pre-activations in weight units).
+    """
+    acts: List[np.ndarray] = []
+    preacts: List[np.ndarray] = []
+
+    @jax.jit
+    def run(xb):
+        outs_in = []
+        outs_pre = []
+        h = xb
+        for li, cfg in enumerate(model.layers):
+            p = params[li]
+            w = jnp.clip(p["w"], clips[li, 0], clips[li, 1])
+            if cfg.kind == "dw3x3":
+                y = L.apply_dw_compact(h, w, cfg.stride)
+                m = L.layer_input_matrix(h, cfg)
+                outs_in.append(jnp.max(jnp.abs(m)))
+                outs_pre.append(jnp.std(y))
+            else:
+                if cfg.kind == "dense":
+                    h = jnp.mean(h, axis=(1, 2))
+                m = L.layer_input_matrix(h, cfg)
+                a = jnp.dot(m, w)
+                # percentile tracked on |input|; std on pre-activations
+                outs_in.append(jnp.percentile(jnp.abs(m), HEUR_IN_PERCENTILE))
+                outs_pre.append(jnp.std(a))
+                if cfg.kind == "dense":
+                    y = a + p["bias"]
+                else:
+                    hh, ww = L.out_hw(h.shape[1], h.shape[2], cfg)
+                    y = a.reshape(h.shape[0], hh, ww, cfg.out_ch)
+            if cfg.bn:
+                st = bn_state[li]
+                y = L.bn_apply(y, p["gamma"], p["beta"], st["mean"], st["var"])
+            if cfg.relu:
+                y = jax.nn.relu(y)
+            h = y
+        return outs_in, outs_pre
+
+    outs_in, outs_pre = run(jnp.asarray(x_calib))
+    acts = [float(v) for v in outs_in]
+    preacts = [float(v) for v in outs_pre]
+
+    r_dac = [max(a, 1e-6) for a in acts]
+    r_adc = [max(HEUR_N_STD_OUT * s, 1e-6) for s in preacts]
+    return {"r_dac": r_dac, "r_adc": r_adc}

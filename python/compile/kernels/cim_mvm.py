@@ -1,0 +1,104 @@
+"""L1 Pallas kernel: the analog CiM crossbar matrix-vector product.
+
+The hot-spot of every AnalogNets layer is the quantize -> GEMM -> requantize
+round trip through the crossbar.  On a TPU this maps naturally onto the MXU
+with VMEM-resident weights (DESIGN.md section "Hardware adaptation"): the
+weight tile is *stationary* across the batch grid axis (its index map ignores
+``i``), mirroring how the PCM array holds conductances fixed while PWM-encoded
+activations stream through; the DAC/ADC quantization is fused into the tile so
+the round trip never leaves VMEM.
+
+``interpret=True`` is mandatory here: the CPU PJRT backend cannot execute
+Mosaic custom-calls, and interpret mode lowers the kernel to plain HLO that
+the Rust runtime can load.  Numerics are validated against ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes; 128 matches both the MXU systolic dimension and the
+# AON-CiM mux-4 column group (512/4), see DESIGN.md section 3 and the block
+# sweep in EXPERIMENTS.md §Perf.
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _fq(x, r_max: float, bits: int):
+    levels = float(2 ** (bits - 1) - 1)
+    step = r_max / levels
+    return jnp.round(jnp.clip(x, -r_max, r_max) / step) * step
+
+
+def _kernel(x_ref, w_ref, o_ref, *, r_dac, r_adc, dac_bits, adc_bits):
+    # DAC: PWM encoding of the activation tile (quantize in-register)
+    xq = _fq(x_ref[...], r_dac, dac_bits)
+    # analog MAC: bitline accumulation == one MXU pass over the tile
+    acc = jnp.dot(xq, w_ref[...], preferred_element_type=jnp.float32)
+    # ADC: integrate + convert the bitline charge
+    o_ref[...] = _fq(acc, r_adc, adc_bits)
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("r_dac", "r_adc", "dac_bits", "adc_bits", "block_m", "block_n"),
+)
+def cim_mvm(x: jnp.ndarray, w: jnp.ndarray, *, r_dac: float, r_adc: float,
+            dac_bits: int, adc_bits: int,
+            block_m: int = BLOCK_M, block_n: int = BLOCK_N) -> jnp.ndarray:
+    """Tiled CiM GEMM: x[M,K] @ w[K,N] with DAC/ADC fake quantization.
+
+    The full K (crossbar rows, <= 1024 for every AnalogNets layer) stays
+    resident per tile — the array computes the complete dot product in one
+    'cycle', so K is never split (splitting would require digital partial-sum
+    accumulation the AON-CiM design avoids).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+
+    xp = _pad_to(x, 0, block_m)
+    wp = _pad_to(w, 1, block_n)
+    mp, np_ = xp.shape[0], wp.shape[1]
+
+    grid = (mp // block_m, np_ // block_n)
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, r_dac=r_dac, r_adc=r_adc,
+            dac_bits=dac_bits, adc_bits=adc_bits,
+        ),
+        grid=grid,
+        in_specs=[
+            # activations stream along the batch axis
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),
+            # weights are stationary w.r.t. i (the batch grid axis)
+            pl.BlockSpec((k, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def vmem_footprint_bytes(k: int, block_m: int = BLOCK_M,
+                         block_n: int = BLOCK_N) -> int:
+    """Static VMEM estimate per grid step (used by the §Perf analysis)."""
+    x_tile = block_m * k * 4
+    w_tile = k * block_n * 4
+    o_tile = block_m * block_n * 4
+    return x_tile + w_tile + o_tile

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the analog CiM matrix-vector kernel.
+
+This is the correctness reference for ``cim_mvm.py`` (pytest compares the
+pallas kernel against this implementation) and the fast path used inside the
+training loop, where running pallas in interpret mode would be needlessly
+slow.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _fq(x: jnp.ndarray, r_max: float, bits: int) -> jnp.ndarray:
+    """Inference-time fake quantization (no STE: nothing differentiates here)."""
+    levels = float(2 ** (bits - 1) - 1)
+    step = r_max / levels
+    return jnp.round(jnp.clip(x, -r_max, r_max) / step) * step
+
+
+def cim_mvm_ref(x: jnp.ndarray, w: jnp.ndarray, *, r_dac: float, r_adc: float,
+                dac_bits: int, adc_bits: int) -> jnp.ndarray:
+    """DAC-quantize -> analog GEMM -> ADC-quantize, all in weight units.
+
+    x: [M, K] activations, w: [K, N] effective (possibly drifted) weights.
+    Models exactly what one layer of the CiM array computes between the
+    digital input register and the digital output register.
+    """
+    xq = _fq(x, r_dac, dac_bits)
+    acc = jnp.dot(xq, w, preferred_element_type=jnp.float32)
+    return _fq(acc, r_adc, adc_bits)

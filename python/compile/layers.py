@@ -1,0 +1,157 @@
+"""L2 layer primitives: im2col patch extraction, BN, pooling, init.
+
+Convolutions are deliberately expressed as *explicit im2col + GEMM*, because
+that is how the CiM crossbar executes them (Figure 2c): the GEMM inner
+dimension is the crossbar row range of the layer and the output channels are
+its columns.  The patch ordering ``(ky, kx, c)`` is a contract shared with
+``rust/src/simulator/im2col.rs`` and the mapper — do not change one side only.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import LayerCfg, ModelCfg
+
+BN_EPS = 1e-3
+BN_MOMENTUM = 0.95
+
+
+def patches3x3(x: jnp.ndarray, stride: Tuple[int, int]) -> jnp.ndarray:
+    """Extract 3x3 SAME patches: [N,H,W,C] -> [N,Ho,Wo,9*C].
+
+    Feature ordering is (ky, kx, c): feature[(ky*3+kx)*C + c] = padded
+    x[n, ho*sh + ky, wo*sw + kx, c].
+    """
+    n, h, w, c = x.shape
+    sh, sw = stride
+    ho = (h + 1) // sh if sh > 1 else h
+    wo = (w + 1) // sw if sw > 1 else w
+    # SAME padding for kernel 3: one pixel each side (for odd strides the
+    # left/top pad of 1 matches TF 'SAME' when H is odd or stride 1).
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    # ensure the strided slices below stay in bounds for every (ky, kx)
+    xp = jnp.pad(xp, ((0, 0), (0, 2), (0, 2), (0, 0)))
+    cols = []
+    for ky in range(3):
+        for kx in range(3):
+            sl = xp[:, ky: ky + (ho - 1) * sh + 1: sh,
+                    kx: kx + (wo - 1) * sw + 1: sw, :]
+            cols.append(sl)
+    return jnp.concatenate(cols, axis=-1)
+
+
+def out_hw(h: int, w: int, cfg: LayerCfg) -> Tuple[int, int]:
+    if cfg.kind in ("conv3x3", "dw3x3"):
+        sh, sw = cfg.stride
+        return ((h + sh - 1) // sh, (w + sw - 1) // sw)
+    if cfg.kind == "conv1x1":
+        return (h, w)
+    if cfg.kind == "dense":
+        return (1, 1)
+    raise ValueError(cfg.kind)
+
+
+def layer_input_matrix(x: jnp.ndarray, cfg: LayerCfg) -> jnp.ndarray:
+    """Flatten a layer input to the im2col GEMM matrix [N*Ho*Wo, K]."""
+    if cfg.kind == "conv3x3":
+        p = patches3x3(x, cfg.stride)
+        return p.reshape(-1, p.shape[-1])
+    if cfg.kind == "conv1x1":
+        return x.reshape(-1, x.shape[-1])
+    if cfg.kind == "dense":
+        return x.reshape(x.shape[0], -1)
+    if cfg.kind == "dw3x3":
+        p = patches3x3(x, cfg.stride)
+        return p.reshape(-1, p.shape[-1])   # dense-expanded form [*, 9*C]
+    raise ValueError(cfg.kind)
+
+
+def dw_dense_weight(w9c: jnp.ndarray) -> jnp.ndarray:
+    """Expand a compact depthwise weight [9, C] to its dense CiM form [9C, C].
+
+    Row (t*C + i) , column j is w9c[t, i] if i == j else 0 — the 'non-zero
+    diagonal' expansion of Figure 3 / Figure 11.
+    """
+    t, c = w9c.shape
+    eye = jnp.eye(c, dtype=w9c.dtype)
+    return (w9c[:, :, None] * eye[None, :, :]).reshape(t * c, c)
+
+
+def apply_dw_compact(x: jnp.ndarray, w9c: jnp.ndarray,
+                     stride: Tuple[int, int]) -> jnp.ndarray:
+    """Depthwise conv via patches + einsum (the exact/digital path)."""
+    n, h, w, c = x.shape
+    p = patches3x3(x, stride)
+    ho, wo = p.shape[1], p.shape[2]
+    p = p.reshape(n, ho, wo, 9, c)
+    return jnp.einsum("nhwtc,tc->nhwc", p, w9c)
+
+
+# ---------------------------------------------------------------------------
+# Batch normalization (applied in the digital domain, Section 3.1)
+# ---------------------------------------------------------------------------
+
+def bn_apply(y: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
+             mean: jnp.ndarray, var: jnp.ndarray) -> jnp.ndarray:
+    inv = gamma * jax.lax.rsqrt(var + BN_EPS)
+    return y * inv + (beta - mean * inv)
+
+
+def bn_train(y: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
+             state: Dict[str, jnp.ndarray]):
+    axes = tuple(range(y.ndim - 1))
+    mean = jnp.mean(y, axes)
+    var = jnp.var(y, axes)
+    out = bn_apply(y, gamma, beta, mean, var)
+    new_state = {
+        "mean": BN_MOMENTUM * state["mean"] + (1 - BN_MOMENTUM) * mean,
+        "var": BN_MOMENTUM * state["var"] + (1 - BN_MOMENTUM) * var,
+    }
+    return out, new_state
+
+
+def bn_fold(gamma: np.ndarray, beta: np.ndarray, mean: np.ndarray,
+            var: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Fold inference BN into a per-channel digital affine (scale, bias)."""
+    inv = gamma / np.sqrt(var + BN_EPS)
+    return inv, beta - mean * inv
+
+
+# ---------------------------------------------------------------------------
+# Parameter / state initialization
+# ---------------------------------------------------------------------------
+
+def init_params(model: ModelCfg, key: jax.Array) -> List[Dict[str, jnp.ndarray]]:
+    params = []
+    for cfg in model.layers:
+        key, k1 = jax.random.split(key)
+        shape = cfg.weight_shape
+        fan_in = cfg.k if cfg.kind != "dw3x3" else 9
+        w = jax.random.normal(k1, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+        p = {"w": w}
+        if cfg.bn:
+            p["gamma"] = jnp.ones((cfg.out_ch,), jnp.float32)
+            p["beta"] = jnp.zeros((cfg.out_ch,), jnp.float32)
+        if cfg.kind == "dense":
+            p["bias"] = jnp.zeros((cfg.out_ch,), jnp.float32)
+        params.append(p)
+    return params
+
+
+def init_state(model: ModelCfg) -> List[Dict[str, jnp.ndarray]]:
+    state = []
+    for cfg in model.layers:
+        ch = cfg.out_ch if cfg.kind != "dw3x3" else cfg.in_ch
+        if cfg.bn:
+            state.append({
+                "mean": jnp.zeros((ch,), jnp.float32),
+                "var": jnp.ones((ch,), jnp.float32),
+            })
+        else:
+            state.append({})
+    return state

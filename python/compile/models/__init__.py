@@ -1,0 +1,20 @@
+"""Model zoo: AnalogNet-KWS, AnalogNet-VWW (+bottleneck ablation) and the
+MicroNet-KWS-S depthwise baseline."""
+
+from .analognet_kws import analognet_kws
+from .analognet_vww import analognet_vww
+from .micronet_kws_s import micronet_kws_s
+
+from ..config import ModelCfg
+
+
+def get_model(name: str) -> ModelCfg:
+    if name == "analognet_kws":
+        return analognet_kws()
+    if name == "analognet_vww":
+        return analognet_vww(bottleneck=False)
+    if name == "analognet_vww_bottleneck":
+        return analognet_vww(bottleneck=True)
+    if name == "micronet_kws_s":
+        return micronet_kws_s()
+    raise ValueError(f"unknown model {name}")

@@ -1,0 +1,27 @@
+"""AnalogNet-KWS (Section 4.1, Appendix B).
+
+Derived from MicroNet-KWS-S with the CiM-specific edits the paper describes:
+every depthwise-separable block is replaced by a regular 3x3 convolution and
+the parameter-heavy 196-channel head is removed so the model fits the
+1024x512 differential array without splitting any layer.  Channel widths are
+chosen to land at the paper's reported ~57% array utilization (Figure 6
+left); the mapper measures the exact figure.
+"""
+
+from __future__ import annotations
+
+from ..config import LayerCfg, ModelCfg
+
+
+def analognet_kws() -> ModelCfg:
+    layers = (
+        LayerCfg("conv0", "conv3x3", 1, 64, stride=(2, 1)),    # 49x10 -> 25x10
+        LayerCfg("conv1", "conv3x3", 64, 64, stride=(1, 1)),   # 25x10
+        LayerCfg("conv2", "conv3x3", 64, 88, stride=(2, 2)),   # 25x10 -> 13x5
+        LayerCfg("conv3", "conv3x3", 88, 112, stride=(1, 1)),  # 13x5
+        LayerCfg("conv4", "conv3x3", 112, 128, stride=(1, 1)), # 13x5
+        # global average pool happens before this dense classifier
+        LayerCfg("fc", "dense", 128, 12, bn=False, relu=False),
+    )
+    # 307,392 weights -> 58.6% of the 1024x512 array (paper: 57.3%)
+    return ModelCfg("analognet_kws", (49, 10, 1), 12, layers)

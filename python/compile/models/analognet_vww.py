@@ -1,0 +1,43 @@
+"""AnalogNet-VWW (Section 4.1, Appendix B).
+
+MobileNetV2-style backbone with every inverted-bottleneck MBConv replaced by
+a *fused*-MBConv (regular 3x3 expansion conv + 1x1 projection, Tan & Le), and
+the two early narrow bottleneck layers removed (Figure 3 right).  The
+``bottleneck=True`` variant adds those narrow layers back for the Table 1
+ablation (last row): few parameters, all signal squeezed through 8 channels —
+exactly the noise bottleneck the paper warns about.
+"""
+
+from __future__ import annotations
+
+from ..config import LayerCfg, ModelCfg
+
+
+def analognet_vww(bottleneck: bool = False) -> ModelCfg:
+    layers = [
+        LayerCfg("stem", "conv3x3", 3, 24, stride=(2, 2)),        # 100 -> 50
+    ]
+    if bottleneck:
+        # the removed noise-bottleneck layers of Figure 3 (right)
+        layers += [
+            LayerCfg("squeeze", "conv1x1", 24, 8),                # narrow!
+            LayerCfg("expandb", "conv3x3", 8, 24, stride=(1, 1)),
+        ]
+    layers += [
+        # fused-MBConv A: expand 3x3 s2 + project 1x1
+        LayerCfg("a_exp", "conv3x3", 24, 96, stride=(2, 2)),      # 50 -> 25
+        LayerCfg("a_proj", "conv1x1", 96, 32, relu=False),
+        # fused-MBConv B
+        LayerCfg("b_exp", "conv3x3", 32, 128, stride=(2, 2)),     # 25 -> 13
+        LayerCfg("b_proj", "conv1x1", 128, 56, relu=False),
+        # fused-MBConv C (stride 1)
+        LayerCfg("c_exp", "conv3x3", 56, 208, stride=(1, 1)),     # 13
+        LayerCfg("c_proj", "conv1x1", 208, 64, relu=False),
+        # fused-MBConv D
+        LayerCfg("d_exp", "conv3x3", 64, 240, stride=(2, 2)),     # 13 -> 7
+        LayerCfg("d_proj", "conv1x1", 240, 88, relu=False),
+        LayerCfg("fc", "dense", 88, 2, bn=False, relu=False),
+    ]
+    # 346,168 weights -> 66.0% of the 1024x512 array (paper: 67.5%)
+    name = "analognet_vww_bottleneck" if bottleneck else "analognet_vww"
+    return ModelCfg(name, (100, 100, 3), 2, tuple(layers))

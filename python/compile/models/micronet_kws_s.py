@@ -1,0 +1,27 @@
+"""MicroNet-KWS-S-like depthwise baseline (Banbury et al., 2021).
+
+The depthwise-separable comparison model for the Appendix A / Figure 9 / Table
+3 / Figure 11 experiments.  Depthwise layers are stored compactly as [9, C]
+but deploy to the CiM array in dense-expanded [9C, C] form with a non-zero
+diagonal — the mapper and the PCM evaluator both use that expansion, so the
+unused (zero-programmed) cells contribute programming/read noise to the
+bitlines exactly as Section 4.1 describes.
+"""
+
+from __future__ import annotations
+
+from ..config import LayerCfg, ModelCfg
+
+
+def micronet_kws_s() -> ModelCfg:
+    layers = (
+        LayerCfg("stem", "conv3x3", 1, 84, stride=(2, 1)),       # 49x10 -> 25x10
+        LayerCfg("dw1", "dw3x3", 84, 84, stride=(1, 1)),
+        LayerCfg("pw1", "conv1x1", 84, 112),
+        LayerCfg("dw2", "dw3x3", 112, 112, stride=(2, 2)),       # 25x10 -> 13x5
+        LayerCfg("pw2", "conv1x1", 112, 112),
+        LayerCfg("dw3", "dw3x3", 112, 112, stride=(1, 1)),
+        LayerCfg("pw3", "conv1x1", 112, 144),
+        LayerCfg("fc", "dense", 144, 12, bn=False, relu=False),
+    )
+    return ModelCfg("micronet_kws_s", (49, 10, 1), 12, layers)

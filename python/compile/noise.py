@@ -1,0 +1,31 @@
+"""Weight clipping + Gaussian noise injection (Section 4.2, eq. 1-2).
+
+The clip-then-perturb composite is treated as a straight-through estimator:
+gradients are computed with the clipped, noise-perturbed weights and applied
+to the underlying float weights ``w0``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def clip_ranges_from_sigma(w0: jnp.ndarray, n_sigma: float = 2.0):
+    """Static clipping range [-n_sigma*std(w0), +n_sigma*std(w0)] (Section 4.2)."""
+    s = jnp.std(w0)
+    return -n_sigma * s, n_sigma * s
+
+
+def clip_weights(w0: jnp.ndarray, w_min, w_max) -> jnp.ndarray:
+    return jnp.clip(w0, w_min, w_max)
+
+
+def inject(w0: jnp.ndarray, w_min, w_max, eta: float,
+           key: jax.Array) -> jnp.ndarray:
+    """W = clip(W0) + N(0, (eta * W_max)^2), with STE back to W0 (eq. 1-2)."""
+    wc = clip_weights(w0, w_min, w_max)
+    sigma = eta * jnp.maximum(jnp.abs(w_min), jnp.abs(w_max))
+    noisy = wc + sigma * jax.random.normal(key, w0.shape, w0.dtype)
+    # straight-through: forward uses `noisy`, gradient flows to w0 unchanged
+    return w0 + jax.lax.stop_gradient(noisy - w0)

@@ -1,0 +1,73 @@
+"""Hand-rolled Adam + LR schedules (optax is unavailable in this offline env).
+
+Operates on arbitrary pytrees via ``jax.tree_util``; supports per-leaf
+learning-rate groups so the quantizer ranges can follow their own schedule
+(Section 6.1: exponential decay 1e-3 -> 1e-4) while the weights follow cosine
+decay.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adam_init(params: Any) -> AdamState:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return AdamState(jnp.zeros((), jnp.int32), zeros,
+                     jax.tree_util.tree_map(jnp.zeros_like, params))
+
+
+def adam_update(grads: Any, state: AdamState, params: Any, lr,
+                b1: float = 0.9, b2: float = 0.999,
+                eps: float = 1e-8):
+    """One Adam step; ``lr`` may be a scalar or a pytree matching params."""
+    step = state.step + 1
+    mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                                state.mu, grads)
+    nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                                state.nu, grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    lr_tree = lr
+    if not isinstance(lr, (dict, list, tuple)) and not hasattr(lr, "keys"):
+        lr_tree = jax.tree_util.tree_map(lambda _: lr, params)
+
+    def upd(p, m, v, l):
+        mhat = m / bc1
+        vhat = v / bc2
+        return p - l * mhat / (jnp.sqrt(vhat) + eps)
+
+    new_params = jax.tree_util.tree_map(upd, params, mu, nu, lr_tree)
+    return new_params, AdamState(step, mu, nu)
+
+
+def cosine_lr(base: float, total_steps: int) -> Callable[[int], float]:
+    def sched(step):
+        t = jnp.minimum(step, total_steps) / max(total_steps, 1)
+        return base * 0.5 * (1 + jnp.cos(math.pi * t))
+    return sched
+
+
+def exp_decay_lr(init: float, final: float,
+                 total_steps: int) -> Callable[[int], float]:
+    rate = (final / init) ** (1.0 / max(total_steps, 1))
+    def sched(step):
+        return init * rate ** jnp.minimum(step, total_steps)
+    return sched
+
+
+def global_norm_clip(g: jnp.ndarray, thresh: float) -> jnp.ndarray:
+    """Clip a single tensor's gradient by norm (used for S, Section 6.1)."""
+    n = jnp.sqrt(jnp.sum(g * g))
+    return g * jnp.minimum(1.0, thresh / (n + 1e-12))

@@ -1,0 +1,58 @@
+"""DAC/ADC quantizer abstractions (Section 4.2, eq. 3-6).
+
+Both converters are modeled as symmetric uniform fake-quantizers with a
+*learnable* range ``r_max`` (eq. 4), differentiable in both the input and the
+range via the straight-through estimator.  The fixed analog ADC gain
+constraint (eq. 5) ties the per-layer DAC range to the per-layer ADC range
+through a single shared scalar ``S``:
+
+    r_DAC,l = r_ADC,l * |S| / W_l,max
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def round_ste(x: jnp.ndarray) -> jnp.ndarray:
+    """round() with identity gradient (Bengio et al., 2013)."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def fake_quant(x: jnp.ndarray, r_max: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Symmetric uniform fake quantization, eq. (4), in 'dequantized' units.
+
+    Differentiable w.r.t. both ``x`` (inside the clip range) and ``r_max``
+    (through the step size and the clip boundaries).
+    """
+    r_max = jnp.abs(r_max) + 1e-9          # ranges must stay positive
+    levels = float(2 ** (bits - 1) - 1)
+    step = r_max / levels
+    xc = jnp.clip(x, -r_max, r_max)
+    return round_ste(xc / step) * step
+
+
+def quant_codes(x: jnp.ndarray, r_max: float, bits: int) -> jnp.ndarray:
+    """Integer codes in [-(2^{b-1}-1), 2^{b-1}-1] (hardware-side view)."""
+    levels = float(2 ** (bits - 1) - 1)
+    step = r_max / levels
+    return jnp.round(jnp.clip(x, -r_max, r_max) / step)
+
+
+def quant_noise(x: jnp.ndarray, xq: jnp.ndarray, p: float,
+                key: jax.Array) -> jnp.ndarray:
+    """Stochastic 'quantization noise' (Fan et al., 2020).
+
+    Each element is quantized with probability ``p`` and passed through
+    unquantized otherwise; accelerates convergence at low bitwidths.
+    """
+    if p >= 1.0:
+        return xq
+    mask = jax.random.bernoulli(key, p, x.shape)
+    return jnp.where(mask, xq, x)
+
+
+def dac_range(r_adc: jnp.ndarray, s: jnp.ndarray, w_max: float) -> jnp.ndarray:
+    """eq. (5) solved for the DAC range; |S| keeps ranges positive during GD."""
+    return r_adc * jnp.abs(s) / w_max

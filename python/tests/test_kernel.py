@@ -1,0 +1,104 @@
+"""L1 correctness: the pallas cim_mvm kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the kernel that every exported graph
+embeds.  Hypothesis sweeps shapes, ranges, bitwidths and block sizes.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.cim_mvm import cim_mvm, vmem_footprint_bytes
+from compile.kernels.ref import cim_mvm_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32) * scale)
+
+
+def assert_quantized_close(got, want, r_adc, adc_bits, max_flip_frac=0.005):
+    """Quantized-output contract: f32 accumulation order may flip a value
+    sitting exactly on a rounding boundary by ONE ADC step, but never more,
+    and only rarely."""
+    got = np.asarray(got)
+    want = np.asarray(want)
+    step = r_adc / (2 ** (adc_bits - 1) - 1)
+    diff = np.abs(got - want)
+    assert diff.max() <= step + 1e-5, f"max diff {diff.max()} > step {step}"
+    flips = np.mean(diff > 1e-6)
+    assert flips <= max_flip_frac, f"boundary-flip fraction {flips}"
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 16, 8), (128, 432, 128), (100, 27, 48),
+                                   (256, 648, 88), (1, 88, 12)])
+@pytest.mark.parametrize("bits", [8, 6, 4])
+def test_kernel_matches_ref(m, k, n, bits):
+    x = rand((m, k), seed=m + k)
+    w = rand((k, n), seed=n, scale=0.1)
+    kw = dict(r_dac=2.0, r_adc=4.0, dac_bits=bits + 1, adc_bits=bits)
+    got = cim_mvm(x, w, **kw)
+    want = cim_mvm_ref(x, w, **kw)
+    assert_quantized_close(got, want, 4.0, bits)
+
+
+@hypothesis.given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 96),
+    n=st.integers(1, 64),
+    bits=st.sampled_from([4, 6, 8]),
+    r_dac=st.floats(0.1, 8.0),
+    r_adc=st.floats(0.5, 32.0),
+    block_m=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 2**16),
+)
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_kernel_hypothesis_sweep(m, k, n, bits, r_dac, r_adc, block_m, seed):
+    x = rand((m, k), seed=seed)
+    w = rand((k, n), seed=seed + 1, scale=0.2)
+    kw = dict(r_dac=r_dac, r_adc=r_adc, dac_bits=bits + 1, adc_bits=bits)
+    got = cim_mvm(x, w, block_m=block_m, block_n=min(n, 32), **kw)
+    want = cim_mvm_ref(x, w, **kw)
+    assert_quantized_close(got, want, r_adc, bits, max_flip_frac=0.01)
+
+
+def test_kernel_block_size_invariance():
+    x = rand((96, 50), seed=3)
+    w = rand((50, 40), seed=4, scale=0.2)
+    kw = dict(r_dac=1.0, r_adc=8.0, dac_bits=9, adc_bits=8)
+    outs = [np.asarray(cim_mvm(x, w, block_m=bm, block_n=bn, **kw))
+            for bm, bn in [(8, 8), (32, 40), (96, 16), (128, 128)]]
+    for o in outs[1:]:
+        assert_quantized_close(outs[0], o, 8.0, 8)
+
+
+def test_kernel_output_on_adc_grid():
+    x = rand((32, 16), seed=5)
+    w = rand((16, 8), seed=6)
+    bits = 6
+    r_adc = 4.0
+    out = np.asarray(cim_mvm(x, w, r_dac=2.0, r_adc=r_adc,
+                             dac_bits=bits + 1, adc_bits=bits))
+    step = r_adc / (2 ** (bits - 1) - 1)
+    codes = out / step
+    np.testing.assert_allclose(codes, np.round(codes), atol=1e-4)
+    assert np.abs(out).max() <= r_adc + 1e-6
+
+
+def test_kernel_clips_to_adc_range():
+    x = jnp.ones((4, 64), jnp.float32) * 10.0
+    w = jnp.ones((64, 4), jnp.float32)
+    out = np.asarray(cim_mvm(x, w, r_dac=1.0, r_adc=2.0,
+                             dac_bits=9, adc_bits=8))
+    np.testing.assert_allclose(out, 2.0, atol=1e-6)
+
+
+def test_vmem_footprint_estimate():
+    # 128x128 tiles with K=648 stay under 1 MB — far inside a 16 MB VMEM
+    assert vmem_footprint_bytes(648) < 1 << 20
+    assert vmem_footprint_bytes(648, 256, 256) > vmem_footprint_bytes(648)

@@ -1,0 +1,126 @@
+"""Model architecture and CiM forward-graph tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import cim, layers as L
+from compile.config import ARRAY_COLS, ARRAY_ROWS
+from compile.models import get_model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.mark.parametrize("name,classes", [
+    ("analognet_kws", 12),
+    ("analognet_vww", 2),
+    ("analognet_vww_bottleneck", 2),
+    ("micronet_kws_s", 12),
+])
+def test_forward_shapes(name, classes):
+    model = get_model(name)
+    key = jax.random.PRNGKey(0)
+    params = L.init_params(model, key)
+    state = L.init_state(model)
+    h, w, c = model.input_hwc
+    x = jnp.zeros((2, h, w, c))
+    logits, st = cim.forward(model, params, state, x, train=False)
+    assert logits.shape == (2, classes)
+    assert len(st) == len(model.layers)
+
+
+@pytest.mark.parametrize("name", ["analognet_kws", "analognet_vww"])
+def test_analognets_fit_array_unsplit(name):
+    """Section 6.2: 'configured with a 1024x512 CiM array, such that no
+    layers are split' — every AnalogNet layer must fit whole."""
+    model = get_model(name)
+    total = 0
+    for l in model.layers:
+        assert l.k <= ARRAY_ROWS, f"{l.name} is too tall ({l.k})"
+        assert l.out_ch <= ARRAY_COLS, f"{l.name} is too wide"
+        total += l.k * l.out_ch
+    # and the whole model fits the array at once (layer-serial, Figure 6)
+    assert total <= ARRAY_ROWS * ARRAY_COLS
+    # utilization in the paper's reported ballpark (57.3% / 67.5%)
+    util = total / (ARRAY_ROWS * ARRAY_COLS)
+    assert 0.5 < util < 0.75, f"utilization {util:.3f}"
+
+
+def test_analognets_have_no_depthwise():
+    for name in ("analognet_kws", "analognet_vww"):
+        model = get_model(name)
+        assert all(l.kind != "dw3x3" for l in model.layers)
+
+
+def test_micronet_has_depthwise():
+    model = get_model("micronet_kws_s")
+    assert any(l.kind == "dw3x3" for l in model.layers)
+
+
+def test_bottleneck_variant_has_narrow_layer():
+    m = get_model("analognet_vww_bottleneck")
+    widths = [l.out_ch for l in m.layers]
+    assert min(widths) <= 8
+
+
+def test_patches3x3_matches_lax_conv():
+    """im2col + GEMM must equal XLA's native convolution."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, 9, 7, 3)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((9 * 3, 5)).astype(np.float32))
+    for stride in [(1, 1), (2, 2), (2, 1)]:
+        p = L.patches3x3(x, stride)
+        got = p.reshape(-1, 27) @ w
+        ho, wo = p.shape[1], p.shape[2]
+        got = got.reshape(2, ho, wo, 5)
+        # reference: lax conv with (ky, kx, c) filter layout, pad=1
+        wk = w.reshape(3, 3, 3, 5)
+        want = jax.lax.conv_general_dilated(
+            x, wk, window_strides=stride, padding=[(1, 1), (1, 1)],
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        want = want[:, :ho, :wo, :]
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_dw_dense_expansion_equivalence():
+    """Dense-expanded depthwise GEMM == compact einsum path."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((2, 6, 6, 4)).astype(np.float32))
+    w9c = jnp.asarray(rng.standard_normal((9, 4)).astype(np.float32))
+    compact = L.apply_dw_compact(x, w9c, (1, 1))
+    dense = L.dw_dense_weight(w9c)
+    p = L.patches3x3(x, (1, 1)).reshape(-1, 36)
+    got = (p @ dense).reshape(2, 6, 6, 4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(compact),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_quantized_forward_changes_logits_at_low_bits():
+    model = get_model("analognet_kws")
+    key = jax.random.PRNGKey(0)
+    params = L.init_params(model, key)
+    state = L.init_state(model)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 49, 10, 1))
+    clips = [(jnp.asarray(-0.3), jnp.asarray(0.3))] * len(model.layers)
+    ranges = {"s": jnp.asarray(0.2),
+              "r_adc": jnp.ones((len(model.layers),)) * 4.0}
+    fp, _ = cim.forward(model, params, state, x, train=False, clips=clips)
+    q4, _ = cim.forward(model, params, state, x, train=False, clips=clips,
+                        ranges=ranges, adc_bits=4)
+    assert not np.allclose(np.asarray(fp), np.asarray(q4))
+
+
+def test_bn_fold_matches_bn_apply():
+    rng = np.random.default_rng(2)
+    y = jnp.asarray(rng.standard_normal((10, 4)).astype(np.float32))
+    gamma = np.abs(rng.standard_normal(4)).astype(np.float32) + 0.5
+    beta = rng.standard_normal(4).astype(np.float32)
+    mean = rng.standard_normal(4).astype(np.float32)
+    var = np.abs(rng.standard_normal(4)).astype(np.float32) + 0.5
+    want = L.bn_apply(y, jnp.asarray(gamma), jnp.asarray(beta),
+                      jnp.asarray(mean), jnp.asarray(var))
+    scale, bias = L.bn_fold(gamma, beta, mean, var)
+    got = np.asarray(y) * scale + bias
+    np.testing.assert_allclose(got, np.asarray(want), rtol=1e-4, atol=1e-5)

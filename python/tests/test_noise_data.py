@@ -1,0 +1,93 @@
+"""Noise injection (eq. 1-2) and synthetic dataset tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import data, noise
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# noise.py
+# ---------------------------------------------------------------------------
+
+def test_clip_ranges_2sigma():
+    w = jnp.asarray(np.random.default_rng(0).standard_normal(10_000) * 0.3)
+    lo, hi = noise.clip_ranges_from_sigma(w)
+    assert abs(float(hi) - 0.6) < 0.02
+    assert float(lo) == -float(hi)
+
+
+def test_inject_statistics():
+    key = jax.random.PRNGKey(1)
+    w = jnp.zeros((50_000,))
+    eta = 0.1
+    out = noise.inject(w, -0.5, 0.5, eta, key)
+    # sigma = eta * w_max = 0.05
+    assert abs(float(jnp.std(out)) - 0.05) < 0.002
+    assert abs(float(jnp.mean(out))) < 0.002
+
+
+def test_inject_ste_gradient():
+    # gradient flows to w0 as identity through clip+noise
+    key = jax.random.PRNGKey(2)
+    f = lambda w: jnp.sum(noise.inject(w, -1.0, 1.0, 0.05, key) ** 2)
+    w0 = jnp.asarray([0.3, -2.0])  # second is clipped
+    g = jax.grad(f)(w0)
+    assert g.shape == w0.shape
+    assert np.all(np.isfinite(np.asarray(g)))
+
+
+def test_inject_zero_eta_is_clip():
+    key = jax.random.PRNGKey(3)
+    w = jnp.asarray([0.2, 3.0, -3.0])
+    out = noise.inject(w, -1.0, 1.0, 0.0, key)
+    np.testing.assert_allclose(np.asarray(out), [0.2, 1.0, -1.0], atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# data.py
+# ---------------------------------------------------------------------------
+
+def test_kws_shapes_and_determinism():
+    x1, y1 = data.make_kws(64, seed=42)
+    x2, y2 = data.make_kws(64, seed=42)
+    assert x1.shape == (64, 49, 10, 1) and y1.shape == (64,)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+    assert set(np.unique(y1)) <= set(range(12))
+
+
+def test_vww_shapes_and_range():
+    x, y = data.make_vww(16, seed=7)
+    assert x.shape == (16, 100, 100, 3)
+    assert x.min() >= -1.0 and x.max() <= 1.0
+    assert set(np.unique(y)) <= {0, 1}
+
+
+def test_kws_classes_separable_from_prototypes():
+    # nearest-prototype classification should beat chance by a wide margin
+    protos = data.kws_prototypes()
+    x, y = data.make_kws(256, seed=9)
+    feats = x[:, :, :, 0]
+    correct = 0
+    for i in range(len(y)):
+        best, bestd = -1, 1e18
+        for c in range(12):
+            d = np.min([np.sum((np.roll(protos[c], s, axis=0) - feats[i]) ** 2)
+                        for s in range(-5, 6)])
+            if d < bestd:
+                best, bestd = c, d
+        correct += best == y[i]
+    assert correct / len(y) > 0.5, f"nearest-proto acc {correct/len(y)}"
+
+
+def test_dataset_bin_roundtrip(tmp_path):
+    x, y = data.make_kws(8, seed=1)
+    p = str(tmp_path / "t.bin")
+    data.write_dataset_bin(p, x, y)
+    x2, y2 = data.read_dataset_bin(p)
+    np.testing.assert_array_equal(x, x2)
+    np.testing.assert_array_equal(y.astype(np.int32), y2)

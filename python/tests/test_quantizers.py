@@ -1,0 +1,68 @@
+"""Quantizer (eq. 3-5) unit and property tests."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import quantizers as Q
+from compile.config import dac_bits
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_dac_one_more_bit_than_adc():
+    assert dac_bits(8) == 9
+    assert dac_bits(4) == 5
+
+
+@hypothesis.given(r=st.floats(0.1, 100.0), bits=st.sampled_from([4, 6, 8]),
+                  seed=st.integers(0, 1000))
+@hypothesis.settings(max_examples=30, deadline=None)
+def test_fake_quant_error_bound(r, bits, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-r, r, 100).astype(np.float32))
+    q = Q.fake_quant(x, jnp.asarray(r), bits)
+    step = r / (2 ** (bits - 1) - 1)
+    assert float(jnp.max(jnp.abs(q - x))) <= step / 2 + 1e-5
+
+
+def test_fake_quant_grid_fixed_points():
+    r, bits = 2.0, 5
+    step = r / (2 ** (bits - 1) - 1)
+    grid = jnp.arange(-15, 16) * step
+    np.testing.assert_allclose(np.asarray(Q.fake_quant(grid, r, bits)),
+                               np.asarray(grid), atol=1e-6)
+
+
+def test_fake_quant_gradients_flow():
+    # STE: d/dx inside range ~ 1, outside ~ 0; differentiable in r too
+    f = lambda x, r: jnp.sum(Q.fake_quant(x, r, 8))
+    gx = jax.grad(f, argnums=0)(jnp.asarray([0.3, 5.0]), jnp.asarray(1.0))
+    assert float(gx[0]) == 1.0 and float(gx[1]) == 0.0
+    gr = jax.grad(f, argnums=1)(jnp.asarray([0.3, 5.0]), jnp.asarray(1.0))
+    assert np.isfinite(float(gr))
+
+
+def test_round_ste_gradient_identity():
+    g = jax.grad(lambda x: jnp.sum(Q.round_ste(x)))(jnp.asarray([0.4, 1.7]))
+    np.testing.assert_array_equal(np.asarray(g), [1.0, 1.0])
+
+
+def test_quant_noise_mixes():
+    key = jax.random.PRNGKey(0)
+    x = jnp.ones((1000,)) * 0.31
+    xq = jnp.zeros((1000,))
+    out = Q.quant_noise(x, xq, 0.5, key)
+    frac_quant = float(jnp.mean((out == 0.0).astype(jnp.float32)))
+    assert 0.4 < frac_quant < 0.6
+    # p=1 -> fully quantized
+    np.testing.assert_array_equal(np.asarray(Q.quant_noise(x, xq, 1.0, key)),
+                                  np.asarray(xq))
+
+
+def test_dac_range_constraint_eq5():
+    # r_dac = r_adc * |S| / w_max, and S may be negative during GD
+    r = Q.dac_range(jnp.asarray(2.0), jnp.asarray(-0.5), 0.25)
+    assert float(r) == 4.0

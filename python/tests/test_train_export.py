@@ -1,0 +1,162 @@
+"""Training-step smoke tests + export round-trips (no full trainings here —
+the AOT pipeline covers those; these keep the unit suite fast)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, export, heuristics, optim, train
+from compile.config import LayerCfg, ModelCfg, TrainCfg
+from compile.models import get_model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def tiny_model() -> ModelCfg:
+    layers = (
+        LayerCfg("c0", "conv3x3", 1, 4, stride=(2, 1)),
+        LayerCfg("fc", "dense", 4, 12, bn=False, relu=False),
+    )
+    return ModelCfg("tiny_kws", (49, 10, 1), 12, layers)
+
+
+TINY_TCFG = TrainCfg(steps_stage1=12, steps_stage2=10, batch=16,
+                     lr_stage1=1e-3, lr_stage2=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# optim
+# ---------------------------------------------------------------------------
+
+def test_adam_reduces_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    st = optim.adam_init(params)
+    for _ in range(200):
+        g = {"w": 2.0 * params["w"]}
+        params, st = optim.adam_update(g, st, params, 0.1)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.2
+
+
+def test_schedules():
+    cos = optim.cosine_lr(1.0, 100)
+    assert float(cos(0)) == 1.0
+    assert float(cos(100)) < 1e-6
+    exp = optim.exp_decay_lr(1e-3, 1e-4, 100)
+    assert abs(float(exp(100)) - 1e-4) / 1e-4 < 1e-6
+
+
+def test_grad_clip():
+    g = jnp.asarray([3.0, 4.0])  # norm 5
+    c = optim.global_norm_clip(g, 0.5)
+    assert abs(float(jnp.sqrt(jnp.sum(c * c))) - 0.5) < 1e-6
+    # under threshold: untouched
+    np.testing.assert_allclose(np.asarray(optim.global_norm_clip(g, 10.0)),
+                               np.asarray(g))
+
+
+# ---------------------------------------------------------------------------
+# two-stage training on a tiny model
+# ---------------------------------------------------------------------------
+
+def test_stage1_trains_and_clips():
+    model = tiny_model()
+    tr = train.run_stage1(model, "kws", TINY_TCFG, log=lambda *a: None)
+    assert tr.clips.shape == (2, 2)
+    assert np.all(tr.clips[:, 1] > 0)
+    assert tr.ranges is None
+    assert 0.0 <= tr.fp_test_acc <= 1.0
+
+
+def test_stage2_full_produces_ranges():
+    model = tiny_model()
+    s1 = train.run_stage1(model, "kws", TINY_TCFG, log=lambda *a: None)
+    tr = train.run_stage2(model, "kws", TINY_TCFG, s1, "full",
+                          log=lambda *a: None)
+    assert tr.ranges is not None
+    assert tr.ranges["r_adc"].shape == (2,)
+    assert float(np.abs(tr.ranges["s"])) > 0
+    assert tr.adc_bits == 8
+
+
+def test_stage2_noise_keeps_no_ranges():
+    model = tiny_model()
+    s1 = train.run_stage1(model, "kws", TINY_TCFG, log=lambda *a: None)
+    tr = train.run_stage2(model, "kws", TINY_TCFG, s1, "noise",
+                          log=lambda *a: None)
+    assert tr.ranges is None
+
+
+# ---------------------------------------------------------------------------
+# heuristics + export
+# ---------------------------------------------------------------------------
+
+def _trained(variant="base"):
+    model = tiny_model()
+    s1 = train.run_stage1(model, "kws", TINY_TCFG, log=lambda *a: None)
+    if variant == "base":
+        return s1
+    return train.run_stage2(model, "kws", TINY_TCFG, s1, variant,
+                            log=lambda *a: None)
+
+
+def test_heuristic_ranges_positive():
+    tr = _trained()
+    x, _ = data.load("kws", "test")
+    heur = heuristics.calibrate_ranges(tr.model, tr.params, tr.bn_state,
+                                       tr.clips, x[:64])
+    assert all(v > 0 for v in heur["r_dac"])
+    assert all(v > 0 for v in heur["r_adc"])
+
+
+def test_export_bundle_roundtrip(tmp_path):
+    tr = _trained("full")
+    infos = export.layer_export_info(tr)
+    export.resolve_ranges(tr, infos, 8, None)
+
+    hlo = tmp_path / "tiny_8b_b4.hlo.txt"
+    export.export_hlo(tr.model, infos, 8, 4, str(hlo))
+    text = hlo.read_text()
+    assert "HloModule" in text and len(text) > 1000
+    # regression: the default HLO printer elides large constants as `{...}`,
+    # which the Rust side's xla_extension 0.5.1 parses back as ZEROS
+    assert "constant({...})" not in text, "large constants were elided"
+
+    wbin = tmp_path / "tiny.weights.bin"
+    export.write_weights_bin(str(wbin), infos)
+    raw = wbin.read_bytes()
+    assert raw[:4] == b"ANWT"
+
+    meta = tmp_path / "tiny.meta.json"
+    export.write_meta_json(str(meta), tr.model, infos, tr, "tiny_full",
+                           {"8b_b4": hlo.name},
+                           export.layer_input_hws(tr.model))
+    js = json.loads(meta.read_text())
+    assert js["num_classes"] == 12
+    assert len(js["layers"]) == 2
+    assert js["layers"][0]["r_dac"] > 0
+    # weights clipped to [w_min, w_max] and w_scale consistent
+    for l, info in zip(js["layers"], infos):
+        assert abs(l["w_scale"] - float(np.max(np.abs(info["w"])))) < 1e-6
+
+
+def test_exported_graph_weight_shapes_dw():
+    m = get_model("micronet_kws_s")
+    for l in m.layers:
+        shape = export.graph_weight_shape(l)
+        if l.kind == "dw3x3":
+            assert shape == (9 * l.in_ch, l.out_ch)
+
+
+def test_resolve_ranges_trained_uses_eq5():
+    tr = _trained("full")
+    infos = export.layer_export_info(tr)
+    export.resolve_ranges(tr, infos, 8, None)
+    s = abs(float(tr.ranges["s"]))
+    for li, info in enumerate(infos):
+        want = abs(float(tr.ranges["r_adc"][li])) + 1e-9
+        assert abs(info["r_adc"] - want) < 1e-9
+        assert abs(info["r_dac"] - want * s / info["w_max"]) < 1e-9

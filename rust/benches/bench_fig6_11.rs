@@ -1,0 +1,58 @@
+//! Figures 6 and 11: CiM array mapping visualizations.
+//!
+//! Fig 6: AnalogNet-KWS (paper: 57.3% util) and AnalogNet-VWW (67.5%) shelf-
+//! packed onto the single 1024x512 array.  Fig 11: MicroNet-KWS-S with its
+//! depthwise diagonal expansions on 1024x512 / 128x128 / 64x64 crossbars.
+
+use analognets::bench::save;
+use analognets::crossbar::ArrayGeom;
+use analognets::mapping::{layout, map_model, split_map_model};
+use analognets::runtime::ArtifactStore;
+
+fn main() -> anyhow::Result<()> {
+    let store = ArtifactStore::open_default()?;
+
+    // ---- Figure 6 ----------------------------------------------------
+    for (vid, name, paper) in [
+        ("kws_full_e10_8b", "AnalogNet-KWS", 57.3),
+        ("vww_full_e10_8b", "AnalogNet-VWW", 67.5),
+    ] {
+        let meta = store.meta(vid)?;
+        let m = map_model(&meta, ArrayGeom::AON)?;
+        let map = layout::ascii_map(&m, 64, 24);
+        println!("\n=== Figure 6: {name} on 1024x512 \
+                  (paper utilization {paper}%) ===");
+        print!("{map}");
+        save(&format!("fig6_{name}.txt"), &map);
+        save(&format!("fig6_{name}.csv"), &layout::csv_map(&m));
+    }
+
+    // ---- Figure 11 ---------------------------------------------------
+    let meta = store.meta("micro_noise_e10")?;
+    let m = map_model(&meta, ArrayGeom::AON)?;
+    println!("\n=== Figure 11a: MicroNet-KWS-S on 1024x512 (depthwise \
+              diagonals dominate allocation) ===");
+    let map = layout::ascii_map(&m, 64, 24);
+    print!("{map}");
+    save("fig11a.txt", &map);
+    println!("  effective utilization {:.1}% (paper: ~9%)",
+             100.0 * m.effective_utilization());
+
+    let mut csv = String::from("config,layer,alloc_tiles,grid_tiles,row_splits\n");
+    for (label, geom) in [("128x128", ArrayGeom::new(128, 128)),
+                          ("64x64", ArrayGeom::new(64, 64))] {
+        let s = split_map_model(&meta, geom);
+        println!("\n=== Figure 11b/c: MicroNet-KWS-S split onto {label} \
+                  tiles: {} tiles, eff util {:.1}% ===",
+                 s.alloc_tiles(), 100.0 * s.effective_utilization());
+        for l in &s.layers {
+            println!("  {:<6} {:>4}x{:<4} tiles {}/{} row-splits {}",
+                     l.name, l.rows, l.cols, l.alloc_tiles, l.grid_tiles,
+                     l.row_splits);
+            csv.push_str(&format!("{label},{},{},{},{}\n", l.name,
+                                  l.alloc_tiles, l.grid_tiles, l.row_splits));
+        }
+    }
+    save("fig11_split.csv", &csv);
+    Ok(())
+}

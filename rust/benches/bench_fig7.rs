@@ -1,0 +1,64 @@
+//! Figure 7: accuracy over deployment time (25s .. 1 year) for AnalogNet-KWS
+//! and AnalogNet-VWW across training noise levels eta and activation
+//! bitwidths, mean +/- std over repeated programming runs.
+//!
+//! The default artifact bundle carries eta = 10%; `make artifacts-sweep`
+//! adds the full eta sweep (KWS: 2/5/10/20%, VWW: 5/10/20%).  This bench
+//! evaluates whatever subset is present.
+
+use analognets::bench::{save, BenchOpts};
+use analognets::eval::{drift_accuracy, EvalOpts};
+use analognets::pcm::FIG7_TIMES;
+use analognets::runtime::ArtifactStore;
+use analognets::util::stats;
+use analognets::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let opts = BenchOpts::from_env_args();
+    let store = ArtifactStore::open_default()?;
+    let times: Vec<f64> = FIG7_TIMES.iter().map(|(_, t)| *t).collect();
+
+    let mut csv = String::from("task,eta,bits,time_s,acc_mean,acc_std\n");
+    let mut t = Table::new(
+        "Figure 7: accuracy (%) vs deployment time (mean over runs)",
+        &["variant", "25s", "1h", "1d", "1mo", "1yr"],
+    );
+
+    let mut vids: Vec<(String, String, u32, u32)> = Vec::new(); // vid, task, eta, bits
+    for e in &store.manifest.variants {
+        let vid = &e.vid;
+        if let Some(rest) = vid.find("_full_e") {
+            let tail = &vid[rest + 7..];
+            if let Some((eta_s, bits_s)) = tail.split_once('_') {
+                let eta: u32 = eta_s.parse().unwrap_or(0);
+                let bits: u32 = bits_s.trim_end_matches('b').parse().unwrap_or(8);
+                if vid.starts_with("kws") || vid.starts_with("vww_") {
+                    vids.push((vid.clone(), e.task.clone(), eta, bits));
+                }
+            }
+        }
+    }
+    vids.sort();
+
+    for (vid, task, eta, bits) in vids {
+        let e = EvalOpts {
+            bits,
+            runs: opts.runs,
+            max_samples: opts.max_samples,
+            ..Default::default()
+        };
+        let accs = drift_accuracy(&store, &vid, &times, &e)?;
+        let mut cells = vec![vid.clone()];
+        for (ti, (_, ts)) in FIG7_TIMES.iter().enumerate() {
+            let (m, s) = stats::acc_summary(&accs[ti]);
+            cells.push(format!("{m:.1}+/-{s:.1}"));
+            csv.push_str(&format!("{task},{eta},{bits},{ts},{m:.3},{s:.3}\n"));
+        }
+        t.row(&cells);
+        eprintln!("[fig7] done: {vid}");
+    }
+    t.print();
+    save("fig7.txt", &t.render());
+    save("fig7.csv", &csv);
+    Ok(())
+}

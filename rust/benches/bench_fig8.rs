@@ -1,0 +1,60 @@
+//! Figure 8: layer-wise and whole-model TOPS vs TOPS/W scatter for both
+//! AnalogNets on the AON-CiM accelerator (8-bit activations).
+//!
+//! Trends to reproduce: (1) larger layers amortize DAC/ADC cost -> higher
+//! TOPS and TOPS/W; (2) at equal size, taller layers (more rows, fewer
+//! columns) are more efficient because ADCs dominate periphery energy;
+//! (3) KWS (tall layers) beats VWW overall.  The dotted "limit" line is the
+//! array-only roofline with zero periphery energy.
+
+use analognets::bench::save;
+use analognets::crossbar::ArrayGeom;
+use analognets::mapping::map_model;
+use analognets::runtime::ArtifactStore;
+use analognets::timing::{model_perf, t_cim_ns, EnergyModel};
+use analognets::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let store = ArtifactStore::open_default()?;
+    let em = EnergyModel::default();
+    let geom = ArrayGeom::AON;
+    let bits = 8;
+
+    let mut csv = String::from("model,layer,weights,aspect,tops,tops_w\n");
+    let mut t = Table::new(
+        "Figure 8: per-layer TOPS vs TOPS/W (8-bit)",
+        &["model", "layer", "weights", "rows x cols", "TOPS", "TOPS/W"],
+    );
+
+    for (vid, name) in [("kws_full_e10_8b", "AnalogNet-KWS"),
+                        ("vww_full_e10_8b", "AnalogNet-VWW")] {
+        let meta = store.meta(vid)?;
+        let mapping = map_model(&meta, geom)?;
+        let p = model_perf(&mapping, bits, &em);
+        for (lp, ml) in p.layers.iter().zip(mapping.layers.iter()) {
+            t.row(&[name.into(), lp.name.clone(), format!("{}", lp.weights),
+                    format!("{}x{}", ml.rows, ml.cols),
+                    format!("{:.4}", lp.tops), format!("{:.2}", lp.tops_w)]);
+            csv.push_str(&format!("{name},{},{},{:.3},{:.5},{:.3}\n",
+                                  lp.name, lp.weights,
+                                  ml.rows as f64 / ml.cols as f64,
+                                  lp.tops, lp.tops_w));
+        }
+        t.row(&[name.into(), "== whole model ==".into(),
+                format!("{}", meta.param_count()), "".into(),
+                format!("{:.4}", p.tops), format!("{:.2}", p.tops_w)]);
+        csv.push_str(&format!("{name},MODEL,{},0,{:.5},{:.3}\n",
+                              meta.param_count(), p.tops, p.tops_w));
+    }
+
+    // array-only roofline (no ADC/DAC/digital energy): the dotted limit line
+    let t_mvm = t_cim_ns(bits); // one phase
+    let full_pulse = em.alpha_nj_per_ns * (1.0 - em.dac_fraction) * t_mvm;
+    let limit = 2.0 * geom.cells() as f64 / (full_pulse * 4.0) / 1000.0;
+    t.row(&["(limit)".into(), "array-only roofline".into(), "".into(),
+            "".into(), "".into(), format!("{limit:.2}")]);
+    t.print();
+    save("fig8.txt", &t.render());
+    save("fig8.csv", &csv);
+    Ok(())
+}

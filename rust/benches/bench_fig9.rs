@@ -1,0 +1,53 @@
+//! Figure 9 (Appendix A): MicroNet-KWS-S on the PCM CiM simulator —
+//! all-layers-analog vs depthwise-on-digital-processor, over deployment
+//! time and activation bitwidth.
+//!
+//! Trends to reproduce: depthwise-in-analog is strictly worse (the
+//! zero-programmed expansion cells inject bitline noise); moving the
+//! depthwise layers to a digital processor recovers part of the gap but
+//! stays below AnalogNet-KWS (Figure 7); lower bitwidths amplify the
+//! depthwise penalty.
+
+use analognets::bench::{save, BenchOpts};
+use analognets::eval::{drift_accuracy, EvalOpts};
+use analognets::pcm::FIG7_TIMES;
+use analognets::runtime::ArtifactStore;
+use analognets::util::stats;
+use analognets::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let opts = BenchOpts::from_env_args();
+    let store = ArtifactStore::open_default()?;
+    let times: Vec<f64> = FIG7_TIMES.iter().map(|(_, t)| *t).collect();
+
+    let mut t = Table::new(
+        "Figure 9: MicroNet-KWS-S accuracy (%) on the PCM simulator",
+        &["config", "bits", "25s", "1h", "1d", "1mo", "1yr"],
+    );
+    let mut csv = String::from("config,bits,time_s,acc_mean,acc_std\n");
+
+    for (vid, label) in [("micro_noise_e10", "all analog"),
+                         ("microdig_noise_e10", "depthwise in digital (FP)")] {
+        for bits in [8u32, 6, 4] {
+            let e = EvalOpts {
+                bits,
+                runs: opts.runs,
+                max_samples: opts.max_samples,
+                ..Default::default()
+            };
+            let accs = drift_accuracy(&store, vid, &times, &e)?;
+            let mut cells = vec![label.to_string(), format!("{bits}")];
+            for (ti, (_, ts)) in FIG7_TIMES.iter().enumerate() {
+                let (m, s) = stats::acc_summary(&accs[ti]);
+                cells.push(format!("{m:.1}+/-{s:.1}"));
+                csv.push_str(&format!("{label},{bits},{ts},{m:.3},{s:.3}\n"));
+            }
+            t.row(&cells);
+            eprintln!("[fig9] done: {label} @ {bits}b");
+        }
+    }
+    t.print();
+    save("fig9.txt", &t.render());
+    save("fig9.csv", &csv);
+    Ok(())
+}

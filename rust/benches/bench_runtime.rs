@@ -1,0 +1,92 @@
+//! Runtime microbenchmarks (§6.4 infrastructure + §Perf L3 numbers):
+//! PJRT executable latency across batch sizes, batcher overhead, PCM
+//! read/GDC cost, and native-GEMM throughput.
+
+use analognets::bench::{save, time_it, BenchOpts};
+use analognets::coordinator::{Coordinator, ServeConfig};
+use analognets::eval::DeployedModel;
+use analognets::pcm::PcmParams;
+use analognets::runtime::{ArtifactStore, HostTensor};
+use analognets::simulator::gemm;
+use analognets::util::rng::Rng;
+use analognets::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let opts = BenchOpts::from_env_args();
+    let iters = if opts.fast { 5 } else { 20 };
+    let store = ArtifactStore::open_default()?;
+    let mut t = Table::new("Runtime microbenchmarks",
+                           &["benchmark", "result"]);
+
+    // ---- raw PJRT execute latency by batch (kws serving graphs) -------
+    let vid = "kws_full_e10_8b";
+    let meta = store.meta(vid)?;
+    let ds = store.dataset("kws")?;
+    let params = PcmParams::default();
+    let mut rng = Rng::new(1);
+    let dep = DeployedModel::program(&store, vid, &params, &mut rng)?;
+    let (ws, alphas) = dep.read_at(25.0, &params, &mut rng, true);
+    let (ih, iw, ic) = meta.input_hwc;
+
+    let mut per_inf_us = Vec::new();
+    for batch in [1usize, 8, 32, 128] {
+        if meta.hlo_for(8, batch).is_none() {
+            continue;
+        }
+        let exe = store.executable(vid, 8, batch)?;
+        let xb = ds.padded_batch(0, batch);
+        let timing = time_it(3, iters, || {
+            let mut inputs = Vec::with_capacity(2 + ws.len());
+            inputs.push(HostTensor::new(vec![batch, ih, iw, ic], xb.clone()));
+            inputs.extend(ws.iter().cloned());
+            inputs.push(HostTensor::new(vec![alphas.len()], alphas.clone()));
+            let _ = exe.run(&inputs).unwrap();
+        });
+        per_inf_us.push((batch, timing.p50_us / batch as f64));
+        t.row(&[format!("PJRT exec kws batch={batch}"),
+                format!("{timing} ({:.1}us/inf)", timing.p50_us / batch as f64)]);
+    }
+
+    // ---- PCM read + GDC cost ------------------------------------------
+    let timing = time_it(1, iters, || {
+        let _ = dep.read_at(86_400.0, &params, &mut Rng::new(9), true);
+    });
+    t.row(&["PCM read_weights+GDC (307k w)".into(), format!("{timing}")]);
+
+    // ---- coordinator end-to-end overhead vs raw execute ----------------
+    let mut cfg = ServeConfig::new(vid, 8);
+    cfg.max_wait = std::time::Duration::from_micros(200);
+    let coord = Coordinator::start(cfg)?;
+    let feat = ds.feat_len();
+    let n = if opts.fast { 50 } else { 200 };
+    let timing = time_it(5, n, || {
+        let i = 3 % ds.len();
+        let _ = coord.infer(ds.x[i * feat..(i + 1) * feat].to_vec()).unwrap();
+    });
+    t.row(&["coordinator blocking infer (batch=1)".into(), format!("{timing}")]);
+    let summary = coord.metrics.summary();
+    t.row(&["coordinator metrics".into(), format!("{summary}")]);
+    coord.stop()?;
+
+    // ---- native GEMM throughput (simulator substrate) ------------------
+    let (m, k, n2) = (4096, 576, 128);
+    let mut r = Rng::new(3);
+    let a: Vec<f32> = (0..m * k).map(|_| r.gauss(0.0, 1.0) as f32).collect();
+    let b: Vec<f32> = (0..k * n2).map(|_| r.gauss(0.0, 1.0) as f32).collect();
+    for threads in [1usize, 4, 8] {
+        let timing = time_it(1, 5, || {
+            let _ = gemm::gemm_parallel(&a, &b, m, k, n2, threads);
+        });
+        let gflops = 2.0 * (m * k * n2) as f64 / (timing.min_us * 1e3);
+        t.row(&[format!("native GEMM 4096x576x128 t={threads}"),
+                format!("{:.1}ms min, {gflops:.1} GFLOP/s",
+                        timing.min_us / 1e3)]);
+    }
+
+    t.print();
+    save("runtime_bench.txt", &t.render());
+    if let Some((b, us)) = per_inf_us.last() {
+        println!("[runtime] best per-inference latency: {us:.1}us at batch {b}");
+    }
+    Ok(())
+}

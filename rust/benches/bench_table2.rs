@@ -1,0 +1,78 @@
+//! Table 2: AON-CiM accelerator summary — peak TOPS / TOPS/W at 8/6/4-bit
+//! activation precision, and per-model throughput / inference rate / energy
+//! of AnalogNet-KWS and AnalogNet-VWW.
+
+use analognets::bench::save;
+use analognets::crossbar::ArrayGeom;
+use analognets::mapping::map_model;
+use analognets::runtime::ArtifactStore;
+use analognets::timing::{model_perf, peak, t_cim_ns, EnergyModel};
+use analognets::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let store = ArtifactStore::open_default()?;
+    let em = EnergyModel::default();
+    let geom = ArrayGeom::AON;
+
+    let mut t = Table::new(
+        "Table 2: AON-CiM accelerator summary",
+        &["metric", "8bit", "6bit", "4bit", "paper (8/6/4)"],
+    );
+    let mut csv = String::from("metric,bits,value\n");
+
+    let mut peak_tops = Vec::new();
+    let mut peak_topsw = Vec::new();
+    for bits in [8u32, 6, 4] {
+        let (tp, tw) = peak(geom, bits, &em);
+        csv.push_str(&format!("peak_tops,{bits},{tp:.4}\n"));
+        csv.push_str(&format!("peak_tops_w,{bits},{tw:.4}\n"));
+        peak_tops.push(format!("{tp:.2}"));
+        peak_topsw.push(format!("{tw:.2}"));
+    }
+    t.row(&["T_CiM (ns)".into(), t_cim_ns(8).to_string(), t_cim_ns(6).to_string(),
+            t_cim_ns(4).to_string(), "130 / 34 / 10".into()]);
+    t.row(&["peak TOPS".into(), peak_tops[0].clone(), peak_tops[1].clone(),
+            peak_tops[2].clone(), "2 / 7.71 / 26.21".into()]);
+    t.row(&["peak TOPS/W".into(), peak_topsw[0].clone(), peak_topsw[1].clone(),
+            peak_topsw[2].clone(), "13.55 / 45.55 / 112.44".into()]);
+
+    for (task, vid, paper_tops, paper_topsw) in [
+        ("KWS", "kws_full_e10_8b", "0.6 / 2.29 / 7.8", "8.58 / 26.76 / 57.39"),
+        ("VWW", "vww_full_e10_8b", "0.076 / 0.29 / 0.98", "4.37 / 12.82 / 25.69"),
+    ] {
+        let meta = store.meta(vid)?;
+        let mapping = map_model(&meta, geom)?;
+        let (mut tops, mut topsw, mut infs, mut uj) =
+            (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        for bits in [8u32, 6, 4] {
+            let p = model_perf(&mapping, bits, &em);
+            tops.push(format!("{:.3}", p.tops));
+            topsw.push(format!("{:.2}", p.tops_w));
+            infs.push(format!("{:.0}", p.inf_per_sec));
+            uj.push(format!("{:.2}", p.uj_per_inf));
+            for (k, v) in [("tops", p.tops), ("tops_w", p.tops_w),
+                           ("inf_s", p.inf_per_sec), ("uj_inf", p.uj_per_inf)] {
+                csv.push_str(&format!("{task}_{k},{bits},{v:.4}\n"));
+            }
+        }
+        t.row(&[format!("{task} TOPS"), tops[0].clone(), tops[1].clone(),
+                tops[2].clone(), paper_tops.into()]);
+        t.row(&[format!("{task} TOPS/W"), topsw[0].clone(), topsw[1].clone(),
+                topsw[2].clone(), paper_topsw.into()]);
+        t.row(&[format!("{task} inf/s"), infs[0].clone(), infs[1].clone(),
+                infs[2].clone(),
+                if task == "KWS" { "7762 (8b)".into() } else { "1063 (8b)".into() }]);
+        t.row(&[format!("{task} uJ/inf"), uj[0].clone(), uj[1].clone(),
+                uj[2].clone(),
+                if task == "KWS" { "8.22 (8b)".into() } else { "15.6 (8b)".into() }]);
+        t.row(&[format!("{task} array util"),
+                format!("{:.1}%", 100.0 * mapping.allocated_utilization()),
+                "".into(), "".into(),
+                if task == "KWS" { "57.3% (Fig 6)".into() }
+                else { "67.5% (Fig 6)".into() }]);
+    }
+    t.print();
+    save("table2.txt", &t.render());
+    save("table2.csv", &csv);
+    Ok(())
+}

@@ -1,0 +1,99 @@
+//! Benchmark harness (criterion is not vendored; every `cargo bench` target
+//! is a `harness = false` binary built on these helpers).
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// Where bench binaries drop their table/CSV outputs.
+pub fn out_dir() -> PathBuf {
+    let d = PathBuf::from("bench_out");
+    let _ = std::fs::create_dir_all(&d);
+    d
+}
+
+/// Save a bench artifact (rendered table / CSV series).
+pub fn save(name: &str, content: &str) {
+    let p = out_dir().join(name);
+    if let Err(e) = std::fs::write(&p, content) {
+        eprintln!("warn: could not write {}: {e}", p.display());
+    } else {
+        println!("[bench] wrote {}", p.display());
+    }
+}
+
+/// Timing statistics over repeated runs of `f` (after `warmup` runs).
+pub struct Timing {
+    pub iters: usize,
+    pub mean_us: f64,
+    pub std_us: f64,
+    pub min_us: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+}
+
+impl std::fmt::Display for Timing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} mean={:.1}us std={:.1}us min={:.1}us p50={:.1}us p99={:.1}us",
+            self.iters, self.mean_us, self.std_us, self.min_us, self.p50_us,
+            self.p99_us
+        )
+    }
+}
+
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut us = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        us.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    use crate::util::stats;
+    Timing {
+        iters,
+        mean_us: stats::mean(&us),
+        std_us: stats::std(&us),
+        min_us: us.iter().copied().fold(f64::INFINITY, f64::min),
+        p50_us: stats::percentile(&us, 50.0),
+        p99_us: stats::percentile(&us, 99.0),
+    }
+}
+
+/// Shared bench CLI knobs (`--runs`, `--samples`, `--fast`).
+pub struct BenchOpts {
+    pub runs: usize,
+    pub max_samples: usize,
+    pub fast: bool,
+}
+
+impl BenchOpts {
+    pub fn from_env_args() -> Self {
+        let a = crate::util::cli::Args::from_env();
+        // `cargo bench -- --fast` and the env var both work
+        let fast = a.flag("fast")
+            || std::env::var("FAST").map(|v| v != "0" && !v.is_empty()).unwrap_or(false);
+        BenchOpts {
+            runs: a.opt_usize("runs", if fast { 2 } else { 3 }),
+            max_samples: a.opt_usize("samples", if fast { 128 } else { 256 }),
+            fast,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_counts() {
+        let mut n = 0;
+        let t = time_it(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(t.iters, 5);
+        assert!(t.min_us <= t.p50_us && t.p50_us <= t.p99_us + 1e-9);
+    }
+}

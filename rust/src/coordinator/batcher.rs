@@ -1,0 +1,77 @@
+//! Dynamic batching policy.
+//!
+//! The exported serving graphs come in a few fixed batch sizes (XLA shapes
+//! are static); the batcher packs the waiting queue into the cheapest
+//! sequence of graph launches, padding the tail.
+
+/// A planned sequence of graph launches for `queued` requests.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BatchPlan {
+    /// batch sizes to launch, largest first
+    pub launches: Vec<usize>,
+    /// padded slots in the final launch
+    pub padding: usize,
+}
+
+/// Greedy plan: repeatedly take the largest graph <= remaining, then one
+/// final padded launch with the smallest graph that fits the tail.
+pub fn plan(queued: usize, mut sizes: Vec<usize>) -> BatchPlan {
+    assert!(!sizes.is_empty());
+    sizes.sort_unstable();
+    let mut launches = Vec::new();
+    let mut left = queued;
+    let largest = *sizes.last().unwrap();
+    while left >= largest {
+        launches.push(largest);
+        left -= largest;
+    }
+    let mut padding = 0;
+    if left > 0 {
+        let fit = sizes.iter().copied().find(|&s| s >= left).unwrap_or(largest);
+        padding = fit - left;
+        launches.push(fit);
+    }
+    BatchPlan { launches, padding }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_fit() {
+        let p = plan(32, vec![1, 8, 32]);
+        assert_eq!(p.launches, vec![32]);
+        assert_eq!(p.padding, 0);
+    }
+
+    #[test]
+    fn mixed_fit() {
+        let p = plan(70, vec![1, 8, 32]);
+        assert_eq!(p.launches, vec![32, 32, 8]);
+        assert_eq!(p.padding, 2);
+    }
+
+    #[test]
+    fn single() {
+        let p = plan(1, vec![1, 8, 32]);
+        assert_eq!(p.launches, vec![1]);
+        assert_eq!(p.padding, 0);
+    }
+
+    #[test]
+    fn pads_to_smallest_fitting() {
+        let p = plan(3, vec![1, 8, 32]);
+        assert_eq!(p.launches, vec![8]);
+        assert_eq!(p.padding, 5);
+    }
+
+    #[test]
+    fn covers_all_requests() {
+        for q in 1..200 {
+            let p = plan(q, vec![1, 8, 32]);
+            let total: usize = p.launches.iter().sum();
+            assert_eq!(total, q + p.padding, "q={q}");
+        }
+    }
+}

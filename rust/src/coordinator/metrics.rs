@@ -1,0 +1,97 @@
+//! Serving metrics: counters + latency reservoir.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub launches: AtomicU64,
+    pub padded_slots: AtomicU64,
+    pub weight_refreshes: AtomicU64,
+    /// per-request end-to-end latencies, microseconds
+    lat_us: Mutex<Vec<f64>>,
+    /// simulated accelerator energy, nanojoules
+    pub sim_energy_nj: Mutex<f64>,
+}
+
+impl Metrics {
+    pub fn record_latency_us(&self, us: f64) {
+        self.lat_us.lock().unwrap().push(us);
+    }
+
+    pub fn add_energy_nj(&self, nj: f64) {
+        *self.sim_energy_nj.lock().unwrap() += nj;
+    }
+
+    pub fn latencies_us(&self) -> Vec<f64> {
+        self.lat_us.lock().unwrap().clone()
+    }
+
+    pub fn summary(&self) -> MetricsSummary {
+        let lat = self.latencies_us();
+        let completed = self.completed.load(Ordering::Relaxed);
+        MetricsSummary {
+            requests: self.requests.load(Ordering::Relaxed),
+            completed,
+            launches: self.launches.load(Ordering::Relaxed),
+            padded_slots: self.padded_slots.load(Ordering::Relaxed),
+            weight_refreshes: self.weight_refreshes.load(Ordering::Relaxed),
+            p50_us: crate::util::stats::percentile(&lat, 50.0),
+            p99_us: crate::util::stats::percentile(&lat, 99.0),
+            mean_us: crate::util::stats::mean(&lat),
+            sim_uj_per_inf: if completed == 0 {
+                0.0
+            } else {
+                *self.sim_energy_nj.lock().unwrap() * 1e-3 / completed as f64
+            },
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct MetricsSummary {
+    pub requests: u64,
+    pub completed: u64,
+    pub launches: u64,
+    pub padded_slots: u64,
+    pub weight_refreshes: u64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub mean_us: f64,
+    pub sim_uj_per_inf: f64,
+}
+
+impl std::fmt::Display for MetricsSummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "req={} done={} launches={} padded={} refreshes={} \
+             lat p50={:.0}us p99={:.0}us mean={:.0}us sim_energy={:.2}uJ/inf",
+            self.requests, self.completed, self.launches, self.padded_slots,
+            self.weight_refreshes, self.p50_us, self.p99_us, self.mean_us,
+            self.sim_uj_per_inf
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_math() {
+        let m = Metrics::default();
+        m.requests.store(10, Ordering::Relaxed);
+        m.completed.store(10, Ordering::Relaxed);
+        for i in 0..10 {
+            m.record_latency_us(i as f64);
+        }
+        m.add_energy_nj(10_000.0); // 10 uJ over 10 inf
+        let s = m.summary();
+        assert_eq!(s.completed, 10);
+        assert!((s.p50_us - 4.5).abs() < 1e-9);
+        assert!((s.sim_uj_per_inf - 1.0).abs() < 1e-9);
+    }
+}

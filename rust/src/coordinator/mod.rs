@@ -1,0 +1,17 @@
+//! The always-on serving coordinator (L3).
+//!
+//! Owns the request loop of the AON-CiM accelerator: clients submit feature
+//! frames (KWS spectrograms / VWW images), the batcher groups them onto the
+//! exported serving graphs, the PCM state manager advances the drift clock
+//! and periodically recalibrates GDC, and the executor runs the compiled
+//! PJRT graph. Python is never on this path.
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+pub mod state;
+
+pub use batcher::BatchPlan;
+pub use metrics::Metrics;
+pub use server::{Coordinator, Request, Response, ServeConfig};
+pub use state::PcmState;

@@ -1,0 +1,293 @@
+//! The serving loop: request intake -> dynamic batcher -> PJRT executor,
+//! with PCM drift management in the background of every dispatch.
+
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::state::PcmState;
+use crate::crossbar::ArrayGeom;
+use crate::eval::DeployedModel;
+use crate::mapping::map_model;
+use crate::pcm::PcmParams;
+use crate::runtime::{ArtifactStore, HostTensor};
+use crate::timing::{model_perf, EnergyModel};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// artifact variant to serve, e.g. "kws_full_e10_8b"
+    pub vid: String,
+    pub bits: u32,
+    /// batcher window: how long to wait for more requests after the first
+    pub max_wait: Duration,
+    /// simulated seconds per wall second (drift clock acceleration)
+    pub time_scale: f64,
+    pub seed: u64,
+    /// simulated seconds between weight refreshes (fresh read noise + GDC)
+    pub refresh_every_s: f64,
+    /// reprogram the array when mean GDC alpha exceeds 1.15
+    pub reprogram: bool,
+    pub artifacts_dir: std::path::PathBuf,
+}
+
+impl ServeConfig {
+    pub fn new(vid: &str, bits: u32) -> Self {
+        ServeConfig {
+            vid: vid.to_string(),
+            bits,
+            max_wait: Duration::from_millis(2),
+            time_scale: 1.0,
+            seed: 7,
+            refresh_every_s: 60.0,
+            reprogram: false,
+            artifacts_dir: crate::nn::manifest::artifacts_dir(),
+        }
+    }
+}
+
+pub struct Request {
+    pub features: Vec<f32>,
+    reply: mpsc::Sender<Response>,
+    submitted: Instant,
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub pred: u32,
+    pub logits: Vec<f32>,
+    pub latency: Duration,
+    /// device age (simulated seconds) when served
+    pub sim_age_s: f64,
+}
+
+enum Msg {
+    Req(Request),
+    Stop,
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    tx: mpsc::Sender<Msg>,
+    handle: Option<JoinHandle<anyhow::Result<()>>>,
+    pub metrics: Arc<Metrics>,
+    pub classes: usize,
+    pub feat_len: usize,
+}
+
+impl Coordinator {
+    /// Start the worker thread (it owns the PJRT client and the PCM state).
+    pub fn start(cfg: ServeConfig) -> anyhow::Result<Coordinator> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let metrics = Arc::new(Metrics::default());
+        let m2 = metrics.clone();
+        // probe the artifacts on the caller thread for early errors + shape
+        let store = ArtifactStore::open(&cfg.artifacts_dir)?;
+        let meta = store.meta(&cfg.vid)?;
+        let (ih, iw, ic) = meta.input_hwc;
+        let classes = meta.num_classes;
+        let feat_len = ih * iw * ic;
+        drop(store);
+
+        let handle = std::thread::Builder::new()
+            .name("aon-cim-coordinator".into())
+            .spawn(move || worker(cfg, rx, m2))?;
+        Ok(Coordinator {
+            tx,
+            handle: Some(handle),
+            metrics,
+            classes,
+            feat_len,
+        })
+    }
+
+    /// Submit a request; returns the channel the response arrives on.
+    pub fn submit(&self, features: Vec<f32>) -> anyhow::Result<mpsc::Receiver<Response>> {
+        anyhow::ensure!(features.len() == self.feat_len, "bad feature length");
+        let (rtx, rrx) = mpsc::channel();
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .send(Msg::Req(Request {
+                features,
+                reply: rtx,
+                submitted: Instant::now(),
+            }))
+            .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
+        Ok(rrx)
+    }
+
+    /// Blocking single inference.
+    pub fn infer(&self, features: Vec<f32>) -> anyhow::Result<Response> {
+        let rx = self.submit(features)?;
+        rx.recv().map_err(|_| anyhow::anyhow!("coordinator dropped request"))
+    }
+
+    pub fn stop(mut self) -> anyhow::Result<()> {
+        let _ = self.tx.send(Msg::Stop);
+        if let Some(h) = self.handle.take() {
+            h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Stop);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker(cfg: ServeConfig, rx: mpsc::Receiver<Msg>, metrics: Arc<Metrics>)
+          -> anyhow::Result<()> {
+    // the worker owns its own PJRT client (the xla handles stay on-thread)
+    let store = ArtifactStore::open(&cfg.artifacts_dir)?;
+    let meta = store.meta(&cfg.vid)?;
+    let (ih, iw, ic) = meta.input_hwc;
+    let feat_len = ih * iw * ic;
+    let classes = meta.num_classes;
+
+    // serving graphs available at this bitwidth, smallest first
+    let mut batch_sizes: Vec<usize> = meta
+        .hlo_keys()
+        .into_iter()
+        .filter(|(b, _)| *b == cfg.bits)
+        .map(|(_, n)| n)
+        .collect();
+    batch_sizes.sort_unstable();
+    anyhow::ensure!(!batch_sizes.is_empty(),
+                    "variant {} has no {}b serving graphs", cfg.vid, cfg.bits);
+    // compile every batch size up front (never on the hot path)
+    for &b in &batch_sizes {
+        store.executable(&cfg.vid, cfg.bits, b)?;
+    }
+
+    // simulated accelerator energy per inference (timing model, Table 2 row)
+    let mapping = map_model(&meta, ArrayGeom::AON)?;
+    let perf = model_perf(&mapping, cfg.bits, &EnergyModel::default());
+    let nj_per_inf = perf.energy_nj;
+
+    // deploy onto PCM
+    let params = PcmParams::default();
+    let mut rng = Rng::new(cfg.seed);
+    let deployed = DeployedModel::program(&store, &cfg.vid, &params, &mut rng)?;
+    let mut state = PcmState::new(deployed, params, cfg.seed ^ 0xD1F7, cfg.time_scale);
+    state.refresh_every_s = cfg.refresh_every_s;
+
+    let max_queue = *batch_sizes.last().unwrap() * 4;
+    let mut queue: Vec<Request> = Vec::with_capacity(max_queue);
+    // reusable input buffer (largest batch) — no allocation on the hot path
+    let max_batch = *batch_sizes.last().unwrap();
+    let mut xbuf = vec![0f32; max_batch * feat_len];
+
+    loop {
+        // block for the first request
+        match rx.recv() {
+            Ok(Msg::Req(r)) => queue.push(r),
+            Ok(Msg::Stop) | Err(_) => break,
+        }
+        // batching window: gather more until max_wait or queue full
+        let deadline = Instant::now() + cfg.max_wait;
+        while queue.len() < max_queue {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Msg::Req(r)) => queue.push(r),
+                Ok(Msg::Stop) => {
+                    drain(&store, &cfg, &mut state, &mut queue, &metrics,
+                          &batch_sizes, &mut xbuf, feat_len, classes,
+                          nj_per_inf)?;
+                    return Ok(());
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        drain(&store, &cfg, &mut state, &mut queue, &metrics, &batch_sizes,
+              &mut xbuf, feat_len, classes, nj_per_inf)?;
+
+        // drift management between dispatches
+        if cfg.reprogram && state.needs_reprogram() {
+            state.reprogram(&store, &cfg.vid)?;
+        }
+    }
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn drain(store: &ArtifactStore, cfg: &ServeConfig, state: &mut PcmState,
+         queue: &mut Vec<Request>, metrics: &Metrics, batch_sizes: &[usize],
+         xbuf: &mut [f32], feat_len: usize, classes: usize,
+         nj_per_inf: f64) -> anyhow::Result<()> {
+    if queue.is_empty() {
+        return Ok(());
+    }
+    let plan = batcher::plan(queue.len(), batch_sizes.to_vec());
+    metrics
+        .padded_slots
+        .fetch_add(plan.padding as u64, Ordering::Relaxed);
+
+    let (ws, alphas, refreshed) = state.current_weights();
+    let ws = ws.clone();
+    let alphas = alphas.clone();
+    if refreshed {
+        metrics.weight_refreshes.fetch_add(1, Ordering::Relaxed);
+    }
+    let sim_age = state.sim_age_s();
+
+    let mut taken = 0usize;
+    for &launch in &plan.launches {
+        let count = launch.min(queue.len() - taken);
+        let exe = store.executable(&cfg.vid, cfg.bits, launch)?;
+        let meta = store.meta(&cfg.vid)?;
+        let (ih, iw, ic) = meta.input_hwc;
+
+        let xb = &mut xbuf[..launch * feat_len];
+        for (i, r) in queue[taken..taken + count].iter().enumerate() {
+            xb[i * feat_len..(i + 1) * feat_len].copy_from_slice(&r.features);
+        }
+        for i in count..launch {
+            // pad with the first request's features
+            let (a, b) = xb.split_at_mut(i * feat_len);
+            b[..feat_len].copy_from_slice(&a[..feat_len]);
+        }
+
+        let mut inputs = Vec::with_capacity(2 + ws.len());
+        inputs.push(HostTensor::new(vec![launch, ih, iw, ic], xb.to_vec()));
+        inputs.extend(ws.iter().cloned());
+        inputs.push(HostTensor::new(vec![alphas.len()], alphas.clone()));
+        let logits = exe.run(&inputs)?;
+        metrics.launches.fetch_add(1, Ordering::Relaxed);
+
+        let now = Instant::now();
+        for (i, r) in queue[taken..taken + count].iter().enumerate() {
+            let row = &logits[i * classes..(i + 1) * classes];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(c, _)| c as u32)
+                .unwrap();
+            // account BEFORE replying: clients must observe settled metrics
+            metrics.completed.fetch_add(1, Ordering::Relaxed);
+            metrics.record_latency_us((now - r.submitted).as_secs_f64() * 1e6);
+            metrics.add_energy_nj(nj_per_inf);
+            let _ = r.reply.send(Response {
+                pred,
+                logits: row.to_vec(),
+                latency: now - r.submitted,
+                sim_age_s: sim_age,
+            });
+        }
+        taken += count;
+    }
+    queue.clear();
+    Ok(())
+}

@@ -1,0 +1,166 @@
+//! PCM array state management: drift clock, periodic weight refresh,
+//! GDC recalibration, and the reprogramming policy.
+
+use std::time::Instant;
+
+use crate::eval::{DeployedLayer, DeployedModel};
+use crate::pcm::{gdc, PcmParams};
+use crate::runtime::HostTensor;
+use crate::util::rng::Rng;
+
+/// Live PCM state behind the serving loop.
+pub struct PcmState {
+    pub deployed: DeployedModel,
+    pub params: PcmParams,
+    rng: Rng,
+    /// wall-clock origin of the current programming
+    programmed_at: Instant,
+    /// simulated seconds per wall second (always-on deployments run for
+    /// months; examples accelerate the clock)
+    pub time_scale: f64,
+    /// simulated age offset (programming completes at t_c = 25 s)
+    age_offset_s: f64,
+    /// cached effective weights + GDC (refreshed on a simulated-time cadence)
+    cached: Option<(Vec<HostTensor>, Vec<f32>)>,
+    cached_at_s: f64,
+    /// refresh cadence in simulated seconds
+    pub refresh_every_s: f64,
+    /// reprogram when the mean GDC factor exceeds this
+    pub reprogram_alpha: f64,
+    pub reprogram_count: u64,
+    pub gdc_enabled: bool,
+}
+
+impl PcmState {
+    pub fn new(deployed: DeployedModel, params: PcmParams, seed: u64,
+               time_scale: f64) -> Self {
+        PcmState {
+            deployed,
+            params,
+            rng: Rng::new(seed),
+            programmed_at: Instant::now(),
+            time_scale,
+            age_offset_s: crate::pcm::T_C_SECONDS,
+            cached: None,
+            cached_at_s: f64::NEG_INFINITY,
+            refresh_every_s: 60.0,
+            reprogram_alpha: 1.15,
+            reprogram_count: 0,
+            gdc_enabled: true,
+        }
+    }
+
+    /// Current simulated device age in seconds.
+    pub fn sim_age_s(&self) -> f64 {
+        self.age_offset_s + self.programmed_at.elapsed().as_secs_f64() * self.time_scale
+    }
+
+    /// Mean GDC factor right now (drift health indicator).
+    pub fn mean_alpha(&self) -> f64 {
+        let t = self.sim_age_s();
+        let mut s = 0.0;
+        let mut n = 0usize;
+        for dl in &self.deployed.layers {
+            if let DeployedLayer::Analog(p) = dl {
+                s += gdc::alpha(p, t) as f64;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            1.0
+        } else {
+            s / n as f64
+        }
+    }
+
+    /// Reprogram the array (fresh programming noise, drift clock reset).
+    pub fn reprogram(&mut self, store: &crate::runtime::ArtifactStore,
+                     vid: &str) -> anyhow::Result<()> {
+        self.deployed =
+            DeployedModel::program(store, vid, &self.params, &mut self.rng)?;
+        self.programmed_at = Instant::now();
+        self.cached = None;
+        self.cached_at_s = f64::NEG_INFINITY;
+        self.reprogram_count += 1;
+        Ok(())
+    }
+
+    /// Effective weights + GDC for the current simulated time, refreshed on
+    /// the configured cadence (fresh 1/f read noise on each refresh).
+    /// The bool is true when this call performed a refresh.
+    pub fn current_weights(&mut self) -> (&Vec<HostTensor>, &Vec<f32>, bool) {
+        let t = self.sim_age_s();
+        let mut refreshed = false;
+        if self.cached.is_none() || t - self.cached_at_s >= self.refresh_every_s {
+            let (ws, alphas) =
+                self.deployed
+                    .read_at(t, &self.params, &mut self.rng, self.gdc_enabled);
+            self.cached = Some((ws, alphas));
+            self.cached_at_s = t;
+            refreshed = true;
+        }
+        let c = self.cached.as_ref().unwrap();
+        (&c.0, &c.1, refreshed)
+    }
+
+    /// Whether the reprogramming policy should fire.
+    pub fn needs_reprogram(&self) -> bool {
+        self.mean_alpha() > self.reprogram_alpha
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::meta::ModelMeta;
+    use crate::pcm::ProgrammedWeights;
+    use crate::util::json;
+
+    fn tiny_deployed() -> DeployedModel {
+        let src = r#"{
+          "model": "tiny", "variant": "t", "input_hwc": [1, 1, 4],
+          "num_classes": 2, "eta": 0.0, "fp_test_acc": 1.0,
+          "trained_adc_bits": null,
+          "layers": [{"name": "fc", "kind": "dense", "in_ch": 4, "out_ch": 2,
+            "stride": [1,1], "relu": false, "analog": true,
+            "in_h": 1, "in_w": 1, "out_h": 1, "out_w": 1,
+            "k_gemm": 4, "weight_shape": [4, 2], "graph_weight_shape": [4, 2],
+            "w_scale": 1.0, "w_max": 1.0, "r_dac": 1.0, "r_adc": 4.0,
+            "dig_scale": [1, 1], "dig_bias": [0, 0]}],
+          "hlo": {}
+        }"#;
+        let meta = std::sync::Arc::new(
+            ModelMeta::from_json(&json::parse(src).unwrap()).unwrap());
+        let mut rng = Rng::new(5);
+        let w: Vec<f32> = (0..8).map(|i| (i as f32 - 4.0) / 8.0).collect();
+        let p = ProgrammedWeights::program(&w, 4, 2, 1.0, &PcmParams::default(),
+                                           &mut rng);
+        DeployedModel { meta, layers: vec![DeployedLayer::Analog(p)] }
+    }
+
+    #[test]
+    fn sim_clock_advances_with_scale() {
+        let st = PcmState::new(tiny_deployed(), PcmParams::default(), 1, 1e6);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let age = st.sim_age_s();
+        assert!(age > 25.0 + 1e3, "age={age}"); // 5ms * 1e6 = 5000s
+    }
+
+    #[test]
+    fn weights_cached_between_refreshes() {
+        let mut st = PcmState::new(tiny_deployed(), PcmParams::default(), 1, 0.0);
+        st.refresh_every_s = 1e9;
+        let w1 = st.current_weights().0[0].data.clone();
+        let w2 = st.current_weights().0[0].data.clone();
+        assert_eq!(w1, w2);
+    }
+
+    #[test]
+    fn alpha_grows_as_clock_runs() {
+        let st = PcmState::new(tiny_deployed(), PcmParams::default(), 1, 1e7);
+        let a0 = st.mean_alpha();
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        let a1 = st.mean_alpha();
+        assert!(a1 >= a0, "{a0} -> {a1}");
+    }
+}

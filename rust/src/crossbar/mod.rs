@@ -1,0 +1,73 @@
+//! CiM crossbar array geometry (Section 5.2 / Table 2).
+//!
+//! One differential pair (two PCM devices) per weight; the AON-CiM array is
+//! 1024 rows x 512 columns of *weights* with a 4-input analog mux in front
+//! of each ADC group.
+
+/// Geometry of one CiM array.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArrayGeom {
+    /// crossbar rows (DAC-driven source lines)
+    pub rows: usize,
+    /// crossbar columns (weight columns; each is a differential bitline pair)
+    pub cols: usize,
+    /// analog column mux ratio (ADCs = cols / mux)
+    pub adc_mux: usize,
+}
+
+impl ArrayGeom {
+    /// The paper's AON-CiM array: 1024 x 512, mux-4.
+    pub const AON: ArrayGeom = ArrayGeom {
+        rows: 1024,
+        cols: 512,
+        adc_mux: 4,
+    };
+
+    pub fn new(rows: usize, cols: usize) -> Self {
+        ArrayGeom {
+            rows,
+            cols,
+            adc_mux: 4,
+        }
+    }
+
+    /// Total weight cells (differential pairs).
+    pub fn cells(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Number of physical ADCs.
+    pub fn adcs(&self) -> usize {
+        self.cols / self.adc_mux
+    }
+
+    /// ADC phases needed to read `cols_used` columns (mux sharing).
+    ///
+    /// Columns are interleaved across mux groups, so `cols_used` columns
+    /// need `ceil(cols_used / adcs)` conversion phases, capped at `adc_mux`.
+    pub fn adc_phases(&self, cols_used: usize) -> usize {
+        let adcs = self.adcs();
+        ((cols_used + adcs - 1) / adcs).clamp(1, self.adc_mux)
+    }
+
+    /// Peak MACs per full-array MVM.
+    pub fn peak_macs_per_mvm(&self) -> usize {
+        self.cells()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aon_geometry() {
+        let g = ArrayGeom::AON;
+        assert_eq!(g.cells(), 524_288);
+        assert_eq!(g.adcs(), 128);
+        assert_eq!(g.adc_phases(512), 4);
+        assert_eq!(g.adc_phases(128), 1);
+        assert_eq!(g.adc_phases(129), 2);
+        assert_eq!(g.adc_phases(1), 1);
+    }
+}

@@ -1,0 +1,130 @@
+//! Test-set loading (ANDS binary, written by `python/compile/data.py`).
+
+use std::io::Read;
+use std::path::Path;
+
+/// A loaded evaluation set: row-major f32 inputs + integer labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// per-sample feature dims, e.g. [49, 10, 1]
+    pub dims: Vec<usize>,
+    /// flattened inputs, sample-major
+    pub x: Vec<f32>,
+    pub y: Vec<u32>,
+}
+
+const MAGIC: &[u8; 4] = b"ANDS";
+
+impl Dataset {
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let mut f = std::fs::File::open(path)
+            .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        if buf.len() < 12 || &buf[0..4] != MAGIC {
+            anyhow::bail!("bad ANDS file {}", path.display());
+        }
+        let rd_u32 = |o: usize| u32::from_le_bytes(buf[o..o + 4].try_into().unwrap());
+        let n = rd_u32(4) as usize;
+        let ndim = rd_u32(8) as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        let mut pos = 12;
+        for _ in 0..ndim {
+            dims.push(rd_u32(pos) as usize);
+            pos += 4;
+        }
+        let feat: usize = dims.iter().product();
+        let xbytes = n * feat * 4;
+        if buf.len() != pos + xbytes + n * 4 {
+            anyhow::bail!("ANDS size mismatch in {}", path.display());
+        }
+        let mut x = vec![0f32; n * feat];
+        for (i, c) in buf[pos..pos + xbytes].chunks_exact(4).enumerate() {
+            x[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        pos += xbytes;
+        let mut y = vec![0u32; n];
+        for (i, c) in buf[pos..].chunks_exact(4).enumerate() {
+            y[i] = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        Ok(Dataset { dims, x, y })
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn feat_len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Slice of samples [lo, hi) as a flat buffer.
+    pub fn batch(&self, lo: usize, hi: usize) -> &[f32] {
+        let f = self.feat_len();
+        &self.x[lo * f..hi * f]
+    }
+
+    /// A batch padded (by repeating the last sample) to exactly `batch` rows.
+    pub fn padded_batch(&self, lo: usize, batch: usize) -> Vec<f32> {
+        let f = self.feat_len();
+        let hi = (lo + batch).min(self.len());
+        let mut out = Vec::with_capacity(batch * f);
+        out.extend_from_slice(self.batch(lo, hi));
+        let last = self.batch(self.len() - 1, self.len());
+        while out.len() < batch * f {
+            out.extend_from_slice(last);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_sample(path: &Path) {
+        let mut b = Vec::new();
+        b.extend_from_slice(b"ANDS");
+        b.extend_from_slice(&3u32.to_le_bytes()); // n
+        b.extend_from_slice(&2u32.to_le_bytes()); // ndim
+        b.extend_from_slice(&2u32.to_le_bytes());
+        b.extend_from_slice(&2u32.to_le_bytes());
+        for i in 0..12 {
+            b.extend_from_slice(&(i as f32).to_le_bytes());
+        }
+        for y in [0u32, 1, 2] {
+            b.extend_from_slice(&y.to_le_bytes());
+        }
+        std::fs::write(path, b).unwrap();
+    }
+
+    #[test]
+    fn loads_and_batches() {
+        let dir = std::env::temp_dir().join("ands_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("d.bin");
+        write_sample(&p);
+        let d = Dataset::load(&p).unwrap();
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.feat_len(), 4);
+        assert_eq!(d.batch(1, 2), &[4.0, 5.0, 6.0, 7.0]);
+        let pb = d.padded_batch(2, 4);
+        assert_eq!(pb.len(), 16);
+        assert_eq!(&pb[0..4], &[8.0, 9.0, 10.0, 11.0]);
+        assert_eq!(&pb[4..8], &[8.0, 9.0, 10.0, 11.0]); // padded w/ last
+        assert_eq!(d.y, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("ands_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, b"NOPE00000000").unwrap();
+        assert!(Dataset::load(&p).is_err());
+    }
+}

@@ -1,0 +1,161 @@
+//! Drift-accuracy evaluation: the engine behind Table 1, Figure 7, Figure 9.
+//!
+//! Per run: program the variant's weights into simulated PCM (programming
+//! noise + per-device drift exponents), then for each requested time point
+//! read the conductances (drift + 1/f noise), compute the per-layer GDC
+//! factors, and execute the exported HLO graph over the test set.
+
+use std::sync::Arc;
+
+use crate::nn::{expand_dw_dense, LayerKind, ModelMeta, Tensor};
+use crate::pcm::{gdc, PcmParams, ProgrammedWeights};
+use crate::runtime::{ArtifactStore, HostTensor};
+use crate::util::rng::Rng;
+
+/// One layer's deployed state: PCM-programmed (analog) or exact (digital).
+pub enum DeployedLayer {
+    Analog(ProgrammedWeights),
+    Digital(Tensor),
+}
+
+/// A variant programmed onto the simulated PCM array.
+pub struct DeployedModel {
+    pub meta: Arc<ModelMeta>,
+    pub layers: Vec<DeployedLayer>,
+}
+
+impl DeployedModel {
+    /// Program `vid`'s weights (expanding depthwise layers to their dense
+    /// CiM form so the zero cells are physically programmed).
+    pub fn program(store: &ArtifactStore, vid: &str, params: &PcmParams,
+                   rng: &mut Rng) -> anyhow::Result<Self> {
+        let meta = store.meta(vid)?;
+        let tensors = store.weights(vid)?;
+        anyhow::ensure!(tensors.len() == meta.layers.len(), "weights/meta mismatch");
+        let mut layers = Vec::new();
+        for (lm, t) in meta.layers.iter().zip(tensors.iter()) {
+            if !lm.analog {
+                layers.push(DeployedLayer::Digital(t.clone()));
+                continue;
+            }
+            let dense = if lm.kind == LayerKind::Dw3x3 {
+                expand_dw_dense(t)
+            } else {
+                t.clone()
+            };
+            let (rows, cols) = (dense.shape[0], dense.shape[1]);
+            let mut lrng = rng.fork(layers.len() as u64 + 1);
+            layers.push(DeployedLayer::Analog(ProgrammedWeights::program(
+                &dense.data, rows, cols, lm.w_scale, params, &mut lrng,
+            )));
+        }
+        Ok(DeployedModel { meta, layers })
+    }
+
+    /// Effective weight tensors + GDC vector at `t` seconds after programming.
+    pub fn read_at(&self, t_seconds: f64, params: &PcmParams, rng: &mut Rng,
+                   use_gdc: bool) -> (Vec<HostTensor>, Vec<f32>) {
+        let mut ws = Vec::with_capacity(self.layers.len());
+        let mut alphas = Vec::with_capacity(self.layers.len());
+        for (lm, dl) in self.meta.layers.iter().zip(self.layers.iter()) {
+            match dl {
+                DeployedLayer::Analog(p) => {
+                    let w = p.read_weights(t_seconds, params, rng);
+                    ws.push(HostTensor::new(
+                        vec![p.rows, p.cols],
+                        w,
+                    ));
+                    alphas.push(if use_gdc { gdc::alpha(p, t_seconds) } else { 1.0 });
+                }
+                DeployedLayer::Digital(t) => {
+                    ws.push(HostTensor::new(t.shape.clone(), t.data.clone()));
+                    alphas.push(1.0);
+                }
+            }
+            let _ = lm;
+        }
+        (ws, alphas)
+    }
+}
+
+/// Options for an accuracy evaluation.
+#[derive(Clone, Debug)]
+pub struct EvalOpts {
+    pub bits: u32,
+    pub batch: usize,
+    /// evaluate at most this many test samples (paper uses the full set; we
+    /// default to a subset to keep CPU sweeps tractable — see EXPERIMENTS.md)
+    pub max_samples: usize,
+    pub runs: usize,
+    pub seed: u64,
+    pub use_gdc: bool,
+    pub params: PcmParams,
+}
+
+impl Default for EvalOpts {
+    fn default() -> Self {
+        EvalOpts {
+            bits: 8,
+            batch: 128,
+            max_samples: 256,
+            runs: 5,
+            seed: 0xA11A,
+            use_gdc: true,
+            params: PcmParams::default(),
+        }
+    }
+}
+
+/// Accuracy of `vid` at each `times[i]` seconds, for `opts.runs` independent
+/// programming runs. Returns `accs[time_idx][run_idx]` in [0, 1].
+pub fn drift_accuracy(store: &ArtifactStore, vid: &str, times: &[f64],
+                      opts: &EvalOpts) -> anyhow::Result<Vec<Vec<f64>>> {
+    let meta = store.meta(vid)?;
+    let task = if meta.model.contains("vww") { "vww" } else { "kws" };
+    let ds = store.dataset(task)?;
+    let n = ds.len().min(opts.max_samples);
+    let exe = store.executable(vid, opts.bits, opts.batch)?;
+    let classes = meta.num_classes;
+
+    let mut out = vec![Vec::with_capacity(opts.runs); times.len()];
+    for run in 0..opts.runs {
+        let mut rng = Rng::new(opts.seed ^ (run as u64).wrapping_mul(0x9E37));
+        let dep = DeployedModel::program(store, vid, &opts.params, &mut rng)?;
+        for (ti, &t) in times.iter().enumerate() {
+            let (ws, alphas) = dep.read_at(t, &opts.params, &mut rng, opts.use_gdc);
+            let mut correct = 0usize;
+            let mut lo = 0usize;
+            while lo < n {
+                let xb = ds.padded_batch(lo, opts.batch);
+                let (ih, iw, ic) = meta.input_hwc;
+                let mut inputs = Vec::with_capacity(2 + ws.len());
+                inputs.push(HostTensor::new(vec![opts.batch, ih, iw, ic], xb));
+                inputs.extend(ws.iter().cloned());
+                inputs.push(HostTensor::new(vec![alphas.len()], alphas.clone()));
+                let logits = exe.run(&inputs)?;
+                let hi = (lo + opts.batch).min(n);
+                for (i, row) in logits.chunks_exact(classes).enumerate().take(hi - lo) {
+                    let pred = row
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.total_cmp(b.1))
+                        .map(|(c, _)| c as u32)
+                        .unwrap();
+                    if pred == ds.y[lo + i] {
+                        correct += 1;
+                    }
+                }
+                lo = hi;
+            }
+            out[ti].push(correct as f64 / n as f64);
+        }
+    }
+    Ok(out)
+}
+
+/// Convenience: accuracy mean/std (%) after 24h of drift (Table 1 cells).
+pub fn accuracy_24h(store: &ArtifactStore, vid: &str, opts: &EvalOpts)
+                    -> anyhow::Result<(f64, f64)> {
+    let accs = drift_accuracy(store, vid, &[crate::pcm::T_1D], opts)?;
+    Ok(crate::util::stats::acc_summary(&accs[0]))
+}

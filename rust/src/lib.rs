@@ -1,0 +1,23 @@
+//! AnalogNets: ML-HW co-design of noise-robust TinyML models and an
+//! always-on analog compute-in-memory accelerator — reproduction library.
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * L1/L2 (build time, Python): Pallas CiM kernel + JAX model graphs,
+//!   AOT-lowered to the HLO artifacts this crate loads;
+//! * L3 (this crate): the AON-CiM accelerator model — PCM device physics,
+//!   layer mapper, cycle/energy model — and the always-on serving
+//!   coordinator executing the exported graphs via PJRT.
+
+pub mod bench;
+pub mod coordinator;
+pub mod crossbar;
+pub mod datasets;
+pub mod eval;
+pub mod mapping;
+pub mod nn;
+pub mod pcm;
+pub mod quant;
+pub mod runtime;
+pub mod simulator;
+pub mod timing;
+pub mod util;

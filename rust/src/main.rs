@@ -1,0 +1,187 @@
+//! `analognets` CLI: the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   serve    run the always-on coordinator on synthetic request traffic
+//!   eval     drift-accuracy evaluation of one variant (Fig 7 style)
+//!   map      print the CiM array mapping of a variant (Fig 6 / Fig 11)
+//!   report   accelerator performance summary (Table 2 style)
+//!   selftest sanity-check the artifact bundle end to end
+
+use analognets::coordinator::{Coordinator, ServeConfig};
+use analognets::crossbar::ArrayGeom;
+use analognets::eval::{drift_accuracy, EvalOpts};
+use analognets::mapping::{layout, map_model};
+use analognets::pcm::FIG7_TIMES;
+use analognets::runtime::ArtifactStore;
+use analognets::timing::{model_perf, peak, EnergyModel};
+use analognets::util::cli::Args;
+use analognets::util::stats;
+use analognets::util::table::Table;
+
+const USAGE: &str = "usage: analognets <serve|eval|map|report|selftest> [options]
+  serve    --vid kws_full_e10_8b [--bits 8] [--requests 500] [--time-scale 1e4]
+  eval     --vid kws_full_e10_8b [--bits 8] [--runs 5] [--samples 256]
+  map      --vid kws_full_e10_8b [--rows 1024 --cols 512] [--split]
+  report   --vid kws_full_e10_8b [--bits 8]
+  selftest
+options: --artifacts <dir> (or env ANALOGNETS_ARTIFACTS)";
+
+fn main() {
+    let args = Args::from_env();
+    if let Some(dir) = args.opt("artifacts") {
+        std::env::set_var("ANALOGNETS_ARTIFACTS", dir);
+    }
+    let cmd = args.positional.first().cloned().unwrap_or_default();
+    let r = match cmd.as_str() {
+        "serve" => cmd_serve(&args),
+        "eval" => cmd_eval(&args),
+        "map" => cmd_map(&args),
+        "report" => cmd_report(&args),
+        "selftest" => cmd_selftest(&args),
+        _ => {
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn default_vid(args: &Args) -> String {
+    args.opt_or("vid", "kws_full_e10_8b")
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let vid = default_vid(args);
+    let bits = args.opt_usize("bits", 8) as u32;
+    let n_requests = args.opt_usize("requests", 500);
+    let mut cfg = ServeConfig::new(&vid, bits);
+    cfg.time_scale = args.opt_f64("time-scale", 1e4);
+    let store = ArtifactStore::open_default()?;
+    let meta = store.meta(&vid)?;
+    let task = if meta.model.contains("vww") { "vww" } else { "kws" };
+    let ds = store.dataset(task)?;
+    drop(store);
+
+    println!("[serve] starting coordinator for {vid} ({bits}-bit), \
+              time scale {}x", cfg.time_scale);
+    let coord = Coordinator::start(cfg)?;
+    let feat = ds.feat_len();
+    let mut correct = 0usize;
+    for i in 0..n_requests {
+        let s = i % ds.len();
+        let resp = coord.infer(ds.x[s * feat..(s + 1) * feat].to_vec())?;
+        if resp.pred == ds.y[s] {
+            correct += 1;
+        }
+    }
+    println!("[serve] {}", coord.metrics.summary());
+    println!("[serve] streaming accuracy {:.2}% over {} requests",
+             100.0 * correct as f64 / n_requests as f64, n_requests);
+    coord.stop()?;
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> anyhow::Result<()> {
+    let vid = default_vid(args);
+    let store = ArtifactStore::open_default()?;
+    let meta = store.meta(&vid)?;
+    let bits =
+        args.opt_usize("bits", meta.trained_adc_bits.unwrap_or(8) as usize) as u32;
+    let opts = EvalOpts {
+        bits,
+        runs: args.opt_usize("runs", 5),
+        max_samples: args.opt_usize("samples", 256),
+        ..Default::default()
+    };
+    let times: Vec<f64> = FIG7_TIMES.iter().map(|(_, t)| *t).collect();
+    println!("[eval] {vid} at {bits}-bit, {} runs x {} samples (fp ref {:.2}%)",
+             opts.runs, opts.max_samples, 100.0 * meta.fp_test_acc);
+    let accs = drift_accuracy(&store, &vid, &times, &opts)?;
+    let mut t = Table::new(&format!("drift accuracy: {vid}"),
+                           &["time", "acc mean %", "acc std %"]);
+    for ((label, _), a) in FIG7_TIMES.iter().zip(accs.iter()) {
+        let (m, s) = stats::acc_summary(a);
+        t.row(&[label.to_string(), format!("{m:.2}"), format!("{s:.2}")]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_map(args: &Args) -> anyhow::Result<()> {
+    let vid = default_vid(args);
+    let store = ArtifactStore::open_default()?;
+    let meta = store.meta(&vid)?;
+    let geom = ArrayGeom::new(args.opt_usize("rows", 1024),
+                              args.opt_usize("cols", 512));
+    if args.flag("split") {
+        let s = analognets::mapping::split_map_model(&meta, geom);
+        println!("split mapping on {}x{} tiles: {} tiles allocated, \
+                  effective utilization {:.1}%",
+                 geom.rows, geom.cols, s.alloc_tiles(),
+                 100.0 * s.effective_utilization());
+        for l in &s.layers {
+            println!("  {:<8} {}x{}  tiles {}/{}  row-splits {}",
+                     l.name, l.rows, l.cols, l.alloc_tiles, l.grid_tiles,
+                     l.row_splits);
+        }
+    } else {
+        let m = map_model(&meta, geom)?;
+        print!("{}", layout::ascii_map(&m, 64, 32));
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> anyhow::Result<()> {
+    let vid = default_vid(args);
+    let bits = args.opt_usize("bits", 8) as u32;
+    let store = ArtifactStore::open_default()?;
+    let meta = store.meta(&vid)?;
+    let em = EnergyModel::default();
+    let mapping = map_model(&meta, ArrayGeom::AON)?;
+    let p = model_perf(&mapping, bits, &em);
+
+    let mut t = Table::new(&format!("AON-CiM report: {vid} @ {bits}-bit"),
+                           &["metric", "value"]);
+    let (pk_t, pk_w) = peak(ArrayGeom::AON, bits, &em);
+    t.row(&["array".into(), "1024 x 512 (mux4)".into()]);
+    t.row(&["peak TOPS".into(), format!("{pk_t:.2}")]);
+    t.row(&["peak TOPS/W".into(), format!("{pk_w:.2}")]);
+    t.row(&["params (effective)".into(), format!("{}", meta.param_count())]);
+    t.row(&["ops/inference".into(), format!("{:.2}M", p.ops / 1e6)]);
+    t.row(&["achieved TOPS".into(), format!("{:.3}", p.tops)]);
+    t.row(&["achieved TOPS/W".into(), format!("{:.2}", p.tops_w)]);
+    t.row(&["inf/sec".into(), format!("{:.0}", p.inf_per_sec)]);
+    t.row(&["uJ/inf".into(), format!("{:.2}", p.uj_per_inf)]);
+    t.row(&["array utilization".into(),
+            format!("{:.1}%", 100.0 * mapping.allocated_utilization())]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_selftest(_args: &Args) -> anyhow::Result<()> {
+    let store = ArtifactStore::open_default()?;
+    println!("platform: {}", store.runtime.platform());
+    println!("variants: {}", store.manifest.variants.len());
+    for e in &store.manifest.variants {
+        let meta = store.meta(&e.vid)?;
+        let w = store.weights(&e.vid)?;
+        anyhow::ensure!(w.len() == meta.layers.len(), "{}: weight count", e.vid);
+        println!("  {:<24} {:>8} params  fp acc {:>6.2}%  hlo files {}",
+                 e.vid, meta.param_count(), 100.0 * meta.fp_test_acc,
+                 meta.hlo_keys().len());
+    }
+    // one end-to-end numeric check on the first variant
+    if let Some(e) = store.manifest.variants.first() {
+        let meta = store.meta(&e.vid)?;
+        let bits = meta.trained_adc_bits.unwrap_or(8);
+        let accs = drift_accuracy(
+            &store, &e.vid, &[25.0],
+            &EvalOpts { bits, runs: 1, max_samples: 64, ..Default::default() })?;
+        println!("selftest eval {} @25s: {:.2}%", e.vid, 100.0 * accs[0][0]);
+    }
+    println!("selftest OK");
+    Ok(())
+}

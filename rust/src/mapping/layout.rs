@@ -1,0 +1,109 @@
+//! Mapping visualizations: ASCII array maps (Figures 6 and 11) and CSV
+//! rectangle dumps for downstream plotting.
+
+use super::tiler::ModelMapping;
+
+/// Render the placement as an ASCII grid, downsampled to `gw x gh` chars.
+/// Each layer gets a letter; '.' is unallocated.
+pub fn ascii_map(m: &ModelMapping, gw: usize, gh: usize) -> String {
+    let letters: Vec<char> = ('A'..='Z').chain('a'..='z').collect();
+    let mut grid = vec!['.'; gw * gh];
+    let (rows, cols) = (m.geom.rows as f64, m.geom.cols as f64);
+    for (li, l) in m.layers.iter().enumerate() {
+        let ch = letters[li % letters.len()];
+        let y0 = (l.row0 as f64 / rows * gh as f64) as usize;
+        let y1 = (((l.row0 + l.rows) as f64 / rows * gh as f64).ceil() as usize).min(gh);
+        let x0 = (l.col0 as f64 / cols * gw as f64) as usize;
+        let x1 = (((l.col0 + l.cols) as f64 / cols * gw as f64).ceil() as usize).min(gw);
+        for y in y0..y1 {
+            for x in x0..x1 {
+                grid[y * gw + x] = ch;
+            }
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "array {}x{}  (rows down, cols across; alloc util {:.1}%, eff util {:.1}%)\n",
+        m.geom.rows, m.geom.cols,
+        100.0 * m.allocated_utilization(),
+        100.0 * m.effective_utilization()
+    ));
+    for y in 0..gh {
+        out.extend(grid[y * gw..(y + 1) * gw].iter());
+        out.push('\n');
+    }
+    for (li, l) in m.layers.iter().enumerate() {
+        out.push_str(&format!(
+            "  {} = {:<10} rows {:>4}..{:<4} cols {:>3}..{:<3} ({}x{}, local util {:.1}%)\n",
+            letters[li % letters.len()],
+            l.name,
+            l.row0,
+            l.row0 + l.rows,
+            l.col0,
+            l.col0 + l.cols,
+            l.rows,
+            l.cols,
+            100.0 * l.local_utilization()
+        ));
+    }
+    out
+}
+
+/// CSV of placement rectangles.
+pub fn csv_map(m: &ModelMapping) -> String {
+    let mut s = String::from("layer,kind,row0,col0,rows,cols,effective,local_util\n");
+    for l in &m.layers {
+        s.push_str(&format!(
+            "{},{},{},{},{},{},{},{:.6}\n",
+            l.name,
+            l.kind.as_str(),
+            l.row0,
+            l.col0,
+            l.rows,
+            l.cols,
+            l.effective,
+            l.local_utilization()
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crossbar::ArrayGeom;
+    use crate::mapping::tiler::MappedLayer;
+    use crate::nn::LayerKind;
+
+    fn sample() -> ModelMapping {
+        ModelMapping {
+            geom: ArrayGeom::AON,
+            layers: vec![MappedLayer {
+                name: "c0".into(),
+                kind: LayerKind::Conv3x3,
+                row0: 0,
+                col0: 0,
+                rows: 512,
+                cols: 256,
+                effective: 512 * 256,
+                mvms: 100,
+            }],
+        }
+    }
+
+    #[test]
+    fn ascii_covers_quadrant() {
+        let s = ascii_map(&sample(), 8, 8);
+        // top-left half rows, half cols => 'A's in the 4x4 top-left block
+        let lines: Vec<&str> = s.lines().skip(1).take(8).collect();
+        assert!(lines[0].starts_with("AAAA...."));
+        assert!(lines[4].starts_with("........"));
+    }
+
+    #[test]
+    fn csv_has_header_and_row() {
+        let s = csv_map(&sample());
+        assert_eq!(s.lines().count(), 2);
+        assert!(s.contains("c0,conv3x3,0,0,512,256"));
+    }
+}

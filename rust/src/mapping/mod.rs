@@ -1,0 +1,6 @@
+//! Layer-to-crossbar mapping (Section 5.1, Figure 6, Appendix D).
+
+pub mod layout;
+pub mod tiler;
+
+pub use tiler::{map_model, MappedLayer, ModelMapping, SplitMapping, split_map_model};

@@ -1,0 +1,355 @@
+//! The layer-serial tiler: places every layer's GEMM rectangle into the
+//! single shared CiM array (Figure 6), and the split-GEMM fallback for
+//! arrays smaller than a layer (Appendix D, Table 3).
+
+use crate::crossbar::ArrayGeom;
+use crate::nn::{LayerKind, ModelMeta};
+
+/// One layer's placement on the array.
+#[derive(Clone, Debug)]
+pub struct MappedLayer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// placement rectangle (row0, col0) .. (row0+rows, col0+cols)
+    pub row0: usize,
+    pub col0: usize,
+    pub rows: usize,
+    pub cols: usize,
+    /// non-zero weights inside the rectangle (< rows*cols for depthwise)
+    pub effective: usize,
+    /// output pixels = MVM operations per inference
+    pub mvms: usize,
+}
+
+impl MappedLayer {
+    pub fn cells(&self) -> usize {
+        self.rows * self.cols
+    }
+    /// local utilization: non-zero / allocated (the Figure 3 ~0.9% effect)
+    pub fn local_utilization(&self) -> f64 {
+        self.effective as f64 / self.cells() as f64
+    }
+}
+
+/// A whole-model mapping onto one array.
+#[derive(Clone, Debug)]
+pub struct ModelMapping {
+    pub geom: ArrayGeom,
+    pub layers: Vec<MappedLayer>,
+}
+
+impl ModelMapping {
+    /// Array utilization counting allocated cells.
+    pub fn allocated_utilization(&self) -> f64 {
+        let used: usize = self.layers.iter().map(|l| l.cells()).sum();
+        used as f64 / self.geom.cells() as f64
+    }
+    /// Effective utilization counting only non-zero weights (Table 3).
+    pub fn effective_utilization(&self) -> f64 {
+        let used: usize = self.layers.iter().map(|l| l.effective).sum();
+        used as f64 / self.geom.cells() as f64
+    }
+}
+
+/// Shelf-pack the model's layers onto a single array, tallest first
+/// (the paper's mapper keeps each layer whole — "no layers are split").
+pub fn map_model(meta: &ModelMeta, geom: ArrayGeom) -> anyhow::Result<ModelMapping> {
+    // (index, rows, cols) in placement order: tallest first, then widest
+    let mut order: Vec<(usize, usize, usize)> = meta
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| (i, l.mapped_rows(), l.mapped_cols()))
+        .collect();
+    order.sort_by(|a, b| b.1.cmp(&a.1).then(b.2.cmp(&a.2)));
+
+    // two-level shelf packing: shelves stack vertically; within a shelf,
+    // sub-columns stack short layers on top of each other, which recovers
+    // the fragmentation that tall depthwise expansions would otherwise
+    // cause (MicroNet-KWS-S needs this to fit, Figure 11a).
+    struct SubCol {
+        col0: usize,
+        width: usize,
+        row_used: usize,
+    }
+    struct Shelf {
+        row0: usize,
+        height: usize,
+        col_used: usize,
+        subcols: Vec<SubCol>,
+    }
+    let mut shelves: Vec<Shelf> = Vec::new();
+    let mut next_row = 0usize;
+    let mut placed: Vec<Option<MappedLayer>> = vec![None; meta.layers.len()];
+
+    for (idx, rows, cols) in order {
+        if rows > geom.rows || cols > geom.cols {
+            anyhow::bail!(
+                "layer {} ({}x{}) exceeds the {}x{} array; use split_map_model",
+                meta.layers[idx].name, rows, cols, geom.rows, geom.cols
+            );
+        }
+        // 1) try stacking into an existing sub-column
+        let mut spot: Option<(usize, usize)> = None; // (row0, col0)
+        'outer: for sh in shelves.iter_mut() {
+            for sc in sh.subcols.iter_mut() {
+                if cols <= sc.width && sc.row_used + rows <= sh.height {
+                    spot = Some((sh.row0 + sc.row_used, sc.col0));
+                    sc.row_used += rows;
+                    break 'outer;
+                }
+            }
+            // 2) else a fresh sub-column on a shelf tall enough
+            if sh.height >= rows && sh.col_used + cols <= geom.cols {
+                spot = Some((sh.row0, sh.col_used));
+                sh.subcols.push(SubCol {
+                    col0: sh.col_used,
+                    width: cols,
+                    row_used: rows,
+                });
+                sh.col_used += cols;
+                break 'outer;
+            }
+        }
+        // 3) else open a new shelf
+        let (row0, col0) = match spot {
+            Some(s) => s,
+            None => {
+                if next_row + rows > geom.rows {
+                    anyhow::bail!(
+                        "model does not fit on the {}x{} array (layer {})",
+                        geom.rows, geom.cols, meta.layers[idx].name
+                    );
+                }
+                shelves.push(Shelf {
+                    row0: next_row,
+                    height: rows,
+                    col_used: cols,
+                    subcols: vec![SubCol { col0: 0, width: cols, row_used: rows }],
+                });
+                next_row += rows;
+                (shelves.last().unwrap().row0, 0)
+            }
+        };
+        let lm = &meta.layers[idx];
+        placed[idx] = Some(MappedLayer {
+            name: lm.name.clone(),
+            kind: lm.kind,
+            row0,
+            col0,
+            rows,
+            cols,
+            effective: lm.effective_weights(),
+            mvms: if lm.kind == LayerKind::Dense { 1 } else { lm.out_pixels() },
+        });
+    }
+
+    Ok(ModelMapping {
+        geom,
+        layers: placed.into_iter().map(|p| p.unwrap()).collect(),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Split-GEMM mapping for small crossbars (Appendix D)
+// ---------------------------------------------------------------------------
+
+/// A layer split into row/col tiles across (possibly many) small arrays.
+#[derive(Clone, Debug)]
+pub struct SplitLayer {
+    pub name: String,
+    pub kind: LayerKind,
+    pub rows: usize,
+    pub cols: usize,
+    /// tiles actually allocated (tiles with at least one non-zero weight)
+    pub alloc_tiles: usize,
+    /// total tile grid (incl. all-zero tiles that are skipped)
+    pub grid_tiles: usize,
+    /// non-zero weights
+    pub effective: usize,
+    /// row-splits: partial sums that must be digitally accumulated
+    pub row_splits: usize,
+    pub mvms: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct SplitMapping {
+    pub geom: ArrayGeom,
+    pub layers: Vec<SplitLayer>,
+}
+
+impl SplitMapping {
+    pub fn alloc_tiles(&self) -> usize {
+        self.layers.iter().map(|l| l.alloc_tiles).sum()
+    }
+    /// Effective utilization over allocated tile area (Table 3).
+    pub fn effective_utilization(&self) -> f64 {
+        let nz: usize = self.layers.iter().map(|l| l.effective).sum();
+        let area: usize = self.alloc_tiles() * self.geom.cells();
+        nz as f64 / area as f64
+    }
+}
+
+/// Split every layer into `geom`-sized tiles; all-zero tiles (off-diagonal
+/// blocks of expanded depthwise layers) are never allocated.
+pub fn split_map_model(meta: &ModelMeta, geom: ArrayGeom) -> SplitMapping {
+    let mut layers = Vec::new();
+    for lm in &meta.layers {
+        let rows = lm.mapped_rows();
+        let cols = lm.mapped_cols();
+        let rt = (rows + geom.rows - 1) / geom.rows;
+        let ct = (cols + geom.cols - 1) / geom.cols;
+        let grid = rt * ct;
+        let alloc = if lm.kind == LayerKind::Dw3x3 {
+            // dense-expanded dw: block (i,j) over [9C x C] holds a diagonal
+            // slice iff some (t*C + c, c) falls inside it
+            let c = lm.in_ch;
+            let mut cnt = 0usize;
+            for bi in 0..rt {
+                for bj in 0..ct {
+                    let r0 = bi * geom.rows;
+                    let r1 = ((bi + 1) * geom.rows).min(rows);
+                    let c0 = bj * geom.cols;
+                    let c1 = ((bj + 1) * geom.cols).min(cols);
+                    // any t, ch with ch in [c0,c1) and t*c+ch in [r0,r1)?
+                    let mut hit = false;
+                    't: for t in 0..9 {
+                        // ch range implied by rows: [r0 - t*c, r1 - t*c)
+                        let lo = r0 as isize - (t * c) as isize;
+                        let hi = r1 as isize - (t * c) as isize;
+                        let lo = lo.max(c0 as isize);
+                        let hi = hi.min(c1 as isize);
+                        if lo < hi {
+                            hit = true;
+                            break 't;
+                        }
+                    }
+                    if hit {
+                        cnt += 1;
+                    }
+                }
+            }
+            cnt
+        } else {
+            grid
+        };
+        layers.push(SplitLayer {
+            name: lm.name.clone(),
+            kind: lm.kind,
+            rows,
+            cols,
+            alloc_tiles: alloc,
+            grid_tiles: grid,
+            effective: lm.effective_weights(),
+            row_splits: rt,
+            mvms: if lm.kind == LayerKind::Dense { 1 } else { lm.out_pixels() },
+        });
+    }
+    SplitMapping { geom, layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::meta::ModelMeta;
+    use crate::util::json;
+
+    fn meta_with(layers: &[(&str, &str, usize, usize, usize)]) -> ModelMeta {
+        // (name, kind, in_ch, out_ch, out_pixels as sqrt)
+        let mut ls = String::new();
+        for (i, (name, kind, ic, oc, op)) in layers.iter().enumerate() {
+            if i > 0 {
+                ls.push(',');
+            }
+            let k = match *kind {
+                "conv3x3" | "dw3x3" => 9 * ic,
+                _ => *ic,
+            };
+            let wshape = if *kind == "dw3x3" {
+                format!("[9,{ic}]")
+            } else {
+                format!("[{k},{oc}]")
+            };
+            let gshape = format!("[{k},{oc}]");
+            ls.push_str(&format!(
+                r#"{{"name":"{name}","kind":"{kind}","in_ch":{ic},"out_ch":{oc},
+                "stride":[1,1],"relu":true,"analog":true,
+                "in_h":{op},"in_w":1,"out_h":{op},"out_w":1,
+                "k_gemm":{k},"weight_shape":{wshape},
+                "graph_weight_shape":{gshape},
+                "w_scale":1,"w_max":1,"r_dac":1,"r_adc":1,
+                "dig_scale":[{scales}],"dig_bias":[{biases}]}}"#,
+                scales = vec!["1"; *oc].join(","),
+                biases = vec!["0"; *oc].join(","),
+            ));
+        }
+        let src = format!(
+            r#"{{"model":"m","variant":"v","input_hwc":[8,1,1],"num_classes":2,
+            "eta":0,"fp_test_acc":1,"trained_adc_bits":null,
+            "layers":[{ls}],"hlo":{{}}}}"#
+        );
+        ModelMeta::from_json(&json::parse(&src).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn placements_disjoint_and_in_bounds() {
+        let meta = meta_with(&[
+            ("a", "conv3x3", 8, 32, 16),
+            ("b", "conv3x3", 32, 48, 8),
+            ("c", "dense", 48, 10, 1),
+        ]);
+        let m = map_model(&meta, ArrayGeom::AON).unwrap();
+        for l in &m.layers {
+            assert!(l.row0 + l.rows <= 1024);
+            assert!(l.col0 + l.cols <= 512);
+        }
+        for i in 0..m.layers.len() {
+            for j in 0..i {
+                let (a, b) = (&m.layers[i], &m.layers[j]);
+                let overlap = a.row0 < b.row0 + b.rows
+                    && b.row0 < a.row0 + a.rows
+                    && a.col0 < b.col0 + b.cols
+                    && b.col0 < a.col0 + a.cols;
+                assert!(!overlap, "{} overlaps {}", a.name, b.name);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_oversized_layer() {
+        let meta = meta_with(&[("big", "conv3x3", 200, 32, 4)]); // K=1800>1024
+        assert!(map_model(&meta, ArrayGeom::AON).is_err());
+    }
+
+    #[test]
+    fn dw_local_utilization_is_tiny() {
+        let meta = meta_with(&[("dw", "dw3x3", 112, 112, 8)]);
+        let m = map_model(&meta, ArrayGeom::AON).unwrap();
+        let u = m.layers[0].local_utilization();
+        assert!((u - 1.0 / 112.0).abs() < 1e-9, "u={u}");
+    }
+
+    #[test]
+    fn split_skips_allzero_dw_tiles() {
+        let meta = meta_with(&[("dw", "dw3x3", 112, 112, 8)]);
+        let s64 = split_map_model(&meta, ArrayGeom::new(64, 64));
+        let l = &s64.layers[0];
+        // only tiles hit by a diagonal band are allocated
+        assert!(l.alloc_tiles < l.grid_tiles, "{} vs {}",
+                l.alloc_tiles, l.grid_tiles);
+        // effective utilization improves with smaller tiles (Table 3 trend)
+        let s128 = split_map_model(&meta, ArrayGeom::new(128, 128));
+        assert!(s64.effective_utilization() > s128.effective_utilization(),
+                "{} vs {}", s64.effective_utilization(),
+                s128.effective_utilization());
+    }
+
+    #[test]
+    fn split_dense_layer_uses_full_grid() {
+        let meta = meta_with(&[("c", "conv3x3", 64, 128, 8)]); // 576x128
+        let s = split_map_model(&meta, ArrayGeom::new(128, 128));
+        assert_eq!(s.layers[0].grid_tiles, 5 * 1);
+        assert_eq!(s.layers[0].alloc_tiles, 5);
+        assert_eq!(s.layers[0].row_splits, 5);
+    }
+}

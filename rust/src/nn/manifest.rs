@@ -1,0 +1,104 @@
+//! `artifacts/manifest.json`: the index of exported variants.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json;
+
+#[derive(Clone, Debug)]
+pub struct VariantEntry {
+    pub vid: String,
+    pub task: String,
+    pub model: String,
+    pub eta: f64,
+    pub trained_bits: Option<u32>,
+    pub fp_test_acc: f64,
+    pub meta_file: String,
+    pub weights_file: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: Vec<VariantEntry>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> anyhow::Result<Self> {
+        let v = json::parse_file(&artifacts_dir.join("manifest.json"))?;
+        let mut variants = Vec::new();
+        for e in v.as_arr()? {
+            let bits = e.get("trained_bits").and_then(|b| b.as_f64().ok());
+            variants.push(VariantEntry {
+                vid: e.req("vid")?.as_str()?.to_string(),
+                task: e.req("task")?.as_str()?.to_string(),
+                model: e.req("model")?.as_str()?.to_string(),
+                eta: e.req("eta")?.as_f64()?,
+                trained_bits: bits.map(|b| b as u32),
+                fp_test_acc: e.req("fp_test_acc")?.as_f64()?,
+                meta_file: e.req("meta")?.as_str()?.to_string(),
+                weights_file: e.req("weights")?.as_str()?.to_string(),
+            });
+        }
+        Ok(Manifest {
+            dir: artifacts_dir.to_path_buf(),
+            variants,
+        })
+    }
+
+    pub fn find(&self, vid: &str) -> anyhow::Result<&VariantEntry> {
+        self.variants
+            .iter()
+            .find(|v| v.vid == vid)
+            .ok_or_else(|| anyhow::anyhow!(
+                "variant `{vid}` not in manifest (have: {:?}); run `make artifacts`",
+                self.variants.iter().map(|v| v.vid.as_str()).collect::<Vec<_>>()
+            ))
+    }
+
+    pub fn meta_path(&self, e: &VariantEntry) -> PathBuf {
+        self.dir.join(&e.meta_file)
+    }
+
+    pub fn weights_path(&self, e: &VariantEntry) -> PathBuf {
+        self.dir.join(&e.weights_file)
+    }
+
+    pub fn hlo_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    pub fn dataset_path(&self, task: &str) -> PathBuf {
+        self.dir.join(format!("{task}_test.bin"))
+    }
+}
+
+/// Default artifacts directory: `$ANALOGNETS_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("ANALOGNETS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_manifest() {
+        let dir = std::env::temp_dir().join("manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"[{"vid":"kws_base","task":"kws","model":"analognet_kws",
+                "variant_kind":"base","eta":0.1,"trained_bits":null,
+                "fp_test_acc":0.98,"meta":"kws_base.meta.json",
+                "weights":"kws_base.weights.bin","hlo":{}}]"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.variants.len(), 1);
+        assert!(m.find("kws_base").is_ok());
+        assert!(m.find("nope").is_err());
+        assert!(m.meta_path(&m.variants[0]).ends_with("kws_base.meta.json"));
+    }
+}

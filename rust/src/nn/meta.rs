@@ -1,0 +1,221 @@
+//! `<vid>.meta.json` parsing: the per-layer table exported by
+//! `python/compile/export.py`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::{self, Json};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv3x3,
+    Conv1x1,
+    Dw3x3,
+    Dense,
+}
+
+impl LayerKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "conv3x3" => LayerKind::Conv3x3,
+            "conv1x1" => LayerKind::Conv1x1,
+            "dw3x3" => LayerKind::Dw3x3,
+            "dense" => LayerKind::Dense,
+            _ => anyhow::bail!("unknown layer kind {s}"),
+        })
+    }
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            LayerKind::Conv3x3 => "conv3x3",
+            LayerKind::Conv1x1 => "conv1x1",
+            LayerKind::Dw3x3 => "dw3x3",
+            LayerKind::Dense => "dense",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct LayerMeta {
+    pub name: String,
+    pub kind: LayerKind,
+    pub in_ch: usize,
+    pub out_ch: usize,
+    pub stride: (usize, usize),
+    pub relu: bool,
+    pub analog: bool,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub out_h: usize,
+    pub out_w: usize,
+    /// im2col GEMM inner dimension == crossbar rows for this layer
+    pub k_gemm: usize,
+    /// compact stored weight shape (dw: [9, C])
+    pub weight_shape: Vec<usize>,
+    /// weight shape as the HLO graph expects it (dw analog: [9C, C])
+    pub graph_weight_shape: Vec<usize>,
+    /// max|W| of the clipped trained weights (conductance mapping)
+    pub w_scale: f32,
+    /// clipping bound W_max (eq. 1-2)
+    pub w_max: f32,
+    /// DAC/ADC quantizer ranges baked into the graph
+    pub r_dac: f32,
+    pub r_adc: f32,
+    /// folded digital affine (BN or bias), per output channel
+    pub dig_scale: Vec<f32>,
+    pub dig_bias: Vec<f32>,
+}
+
+impl LayerMeta {
+    /// Output pixels per inference (MVM count for conv layers).
+    pub fn out_pixels(&self) -> usize {
+        self.out_h * self.out_w
+    }
+
+    /// Crossbar columns used by this layer when mapped.
+    pub fn mapped_cols(&self) -> usize {
+        self.out_ch
+    }
+
+    /// Crossbar rows used by this layer when mapped (dense dw expansion).
+    pub fn mapped_rows(&self) -> usize {
+        self.k_gemm
+    }
+
+    /// MAC ops per inference (1 MAC = 2 ops), counting the *dense* mapped
+    /// form (this is what the hardware physically performs).
+    pub fn macs(&self) -> usize {
+        self.mapped_rows() * self.mapped_cols() * self.out_pixels()
+    }
+
+    /// Non-zero (effective) weights: differs from mapped size for dw.
+    pub fn effective_weights(&self) -> usize {
+        self.weight_shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub model: String,
+    pub variant: String,
+    pub input_hwc: (usize, usize, usize),
+    pub num_classes: usize,
+    pub eta: f64,
+    pub fp_test_acc: f64,
+    pub trained_adc_bits: Option<u32>,
+    pub layers: Vec<LayerMeta>,
+    /// "<bits>b_b<batch>" -> hlo filename
+    pub hlo: BTreeMap<String, String>,
+}
+
+impl ModelMeta {
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let v = json::parse_file(path)?;
+        Self::from_json(&v)
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
+        let hwc = v.req("input_hwc")?.usizes()?;
+        let mut layers = Vec::new();
+        for l in v.req("layers")?.as_arr()? {
+            let stride = l.req("stride")?.usizes()?;
+            layers.push(LayerMeta {
+                name: l.req("name")?.as_str()?.to_string(),
+                kind: LayerKind::parse(l.req("kind")?.as_str()?)?,
+                in_ch: l.req("in_ch")?.as_usize()?,
+                out_ch: l.req("out_ch")?.as_usize()?,
+                stride: (stride[0], stride[1]),
+                relu: l.req("relu")?.as_bool()?,
+                analog: l.req("analog")?.as_bool()?,
+                in_h: l.req("in_h")?.as_usize()?,
+                in_w: l.req("in_w")?.as_usize()?,
+                out_h: l.req("out_h")?.as_usize()?,
+                out_w: l.req("out_w")?.as_usize()?,
+                k_gemm: l.req("k_gemm")?.as_usize()?,
+                weight_shape: l.req("weight_shape")?.usizes()?,
+                graph_weight_shape: l.req("graph_weight_shape")?.usizes()?,
+                w_scale: l.req("w_scale")?.as_f64()? as f32,
+                w_max: l.req("w_max")?.as_f64()? as f32,
+                r_dac: l.req("r_dac")?.as_f64()? as f32,
+                r_adc: l.req("r_adc")?.as_f64()? as f32,
+                dig_scale: l.req("dig_scale")?.f32s()?,
+                dig_bias: l.req("dig_bias")?.f32s()?,
+            });
+        }
+        let mut hlo = BTreeMap::new();
+        for (k, f) in v.req("hlo")?.as_obj()? {
+            hlo.insert(k.clone(), f.as_str()?.to_string());
+        }
+        let bits = v.get("trained_adc_bits").and_then(|b| match b {
+            Json::Num(n) => Some(*n as u32),
+            _ => None,
+        });
+        Ok(ModelMeta {
+            model: v.req("model")?.as_str()?.to_string(),
+            variant: v.req("variant")?.as_str()?.to_string(),
+            input_hwc: (hwc[0], hwc[1], hwc[2]),
+            num_classes: v.req("num_classes")?.as_usize()?,
+            eta: v.req("eta")?.as_f64()?,
+            fp_test_acc: v.req("fp_test_acc")?.as_f64()?,
+            trained_adc_bits: bits,
+            layers,
+            hlo,
+        })
+    }
+
+    /// Total effective parameters (compact forms).
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(|l| l.effective_weights()).sum()
+    }
+
+    /// Total MACs per inference on the mapped (dense) form.
+    pub fn macs(&self) -> usize {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Pick the HLO file for (bits, batch), if exported.
+    pub fn hlo_for(&self, bits: u32, batch: usize) -> Option<&str> {
+        self.hlo.get(&format!("{bits}b_b{batch}")).map(|s| s.as_str())
+    }
+
+    /// All (bits, batch) pairs available.
+    pub fn hlo_keys(&self) -> Vec<(u32, usize)> {
+        self.hlo
+            .keys()
+            .filter_map(|k| {
+                let (b, r) = k.split_once("b_b")?;
+                Some((b.parse().ok()?, r.parse().ok()?))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) const SAMPLE: &str = r#"{
+      "model": "m", "variant": "v", "input_hwc": [4, 4, 1], "num_classes": 2,
+      "eta": 0.1, "fp_test_acc": 0.9, "trained_adc_bits": null,
+      "layers": [{
+        "name": "c0", "kind": "conv3x3", "in_ch": 1, "out_ch": 3,
+        "stride": [2, 2], "relu": true, "analog": true,
+        "in_h": 4, "in_w": 4, "out_h": 2, "out_w": 2,
+        "k_gemm": 9, "weight_shape": [9, 3], "graph_weight_shape": [9, 3],
+        "w_scale": 0.5, "w_max": 0.6, "r_dac": 1.0, "r_adc": 2.0,
+        "dig_scale": [1, 1, 1], "dig_bias": [0, 0, 0]
+      }],
+      "hlo": {"8b_b256": "m_8b_b256.hlo.txt"}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let v = crate::util::json::parse(SAMPLE).unwrap();
+        let m = ModelMeta::from_json(&v).unwrap();
+        assert_eq!(m.layers.len(), 1);
+        assert_eq!(m.layers[0].kind, LayerKind::Conv3x3);
+        assert_eq!(m.layers[0].macs(), 9 * 3 * 4);
+        assert_eq!(m.hlo_for(8, 256), Some("m_8b_b256.hlo.txt"));
+        assert_eq!(m.hlo_for(6, 256), None);
+        assert_eq!(m.hlo_keys(), vec![(8, 256)]);
+    }
+}

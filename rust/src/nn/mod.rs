@@ -1,0 +1,10 @@
+//! Model descriptions and artifact loading (the Rust side of the
+//! python-export contract — see DESIGN.md section 7).
+
+pub mod manifest;
+pub mod meta;
+pub mod weights;
+
+pub use manifest::{Manifest, VariantEntry};
+pub use meta::{LayerKind, LayerMeta, ModelMeta};
+pub use weights::{expand_dw_dense, load_weights, Tensor};

@@ -1,0 +1,149 @@
+//! ANWT weight binary loading + depthwise dense expansion.
+
+use std::io::Read;
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+const MAGIC: &[u8; 4] = b"ANWT";
+
+/// Load the compact trained weights written by `export.write_weights_bin`.
+pub fn load_weights(path: &Path) -> anyhow::Result<Vec<Tensor>> {
+    let mut f = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> anyhow::Result<&[u8]> {
+        if *pos + n > buf.len() {
+            anyhow::bail!("truncated ANWT file");
+        }
+        let s = &buf[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    let u32_at = |pos: &mut usize| -> anyhow::Result<u32> {
+        let b = take(pos, 4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    };
+    if take(&mut pos, 4)? != MAGIC {
+        anyhow::bail!("bad ANWT magic in {}", path.display());
+    }
+    let n_tensors = u32_at(&mut pos)? as usize;
+    let mut out = Vec::with_capacity(n_tensors);
+    for _ in 0..n_tensors {
+        let ndim = u32_at(&mut pos)? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(u32_at(&mut pos)? as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let raw = take(&mut pos, numel * 4)?;
+        let mut data = vec![0f32; numel];
+        for (i, c) in raw.chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        out.push(Tensor { shape, data });
+    }
+    if pos != buf.len() {
+        anyhow::bail!("trailing bytes in ANWT file");
+    }
+    Ok(out)
+}
+
+/// Expand a compact depthwise weight [9, C] to its dense CiM form [9C, C].
+///
+/// Row `t*C + i`, column `j` holds `w[t, i]` iff `i == j`, else an explicit
+/// zero — the zeros are *real programmed devices* on the array and therefore
+/// receive programming/read noise (the Section 4.1 depthwise SNR effect).
+pub fn expand_dw_dense(w9c: &Tensor) -> Tensor {
+    assert_eq!(w9c.shape.len(), 2);
+    assert_eq!(w9c.shape[0], 9, "compact dw weight must be [9, C]");
+    let c = w9c.shape[1];
+    let mut data = vec![0f32; 9 * c * c];
+    for t in 0..9 {
+        for i in 0..c {
+            data[(t * c + i) * c + i] = w9c.data[t * c + i];
+        }
+    }
+    Tensor {
+        shape: vec![9 * c, c],
+        data,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expand_dw_structure() {
+        let w = Tensor {
+            shape: vec![9, 2],
+            data: (0..18).map(|i| i as f32).collect(),
+        };
+        let d = expand_dw_dense(&w);
+        assert_eq!(d.shape, vec![18, 2]);
+        // nonzeros exactly on the per-tap diagonals
+        for t in 0..9 {
+            for i in 0..2 {
+                for j in 0..2 {
+                    let v = d.data[(t * 2 + i) * 2 + j];
+                    if i == j {
+                        assert_eq!(v, w.data[t * 2 + i]);
+                    } else {
+                        assert_eq!(v, 0.0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn anwt_roundtrip() {
+        // write a file in the python format and read it back
+        let dir = std::env::temp_dir().join("anwt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"ANWT");
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        // tensor 1: [2,3]
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(&3u32.to_le_bytes());
+        for i in 0..6 {
+            bytes.extend_from_slice(&(i as f32).to_le_bytes());
+        }
+        // tensor 2: [1]
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&7.5f32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+
+        let ts = load_weights(&path).unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].shape, vec![2, 3]);
+        assert_eq!(ts[0].data[5], 5.0);
+        assert_eq!(ts[1].data[0], 7.5);
+    }
+
+    #[test]
+    fn anwt_rejects_truncated() {
+        let dir = std::env::temp_dir().join("anwt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"ANWT\x01\x00\x00\x00\x02").unwrap();
+        assert!(load_weights(&path).is_err());
+    }
+}

@@ -1,0 +1,174 @@
+//! Per-device PCM physics: programming noise, drift, 1/f read noise.
+
+use super::{G_MAX_US, T_C_SECONDS, T_R_SECONDS};
+use crate::util::rng::Rng;
+
+/// Calibration constants (Section 6.1; Joshi et al. 2020 for nu).
+#[derive(Clone, Debug)]
+pub struct PcmParams {
+    /// drift exponent distribution nu ~ N(mean, std), clipped at 0
+    pub nu_mean: f64,
+    pub nu_std: f64,
+    /// enable instantaneous 1/f read noise
+    pub read_noise: bool,
+    /// enable programming noise
+    pub prog_noise: bool,
+    /// enable drift
+    pub drift: bool,
+}
+
+impl Default for PcmParams {
+    fn default() -> Self {
+        PcmParams {
+            nu_mean: 0.031,
+            nu_std: 0.007,
+            read_noise: true,
+            prog_noise: true,
+            drift: true,
+        }
+    }
+}
+
+impl PcmParams {
+    /// Ideal device: no noise at all (digital reference runs).
+    pub fn ideal() -> Self {
+        PcmParams {
+            read_noise: false,
+            prog_noise: false,
+            drift: false,
+            ..Default::default()
+        }
+    }
+}
+
+/// Programming-noise std for a normalized target conductance `g_t` in [0,1].
+///
+/// `sigma_P = max(-1.1731 gt^2 + 1.9650 gt + 0.2635, 0)` with the polynomial
+/// expressed over the normalized target and yielding uS; we return the
+/// normalized sigma (divide by G_MAX). Ranges ~1-4.2% of G_MAX.
+pub fn sigma_prog(g_t: f64) -> f64 {
+    let us = (-1.1731 * g_t * g_t + 1.9650 * g_t + 0.2635).max(0.0);
+    us / G_MAX_US
+}
+
+/// 1/f noise amplitude Q for a normalized target `g_t`:
+/// `Q = min(0.0088 / G_T_uS^0.65, 0.2)` (G_T in uS).
+pub fn q_factor(g_t: f64) -> f64 {
+    let g_us = (g_t * G_MAX_US).max(1e-9);
+    (0.0088 / g_us.powf(0.65)).min(0.2)
+}
+
+/// Deterministic drift decay factor `(t/t_c)^-nu` (t clamped at t_c).
+pub fn drift_factor(t_seconds: f64, nu: f64) -> f64 {
+    let t = t_seconds.max(T_C_SECONDS);
+    (t / T_C_SECONDS).powf(-nu)
+}
+
+/// Read-noise std at time `t` for a drifted conductance `g_d` (normalized):
+/// `sigma_nG = g_d * Q * sqrt(ln((t + t_r)/t_r))`.
+pub fn sigma_read(g_d: f64, g_t: f64, t_seconds: f64) -> f64 {
+    let t = t_seconds.max(0.0);
+    g_d * q_factor(g_t) * ((t + T_R_SECONDS) / T_R_SECONDS).ln().sqrt()
+}
+
+/// Sample a programmed conductance for target `g_t` (normalized, clamped >= 0).
+pub fn program(g_t: f64, p: &PcmParams, rng: &mut Rng) -> f64 {
+    if !p.prog_noise {
+        return g_t;
+    }
+    (g_t + rng.gauss(0.0, sigma_prog(g_t))).max(0.0)
+}
+
+/// Sample a per-device drift exponent.
+pub fn sample_nu(p: &PcmParams, rng: &mut Rng) -> f64 {
+    if !p.drift {
+        return 0.0;
+    }
+    rng.gauss(p.nu_mean, p.nu_std).max(0.0)
+}
+
+/// Effective conductance at read time (drift + optional 1/f noise).
+pub fn read(g_p: f64, g_t: f64, nu: f64, t_seconds: f64, p: &PcmParams, rng: &mut Rng) -> f64 {
+    let g_d = if p.drift {
+        g_p * drift_factor(t_seconds, nu)
+    } else {
+        g_p
+    };
+    if !p.read_noise {
+        return g_d.max(0.0);
+    }
+    (g_d + rng.gauss(0.0, sigma_read(g_d, g_t, t_seconds))).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigma_prog_calibration_points() {
+        // polynomial endpoints (normalized target, uS result / 25)
+        assert!((sigma_prog(0.0) - 0.2635 / 25.0).abs() < 1e-12);
+        let at1 = (-1.1731 + 1.9650 + 0.2635) / 25.0;
+        assert!((sigma_prog(1.0) - at1).abs() < 1e-12);
+        // never negative anywhere in range
+        for i in 0..=100 {
+            assert!(sigma_prog(i as f64 / 100.0) >= 0.0);
+        }
+    }
+
+    #[test]
+    fn q_factor_caps_small_devices() {
+        assert_eq!(q_factor(0.0), 0.2);
+        assert!(q_factor(1.0) < 0.01); // large devices are quiet
+        assert!(q_factor(0.04) > q_factor(0.4)); // monotone decreasing
+    }
+
+    #[test]
+    fn drift_decays_monotonically() {
+        let nu = 0.031;
+        let f25 = drift_factor(25.0, nu);
+        let f1d = drift_factor(86_400.0, nu);
+        let f1y = drift_factor(31_536_000.0, nu);
+        assert!((f25 - 1.0).abs() < 1e-12);
+        assert!(f1d < f25 && f1y < f1d);
+        // ~10% after a day, ~35% after a year at nu=0.031? sanity bounds
+        assert!(f1d > 0.5 && f1y > 0.3);
+    }
+
+    #[test]
+    fn drift_clamps_before_tc() {
+        assert_eq!(drift_factor(1.0, 0.05), 1.0);
+    }
+
+    #[test]
+    fn programming_noise_statistics() {
+        let p = PcmParams::default();
+        let mut rng = Rng::new(11);
+        let g_t = 0.5;
+        let n = 20_000;
+        let samples: Vec<f64> = (0..n).map(|_| program(g_t, &p, &mut rng)).collect();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!((mean - g_t).abs() < 3e-4, "mean={mean}");
+        let expect = sigma_prog(g_t);
+        assert!((var.sqrt() - expect).abs() / expect < 0.05);
+    }
+
+    #[test]
+    fn read_noise_grows_with_log_time() {
+        let s1 = sigma_read(0.5, 0.5, 1.0);
+        let s2 = sigma_read(0.5, 0.5, 86_400.0);
+        assert!(s2 > s1);
+        // sqrt(log) growth: a year is only ~1.15x a day
+        let s3 = sigma_read(0.5, 0.5, 31_536_000.0);
+        assert!(s3 / s2 < 1.25);
+    }
+
+    #[test]
+    fn ideal_params_are_noiseless() {
+        let p = PcmParams::ideal();
+        let mut rng = Rng::new(1);
+        assert_eq!(program(0.3, &p, &mut rng), 0.3);
+        assert_eq!(read(0.3, 0.3, 0.0, 86_400.0, &p, &mut rng), 0.3);
+    }
+}

@@ -1,0 +1,68 @@
+//! Global drift compensation (Joshi et al., 2020).
+//!
+//! The *global* component of conductance drift is corrected digitally: the
+//! accelerator periodically reads the summed conductance of a layer's array
+//! section and scales the ADC outputs by `alpha = sum(G_target) /
+//! sum(G_now)`.  Device-to-device variability remains uncompensated — that
+//! residual is exactly what limits accuracy over time in Figure 7.
+
+use super::weights::ProgrammedWeights;
+
+/// Per-layer GDC factor at time `t` (>= 1 once drift sets in).
+pub fn alpha(layer: &ProgrammedWeights, t_seconds: f64) -> f32 {
+    let target = layer.target_gsum();
+    let now = layer.read_gsum(t_seconds);
+    if now <= 1e-12 {
+        return 1.0;
+    }
+    (target / now) as f32
+}
+
+/// GDC factors for a whole model.
+pub fn alphas(layers: &[ProgrammedWeights], t_seconds: f64) -> Vec<f32> {
+    layers.iter().map(|l| alpha(l, t_seconds)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pcm::PcmParams;
+    use crate::util::rng::Rng;
+
+    fn programmed() -> ProgrammedWeights {
+        let mut rng = Rng::new(7);
+        let w: Vec<f32> = (0..2048).map(|_| rng.gauss(0.0, 0.2) as f32).collect();
+        ProgrammedWeights::program(&w, 64, 32, 0.0, &PcmParams::default(), &mut rng)
+    }
+
+    #[test]
+    fn alpha_near_one_at_programming_time() {
+        let l = programmed();
+        let a = alpha(&l, 25.0);
+        assert!((a - 1.0).abs() < 0.05, "alpha={a}");
+    }
+
+    #[test]
+    fn alpha_grows_with_drift() {
+        let l = programmed();
+        let a1 = alpha(&l, 3600.0);
+        let a2 = alpha(&l, 31_536_000.0);
+        assert!(a2 > a1 && a1 > 0.99, "{a1} {a2}");
+    }
+
+    #[test]
+    fn gdc_recovers_mean_weight_scale() {
+        // after GDC, the *average* weight magnitude should be restored
+        let mut rng = Rng::new(8);
+        let w: Vec<f32> = (0..4096).map(|_| rng.gauss(0.0, 0.2) as f32).collect();
+        let p = PcmParams::default();
+        let l = ProgrammedWeights::program(&w, 64, 64, 0.0, &p, &mut rng);
+        let t = 31_536_000.0;
+        let a = alpha(&l, t) as f64;
+        let r = l.read_weights(t, &p, &mut rng);
+        let mag_w: f64 = w.iter().map(|x| x.abs() as f64).sum();
+        let mag_r: f64 = r.iter().map(|x| x.abs() as f64).sum();
+        let ratio = a * mag_r / mag_w;
+        assert!((ratio - 1.0).abs() < 0.05, "ratio={ratio}");
+    }
+}

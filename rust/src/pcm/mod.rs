@@ -1,0 +1,40 @@
+//! Calibrated PCM statistical model (paper Section 6.1).
+//!
+//! Implements the exact programming-noise / conductance-drift / 1-f read
+//! noise model the paper uses for its simulator evaluation, calibrated on
+//! doped-GST mushroom PCM (Nandakumar et al., 2019; Joshi et al., 2020).
+//!
+//! Conductances are kept *normalized* (fractions of `G_MAX_US` = 25 uS);
+//! the polynomial/power-law calibration constants are expressed in uS and
+//! converted at the boundary — see DESIGN.md section 4 for the unit
+//! conventions.
+
+pub mod device;
+pub mod gdc;
+pub mod weights;
+
+pub use device::PcmParams;
+pub use weights::ProgrammedWeights;
+
+/// Maximum device conductance, in micro-Siemens.
+pub const G_MAX_US: f64 = 25.0;
+/// Drift reference time t_c (seconds): devices are read relative to this.
+pub const T_C_SECONDS: f64 = 25.0;
+/// 1/f read-noise reference time t_r (seconds) = 250 ns.
+pub const T_R_SECONDS: f64 = 250e-9;
+
+/// Handy time points used throughout the paper's Figure 7.
+pub const T_25S: f64 = 25.0;
+pub const T_1H: f64 = 3600.0;
+pub const T_1D: f64 = 86_400.0;
+pub const T_1M: f64 = 2_592_000.0;
+pub const T_1Y: f64 = 31_536_000.0;
+
+/// (label, seconds) pairs for the Figure-7 sweep.
+pub const FIG7_TIMES: [(&str, f64); 5] = [
+    ("25s", T_25S),
+    ("1h", T_1H),
+    ("1d", T_1D),
+    ("1mo", T_1M),
+    ("1yr", T_1Y),
+];

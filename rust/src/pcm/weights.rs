@@ -1,0 +1,223 @@
+//! Layer weights programmed as differential conductance pairs.
+//!
+//! Mirrors the paper's deployment flow (Section 6.1): clipped trained
+//! weights are rescaled to [-1, 1] by `max|W_l|` and split into positive /
+//! negative target conductances; programming noise is applied once (at
+//! deployment), drift exponents are drawn per device, and every *read* at
+//! time `t` applies drift plus fresh 1/f noise.
+
+use super::device::{self, PcmParams};
+use crate::util::rng::Rng;
+
+/// One layer's worth of PCM state (differential pairs).
+#[derive(Clone, Debug)]
+pub struct ProgrammedWeights {
+    pub rows: usize,
+    pub cols: usize,
+    /// normalized target conductances (pos / neg halves)
+    pub gt_pos: Vec<f32>,
+    pub gt_neg: Vec<f32>,
+    /// programmed conductances (after programming noise)
+    pub gp_pos: Vec<f32>,
+    pub gp_neg: Vec<f32>,
+    /// per-device drift exponents
+    pub nu_pos: Vec<f32>,
+    pub nu_neg: Vec<f32>,
+    /// cached 1/f amplitudes Q(G_T) (q_factor has a powf on the hot path)
+    pub q_pos: Vec<f32>,
+    pub q_neg: Vec<f32>,
+    /// weight <-> conductance mapping: W = (g_pos - g_neg) * w_scale
+    pub w_scale: f32,
+}
+
+impl ProgrammedWeights {
+    /// Program a [rows x cols] weight matrix into differential PCM pairs.
+    ///
+    /// `w_scale` should be `max|W|` of the clipped weights (from meta.json);
+    /// if 0, it is computed from the data.
+    pub fn program(w: &[f32], rows: usize, cols: usize, mut w_scale: f32,
+                   params: &PcmParams, rng: &mut Rng) -> Self {
+        assert_eq!(w.len(), rows * cols, "weight shape mismatch");
+        if w_scale <= 0.0 {
+            w_scale = w.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+            if w_scale == 0.0 {
+                w_scale = 1.0;
+            }
+        }
+        let n = w.len();
+        let mut gt_pos = vec![0f32; n];
+        let mut gt_neg = vec![0f32; n];
+        for (i, &wi) in w.iter().enumerate() {
+            let g = (wi / w_scale).clamp(-1.0, 1.0);
+            if g >= 0.0 {
+                gt_pos[i] = g;
+            } else {
+                gt_neg[i] = -g;
+            }
+        }
+        let mut gp_pos = vec![0f32; n];
+        let mut gp_neg = vec![0f32; n];
+        let mut nu_pos = vec![0f32; n];
+        let mut nu_neg = vec![0f32; n];
+        let mut q_pos = vec![0f32; n];
+        let mut q_neg = vec![0f32; n];
+        for i in 0..n {
+            gp_pos[i] = device::program(gt_pos[i] as f64, params, rng) as f32;
+            gp_neg[i] = device::program(gt_neg[i] as f64, params, rng) as f32;
+            nu_pos[i] = device::sample_nu(params, rng) as f32;
+            nu_neg[i] = device::sample_nu(params, rng) as f32;
+            q_pos[i] = device::q_factor(gt_pos[i] as f64) as f32;
+            q_neg[i] = device::q_factor(gt_neg[i] as f64) as f32;
+        }
+        ProgrammedWeights {
+            rows, cols,
+            gt_pos, gt_neg, gp_pos, gp_neg, nu_pos, nu_neg, q_pos, q_neg,
+            w_scale,
+        }
+    }
+
+    /// Number of physical devices (2 per weight: differential pair).
+    pub fn device_count(&self) -> usize {
+        2 * self.rows * self.cols
+    }
+
+    /// Read effective weights at `t` seconds after programming.
+    ///
+    /// Returns the weight matrix in trained-weight units, WITHOUT drift
+    /// compensation (GDC is a separate digital step, see `gdc`).
+    ///
+    /// This is the coordinator's weight-refresh hot path: the
+    /// time-dependent factors (log-time of the drift power law, the 1/f
+    /// sqrt-log envelope) are hoisted out of the per-device loop so the
+    /// inner loop is one exp() + one gauss() per device (see EXPERIMENTS.md
+    /// §Perf L3).
+    pub fn read_weights(&self, t_seconds: f64, params: &PcmParams,
+                        rng: &mut Rng) -> Vec<f32> {
+        let n = self.rows * self.cols;
+        let mut w = vec![0f32; n];
+        // drift: (t/t_c)^-nu = exp(-nu * ln(t/t_c))
+        let log_t = if params.drift {
+            (t_seconds.max(super::T_C_SECONDS) / super::T_C_SECONDS).ln()
+        } else {
+            0.0
+        };
+        // 1/f envelope sqrt(ln((t+t_r)/t_r)) is device-independent
+        let env = if params.read_noise {
+            ((t_seconds.max(0.0) + super::T_R_SECONDS) / super::T_R_SECONDS)
+                .ln()
+                .sqrt()
+        } else {
+            0.0
+        };
+        let scale = self.w_scale as f64;
+        let read_one = |gp: f32, q: f32, nu: f32, rng: &mut Rng| -> f64 {
+            let mut g = gp as f64 * (-(nu as f64) * log_t).exp();
+            if params.read_noise {
+                g += rng.gauss(0.0, g * q as f64 * env);
+            }
+            g.max(0.0)
+        };
+        for i in 0..n {
+            let gp = read_one(self.gp_pos[i], self.q_pos[i], self.nu_pos[i], rng);
+            let gn = read_one(self.gp_neg[i], self.q_neg[i], self.nu_neg[i], rng);
+            w[i] = ((gp - gn) * scale) as f32;
+        }
+        w
+    }
+
+    /// Summed absolute conductance of the *targets* (for GDC calibration).
+    pub fn target_gsum(&self) -> f64 {
+        self.gt_pos.iter().map(|&g| g as f64).sum::<f64>()
+            + self.gt_neg.iter().map(|&g| g as f64).sum::<f64>()
+    }
+
+    /// Summed absolute conductance at read time (drift only, no read noise —
+    /// GDC calibration integrates long enough to average 1/f noise out).
+    pub fn read_gsum(&self, t_seconds: f64) -> f64 {
+        let mut s = 0.0;
+        let n = self.rows * self.cols;
+        for i in 0..n {
+            s += self.gp_pos[i] as f64
+                * device::drift_factor(t_seconds, self.nu_pos[i] as f64);
+            s += self.gp_neg[i] as f64
+                * device::drift_factor(t_seconds, self.nu_neg[i] as f64);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_weights() -> Vec<f32> {
+        let mut rng = Rng::new(42);
+        (0..64 * 32).map(|_| rng.gauss(0.0, 0.1) as f32).collect()
+    }
+
+    #[test]
+    fn ideal_roundtrip_is_exact() {
+        let w = sample_weights();
+        let p = PcmParams::ideal();
+        let mut rng = Rng::new(1);
+        let prog = ProgrammedWeights::program(&w, 64, 32, 0.0, &p, &mut rng);
+        let back = prog.read_weights(25.0, &p, &mut rng);
+        for (a, b) in w.iter().zip(back.iter()) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn differential_split_is_disjoint() {
+        let w = sample_weights();
+        let p = PcmParams::ideal();
+        let mut rng = Rng::new(1);
+        let prog = ProgrammedWeights::program(&w, 64, 32, 0.0, &p, &mut rng);
+        for i in 0..w.len() {
+            assert!(prog.gt_pos[i] == 0.0 || prog.gt_neg[i] == 0.0);
+            assert!(prog.gt_pos[i] >= 0.0 && prog.gt_neg[i] >= 0.0);
+        }
+    }
+
+    #[test]
+    fn noisy_read_error_grows_with_time() {
+        let w = sample_weights();
+        let p = PcmParams::default();
+        let mut rng = Rng::new(2);
+        let prog = ProgrammedWeights::program(&w, 64, 32, 0.0, &p, &mut rng);
+        let err = |t: f64, rng: &mut Rng| {
+            let r = prog.read_weights(t, &p, rng);
+            let se: f64 = w.iter().zip(r.iter())
+                .map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+            (se / w.len() as f64).sqrt()
+        };
+        let e25 = err(25.0, &mut rng);
+        let e1y = err(31_536_000.0, &mut rng);
+        assert!(e1y > e25, "drift must increase weight error: {e25} vs {e1y}");
+    }
+
+    #[test]
+    fn gsum_decays_with_drift() {
+        let w = sample_weights();
+        let p = PcmParams::default();
+        let mut rng = Rng::new(3);
+        let prog = ProgrammedWeights::program(&w, 64, 32, 0.0, &p, &mut rng);
+        let s0 = prog.read_gsum(25.0);
+        let s1 = prog.read_gsum(86_400.0);
+        assert!(s1 < s0);
+    }
+
+    #[test]
+    fn zero_weights_still_get_programming_noise() {
+        // the depthwise zero-cell effect: zero targets -> sigma_P(0) > 0
+        let w = vec![0f32; 128];
+        let p = PcmParams::default();
+        let mut rng = Rng::new(4);
+        let prog = ProgrammedWeights::program(&w, 16, 8, 1.0, &p, &mut rng);
+        let r = prog.read_weights(25.0, &p, &mut rng);
+        // each half-pair clamps negative samples at 0, so ~75% of the
+        // differential reads are non-zero in expectation
+        let nonzero = r.iter().filter(|x| x.abs() > 1e-6).count();
+        assert!(nonzero > 64, "zero cells must be noisy ({nonzero})");
+    }
+}

@@ -1,0 +1,91 @@
+//! DAC/ADC quantizer models (Rust mirror of `python/compile/quantizers.py`).
+//!
+//! Used by the native simulator for cross-validation against the exported
+//! HLO graphs — the math must match the Python side bit-for-bit in intent
+//! (symmetric uniform fake quantization, eq. 4).
+
+/// Symmetric uniform fake quantization: clip to [-r, r], round to
+/// `2^(bits-1)-1` levels per side, return the dequantized value.
+#[inline]
+pub fn fake_quant(x: f32, r_max: f32, bits: u32) -> f32 {
+    let levels = ((1u32 << (bits - 1)) - 1) as f32;
+    let step = r_max / levels;
+    let xc = x.clamp(-r_max, r_max);
+    (xc / step).round() * step
+}
+
+/// In-place fake quantization of a buffer.
+pub fn fake_quant_slice(xs: &mut [f32], r_max: f32, bits: u32) {
+    let levels = ((1u32 << (bits - 1)) - 1) as f32;
+    let step = r_max / levels;
+    let inv = 1.0 / step;
+    for x in xs {
+        let xc = x.clamp(-r_max, r_max);
+        *x = (xc * inv).round() * step;
+    }
+}
+
+/// DAC bits = ADC bits + 1 (eq. 3).
+pub fn dac_bits(adc_bits: u32) -> u32 {
+    adc_bits + 1
+}
+
+/// Integer code for a value (hardware-side view; for tests/inspection).
+pub fn code(x: f32, r_max: f32, bits: u32) -> i32 {
+    let levels = ((1u32 << (bits - 1)) - 1) as f32;
+    let step = r_max / levels;
+    (x.clamp(-r_max, r_max) / step).round() as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_on_grid() {
+        // grid points are fixed points of the quantizer
+        let r = 2.0f32;
+        let bits = 4;
+        let step = r / 7.0;
+        for i in -7..=7 {
+            let v = i as f32 * step;
+            assert!((fake_quant(v, r, bits) - v).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn clips_out_of_range() {
+        assert_eq!(fake_quant(10.0, 1.0, 8), 1.0);
+        assert_eq!(fake_quant(-10.0, 1.0, 8), -1.0);
+    }
+
+    #[test]
+    fn error_bounded_by_half_step() {
+        let r = 1.0f32;
+        let bits = 6;
+        let step = r / 31.0;
+        let mut x = -1.0f32;
+        while x < 1.0 {
+            let q = fake_quant(x, r, bits);
+            assert!((q - x).abs() <= step / 2.0 + 1e-6);
+            x += 0.001;
+        }
+    }
+
+    #[test]
+    fn slice_matches_scalar() {
+        let xs: Vec<f32> = (-20..20).map(|i| i as f32 * 0.13).collect();
+        let mut ys = xs.clone();
+        fake_quant_slice(&mut ys, 1.7, 5);
+        for (x, y) in xs.iter().zip(ys.iter()) {
+            assert_eq!(fake_quant(*x, 1.7, 5), *y);
+        }
+    }
+
+    #[test]
+    fn codes_cover_range() {
+        assert_eq!(code(1.0, 1.0, 8), 127);
+        assert_eq!(code(-1.0, 1.0, 8), -127);
+        assert_eq!(code(0.0, 1.0, 8), 0);
+    }
+}

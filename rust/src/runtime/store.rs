@@ -1,0 +1,82 @@
+//! Artifact store: manifest-driven discovery + compiled-executable cache.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::nn::{Manifest, ModelMeta};
+use crate::runtime::{Executable, Runtime};
+
+/// Caches parsed metadata, loaded weights and compiled executables so
+/// benches and the coordinator never recompile a graph.
+pub struct ArtifactStore {
+    pub manifest: Manifest,
+    pub runtime: Runtime,
+    exes: Mutex<HashMap<String, Arc<Executable>>>,
+    metas: Mutex<HashMap<String, Arc<ModelMeta>>>,
+    weights: Mutex<HashMap<String, Arc<Vec<crate::nn::Tensor>>>>,
+}
+
+impl ArtifactStore {
+    pub fn open(dir: &std::path::Path) -> anyhow::Result<Self> {
+        Ok(ArtifactStore {
+            manifest: Manifest::load(dir)?,
+            runtime: Runtime::cpu()?,
+            exes: Mutex::new(HashMap::new()),
+            metas: Mutex::new(HashMap::new()),
+            weights: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn open_default() -> anyhow::Result<Self> {
+        Self::open(&crate::nn::manifest::artifacts_dir())
+    }
+
+    pub fn meta(&self, vid: &str) -> anyhow::Result<Arc<ModelMeta>> {
+        if let Some(m) = self.metas.lock().unwrap().get(vid) {
+            return Ok(m.clone());
+        }
+        let e = self.manifest.find(vid)?;
+        let m = Arc::new(ModelMeta::load(&self.manifest.meta_path(e))?);
+        self.metas
+            .lock()
+            .unwrap()
+            .insert(vid.to_string(), m.clone());
+        Ok(m)
+    }
+
+    pub fn weights(&self, vid: &str) -> anyhow::Result<Arc<Vec<crate::nn::Tensor>>> {
+        if let Some(w) = self.weights.lock().unwrap().get(vid) {
+            return Ok(w.clone());
+        }
+        let e = self.manifest.find(vid)?;
+        let w = Arc::new(crate::nn::load_weights(&self.manifest.weights_path(e))?);
+        self.weights
+            .lock()
+            .unwrap()
+            .insert(vid.to_string(), w.clone());
+        Ok(w)
+    }
+
+    /// Compiled executable for (vid, bits, batch); compiles at most once.
+    pub fn executable(&self, vid: &str, bits: u32, batch: usize)
+                      -> anyhow::Result<Arc<Executable>> {
+        let key = format!("{vid}/{bits}b_b{batch}");
+        if let Some(e) = self.exes.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        let meta = self.meta(vid)?;
+        let file = meta.hlo_for(bits, batch).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no HLO for {vid} at {bits}b batch {batch} (have {:?})",
+                meta.hlo_keys()
+            )
+        })?;
+        let exe = Arc::new(self.runtime.load_hlo(&self.manifest.hlo_path(file))?);
+        self.exes.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    pub fn dataset(&self, task: &str) -> anyhow::Result<crate::datasets::Dataset> {
+        crate::datasets::Dataset::load(&self.manifest.dataset_path(task))
+    }
+}

@@ -1,0 +1,229 @@
+//! Native full-model forward pass over effective (possibly drifted) weights.
+//!
+//! Mirrors the exported HLO graph layer by layer:
+//! DAC fake-quant -> GEMM -> ADC fake-quant -> GDC scale -> digital affine ->
+//! ReLU, with global average pooling before the dense head, and exact
+//! (unquantized) compute for `analog=false` layers (Fig. 9 ablation).
+
+use crate::nn::{LayerKind, ModelMeta};
+use crate::quant;
+use crate::simulator::{gemm, im2col};
+
+/// Per-layer effective weights in *graph* shape (dw analog: dense [9C, C]).
+pub type EffectiveWeights = Vec<Vec<f32>>;
+
+pub struct NativeModel {
+    pub meta: ModelMeta,
+    pub threads: usize,
+}
+
+impl NativeModel {
+    pub fn new(meta: ModelMeta) -> Self {
+        NativeModel { meta, threads: 1 }
+    }
+
+    pub fn with_threads(meta: ModelMeta, threads: usize) -> Self {
+        NativeModel { meta, threads }
+    }
+
+    /// Forward a batch: `x` is [batch, H, W, C] flat; returns logits
+    /// [batch, classes].
+    ///
+    /// `weights[l]` must match the layer's graph weight shape; `gdc[l]` is
+    /// the drift-compensation scale (1.0 when freshly programmed).
+    pub fn forward(&self, x: &[f32], batch: usize, weights: &EffectiveWeights,
+                   gdc: &[f32], adc_bits: u32) -> Vec<f32> {
+        let (ih, iw, ic) = self.meta.input_hwc;
+        assert_eq!(x.len(), batch * ih * iw * ic, "input shape mismatch");
+        assert_eq!(weights.len(), self.meta.layers.len());
+        assert_eq!(gdc.len(), self.meta.layers.len());
+        let b_dac = quant::dac_bits(adc_bits);
+
+        let mut h = x.to_vec();
+        let (mut ch, mut cw, mut cc) = (ih, iw, ic);
+        for (li, lm) in self.meta.layers.iter().enumerate() {
+            let w = &weights[li];
+            let gw: Vec<usize> = lm.graph_weight_shape.clone();
+            match lm.kind {
+                LayerKind::Dw3x3 if !lm.analog => {
+                    // exact depthwise on the digital processor, compact [9, C]
+                    assert_eq!(w.len(), 9 * lm.in_ch);
+                    let p = im2col::patches3x3(&h, batch, ch, cw, cc, lm.stride);
+                    let ho = im2col::out_dim(ch, lm.stride.0);
+                    let wo = im2col::out_dim(cw, lm.stride.1);
+                    let c = lm.in_ch;
+                    let mut y = vec![0f32; batch * ho * wo * c];
+                    for r in 0..batch * ho * wo {
+                        for ci in 0..c {
+                            let mut acc = 0f32;
+                            for t in 0..9 {
+                                acc += p[r * 9 * c + t * c + ci] * w[t * c + ci];
+                            }
+                            // digital per-channel affine, fused
+                            y[r * c + ci] = acc * lm.dig_scale[ci] + lm.dig_bias[ci];
+                        }
+                    }
+                    h = y;
+                    ch = ho;
+                    cw = wo;
+                }
+                _ => {
+                    // GEMM path (conv as im2col, 1x1, dense, analog dw)
+                    let (m_rows, k) = match lm.kind {
+                        LayerKind::Conv3x3 | LayerKind::Dw3x3 => {
+                            let p = im2col::patches3x3(&h, batch, ch, cw, cc, lm.stride);
+                            let ho = im2col::out_dim(ch, lm.stride.0);
+                            let wo = im2col::out_dim(cw, lm.stride.1);
+                            h = p;
+                            ch = ho;
+                            cw = wo;
+                            (batch * ch * cw, 9 * cc)
+                        }
+                        LayerKind::Conv1x1 => (batch * ch * cw, cc),
+                        LayerKind::Dense => {
+                            // global average pool
+                            let mut g = vec![0f32; batch * cc];
+                            let pix = ch * cw;
+                            for n in 0..batch {
+                                for p_ in 0..pix {
+                                    for ci in 0..cc {
+                                        g[n * cc + ci] += h[(n * pix + p_) * cc + ci];
+                                    }
+                                }
+                            }
+                            let inv = 1.0 / pix as f32;
+                            g.iter_mut().for_each(|v| *v *= inv);
+                            h = g;
+                            ch = 1;
+                            cw = 1;
+                            (batch, cc)
+                        }
+                    };
+                    assert_eq!(gw[0], k, "{}: K mismatch", lm.name);
+                    let n_cols = gw[1];
+                    assert_eq!(w.len(), k * n_cols, "{}: weight len", lm.name);
+
+                    let mut a = if lm.analog {
+                        let mut m = std::mem::take(&mut h);
+                        quant::fake_quant_slice(&mut m, lm.r_dac, b_dac);
+                        let mut out = gemm::gemm_parallel(&m, w, m_rows, k,
+                                                          n_cols, self.threads);
+                        quant::fake_quant_slice(&mut out, lm.r_adc, adc_bits);
+                        let g = gdc[li];
+                        if (g - 1.0).abs() > 1e-9 {
+                            out.iter_mut().for_each(|v| *v *= g);
+                        }
+                        out
+                    } else {
+                        gemm::gemm_parallel(&h, w, m_rows, k, n_cols, self.threads)
+                    };
+
+                    // digital per-channel affine (folded BN / bias)
+                    for r in 0..m_rows {
+                        let row = &mut a[r * n_cols..(r + 1) * n_cols];
+                        for (j, v) in row.iter_mut().enumerate() {
+                            *v = *v * lm.dig_scale[j] + lm.dig_bias[j];
+                        }
+                    }
+                    h = a;
+                    cc = n_cols;
+                }
+            }
+            if lm.relu {
+                h.iter_mut().for_each(|v| *v = v.max(0.0));
+            }
+        }
+        h
+    }
+
+    /// Argmax predictions from logits.
+    pub fn predict(logits: &[f32], classes: usize) -> Vec<u32> {
+        logits
+            .chunks_exact(classes)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(i, _)| i as u32)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::meta::ModelMeta;
+    use crate::util::json;
+
+    fn tiny_meta() -> ModelMeta {
+        let src = r#"{
+          "model": "tiny", "variant": "t", "input_hwc": [4, 4, 1],
+          "num_classes": 2, "eta": 0.0, "fp_test_acc": 1.0,
+          "trained_adc_bits": null,
+          "layers": [
+            {"name": "c0", "kind": "conv3x3", "in_ch": 1, "out_ch": 2,
+             "stride": [1, 1], "relu": true, "analog": true,
+             "in_h": 4, "in_w": 4, "out_h": 4, "out_w": 4,
+             "k_gemm": 9, "weight_shape": [9, 2],
+             "graph_weight_shape": [9, 2],
+             "w_scale": 1.0, "w_max": 1.0, "r_dac": 8.0, "r_adc": 8.0,
+             "dig_scale": [1, 1], "dig_bias": [0, 0]},
+            {"name": "fc", "kind": "dense", "in_ch": 2, "out_ch": 2,
+             "stride": [1, 1], "relu": false, "analog": true,
+             "in_h": 4, "in_w": 4, "out_h": 1, "out_w": 1,
+             "k_gemm": 2, "weight_shape": [2, 2],
+             "graph_weight_shape": [2, 2],
+             "w_scale": 1.0, "w_max": 1.0, "r_dac": 8.0, "r_adc": 8.0,
+             "dig_scale": [1, 1], "dig_bias": [0, 0]}
+          ],
+          "hlo": {}
+        }"#;
+        ModelMeta::from_json(&json::parse(src).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn forward_shapes_and_determinism() {
+        let meta = tiny_meta();
+        let m = NativeModel::new(meta);
+        let x: Vec<f32> = (0..16).map(|i| (i as f32) / 16.0).collect();
+        // center-tap identity conv into 2 channels, then identity dense
+        let mut w0 = vec![0f32; 18];
+        w0[4 * 2] = 1.0;       // center tap -> ch0
+        w0[4 * 2 + 1] = 0.5;   // center tap -> ch1
+        let w1 = vec![1.0, 0.0, 0.0, 1.0];
+        let weights = vec![w0, w1];
+        let gdc = vec![1.0, 1.0];
+        let l1 = m.forward(&x, 1, &weights, &gdc, 8);
+        let l2 = m.forward(&x, 1, &weights, &gdc, 8);
+        assert_eq!(l1.len(), 2);
+        assert_eq!(l1, l2);
+        // channel 0 average ~ mean(x) (quantization-limited)
+        let mean_x: f32 = x.iter().sum::<f32>() / 16.0;
+        assert!((l1[0] - mean_x).abs() < 0.1, "{} vs {}", l1[0], mean_x);
+        // ch1 = 0.5 * ch0 approximately
+        assert!((l1[1] - 0.5 * l1[0]).abs() < 0.05);
+    }
+
+    #[test]
+    fn gdc_rescales_output() {
+        let meta = tiny_meta();
+        let m = NativeModel::new(meta);
+        let x: Vec<f32> = (0..16).map(|i| (i as f32) / 16.0).collect();
+        let mut w0 = vec![0f32; 18];
+        w0[4 * 2] = 0.5; // "drifted" weights at half scale
+        w0[4 * 2 + 1] = 0.25;
+        let w1 = vec![1.0, 0.0, 0.0, 1.0];
+        let weights = vec![w0, w1];
+        let no_comp = m.forward(&x, 1, &weights, &[1.0, 1.0], 8);
+        let comped = m.forward(&x, 1, &weights, &[2.0, 1.0], 8);
+        assert!(comped[0] > no_comp[0] * 1.5);
+    }
+
+    #[test]
+    fn predict_argmax() {
+        let p = NativeModel::predict(&[0.1, 0.9, 0.7, 0.3], 2);
+        assert_eq!(p, vec![1, 0]);
+    }
+}

@@ -1,0 +1,104 @@
+//! im2col patch extraction (3x3, SAME, pad=1, out = ceil(in/stride)).
+//!
+//! Feature ordering is `(ky, kx, c)`: column `(ky*3 + kx)*C + c` of the
+//! output matrix holds `x[n, oh*sh + ky - 1, ow*sw + kx - 1, c]` (zero when
+//! out of bounds) — identical to `python/compile/layers.patches3x3`.
+
+/// Output spatial size for stride `s` with our SAME convention.
+pub fn out_dim(input: usize, stride: usize) -> usize {
+    (input + stride - 1) / stride
+}
+
+/// Extract 3x3 patches of `x` ([n, h, w, c] flat, row-major) into a
+/// [n*ho*wo, 9c] matrix.
+pub fn patches3x3(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    stride: (usize, usize),
+) -> Vec<f32> {
+    let (sh, sw) = stride;
+    let ho = out_dim(h, sh);
+    let wo = out_dim(w, sw);
+    let k = 9 * c;
+    let mut out = vec![0f32; n * ho * wo * k];
+    for ni in 0..n {
+        for oh in 0..ho {
+            for ow in 0..wo {
+                let row = ((ni * ho + oh) * wo + ow) * k;
+                for ky in 0..3 {
+                    let iy = (oh * sh + ky) as isize - 1;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..3 {
+                        let ix = (ow * sw + kx) as isize - 1;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = ((ni * h + iy as usize) * w + ix as usize) * c;
+                        let dst = row + (ky * 3 + kx) * c;
+                        out[dst..dst + c].copy_from_slice(&x[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn out_dims() {
+        assert_eq!(out_dim(49, 2), 25);
+        assert_eq!(out_dim(10, 1), 10);
+        assert_eq!(out_dim(100, 2), 50);
+        assert_eq!(out_dim(13, 2), 7);
+    }
+
+    #[test]
+    fn identity_kernel_center() {
+        // with stride 1, the center tap (ky=1,kx=1) reproduces the input
+        let (n, h, w, c) = (1, 4, 5, 2);
+        let x: Vec<f32> = (0..n * h * w * c).map(|i| i as f32).collect();
+        let p = patches3x3(&x, n, h, w, c, (1, 1));
+        let k = 9 * c;
+        for oh in 0..h {
+            for ow in 0..w {
+                for ci in 0..c {
+                    let got = p[(oh * w + ow) * k + (1 * 3 + 1) * c + ci];
+                    let want = x[(oh * w + ow) * c + ci];
+                    assert_eq!(got, want);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn border_is_zero_padded() {
+        let (n, h, w, c) = (1, 3, 3, 1);
+        let x = vec![1f32; 9];
+        let p = patches3x3(&x, n, h, w, c, (1, 1));
+        // top-left output pixel: taps with iy<0 or ix<0 must be 0
+        let k = 9;
+        assert_eq!(p[0 * k + 0], 0.0); // (ky=0,kx=0)
+        assert_eq!(p[0 * k + 1], 0.0); // (ky=0,kx=1)
+        assert_eq!(p[0 * k + 3], 0.0); // (ky=1,kx=0)
+        assert_eq!(p[0 * k + 4], 1.0); // center
+    }
+
+    #[test]
+    fn stride2_samples_even_pixels() {
+        let (n, h, w, c) = (1, 4, 4, 1);
+        let x: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let p = patches3x3(&x, n, h, w, c, (2, 2));
+        let k = 9;
+        // output (1,1) center tap = x[2*1, 2*1] = x[2,2] = 10
+        assert_eq!(p[(1 * 2 + 1) * k + 4], 10.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Rust-native CiM forward simulator.
+//!
+//! An independent implementation of the exported inference graph (im2col +
+//! GEMM + DAC/ADC quantization + digital affine) used to cross-validate the
+//! PJRT path and to run device-physics experiments without XLA in the loop.
+//! The im2col ordering and SAME-padding convention are a shared contract
+//! with `python/compile/layers.py`.
+
+pub mod forward;
+pub mod gemm;
+pub mod im2col;
+
+pub use forward::NativeModel;

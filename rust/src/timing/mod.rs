@@ -1,0 +1,181 @@
+//! AON-CiM cycle/energy model (Section 5, Table 2, Figure 8).
+//!
+//! Calibration (DESIGN.md section 5): the paper's three Table-2 peak points
+//! are exactly consistent with a linear energy model in the PWM cycle time,
+//!     E_fullMVM(b) = ALPHA * T_cim(b) + BETA,
+//! with ALPHA covering pulse-duration-proportional energy (DAC drivers +
+//! array current) and BETA the per-conversion ADC + per-word digital energy.
+//! Per-layer numbers scale these components by the rows/columns the layer
+//! actually uses (unused DACs/ADCs are clock-gated, Section 5.2).
+
+pub mod perf;
+
+pub use perf::{layer_perf, model_perf, LayerPerf, ModelPerf};
+
+use crate::crossbar::ArrayGeom;
+
+/// PWM DAC cycle time per activation precision, ns (Table 2).
+pub fn t_cim_ns(bits: u32) -> f64 {
+    match bits {
+        8 => 130.0,
+        6 => 34.0,
+        4 => 10.0,
+        // PWM latency is exponential in bitwidth: T = T0 * 2^b (fit through
+        // the table points for other bitwidths)
+        b => 130.0 * (2f64.powi(b as i32 - 8)),
+    }
+}
+
+/// Digital pipeline clock period, ns (800 MHz).
+pub const T_DIGITAL_NS: f64 = 1.25;
+/// Digital activation-processing lanes (sized for the worst-case 4-bit
+/// throughput of 128 words / 10 ns at 800 MHz).
+pub const DIGITAL_LANES: usize = 16;
+
+/// Energy model constants, fit to Table 2 (see module docs).
+/// Units: nanojoules and nanoseconds.
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyModel {
+    /// pulse-proportional energy at full array use, nJ per ns of total
+    /// pulse time (the mux rotation is a static schedule: every MVM pays
+    /// the full `adc_mux` phases of PWM pulsing regardless of columns used)
+    pub alpha_nj_per_ns: f64,
+    /// fraction of alpha that is DAC drive (row-proportional); the rest is
+    /// array current (rows*cols-proportional). DACs are cheap relative to
+    /// the array + ADCs (Section 5.2: "ADCs consume more energy than DACs")
+    pub dac_fraction: f64,
+    /// energy per ADC conversion, nJ
+    pub adc_nj: f64,
+    /// fixed per-MVM overhead (controller, SRAM, clock tree — not gated)
+    pub fixed_nj: f64,
+    /// digital post-processing energy per output word, nJ
+    pub dig_nj: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        // alpha/beta from the linear fit of full-MVM energy against *total*
+        // pulse time (4 mux phases x T_cim): (520ns, 77.38nJ), (136ns,
+        // 23.02nJ), (40ns, 9.33nJ).  beta = 3.66nJ splits into per-
+        // conversion ADC energy (55%), fixed per-MVM overhead (40%) and
+        // per-word digital (5%) — chosen so whole-model achieved TOPS/W
+        // lands at the paper's achieved/peak ratio (Table 2 model rows)
+        // while preserving the Figure-8 tall-beats-wide ordering.
+        let alpha = 0.14177;
+        let beta = 3.6629;
+        EnergyModel {
+            alpha_nj_per_ns: alpha,
+            dac_fraction: 0.02,
+            adc_nj: beta * 0.55 / ArrayGeom::AON.cols as f64,
+            fixed_nj: beta * 0.40,
+            dig_nj: beta * 0.05 / ArrayGeom::AON.cols as f64,
+        }
+    }
+}
+
+impl EnergyModel {
+    /// Energy of ONE array MVM using `rows_used` x `cols_used` of `geom`,
+    /// at `bits` activation precision.
+    ///
+    /// Pulse energy always pays the full mux rotation (`geom.adc_mux`
+    /// phases — static schedule); latency may terminate early, see
+    /// `mvm_latency_ns`.  The `_phases` argument is kept for the latency
+    /// path's call-site symmetry.
+    pub fn mvm_energy_nj(&self, geom: ArrayGeom, rows_used: usize,
+                         cols_used: usize, _phases: usize, bits: u32) -> f64 {
+        let t = t_cim_ns(bits) * geom.adc_mux as f64;
+        let row_frac = rows_used as f64 / geom.rows as f64;
+        let cell_frac =
+            (rows_used * cols_used) as f64 / geom.cells() as f64;
+        // pulse-proportional: DAC drive scales with active rows; array
+        // current with active cells. Scaled relative to the AON geometry so
+        // smaller crossbars (Table 3) keep per-cell energy constant.
+        let scale = geom.cells() as f64 / ArrayGeom::AON.cells() as f64;
+        let pulse = self.alpha_nj_per_ns
+            * t
+            * scale
+            * (self.dac_fraction * row_frac
+                + (1.0 - self.dac_fraction) * cell_frac);
+        let adc = self.adc_nj * cols_used as f64;
+        let dig = self.dig_nj * cols_used as f64;
+        pulse + adc + dig + self.fixed_nj * scale
+    }
+
+    /// Latency of one MVM, ns (PWM pulse repeated per mux phase).
+    pub fn mvm_latency_ns(&self, phases: usize, bits: u32) -> f64 {
+        t_cim_ns(bits) * phases as f64
+    }
+}
+
+/// Peak numbers at 100% utilization (Table 2 "peak performance" row).
+pub fn peak(geom: ArrayGeom, bits: u32, em: &EnergyModel) -> (f64, f64) {
+    let phases = geom.adc_phases(geom.cols);
+    let ops = 2.0 * geom.cells() as f64;
+    let t_ns = em.mvm_latency_ns(phases, bits);
+    let e_nj = em.mvm_energy_nj(geom, geom.rows, geom.cols, phases, bits);
+    let tops = ops / t_ns / 1000.0;
+    let tops_w = ops / e_nj / 1000.0;
+    (tops, tops_w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn t_cim_table2() {
+        assert_eq!(t_cim_ns(8), 130.0);
+        assert_eq!(t_cim_ns(6), 34.0);
+        assert_eq!(t_cim_ns(4), 10.0);
+    }
+
+    #[test]
+    fn peak_matches_table2() {
+        // paper: 2 / 7.71 / 26.21 TOPS and 13.55 / 45.55 / 112.44 TOPS/W
+        let em = EnergyModel::default();
+        let (t8, w8) = peak(ArrayGeom::AON, 8, &em);
+        let (t6, w6) = peak(ArrayGeom::AON, 6, &em);
+        let (t4, w4) = peak(ArrayGeom::AON, 4, &em);
+        assert!((t8 - 2.02).abs() < 0.03, "t8={t8}");
+        assert!((t6 - 7.71).abs() < 0.1, "t6={t6}");
+        assert!((t4 - 26.21).abs() < 0.3, "t4={t4}");
+        assert!((w8 - 13.55).abs() / 13.55 < 0.02, "w8={w8}");
+        assert!((w6 - 45.55).abs() / 45.55 < 0.02, "w6={w6}");
+        assert!((w4 - 112.44).abs() / 112.44 < 0.02, "w4={w4}");
+    }
+
+    #[test]
+    fn tall_layers_more_efficient() {
+        // same cell count, taller aspect => fewer ADC conversions per MAC
+        // => better energy per op (Figure 8's second trend)
+        let em = EnergyModel::default();
+        let g = ArrayGeom::AON;
+        let e_tall = em.mvm_energy_nj(g, 512, 64, g.adc_phases(64), 8);
+        let e_wide = em.mvm_energy_nj(g, 64, 512, g.adc_phases(512), 8);
+        // identical MACs per MVM => direct energy comparison
+        assert!(e_tall < e_wide, "{e_tall} !< {e_wide}");
+    }
+
+    #[test]
+    fn achieved_below_peak() {
+        // per-MVM efficiency of any partial layer stays below the full-array
+        // peak (the fixed overhead + static mux schedule see to it)
+        let em = EnergyModel::default();
+        let g = ArrayGeom::AON;
+        let (_, peak_w) = peak(g, 8, &em);
+        for (r, c) in [(9, 64), (576, 64), (792, 112), (1008, 128)] {
+            let e = em.mvm_energy_nj(g, r, c, g.adc_phases(c), 8);
+            let eff = 2.0 * (r * c) as f64 / e / 1000.0;
+            assert!(eff <= peak_w * 1.001, "{r}x{c}: {eff} > {peak_w}");
+        }
+    }
+
+    #[test]
+    fn energy_positive_and_monotone_in_cols() {
+        let em = EnergyModel::default();
+        let g = ArrayGeom::AON;
+        let e1 = em.mvm_energy_nj(g, 256, 64, 1, 8);
+        let e2 = em.mvm_energy_nj(g, 256, 128, 1, 8);
+        assert!(e2 > e1 && e1 > 0.0);
+    }
+}

@@ -1,0 +1,154 @@
+//! Per-layer and whole-model performance on the AON-CiM accelerator
+//! (Figure 8 scatter data, Table 2 model rows, Table 3 inference rates).
+
+use crate::crossbar::ArrayGeom;
+use crate::mapping::{ModelMapping, SplitMapping};
+use crate::timing::{EnergyModel, DIGITAL_LANES, T_DIGITAL_NS};
+
+#[derive(Clone, Debug)]
+pub struct LayerPerf {
+    pub name: String,
+    pub weights: usize,
+    pub ops: f64,
+    pub latency_ns: f64,
+    pub energy_nj: f64,
+    pub tops: f64,
+    pub tops_w: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelPerf {
+    pub layers: Vec<LayerPerf>,
+    pub latency_ns: f64,
+    pub energy_nj: f64,
+    pub ops: f64,
+    pub tops: f64,
+    pub tops_w: f64,
+    pub inf_per_sec: f64,
+    pub uj_per_inf: f64,
+}
+
+/// Digital post-processing time for `words` output words (pipelined with
+/// the array; only binds when it exceeds the analog time).
+fn digital_ns(words: usize) -> f64 {
+    (words as f64 / DIGITAL_LANES as f64) * T_DIGITAL_NS
+}
+
+/// Performance of one mapped layer executing all its MVMs (layer-serial).
+pub fn layer_perf(geom: ArrayGeom, rows: usize, cols: usize, mvms: usize,
+                  bits: u32, em: &EnergyModel) -> (f64, f64, f64) {
+    let phases = geom.adc_phases(cols);
+    let analog_ns = em.mvm_latency_ns(phases, bits);
+    // activation processing / SRAM / IM2COL are pipelined; the array stalls
+    // only if the digital side is slower than one MVM
+    let per_mvm_ns = analog_ns.max(digital_ns(cols));
+    let e_nj = em.mvm_energy_nj(geom, rows, cols, phases, bits);
+    let ops = 2.0 * (rows * cols) as f64 * mvms as f64;
+    (mvms as f64 * per_mvm_ns, mvms as f64 * e_nj, ops)
+}
+
+/// Whole-model performance from a whole-array mapping (Figure 8, Table 2).
+pub fn model_perf(m: &ModelMapping, bits: u32, em: &EnergyModel) -> ModelPerf {
+    let mut layers = Vec::new();
+    let (mut lat, mut en, mut ops) = (0f64, 0f64, 0f64);
+    for l in &m.layers {
+        let (l_ns, l_nj, l_ops) = layer_perf(m.geom, l.rows, l.cols, l.mvms, bits, em);
+        layers.push(LayerPerf {
+            name: l.name.clone(),
+            weights: l.cells(),
+            ops: l_ops,
+            latency_ns: l_ns,
+            energy_nj: l_nj,
+            tops: l_ops / l_ns / 1000.0,
+            tops_w: l_ops / l_nj / 1000.0,
+        });
+        lat += l_ns;
+        en += l_nj;
+        ops += l_ops;
+    }
+    ModelPerf {
+        layers,
+        latency_ns: lat,
+        energy_nj: en,
+        ops,
+        tops: ops / lat / 1000.0,
+        tops_w: ops / en / 1000.0,
+        inf_per_sec: 1e9 / lat,
+        uj_per_inf: en * 1e-3,
+    }
+}
+
+/// Inference rate under split-GEMM mapping (Table 3): every allocated tile
+/// of a layer operates sequentially per output pixel, and row-split partial
+/// sums are accumulated digitally.
+pub fn split_inference_rate(s: &SplitMapping, bits: u32, em: &EnergyModel) -> f64 {
+    let mut lat = 0f64;
+    for l in &s.layers {
+        let cols_per_tile = l.cols.min(s.geom.cols);
+        let phases = s.geom.adc_phases(cols_per_tile);
+        let per_tile_ns = em
+            .mvm_latency_ns(phases, bits)
+            .max(digital_ns(cols_per_tile));
+        lat += l.mvms as f64 * l.alloc_tiles as f64 * per_tile_ns;
+    }
+    1e9 / lat
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crossbar::ArrayGeom;
+    use crate::mapping::tiler::MappedLayer;
+    use crate::nn::LayerKind;
+
+    fn mapping(rows: usize, cols: usize, mvms: usize) -> ModelMapping {
+        ModelMapping {
+            geom: ArrayGeom::AON,
+            layers: vec![MappedLayer {
+                name: "l".into(),
+                kind: LayerKind::Conv3x3,
+                row0: 0,
+                col0: 0,
+                rows,
+                cols,
+                effective: rows * cols,
+                mvms,
+            }],
+        }
+    }
+
+    #[test]
+    fn bigger_layers_higher_tops_w() {
+        let em = EnergyModel::default();
+        let small = model_perf(&mapping(72, 16, 100), 8, &em);
+        let big = model_perf(&mapping(720, 160, 100), 8, &em);
+        assert!(big.tops_w > small.tops_w);
+        assert!(big.tops > small.tops);
+    }
+
+    #[test]
+    fn lower_bits_faster(){
+        let em = EnergyModel::default();
+        let p8 = model_perf(&mapping(512, 128, 50), 8, &em);
+        let p4 = model_perf(&mapping(512, 128, 50), 4, &em);
+        assert!(p4.inf_per_sec > 5.0 * p8.inf_per_sec);
+        assert!(p4.tops_w > p8.tops_w);
+    }
+
+    #[test]
+    fn digital_never_stalls_8bit() {
+        // 512 cols at 8 bits: digital (512/16)*1.25 = 40ns < 130ns
+        assert!(digital_ns(512) < crate::timing::t_cim_ns(8));
+        // and exactly meets the worst case at 4 bits with <=128 cols
+        assert!(digital_ns(128) <= crate::timing::t_cim_ns(4));
+    }
+
+    #[test]
+    fn whole_model_latency_is_sum() {
+        let em = EnergyModel::default();
+        let p = model_perf(&mapping(100, 50, 10), 8, &em);
+        let l = &p.layers[0];
+        assert!((p.latency_ns - l.latency_ns).abs() < 1e-9);
+        assert!((p.uj_per_inf - p.energy_nj * 1e-3).abs() < 1e-12);
+    }
+}

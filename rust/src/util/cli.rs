@@ -1,0 +1,99 @@
+//! Tiny CLI argument parser (clap is not vendored).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Self {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name)
+            .map(|v| v.parse().expect("integer option"))
+            .unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name)
+            .map(|v| v.parse().expect("float option"))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        // note: a bare `--flag value` is ambiguous; positionals go first
+        let a = p("serve pos1 --task kws --runs=5 --verbose");
+        assert_eq!(a.positional, vec!["serve", "pos1"]);
+        assert_eq!(a.opt("task"), Some("kws"));
+        assert_eq!(a.opt_usize("runs", 0), 5);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn flag_before_flag() {
+        let a = p("--a --b v");
+        assert!(a.flag("a"));
+        assert_eq!(a.opt("b"), Some("v"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = p("");
+        assert_eq!(a.opt_or("x", "d"), "d");
+        assert_eq!(a.opt_f64("y", 1.5), 1.5);
+    }
+}

@@ -1,0 +1,12 @@
+//! Offline-environment utility substrates.
+//!
+//! The build environment vendors only the `xla` crate's dependency closure,
+//! so the usual ecosystem crates (rand, serde, clap, criterion) are
+//! unavailable; these modules provide the small subset the project needs
+//! (see DESIGN.md "Substitutions").
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;

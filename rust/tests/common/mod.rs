@@ -1,0 +1,32 @@
+//! Shared helpers for integration tests.
+
+use analognets::runtime::ArtifactStore;
+
+/// Open the artifact store, or None when `make artifacts` has not run
+/// (artifact-dependent tests skip themselves to keep `cargo test` usable
+/// on a fresh checkout).
+pub fn store_or_skip(test: &str) -> Option<ArtifactStore> {
+    let dir = analognets::nn::manifest::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP {test}: no artifacts at {} (run `make artifacts`)",
+                  dir.display());
+        return None;
+    }
+    match ArtifactStore::open(&dir) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("SKIP {test}: {e}");
+            None
+        }
+    }
+}
+
+/// First variant id that exists, preferring the given list.
+pub fn pick_vid(store: &ArtifactStore, prefer: &[&str]) -> Option<String> {
+    for p in prefer {
+        if store.manifest.variants.iter().any(|v| v.vid == *p) {
+            return Some(p.to_string());
+        }
+    }
+    store.manifest.variants.first().map(|v| v.vid.clone())
+}

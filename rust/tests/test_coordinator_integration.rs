@@ -1,0 +1,120 @@
+//! Coordinator end-to-end: concurrent clients, batching behaviour, drift
+//! clock, metrics.  Requires `make artifacts` (skips otherwise).
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use analognets::coordinator::{batcher, Coordinator, ServeConfig};
+
+fn serving_cfg(vid: &str) -> ServeConfig {
+    let mut cfg = ServeConfig::new(vid, 8);
+    cfg.max_wait = Duration::from_millis(1);
+    cfg.time_scale = 1e4;
+    cfg
+}
+
+#[test]
+fn concurrent_clients_all_served() {
+    let Some(store) = common::store_or_skip("concurrent_clients") else {
+        return;
+    };
+    let Some(vid) = common::pick_vid(&store, &["kws_full_e10_8b"]) else {
+        return;
+    };
+    let meta = store.meta(&vid).unwrap();
+    if meta.hlo_keys().iter().filter(|(b, _)| *b == 8).count() < 2 {
+        eprintln!("SKIP: {vid} has no serving graphs");
+        return;
+    }
+    let ds = Arc::new(store.dataset("kws").unwrap());
+    drop(store);
+
+    let coord = Arc::new(Coordinator::start(serving_cfg(&vid)).unwrap());
+    let feat = ds.feat_len();
+    let clients = 8;
+    let per_client = 20;
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let coord = coord.clone();
+        let ds = ds.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut ok = 0usize;
+            for i in 0..per_client {
+                let s = (c * 31 + i) % ds.len();
+                let resp = coord
+                    .infer(ds.x[s * feat..(s + 1) * feat].to_vec())
+                    .unwrap();
+                ok += (resp.pred == ds.y[s]) as usize;
+                assert_eq!(resp.logits.len(), 12);
+            }
+            ok
+        }));
+    }
+    let total_ok: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let m = coord.metrics.summary();
+    assert_eq!(m.completed as usize, clients * per_client);
+    // concurrent submission must produce some multi-request launches
+    assert!(m.launches <= m.completed, "{m}");
+    // the model should be right most of the time even while drifting
+    assert!(total_ok * 2 > clients * per_client, "accuracy collapsed: {total_ok}");
+    eprintln!("coordinator metrics: {m}");
+}
+
+#[test]
+fn rejects_bad_feature_length() {
+    let Some(store) = common::store_or_skip("rejects_bad_feature_length") else {
+        return;
+    };
+    let Some(vid) = common::pick_vid(&store, &["kws_full_e10_8b"]) else {
+        return;
+    };
+    drop(store);
+    let coord = Coordinator::start(serving_cfg(&vid)).unwrap();
+    assert!(coord.submit(vec![0.0; 3]).is_err());
+    coord.stop().unwrap();
+}
+
+#[test]
+fn drift_clock_advances_during_serving() {
+    let Some(store) = common::store_or_skip("drift_clock_advances") else {
+        return;
+    };
+    let Some(vid) = common::pick_vid(&store, &["kws_full_e10_8b"]) else {
+        return;
+    };
+    let ds = store.dataset("kws").unwrap();
+    drop(store);
+    let mut cfg = serving_cfg(&vid);
+    cfg.time_scale = 1e6; // ~1 sim-day per wall-ms
+    let coord = Coordinator::start(cfg).unwrap();
+    let feat = ds.feat_len();
+    let r1 = coord.infer(ds.x[..feat].to_vec()).unwrap();
+    std::thread::sleep(Duration::from_millis(30));
+    let r2 = coord.infer(ds.x[..feat].to_vec()).unwrap();
+    assert!(r2.sim_age_s > r1.sim_age_s + 1e4,
+            "clock stuck: {} -> {}", r1.sim_age_s, r2.sim_age_s);
+    coord.stop().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// batcher plan properties (no artifacts needed)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_batch_plans_cover_queue() {
+    use analognets::util::rng::Rng;
+    let mut rng = Rng::new(77);
+    for _ in 0..200 {
+        let queued = 1 + rng.below(300);
+        let sizes = vec![1, 8, 32];
+        let plan = batcher::plan(queued, sizes.clone());
+        let total: usize = plan.launches.iter().sum();
+        assert_eq!(total, queued + plan.padding);
+        assert!(plan.padding < 32);
+        for l in &plan.launches {
+            assert!(sizes.contains(l));
+        }
+    }
+}

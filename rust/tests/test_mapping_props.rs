@@ -1,0 +1,138 @@
+//! Property tests on the mapper: placements are disjoint and in bounds for
+//! random synthetic models; split mappings cover every weight; timing
+//! invariants hold across geometries.
+
+use analognets::crossbar::ArrayGeom;
+use analognets::mapping::{map_model, split_map_model};
+use analognets::nn::meta::ModelMeta;
+use analognets::timing::perf::split_inference_rate;
+use analognets::timing::{model_perf, EnergyModel};
+use analognets::util::json;
+use analognets::util::rng::Rng;
+
+/// Build a random plausible model meta (layers sized to fit 1024x512).
+fn random_meta(rng: &mut Rng) -> ModelMeta {
+    let n_layers = 2 + rng.below(6);
+    let mut in_ch = 1 + rng.below(4);
+    let mut layers = String::new();
+    let mut budget = 1024 * 512 / 2; // keep total under half the array
+    for li in 0..n_layers {
+        let kind = match rng.below(if li == n_layers - 1 { 1 } else { 3 }) {
+            _ if li == n_layers - 1 => "dense",
+            0 => "conv3x3",
+            1 => "conv1x1",
+            _ => "dw3x3",
+        };
+        let out_ch = if kind == "dw3x3" { in_ch } else { 4 + rng.below(96) };
+        let k = match kind {
+            "conv3x3" | "dw3x3" => 9 * in_ch,
+            _ => in_ch,
+        };
+        if k > 1024 || k * out_ch > budget {
+            break;
+        }
+        budget -= k * out_ch;
+        let wshape = if kind == "dw3x3" {
+            format!("[9,{in_ch}]")
+        } else {
+            format!("[{k},{out_ch}]")
+        };
+        let pix = 1 + rng.below(20);
+        if li > 0 {
+            layers.push(',');
+        }
+        layers.push_str(&format!(
+            r#"{{"name":"l{li}","kind":"{kind}","in_ch":{in_ch},"out_ch":{out_ch},
+            "stride":[1,1],"relu":true,"analog":true,
+            "in_h":{pix},"in_w":1,"out_h":{pix},"out_w":1,
+            "k_gemm":{k},"weight_shape":{wshape},
+            "graph_weight_shape":[{k},{out_ch}],
+            "w_scale":1,"w_max":1,"r_dac":1,"r_adc":1,
+            "dig_scale":[{s}],"dig_bias":[{b}]}}"#,
+            s = vec!["1"; out_ch].join(","),
+            b = vec!["0"; out_ch].join(","),
+        ));
+        in_ch = out_ch;
+    }
+    let src = format!(
+        r#"{{"model":"rand","variant":"v","input_hwc":[8,1,1],
+        "num_classes":2,"eta":0,"fp_test_acc":1,"trained_adc_bits":null,
+        "layers":[{layers}],"hlo":{{}}}}"#
+    );
+    ModelMeta::from_json(&json::parse(&src).unwrap()).unwrap()
+}
+
+#[test]
+fn prop_placements_disjoint_in_bounds() {
+    let mut rng = Rng::new(2001);
+    for case in 0..40 {
+        let meta = random_meta(&mut rng);
+        if meta.layers.is_empty() {
+            continue;
+        }
+        let Ok(m) = map_model(&meta, ArrayGeom::AON) else { continue };
+        assert_eq!(m.layers.len(), meta.layers.len());
+        for (i, a) in m.layers.iter().enumerate() {
+            assert!(a.row0 + a.rows <= 1024 && a.col0 + a.cols <= 512,
+                    "case {case}: {} out of bounds", a.name);
+            for b in &m.layers[..i] {
+                let overlap = a.row0 < b.row0 + b.rows && b.row0 < a.row0 + a.rows
+                    && a.col0 < b.col0 + b.cols && b.col0 < a.col0 + a.cols;
+                assert!(!overlap, "case {case}: {} overlaps {}", a.name, b.name);
+            }
+        }
+        let u = m.allocated_utilization();
+        assert!(u > 0.0 && u <= 1.0, "case {case}: util {u}");
+        assert!(m.effective_utilization() <= u + 1e-12);
+    }
+}
+
+#[test]
+fn prop_split_covers_all_weights() {
+    let mut rng = Rng::new(2002);
+    for case in 0..30 {
+        let meta = random_meta(&mut rng);
+        if meta.layers.is_empty() {
+            continue;
+        }
+        for geom in [ArrayGeom::new(128, 128), ArrayGeom::new(64, 64)] {
+            let s = split_map_model(&meta, geom);
+            for (sl, lm) in s.layers.iter().zip(meta.layers.iter()) {
+                // allocated tile area must cover every non-zero weight
+                assert!(sl.alloc_tiles * geom.cells() >= sl.effective,
+                        "case {case} {}: tiles cannot hold weights", sl.name);
+                assert!(sl.alloc_tiles <= sl.grid_tiles);
+                assert!(sl.row_splits >= 1);
+                assert_eq!(sl.effective, lm.effective_weights());
+            }
+            let u = s.effective_utilization();
+            assert!(u > 0.0 && u <= 1.0, "case {case}: split util {u}");
+        }
+    }
+}
+
+#[test]
+fn prop_timing_monotone() {
+    // for any mapping: lower bitwidth => faster + more efficient;
+    // split mapping on smaller arrays is never faster than whole-array
+    let mut rng = Rng::new(2003);
+    let em = EnergyModel::default();
+    for case in 0..20 {
+        let meta = random_meta(&mut rng);
+        if meta.layers.is_empty() {
+            continue;
+        }
+        let Ok(m) = map_model(&meta, ArrayGeom::AON) else { continue };
+        let p8 = model_perf(&m, 8, &em);
+        let p4 = model_perf(&m, 4, &em);
+        assert!(p4.latency_ns < p8.latency_ns, "case {case}");
+        assert!(p4.energy_nj < p8.energy_nj, "case {case}");
+        assert!(p8.ops == p4.ops);
+
+        let s = split_map_model(&meta, ArrayGeom::new(64, 64));
+        let r_split = split_inference_rate(&s, 8, &em);
+        assert!(r_split <= p8.inf_per_sec * 1.001,
+                "case {case}: split faster than whole ({r_split} vs {})",
+                p8.inf_per_sec);
+    }
+}

@@ -1,0 +1,109 @@
+//! Property tests on the PCM substrate (hand-rolled: seeded generators +
+//! invariant assertions over many random cases — proptest is not vendored).
+
+use analognets::pcm::{device, gdc, PcmParams, ProgrammedWeights};
+use analognets::util::rng::Rng;
+
+fn random_weights(rng: &mut Rng, n: usize, scale: f64) -> Vec<f32> {
+    (0..n).map(|_| rng.gauss(0.0, scale) as f32).collect()
+}
+
+#[test]
+fn prop_conductances_always_physical() {
+    // over many random layers: conductances stay in [0, ~1.2] and reads
+    // are finite, for any time in [25s, 10y]
+    let mut rng = Rng::new(1001);
+    for case in 0..25 {
+        let rows = 1 + rng.below(40);
+        let cols = 1 + rng.below(40);
+        let scale = 0.05 + 0.3 * rng.uniform();
+        let w = random_weights(&mut rng, rows * cols, scale);
+        let p = PcmParams::default();
+        let prog = ProgrammedWeights::program(&w, rows, cols, 0.0, &p, &mut rng);
+        for g in prog.gp_pos.iter().chain(prog.gp_neg.iter()) {
+            assert!(*g >= 0.0 && *g < 1.3, "case {case}: g={g}");
+        }
+        let t = 25.0 * 10f64.powf(rng.uniform() * 7.0);
+        let r = prog.read_weights(t, &p, &mut rng);
+        assert!(r.iter().all(|x| x.is_finite()), "case {case}");
+    }
+}
+
+#[test]
+fn prop_drift_error_monotone_in_time() {
+    // average |error| grows (weakly) along 25s -> 1d -> 1y for any layer
+    let mut rng = Rng::new(1002);
+    for case in 0..10 {
+        let w = random_weights(&mut rng, 4096, 0.2);
+        let p = PcmParams::default();
+        let prog = ProgrammedWeights::program(&w, 64, 64, 0.0, &p, &mut rng);
+        let mut errs = Vec::new();
+        for t in [25.0, 86_400.0, 31_536_000.0] {
+            // average over a few reads to suppress 1/f sampling noise
+            let mut e = 0.0;
+            for _ in 0..3 {
+                let r = prog.read_weights(t, &p, &mut rng);
+                e += w.iter().zip(&r)
+                    .map(|(a, b)| (a - b).abs() as f64)
+                    .sum::<f64>();
+            }
+            errs.push(e);
+        }
+        assert!(errs[1] > errs[0] * 0.95 && errs[2] > errs[1] * 0.95,
+                "case {case}: {errs:?}");
+    }
+}
+
+#[test]
+fn prop_gdc_alpha_bounds() {
+    // GDC alpha ~1 at t_c and within [1, 2] out to 10 years for default nu
+    let mut rng = Rng::new(1003);
+    for _ in 0..10 {
+        let scale = 0.1 + rng.uniform();
+        let w = random_weights(&mut rng, 2048, scale);
+        let p = PcmParams::default();
+        let prog = ProgrammedWeights::program(&w, 32, 64, 0.0, &p, &mut rng);
+        let a0 = gdc::alpha(&prog, 25.0);
+        assert!((a0 - 1.0).abs() < 0.1, "a0={a0}");
+        let a10y = gdc::alpha(&prog, 3.15e8);
+        assert!(a10y >= a0 * 0.99 && a10y < 2.5, "a10y={a10y}");
+    }
+}
+
+#[test]
+fn prop_gdc_reduces_weight_error_under_drift() {
+    // compensated reads are closer to the target weights than raw reads
+    let mut rng = Rng::new(1004);
+    for case in 0..10 {
+        let w = random_weights(&mut rng, 8192, 0.2);
+        let p = PcmParams { read_noise: false, ..Default::default() };
+        let prog = ProgrammedWeights::program(&w, 128, 64, 0.0, &p, &mut rng);
+        let t = 2_592_000.0; // 1 month
+        let r = prog.read_weights(t, &p, &mut rng);
+        let a = gdc::alpha(&prog, t) as f64;
+        let err_raw: f64 = w.iter().zip(&r)
+            .map(|(x, y)| ((x - y) as f64).powi(2)).sum();
+        let err_gdc: f64 = w.iter().zip(&r)
+            .map(|(x, y)| (*x as f64 - a * *y as f64).powi(2)).sum();
+        assert!(err_gdc < err_raw, "case {case}: {err_gdc} !< {err_raw}");
+    }
+}
+
+#[test]
+fn prop_sigma_formulas_match_reference_constants() {
+    // anchor values cross-checked with python/tests/test_pcm_consistency.py
+    assert!((device::sigma_prog(0.0) - 0.01054).abs() < 1e-4);
+    assert!((device::q_factor(0.04) - 0.0088).abs() < 1e-4); // 1uS device
+    let f = device::drift_factor(86_400.0, 0.031);
+    assert!((f - (86_400.0f64 / 25.0).powf(-0.031)).abs() < 1e-12);
+}
+
+#[test]
+fn prop_programming_deterministic_per_seed() {
+    let w = random_weights(&mut Rng::new(7), 512, 0.2);
+    let p = PcmParams::default();
+    let a = ProgrammedWeights::program(&w, 16, 32, 0.0, &p, &mut Rng::new(99));
+    let b = ProgrammedWeights::program(&w, 16, 32, 0.0, &p, &mut Rng::new(99));
+    assert_eq!(a.gp_pos, b.gp_pos);
+    assert_eq!(a.nu_neg, b.nu_neg);
+}

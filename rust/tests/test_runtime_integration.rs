@@ -1,0 +1,152 @@
+//! Integration over the AOT bridge: exported HLO graphs vs the Rust-native
+//! simulator, and artifact-bundle consistency.  Requires `make artifacts`.
+
+mod common;
+
+use analognets::eval::DeployedModel;
+use analognets::nn::LayerKind;
+use analognets::pcm::PcmParams;
+use analognets::runtime::HostTensor;
+use analognets::simulator::NativeModel;
+use analognets::util::rng::Rng;
+
+#[test]
+fn artifact_bundle_consistent() {
+    let Some(store) = common::store_or_skip("artifact_bundle_consistent") else {
+        return;
+    };
+    for e in &store.manifest.variants {
+        let meta = store.meta(&e.vid).unwrap();
+        let ws = store.weights(&e.vid).unwrap();
+        assert_eq!(ws.len(), meta.layers.len(), "{}", e.vid);
+        for (t, lm) in ws.iter().zip(meta.layers.iter()) {
+            assert_eq!(t.shape, lm.weight_shape, "{}/{}", e.vid, lm.name);
+            // trained clipped weights must respect their own w_scale
+            let mx = t.data.iter().fold(0f32, |m, x| m.max(x.abs()));
+            assert!(mx <= lm.w_scale + 1e-5, "{}/{}: {mx} > {}", e.vid,
+                    lm.name, lm.w_scale);
+            assert!(lm.r_dac > 0.0 && lm.r_adc > 0.0);
+            assert_eq!(lm.dig_scale.len(), lm.out_ch);
+        }
+        // every layer fits the AON array (the paper's no-split requirement)
+        for lm in meta.layers.iter().filter(|l| l.analog) {
+            assert!(lm.mapped_rows() <= 1024 && lm.mapped_cols() <= 512,
+                    "{}/{} does not fit", e.vid, lm.name);
+        }
+    }
+}
+
+#[test]
+fn hlo_graph_matches_native_simulator() {
+    let Some(store) = common::store_or_skip("hlo_graph_matches_native") else {
+        return;
+    };
+    let Some(vid) = common::pick_vid(&store, &["kws_full_e10_8b", "kws_base"])
+    else {
+        return;
+    };
+    let meta = store.meta(&vid).unwrap();
+    let bits = meta.trained_adc_bits.unwrap_or(8);
+    let Ok(exe) = store.executable(&vid, bits, 128) else {
+        eprintln!("SKIP: no 128-batch graph for {vid}");
+        return;
+    };
+    let ds = store.dataset("kws").unwrap();
+    let batch = 128;
+
+    // ideal PCM (no noise): both paths see identical weights
+    let params = PcmParams::ideal();
+    let mut rng = Rng::new(42);
+    let dep = DeployedModel::program(&store, &vid, &params, &mut rng).unwrap();
+    let (ws, alphas) = dep.read_at(25.0, &params, &mut rng, true);
+
+    let (ih, iw, ic) = meta.input_hwc;
+    let xb = ds.padded_batch(0, batch);
+    let mut inputs = Vec::with_capacity(2 + ws.len());
+    inputs.push(HostTensor::new(vec![batch, ih, iw, ic], xb.clone()));
+    inputs.extend(ws.iter().cloned());
+    inputs.push(HostTensor::new(vec![alphas.len()], alphas.clone()));
+    let hlo_logits = exe.run(&inputs).unwrap();
+
+    let native = NativeModel::with_threads((*meta).clone(), 4);
+    let wvecs: Vec<Vec<f32>> = ws.iter().map(|t| t.data.clone()).collect();
+    let native_logits = native.forward(&xb, batch, &wvecs, &alphas, bits);
+
+    assert_eq!(hlo_logits.len(), native_logits.len());
+    // two fp32 implementations of the same quantized graph: identical
+    // argmax on virtually all rows, logits close
+    let classes = meta.num_classes;
+    let pred_h = NativeModel::predict(&hlo_logits, classes);
+    let pred_n = NativeModel::predict(&native_logits, classes);
+    let agree = pred_h.iter().zip(&pred_n).filter(|(a, b)| a == b).count();
+    assert!(agree >= batch * 98 / 100, "argmax agreement {agree}/{batch}");
+    let mut big = 0;
+    for (a, b) in hlo_logits.iter().zip(&native_logits) {
+        if (a - b).abs() > 0.05 * (1.0 + a.abs().max(b.abs())) {
+            big += 1;
+        }
+    }
+    assert!(big < hlo_logits.len() / 50,
+            "{big}/{} logit mismatches", hlo_logits.len());
+}
+
+#[test]
+fn dw_expansion_matches_meta_graph_shape() {
+    let Some(store) = common::store_or_skip("dw_expansion_graph_shape") else {
+        return;
+    };
+    let Some(vid) = common::pick_vid(&store, &["micro_noise_e10"]) else {
+        return;
+    };
+    if !vid.contains("micro") {
+        eprintln!("SKIP: no micronet artifacts");
+        return;
+    }
+    let meta = store.meta(&vid).unwrap();
+    let params = PcmParams::ideal();
+    let mut rng = Rng::new(3);
+    let dep = DeployedModel::program(&store, &vid, &params, &mut rng).unwrap();
+    let (ws, _) = dep.read_at(25.0, &params, &mut rng, false);
+    for (t, lm) in ws.iter().zip(meta.layers.iter()) {
+        assert_eq!(t.shape, lm.graph_weight_shape, "{}", lm.name);
+        if lm.kind == LayerKind::Dw3x3 && lm.analog {
+            // dense expansion: exactly 9*C non-zeros on the tap diagonals
+            let c = lm.in_ch;
+            let nz = t.data.iter().filter(|x| x.abs() > 0.0).count();
+            assert!(nz <= 9 * c);
+        }
+    }
+}
+
+#[test]
+fn drift_degrades_and_gdc_helps_end_to_end() {
+    let Some(store) = common::store_or_skip("drift_degrades_e2e") else {
+        return;
+    };
+    let Some(vid) = common::pick_vid(&store, &["kws_full_e10_8b"]) else {
+        return;
+    };
+    let meta = store.meta(&vid).unwrap();
+    let bits = meta.trained_adc_bits.unwrap_or(8);
+    let opts = analognets::eval::EvalOpts {
+        bits,
+        runs: 2,
+        max_samples: 128,
+        ..Default::default()
+    };
+    let times = [25.0, 31_536_000.0];
+    let accs = analognets::eval::drift_accuracy(&store, &vid, &times, &opts)
+        .unwrap();
+    let fresh: f64 = accs[0].iter().sum::<f64>() / accs[0].len() as f64;
+    let aged: f64 = accs[1].iter().sum::<f64>() / accs[1].len() as f64;
+    assert!(fresh > 0.5, "fresh accuracy collapsed: {fresh}");
+    assert!(aged <= fresh + 0.02, "drift did not degrade: {fresh} -> {aged}");
+
+    let no_gdc = analognets::eval::drift_accuracy(
+        &store, &vid, &[31_536_000.0],
+        &analognets::eval::EvalOpts { use_gdc: false, ..opts }).unwrap();
+    let aged_no_gdc: f64 =
+        no_gdc[0].iter().sum::<f64>() / no_gdc[0].len() as f64;
+    assert!(aged_no_gdc <= aged + 0.05,
+            "GDC should not hurt: {aged_no_gdc} vs {aged}");
+}
