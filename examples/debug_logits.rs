@@ -1,41 +1,49 @@
-//! Debug: feed the exported graph the *clean* weights directly (no PCM) and
-//! print the first logits row, to compare against the python reference.
+//! Debug: feed a backend the *clean* trained weights directly (no PCM
+//! noise, no drift) and print the first logits row, to compare against the
+//! python reference. `--backend pjrt` runs the exported graph instead of
+//! the native simulator (requires `--features pjrt`).
 
+use analognets::backend::{self, BackendKind, HostTensor, InferenceBackend};
 use analognets::nn::expand_dw_dense;
-use analognets::runtime::{ArtifactStore, HostTensor};
+use analognets::runtime::ArtifactStore;
+use analognets::util::cli::Args;
+use analognets::util::logits;
 
 fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
     let store = ArtifactStore::open_default()?;
-    let vid = std::env::args().nth(1).unwrap_or("kws_full_e10_8b".into());
+    let vid = args
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| args.opt_or("vid", "kws_full_e10_8b"));
+    let kind = BackendKind::from_args(&args)?;
     let meta = store.meta(&vid)?;
     let tensors = store.weights(&vid)?;
     let ds = store.dataset("kws")?;
     let batch = 128;
-    let exe = store.executable(&vid, meta.trained_adc_bits.unwrap_or(8), batch)?;
-    let (ih, iw, ic) = meta.input_hwc;
+    let be = backend::create(kind, &store, &vid,
+                             meta.trained_adc_bits.unwrap_or(8))?;
 
-    let mut inputs = Vec::new();
-    inputs.push(HostTensor::new(vec![batch, ih, iw, ic],
-                                ds.padded_batch(0, batch)));
-    for (t, lm) in tensors.iter().zip(meta.layers.iter()) {
-        let t = if lm.kind == analognets::nn::LayerKind::Dw3x3 && lm.analog {
-            expand_dw_dense(t)
-        } else {
-            t.clone()
-        };
-        inputs.push(HostTensor::new(t.shape.clone(), t.data.clone()));
-    }
-    inputs.push(HostTensor::new(vec![meta.layers.len()],
-                                vec![1.0; meta.layers.len()]));
-    let logits = exe.run(&inputs)?;
-    println!("logits row0: {:?}", &logits[..meta.num_classes]);
-    let mut correct = 0;
-    for (i, row) in logits.chunks_exact(meta.num_classes).enumerate() {
-        let pred = row.iter().enumerate()
-            .max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0 as u32;
-        correct += (pred == ds.y[i]) as usize;
-    }
-    println!("clean-weight HLO acc: {}/{batch}", correct);
+    // clean weights in graph shape, unit GDC: the noise-free reference
+    let ws: Vec<HostTensor> = tensors
+        .iter()
+        .zip(meta.layers.iter())
+        .map(|(t, lm)| {
+            if lm.kind == analognets::nn::LayerKind::Dw3x3 && lm.analog {
+                HostTensor::from_tensor(&expand_dw_dense(t))
+            } else {
+                HostTensor::from_tensor(t)
+            }
+        })
+        .collect();
+    let gdc = vec![1.0f32; ws.len()];
+
+    let out = be.run_batch(&ds.padded_batch(0, batch), batch, &ws, &gdc)?;
+    println!("[{}] logits row0: {:?}", be.name(), &out[..meta.num_classes]);
+    let n = batch.min(ds.len());
+    let correct = logits::count_correct(&out, meta.num_classes, &ds.y[..n]);
+    println!("clean-weight {} acc: {correct}/{n}", be.name());
     println!("x[0][..8] = {:?}", &ds.x[..8]);
     println!("y[..8] = {:?}", &ds.y[..8]);
     Ok(())

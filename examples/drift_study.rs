@@ -4,6 +4,7 @@
 //!
 //!   make artifacts && cargo run --release --example drift_study
 
+use analognets::backend::BackendKind;
 use analognets::eval::{drift_accuracy, EvalOpts};
 use analognets::pcm::{PcmParams, FIG7_TIMES};
 use analognets::runtime::ArtifactStore;
@@ -16,6 +17,7 @@ fn main() -> anyhow::Result<()> {
     let vid = args.opt_or("vid", "kws_full_e10_8b");
     let runs = args.opt_usize("runs", 3);
     let samples = args.opt_usize("samples", 256);
+    let backend = BackendKind::from_args(&args)?;
     let store = ArtifactStore::open_default()?;
     let times: Vec<f64> = FIG7_TIMES.iter().map(|(_, t)| *t).collect();
 
@@ -35,6 +37,7 @@ fn main() -> anyhow::Result<()> {
             max_samples: samples,
             use_gdc,
             params: PcmParams { read_noise, ..Default::default() },
+            backend,
             ..Default::default()
         };
         let accs = drift_accuracy(&store, &vid, &times, &opts)?;
@@ -48,7 +51,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // reprogramming: a fresh programming at 1 month restores 25s-level acc
-    let opts = EvalOpts { bits: 8, runs, max_samples: samples,
+    let opts = EvalOpts { bits: 8, runs, max_samples: samples, backend,
                           ..Default::default() };
     let fresh = drift_accuracy(&store, &vid, &[25.0], &opts)?;
     let (m_fresh, _) = stats::acc_summary(&fresh[0]);

@@ -10,6 +10,7 @@
 //!
 //!   make artifacts && cargo run --release --example kws_always_on
 
+use analognets::backend::BackendKind;
 use analognets::coordinator::{Coordinator, ServeConfig};
 use analognets::runtime::ArtifactStore;
 use analognets::util::cli::Args;
@@ -19,16 +20,18 @@ fn main() -> anyhow::Result<()> {
     let vid = args.opt_or("vid", "kws_full_e10_8b");
     let requests = args.opt_usize("requests", 2000);
     let time_scale = args.opt_f64("time-scale", 1e5);
+    let backend = BackendKind::from_args(&args)?;
 
     let store = ArtifactStore::open_default()?;
     let meta = store.meta(&vid)?;
     let ds = store.dataset("kws")?;
     println!("== always-on KWS on AON-CiM ==");
-    println!("model {} ({} params, fp ref {:.2}%), drift clock {time_scale}x",
+    println!("model {} ({} params, fp ref {:.2}%), drift clock {time_scale}x, \
+              `{backend}` backend",
              meta.model, meta.param_count(), 100.0 * meta.fp_test_acc);
     drop(store);
 
-    let mut cfg = ServeConfig::new(&vid, 8);
+    let mut cfg = ServeConfig::new(&vid, 8).with_backend(backend);
     cfg.time_scale = time_scale;          // 1 wall-second = ~1.2 sim-days
     cfg.refresh_every_s = 3600.0;         // refresh weights hourly (sim)
     cfg.max_wait = std::time::Duration::from_millis(1);

@@ -1,45 +1,76 @@
-//! Quickstart: load the standalone L1 CiM kernel (pallas -> HLO) and run a
-//! single analog matrix-vector product through the PJRT runtime.
+//! Quickstart: one inference through the unified `InferenceBackend` API.
 //!
-//!   make artifacts && cargo run --release --example quickstart
+//! Hermetic on purpose — it builds a tiny model description inline and runs
+//! a batch on the `native` backend, so it works on a fresh checkout with no
+//! artifacts and no XLA library:
+//!
+//!   cargo run --release --example quickstart
+//!
+//! The exact same `run_batch` call executes the exported HLO graphs when
+//! the crate is built with `--features pjrt` (see `--backend pjrt` on the
+//! CLI and the serving examples).
 
-use analognets::nn::manifest::artifacts_dir;
-use analognets::quant;
-use analognets::runtime::{HostTensor, Runtime};
+use analognets::backend::{HostTensor, InferenceBackend, NativeBackend};
+use analognets::nn::ModelMeta;
+use analognets::util::json;
+use analognets::util::logits;
 use analognets::util::rng::Rng;
 
+const TINY: &str = r#"{
+  "model": "quickstart_kws", "variant": "demo", "input_hwc": [4, 4, 1],
+  "num_classes": 3, "eta": 0.0, "fp_test_acc": 1.0, "trained_adc_bits": 8,
+  "layers": [
+    {"name": "c0", "kind": "conv3x3", "in_ch": 1, "out_ch": 4,
+     "stride": [1, 1], "relu": true, "analog": true,
+     "in_h": 4, "in_w": 4, "out_h": 4, "out_w": 4,
+     "k_gemm": 9, "weight_shape": [9, 4], "graph_weight_shape": [9, 4],
+     "w_scale": 1.0, "w_max": 1.0, "r_dac": 8.0, "r_adc": 8.0,
+     "dig_scale": [1, 1, 1, 1], "dig_bias": [0, 0, 0, 0]},
+    {"name": "fc", "kind": "dense", "in_ch": 4, "out_ch": 3,
+     "stride": [1, 1], "relu": false, "analog": true,
+     "in_h": 4, "in_w": 4, "out_h": 1, "out_w": 1,
+     "k_gemm": 4, "weight_shape": [4, 3], "graph_weight_shape": [4, 3],
+     "w_scale": 1.0, "w_max": 1.0, "r_dac": 8.0, "r_adc": 8.0,
+     "dig_scale": [1, 1, 1], "dig_bias": [0, 0, 0]}
+  ],
+  "hlo": {}
+}"#;
+
 fn main() -> anyhow::Result<()> {
-    let path = artifacts_dir().join("cim_mvm.hlo.txt");
-    anyhow::ensure!(path.exists(), "run `make artifacts` first ({} missing)",
-                    path.display());
+    let meta = ModelMeta::from_json(&json::parse(TINY)?)?;
+    let classes = meta.num_classes;
+    let backend = NativeBackend::new(meta, 8);
+    println!("backend `{}` at {} bits, input {:?}, {} classes",
+             backend.name(), backend.bits(), backend.input_hwc(), classes);
 
-    let rt = Runtime::cpu()?;
-    println!("PJRT platform: {}", rt.platform());
-    let exe = rt.load_hlo(&path)?;
-    println!("compiled {}", exe.name);
-
-    // the exported demo kernel is x[256,432] @ w[432,128] with r_dac=1,
-    // r_adc=8 at 9/8-bit DAC/ADC — one AnalogNet-KWS-sized layer
-    let (m, k, n) = (256usize, 432usize, 128usize);
+    // random "trained" weights for the two layers, in graph shape
     let mut rng = Rng::new(42);
-    let x: Vec<f32> = (0..m * k).map(|_| rng.range(-1.0, 1.0) as f32).collect();
-    let w: Vec<f32> = (0..k * n).map(|_| rng.gauss(0.0, 0.05) as f32).collect();
+    let w: Vec<HostTensor> = backend
+        .meta()
+        .layers
+        .iter()
+        .map(|lm| {
+            let n: usize = lm.graph_weight_shape.iter().product();
+            let data: Vec<f32> =
+                (0..n).map(|_| rng.gauss(0.0, 0.3) as f32).collect();
+            HostTensor::new(lm.graph_weight_shape.clone(), data)
+        })
+        .collect();
+    // fresh deployment: no drift yet, so all GDC factors are 1.0 (see the
+    // drift_study example for the full PCM program/read/compensate flow)
+    let gdc = vec![1.0f32; w.len()];
 
-    let out = exe.run(&[
-        HostTensor::new(vec![m, k], x.clone()),
-        HostTensor::new(vec![k, n], w.clone()),
-    ])?;
-    println!("ran CiM MVM: [{m}x{k}] @ [{k}x{n}] -> {} outputs", out.len());
+    let batch = 2;
+    let x: Vec<f32> = (0..batch * backend.feat_len())
+        .map(|i| ((i % 7) as f32) / 7.0)
+        .collect();
+    let out = backend.run_batch(&x, batch, &w, &gdc)?;
+    println!("logits [{batch}x{classes}]: {out:?}");
+    println!("preds: {:?}", logits::predictions(&out, classes));
 
-    // cross-check one output against the quantizer contract
-    let mut acc = 0f64;
-    for kk in 0..k {
-        acc += quant::fake_quant(x[kk], 1.0, 9) as f64 * w[kk * n] as f64;
-    }
-    let want = quant::fake_quant(acc as f32, 8.0, 8);
-    println!("out[0,0] = {:.5} (host re-computation: {want:.5})", out[0]);
-    anyhow::ensure!((out[0] - want).abs() <= 8.0 / 127.0 + 1e-5,
-                    "kernel result mismatch");
+    // determinism check: the simulator is pure
+    let out2 = backend.run_batch(&x, batch, &w, &gdc)?;
+    anyhow::ensure!(out == out2, "native backend must be deterministic");
     println!("quickstart OK");
     Ok(())
 }

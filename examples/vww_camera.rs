@@ -7,6 +7,7 @@
 //!
 //!   make artifacts && cargo run --release --example vww_camera
 
+use analognets::backend::BackendKind;
 use analognets::coordinator::{Coordinator, ServeConfig};
 use analognets::runtime::ArtifactStore;
 use analognets::util::cli::Args;
@@ -15,12 +16,13 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let vid = args.opt_or("vid", "vww_full_e10_8b");
     let frames = args.opt_usize("frames", 300);
+    let backend = BackendKind::from_args(&args)?;
 
     let store = ArtifactStore::open_default()?;
     let ds = store.dataset("vww")?;
     drop(store);
 
-    let mut cfg = ServeConfig::new(&vid, 8);
+    let mut cfg = ServeConfig::new(&vid, 8).with_backend(backend);
     cfg.time_scale = 1e4;
     cfg.max_wait = std::time::Duration::from_millis(1);
     let coord = Coordinator::start(cfg)?;

@@ -45,6 +45,7 @@ fn main() -> anyhow::Result<()> {
             bits,
             runs: opts.runs,
             max_samples: opts.max_samples,
+            backend: opts.backend,
             ..Default::default()
         };
         let accs = drift_accuracy(&store, &vid, &times, &e)?;

@@ -1,49 +1,48 @@
 //! Runtime microbenchmarks (§6.4 infrastructure + §Perf L3 numbers):
-//! PJRT executable latency across batch sizes, batcher overhead, PCM
-//! read/GDC cost, and native-GEMM throughput.
+//! backend execute latency across batch sizes (native by default,
+//! `--backend pjrt` with the feature), batcher overhead, PCM read/GDC
+//! cost, and native-GEMM throughput.
 
+use analognets::backend::{self, InferenceBackend};
 use analognets::bench::{save, time_it, BenchOpts};
 use analognets::coordinator::{Coordinator, ServeConfig};
 use analognets::eval::DeployedModel;
 use analognets::pcm::PcmParams;
-use analognets::runtime::{ArtifactStore, HostTensor};
+use analognets::runtime::ArtifactStore;
 use analognets::simulator::gemm;
 use analognets::util::rng::Rng;
 use analognets::util::table::Table;
 
 fn main() -> anyhow::Result<()> {
     let opts = BenchOpts::from_env_args();
+    let kind = opts.backend;
     let iters = if opts.fast { 5 } else { 20 };
     let store = ArtifactStore::open_default()?;
     let mut t = Table::new("Runtime microbenchmarks",
                            &["benchmark", "result"]);
 
-    // ---- raw PJRT execute latency by batch (kws serving graphs) -------
+    // ---- backend execute latency by batch (kws serving graphs) --------
     let vid = "kws_full_e10_8b";
-    let meta = store.meta(vid)?;
     let ds = store.dataset("kws")?;
+    let be = backend::create(kind, &store, vid, 8)?;
     let params = PcmParams::default();
     let mut rng = Rng::new(1);
     let dep = DeployedModel::program(&store, vid, &params, &mut rng)?;
     let (ws, alphas) = dep.read_at(25.0, &params, &mut rng, true);
-    let (ih, iw, ic) = meta.input_hwc;
 
     let mut per_inf_us = Vec::new();
+    let sizes = be.batch_sizes();
     for batch in [1usize, 8, 32, 128] {
-        if meta.hlo_for(8, batch).is_none() {
+        if !sizes.contains(&batch) {
             continue;
         }
-        let exe = store.executable(vid, 8, batch)?;
+        be.prepare(batch)?;
         let xb = ds.padded_batch(0, batch);
         let timing = time_it(3, iters, || {
-            let mut inputs = Vec::with_capacity(2 + ws.len());
-            inputs.push(HostTensor::new(vec![batch, ih, iw, ic], xb.clone()));
-            inputs.extend(ws.iter().cloned());
-            inputs.push(HostTensor::new(vec![alphas.len()], alphas.clone()));
-            let _ = exe.run(&inputs).unwrap();
+            let _ = be.run_batch(&xb, batch, &ws, &alphas).unwrap();
         });
         per_inf_us.push((batch, timing.p50_us / batch as f64));
-        t.row(&[format!("PJRT exec kws batch={batch}"),
+        t.row(&[format!("{} exec kws batch={batch}", be.name()),
                 format!("{timing} ({:.1}us/inf)", timing.p50_us / batch as f64)]);
     }
 
@@ -54,7 +53,7 @@ fn main() -> anyhow::Result<()> {
     t.row(&["PCM read_weights+GDC (307k w)".into(), format!("{timing}")]);
 
     // ---- coordinator end-to-end overhead vs raw execute ----------------
-    let mut cfg = ServeConfig::new(vid, 8);
+    let mut cfg = ServeConfig::new(vid, 8).with_backend(kind);
     cfg.max_wait = std::time::Duration::from_micros(200);
     let coord = Coordinator::start(cfg)?;
     let feat = ds.feat_len();
@@ -63,7 +62,8 @@ fn main() -> anyhow::Result<()> {
         let i = 3 % ds.len();
         let _ = coord.infer(ds.x[i * feat..(i + 1) * feat].to_vec()).unwrap();
     });
-    t.row(&["coordinator blocking infer (batch=1)".into(), format!("{timing}")]);
+    t.row(&[format!("coordinator blocking infer (batch=1, {})", kind),
+            format!("{timing}")]);
     let summary = coord.metrics.summary();
     t.row(&["coordinator metrics".into(), format!("{summary}")]);
     coord.stop()?;

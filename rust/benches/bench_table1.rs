@@ -42,6 +42,7 @@ fn main() -> anyhow::Result<()> {
                 bits,
                 runs: opts.runs,
                 max_samples: opts.max_samples,
+                backend: opts.backend,
                 ..Default::default()
             };
             match accuracy_24h(&store, &vid, &e) {

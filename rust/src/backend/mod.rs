@@ -1,0 +1,227 @@
+//! Unified inference-execution API.
+//!
+//! The paper evaluates one deployed model on two engines — a calibrated
+//! simulator and real hardware. This repo mirrors that with two execution
+//! paths behind one trait:
+//!
+//! * [`NativeBackend`] — the pure-Rust simulator forward pass
+//!   (`simulator::NativeModel`). Always available; the default everywhere.
+//! * [`PjrtBackend`] — the AOT-exported HLO graphs executed via PJRT.
+//!   Compiled only with the `pjrt` cargo feature.
+//!
+//! `eval`, the serving `coordinator`, the CLI, examples, and benches all
+//! program weights onto the simulated PCM array, read them back (drifted,
+//! noisy), and hand the effective weights to `run_batch` — they never know
+//! which engine executes. Backends are selected by [`BackendKind`] and
+//! constructed with [`create`].
+
+mod native;
+#[cfg(feature = "pjrt")]
+mod pjrt;
+mod tensor;
+
+pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+pub use tensor::HostTensor;
+
+use crate::nn::ModelMeta;
+use crate::runtime::ArtifactStore;
+
+/// Batch sizes a [`NativeBackend`] offers when the artifact bundle exports
+/// no serving graphs (the native GEMM accepts any batch; these keep the
+/// dynamic batcher's padding small).
+pub const FALLBACK_BATCH_SIZES: &[usize] = &[1, 2, 4, 8, 16, 32, 64, 128];
+
+/// One inference engine executing a deployed model.
+///
+/// `x` is a `[batch, H, W, C]` row-major feature block, `weights[l]` the
+/// *effective* (possibly drifted) weight tensor of layer `l` in graph
+/// shape, and `gdc[l]` its global-drift-compensation scale. Returns the
+/// flattened `[batch, num_classes]` logits.
+pub trait InferenceBackend {
+    /// Short engine name ("native", "pjrt") for logs and tables.
+    fn name(&self) -> &'static str;
+
+    /// Metadata of the model this backend executes.
+    fn meta(&self) -> &ModelMeta;
+
+    /// ADC bitwidth the backend quantizes at (native) or was compiled for
+    /// (PJRT graph selection).
+    fn bits(&self) -> u32;
+
+    /// Batch sizes this backend can launch, ascending. For PJRT these are
+    /// the exported static graph shapes; the native simulator falls back to
+    /// [`FALLBACK_BATCH_SIZES`] when none are exported.
+    fn batch_sizes(&self) -> Vec<usize>;
+
+    /// Cheap liveness check: can this backend execute at all? PJRT verifies
+    /// the runtime/client can be created (catching a missing XLA native
+    /// library) *without* compiling any graph, so callers like
+    /// `Coordinator::start` can fail fast on the caller thread instead of
+    /// dying opaquely inside a worker. No-op for native.
+    fn probe(&self) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    /// Warm-up hook: compile/load whatever `run_batch(batch)` will need so
+    /// it never happens on the serving hot path. No-op for native.
+    fn prepare(&self, _batch: usize) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    /// Shared `run_batch` argument validation — one set of diagnostics for
+    /// every engine, instead of an opaque executor error deep inside.
+    fn validate_args(&self, x: &[f32], batch: usize, weights: &[HostTensor],
+                     gdc: &[f32]) -> anyhow::Result<()> {
+        let layers = self.meta().layers.len();
+        anyhow::ensure!(
+            weights.len() == layers,
+            "{} backend: {} weight tensors for {layers} layers",
+            self.name(),
+            weights.len()
+        );
+        anyhow::ensure!(
+            gdc.len() == layers,
+            "{} backend: {} gdc factors for {layers} layers",
+            self.name(),
+            gdc.len()
+        );
+        anyhow::ensure!(
+            x.len() == batch * self.feat_len(),
+            "{} backend: input length {} != batch {batch} x feat {}",
+            self.name(),
+            x.len(),
+            self.feat_len()
+        );
+        Ok(())
+    }
+
+    /// Execute one batch; see the trait docs for the argument contract.
+    /// Implementations call [`validate_args`](Self::validate_args) first.
+    fn run_batch(&self, x: &[f32], batch: usize, weights: &[HostTensor],
+                 gdc: &[f32]) -> anyhow::Result<Vec<f32>>;
+
+    /// Input feature dimensions (height, width, channels).
+    fn input_hwc(&self) -> (usize, usize, usize) {
+        self.meta().input_hwc
+    }
+
+    /// Flattened per-sample feature length.
+    fn feat_len(&self) -> usize {
+        let (h, w, c) = self.input_hwc();
+        h * w * c
+    }
+
+    fn num_classes(&self) -> usize {
+        self.meta().num_classes
+    }
+}
+
+/// Which execution engine to construct.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust simulator forward pass (always available).
+    #[default]
+    Native,
+    /// Compiled HLO graphs via PJRT (requires the `pjrt` cargo feature).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "native" | "sim" => Ok(BackendKind::Native),
+            "pjrt" | "xla" => Ok(BackendKind::Pjrt),
+            _ => anyhow::bail!("unknown backend `{s}` (expected native|pjrt)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    /// Parse the shared `--backend` CLI option (default `native`) — the one
+    /// helper behind the CLI, the examples, and the benches.
+    pub fn from_args(args: &crate::util::cli::Args) -> anyhow::Result<Self> {
+        Self::parse(&args.opt_or("backend", "native"))
+    }
+
+    /// Whether this binary can construct the backend at all.
+    pub fn available(&self) -> bool {
+        match self {
+            BackendKind::Native => true,
+            BackendKind::Pjrt => cfg!(feature = "pjrt"),
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        BackendKind::parse(s)
+    }
+}
+
+/// Construct the requested backend for `vid` against an opened artifact
+/// store. The returned trait object borrows the store (PJRT compiles its
+/// executables through the store's cache).
+pub fn create<'a>(kind: BackendKind, store: &'a ArtifactStore, vid: &str,
+                  bits: u32) -> anyhow::Result<Box<dyn InferenceBackend + 'a>> {
+    match kind {
+        BackendKind::Native => {
+            let meta = store.meta(vid)?;
+            let threads = std::thread::available_parallelism()
+                .map(|n| n.get().min(8))
+                .unwrap_or(1);
+            Ok(Box::new(NativeBackend::with_threads(meta, bits, threads)))
+        }
+        BackendKind::Pjrt => create_pjrt(store, vid, bits),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn create_pjrt<'a>(store: &'a ArtifactStore, vid: &str, bits: u32)
+                   -> anyhow::Result<Box<dyn InferenceBackend + 'a>> {
+    Ok(Box::new(pjrt::PjrtBackend::new(store, vid, bits)?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn create_pjrt<'a>(_store: &'a ArtifactStore, _vid: &str, _bits: u32)
+                   -> anyhow::Result<Box<dyn InferenceBackend + 'a>> {
+    anyhow::bail!(
+        "backend `pjrt` is not compiled in: rebuild with `--features pjrt` \
+         (and a real xla crate) to execute the exported HLO graphs; the \
+         `native` backend needs neither"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parses_and_prints() {
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert!(BackendKind::parse("tpu").is_err());
+        assert_eq!(BackendKind::Native.to_string(), "native");
+        assert_eq!(BackendKind::default(), BackendKind::Native);
+        assert!(BackendKind::Native.available());
+    }
+
+    #[test]
+    fn pjrt_availability_tracks_feature() {
+        assert_eq!(BackendKind::Pjrt.available(), cfg!(feature = "pjrt"));
+    }
+}

@@ -1,0 +1,148 @@
+//! The always-available execution engine: the pure-Rust simulator forward
+//! pass behind the [`InferenceBackend`] trait.
+
+use std::sync::Arc;
+
+use crate::backend::{HostTensor, InferenceBackend, FALLBACK_BATCH_SIZES};
+use crate::nn::ModelMeta;
+use crate::simulator::NativeModel;
+
+/// Executes the deployed model with `simulator::NativeModel` — im2col +
+/// GEMM + DAC/ADC fake quantization + GDC + digital affine, mirroring the
+/// exported HLO graph layer by layer. Needs no XLA library and no exported
+/// HLO artifacts, so it is the default backend everywhere.
+pub struct NativeBackend {
+    model: NativeModel,
+    bits: u32,
+}
+
+impl NativeBackend {
+    /// Single-threaded GEMM.
+    pub fn new(meta: impl Into<Arc<ModelMeta>>, bits: u32) -> Self {
+        Self::with_threads(meta, bits, 1)
+    }
+
+    /// GEMM parallelised over `threads` row chunks.
+    pub fn with_threads(meta: impl Into<Arc<ModelMeta>>, bits: u32,
+                        threads: usize) -> Self {
+        NativeBackend {
+            model: NativeModel::with_threads(meta, threads),
+            bits,
+        }
+    }
+}
+
+impl InferenceBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn meta(&self) -> &ModelMeta {
+        self.model.meta()
+    }
+
+    fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Prefer the exported serving-graph batch sizes (so native and PJRT
+    /// behave identically under the batcher). Only a bundle that exports
+    /// *no* serving graphs at all falls back to powers of two — the native
+    /// GEMM has no static-shape constraint. A bundle that has graphs, just
+    /// none at this bitwidth, deliberately returns empty so serving at a
+    /// wrong `--bits` still fails fast instead of silently quantizing at a
+    /// bitwidth the model was never exported for.
+    fn batch_sizes(&self) -> Vec<usize> {
+        let meta = self.meta();
+        if meta.hlo.is_empty() {
+            return FALLBACK_BATCH_SIZES.to_vec();
+        }
+        meta.serving_batch_sizes(self.bits)
+    }
+
+    fn run_batch(&self, x: &[f32], batch: usize, weights: &[HostTensor],
+                 gdc: &[f32]) -> anyhow::Result<Vec<f32>> {
+        self.validate_args(x, batch, weights, gdc)?;
+        let meta = self.meta();
+        for (t, lm) in weights.iter().zip(meta.layers.iter()) {
+            let want: usize = lm.graph_weight_shape.iter().product();
+            anyhow::ensure!(
+                t.numel() == want,
+                "native backend: layer {} weight has {} elements, graph \
+                 shape {:?} needs {want}",
+                lm.name,
+                t.numel(),
+                lm.graph_weight_shape
+            );
+        }
+        Ok(self.model.forward(x, batch, weights, gdc, self.bits))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn tiny_meta() -> ModelMeta {
+        let src = r#"{
+          "model": "tiny", "variant": "t", "input_hwc": [1, 1, 4],
+          "num_classes": 2, "eta": 0.0, "fp_test_acc": 1.0,
+          "trained_adc_bits": null,
+          "layers": [{"name": "fc", "kind": "dense", "in_ch": 4, "out_ch": 2,
+            "stride": [1,1], "relu": false, "analog": true,
+            "in_h": 1, "in_w": 1, "out_h": 1, "out_w": 1,
+            "k_gemm": 4, "weight_shape": [4, 2], "graph_weight_shape": [4, 2],
+            "w_scale": 1.0, "w_max": 1.0, "r_dac": 8.0, "r_adc": 8.0,
+            "dig_scale": [1, 1], "dig_bias": [0, 0]}],
+          "hlo": {}
+        }"#;
+        ModelMeta::from_json(&json::parse(src).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn runs_a_batch_and_validates_inputs() {
+        let be = NativeBackend::new(tiny_meta(), 8);
+        assert_eq!(be.name(), "native");
+        assert_eq!(be.bits(), 8);
+        assert_eq!(be.feat_len(), 4);
+        assert_eq!(be.num_classes(), 2);
+        assert!(be.prepare(2).is_ok());
+
+        // identity-ish dense weights: class 0 sums ch0+ch1, class 1 ch2+ch3
+        let w = HostTensor::new(
+            vec![4, 2],
+            vec![1.0, 0.0, 1.0, 0.0, 0.0, 1.0, 0.0, 1.0],
+        );
+        let x = vec![0.9, 0.8, 0.1, 0.0, /* sample 2 */ 0.0, 0.1, 0.7, 0.9];
+        let logits = be.run_batch(&x, 2, &[w.clone()], &[1.0]).unwrap();
+        assert_eq!(logits.len(), 4);
+        assert!(logits[0] > logits[1], "{logits:?}");
+        assert!(logits[3] > logits[2], "{logits:?}");
+
+        // wrong weight count / gdc length / input length all refuse
+        assert!(be.run_batch(&x, 2, &[], &[1.0]).is_err());
+        assert!(be.run_batch(&x, 2, &[w.clone()], &[]).is_err());
+        assert!(be.run_batch(&x[..4], 2, &[w], &[1.0]).is_err());
+    }
+
+    #[test]
+    fn fallback_batch_sizes_when_no_graphs() {
+        let be = NativeBackend::new(tiny_meta(), 8);
+        let sizes = be.batch_sizes();
+        assert_eq!(sizes, FALLBACK_BATCH_SIZES.to_vec());
+    }
+
+    #[test]
+    fn no_fallback_when_graphs_exist_at_other_bits() {
+        // a bundle that exports graphs — just not at this bitwidth — must
+        // NOT fall back: serving at a wrong --bits should fail fast
+        let mut meta = tiny_meta();
+        meta.hlo
+            .insert("8b_b32".to_string(), "t_8b_b32.hlo.txt".to_string());
+        let be8 = NativeBackend::new(meta.clone(), 8);
+        assert_eq!(be8.batch_sizes(), vec![32]);
+        let be4 = NativeBackend::new(meta, 4);
+        assert!(be4.batch_sizes().is_empty());
+    }
+}

@@ -1,0 +1,75 @@
+//! PJRT execution engine: the AOT-exported HLO serving graphs behind the
+//! [`InferenceBackend`] trait. Only compiled with the `pjrt` cargo feature;
+//! this is the single module outside `runtime` allowed to touch the PJRT
+//! executor (and even here only through `runtime`'s wrappers — no `xla`
+//! types appear).
+
+use std::sync::Arc;
+
+use crate::backend::{HostTensor, InferenceBackend};
+use crate::nn::ModelMeta;
+use crate::runtime::ArtifactStore;
+
+/// Executes the exported HLO graphs through the artifact store's compiled-
+/// executable cache. Each batch size is a separate static-shaped graph;
+/// [`prepare`](InferenceBackend::prepare) compiles them off the hot path.
+pub struct PjrtBackend<'a> {
+    store: &'a ArtifactStore,
+    vid: String,
+    bits: u32,
+    meta: Arc<ModelMeta>,
+}
+
+impl<'a> PjrtBackend<'a> {
+    pub fn new(store: &'a ArtifactStore, vid: &str, bits: u32)
+               -> anyhow::Result<Self> {
+        let meta = store.meta(vid)?;
+        Ok(PjrtBackend {
+            store,
+            vid: vid.to_string(),
+            bits,
+            meta,
+        })
+    }
+}
+
+impl InferenceBackend for PjrtBackend<'_> {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Only the exported static graph shapes can launch.
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.meta.serving_batch_sizes(self.bits)
+    }
+
+    /// Creating the PJRT client is where a missing XLA native library (or
+    /// the vendored API stub) surfaces; no graph compilation happens here.
+    fn probe(&self) -> anyhow::Result<()> {
+        self.store.runtime().map(|_| ())
+    }
+
+    fn prepare(&self, batch: usize) -> anyhow::Result<()> {
+        self.store.executable(&self.vid, self.bits, batch).map(|_| ())
+    }
+
+    fn run_batch(&self, x: &[f32], batch: usize, weights: &[HostTensor],
+                 gdc: &[f32]) -> anyhow::Result<Vec<f32>> {
+        self.validate_args(x, batch, weights, gdc)?;
+        let (ih, iw, ic) = self.meta.input_hwc;
+        let exe = self.store.executable(&self.vid, self.bits, batch)?;
+        let mut inputs = Vec::with_capacity(2 + weights.len());
+        inputs.push(HostTensor::new(vec![batch, ih, iw, ic], x.to_vec()));
+        inputs.extend_from_slice(weights);
+        inputs.push(HostTensor::new(vec![gdc.len()], gdc.to_vec()));
+        exe.run(&inputs)
+    }
+}

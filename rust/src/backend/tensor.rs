@@ -1,0 +1,65 @@
+//! Backend-neutral host tensor: the interchange type every
+//! [`InferenceBackend`](crate::backend::InferenceBackend) consumes.
+//!
+//! Lived in `runtime` while execution was PJRT-only; it is deliberately
+//! free of `xla` types so `eval`, `coordinator`, and the native simulator
+//! share it without pulling in the XLA toolchain.
+
+/// A host-side tensor: row-major f32 data plus its shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    /// Panics if `shape` does not describe exactly `data.len()` elements.
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape, data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Copy a loaded weight tensor into host-tensor form.
+    pub fn from_tensor(t: &crate::nn::Tensor) -> Self {
+        HostTensor::new(t.shape.clone(), t.data.clone())
+    }
+}
+
+impl AsRef<[f32]> for HostTensor {
+    fn as_ref(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_validates_shape() {
+        let t = HostTensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape, vec![2, 3]);
+        assert_eq!(t.numel(), 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn host_tensor_rejects_bad_shape() {
+        HostTensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn from_tensor_copies() {
+        let t = crate::nn::Tensor {
+            shape: vec![2, 2],
+            data: vec![1.0, 2.0, 3.0, 4.0],
+        };
+        let h = HostTensor::from_tensor(&t);
+        assert_eq!(h.shape, t.shape);
+        assert_eq!(h.as_ref(), &t.data[..]);
+    }
+}

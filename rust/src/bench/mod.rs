@@ -63,11 +63,15 @@ pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
     }
 }
 
-/// Shared bench CLI knobs (`--runs`, `--samples`, `--fast`).
+/// Shared bench CLI knobs (`--runs`, `--samples`, `--fast`, `--backend`).
 pub struct BenchOpts {
     pub runs: usize,
     pub max_samples: usize,
     pub fast: bool,
+    /// execution engine for eval-driven benches (default native; pass
+    /// `--backend pjrt` with a `--features pjrt` build to reproduce the
+    /// figures over the exported HLO graphs)
+    pub backend: crate::backend::BackendKind,
 }
 
 impl BenchOpts {
@@ -80,6 +84,8 @@ impl BenchOpts {
             runs: a.opt_usize("runs", if fast { 2 } else { 3 }),
             max_samples: a.opt_usize("samples", if fast { 128 } else { 256 }),
             fast,
+            backend: crate::backend::BackendKind::from_args(&a)
+                .expect("--backend native|pjrt"),
         }
     }
 }

@@ -1,11 +1,17 @@
-//! The serving loop: request intake -> dynamic batcher -> PJRT executor,
+//! The serving loop: request intake -> dynamic batcher -> backend executor,
 //! with PCM drift management in the background of every dispatch.
+//!
+//! The executor is any [`InferenceBackend`] — the native simulator by
+//! default (hermetic: no XLA, no exported HLO), or the compiled PJRT
+//! graphs when built with the `pjrt` feature and configured via
+//! [`ServeConfig::backend`].
 
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::backend::{self, BackendKind, InferenceBackend};
 use crate::coordinator::batcher;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::state::PcmState;
@@ -13,8 +19,9 @@ use crate::crossbar::ArrayGeom;
 use crate::eval::DeployedModel;
 use crate::mapping::map_model;
 use crate::pcm::PcmParams;
-use crate::runtime::{ArtifactStore, HostTensor};
+use crate::runtime::ArtifactStore;
 use crate::timing::{model_perf, EnergyModel};
+use crate::util::logits;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -22,6 +29,8 @@ pub struct ServeConfig {
     /// artifact variant to serve, e.g. "kws_full_e10_8b"
     pub vid: String,
     pub bits: u32,
+    /// which execution engine serves the traffic
+    pub backend: BackendKind,
     /// batcher window: how long to wait for more requests after the first
     pub max_wait: Duration,
     /// simulated seconds per wall second (drift clock acceleration)
@@ -39,6 +48,7 @@ impl ServeConfig {
         ServeConfig {
             vid: vid.to_string(),
             bits,
+            backend: BackendKind::default(),
             max_wait: Duration::from_millis(2),
             time_scale: 1.0,
             seed: 7,
@@ -46,6 +56,12 @@ impl ServeConfig {
             reprogram: false,
             artifacts_dir: crate::nn::manifest::artifacts_dir(),
         }
+    }
+
+    /// Builder-style backend selection.
+    pub fn with_backend(mut self, backend: BackendKind) -> Self {
+        self.backend = backend;
+        self
     }
 }
 
@@ -79,14 +95,29 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start the worker thread (it owns the PJRT client and the PCM state).
+    /// Start the worker thread (it owns the backend and the PCM state).
     pub fn start(cfg: ServeConfig) -> anyhow::Result<Coordinator> {
         let (tx, rx) = mpsc::channel::<Msg>();
         let metrics = Arc::new(Metrics::default());
         let m2 = metrics.clone();
-        // probe the artifacts on the caller thread for early errors + shape
+        // probe the artifacts AND the backend on the caller thread, so a
+        // missing variant, an uncompiled `pjrt` feature, a missing XLA
+        // library, or a bitwidth with no serving graphs all fail fast here
+        // with their real error instead of dying inside the worker (where
+        // clients would only ever see "coordinator stopped")
         let store = ArtifactStore::open(&cfg.artifacts_dir)?;
         let meta = store.meta(&cfg.vid)?;
+        {
+            let be = backend::create(cfg.backend, &store, &cfg.vid, cfg.bits)?;
+            be.probe()?;
+            anyhow::ensure!(
+                !be.batch_sizes().is_empty(),
+                "variant {} has no {}b serving graphs for backend `{}`",
+                cfg.vid,
+                cfg.bits,
+                be.name()
+            );
+        }
         let (ih, iw, ic) = meta.input_hwc;
         let classes = meta.num_classes;
         let feat_len = ih * iw * ic;
@@ -145,29 +176,32 @@ impl Drop for Coordinator {
 
 fn worker(cfg: ServeConfig, rx: mpsc::Receiver<Msg>, metrics: Arc<Metrics>)
           -> anyhow::Result<()> {
-    // the worker owns its own PJRT client (the xla handles stay on-thread)
+    // the worker owns the artifact store and the backend (PJRT handles,
+    // when in play, stay on-thread)
     let store = ArtifactStore::open(&cfg.artifacts_dir)?;
-    let meta = store.meta(&cfg.vid)?;
-    let (ih, iw, ic) = meta.input_hwc;
-    let feat_len = ih * iw * ic;
-    let classes = meta.num_classes;
+    let be = backend::create(cfg.backend, &store, &cfg.vid, cfg.bits)?;
+    // model geometry is invariant across launches: resolve it once here,
+    // never on the dispatch path
+    let feat_len = be.feat_len();
+    let classes = be.num_classes();
 
-    // serving graphs available at this bitwidth, smallest first
-    let mut batch_sizes: Vec<usize> = meta
-        .hlo_keys()
-        .into_iter()
-        .filter(|(b, _)| *b == cfg.bits)
-        .map(|(_, n)| n)
-        .collect();
-    batch_sizes.sort_unstable();
-    anyhow::ensure!(!batch_sizes.is_empty(),
-                    "variant {} has no {}b serving graphs", cfg.vid, cfg.bits);
-    // compile every batch size up front (never on the hot path)
+    // serving batch sizes available at this bitwidth (ascending, per the
+    // trait contract). Coordinator::start already rejected an empty set
+    // with a descriptive error; this only guards against the artifact
+    // bundle changing on disk between the probe and the worker's re-open.
+    let batch_sizes = be.batch_sizes();
+    anyhow::ensure!(
+        !batch_sizes.is_empty(),
+        "serving graphs for {} disappeared between probe and worker start",
+        cfg.vid
+    );
+    // compile/load every batch size up front (never on the hot path)
     for &b in &batch_sizes {
-        store.executable(&cfg.vid, cfg.bits, b)?;
+        be.prepare(b)?;
     }
 
     // simulated accelerator energy per inference (timing model, Table 2 row)
+    let meta = store.meta(&cfg.vid)?;
     let mapping = map_model(&meta, ArrayGeom::AON)?;
     let perf = model_perf(&mapping, cfg.bits, &EnergyModel::default());
     let nj_per_inf = perf.energy_nj;
@@ -179,10 +213,10 @@ fn worker(cfg: ServeConfig, rx: mpsc::Receiver<Msg>, metrics: Arc<Metrics>)
     let mut state = PcmState::new(deployed, params, cfg.seed ^ 0xD1F7, cfg.time_scale);
     state.refresh_every_s = cfg.refresh_every_s;
 
-    let max_queue = *batch_sizes.last().unwrap() * 4;
+    let max_batch = *batch_sizes.last().unwrap();
+    let max_queue = max_batch * 4;
     let mut queue: Vec<Request> = Vec::with_capacity(max_queue);
     // reusable input buffer (largest batch) — no allocation on the hot path
-    let max_batch = *batch_sizes.last().unwrap();
     let mut xbuf = vec![0f32; max_batch * feat_len];
 
     loop {
@@ -201,7 +235,7 @@ fn worker(cfg: ServeConfig, rx: mpsc::Receiver<Msg>, metrics: Arc<Metrics>)
             match rx.recv_timeout(deadline - now) {
                 Ok(Msg::Req(r)) => queue.push(r),
                 Ok(Msg::Stop) => {
-                    drain(&store, &cfg, &mut state, &mut queue, &metrics,
+                    drain(be.as_ref(), &mut state, &mut queue, &metrics,
                           &batch_sizes, &mut xbuf, feat_len, classes,
                           nj_per_inf)?;
                     return Ok(());
@@ -210,7 +244,7 @@ fn worker(cfg: ServeConfig, rx: mpsc::Receiver<Msg>, metrics: Arc<Metrics>)
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
         }
-        drain(&store, &cfg, &mut state, &mut queue, &metrics, &batch_sizes,
+        drain(be.as_ref(), &mut state, &mut queue, &metrics, &batch_sizes,
               &mut xbuf, feat_len, classes, nj_per_inf)?;
 
         // drift management between dispatches
@@ -222,7 +256,7 @@ fn worker(cfg: ServeConfig, rx: mpsc::Receiver<Msg>, metrics: Arc<Metrics>)
 }
 
 #[allow(clippy::too_many_arguments)]
-fn drain(store: &ArtifactStore, cfg: &ServeConfig, state: &mut PcmState,
+fn drain(be: &dyn InferenceBackend, state: &mut PcmState,
          queue: &mut Vec<Request>, metrics: &Metrics, batch_sizes: &[usize],
          xbuf: &mut [f32], feat_len: usize, classes: usize,
          nj_per_inf: f64) -> anyhow::Result<()> {
@@ -234,20 +268,18 @@ fn drain(store: &ArtifactStore, cfg: &ServeConfig, state: &mut PcmState,
         .padded_slots
         .fetch_add(plan.padding as u64, Ordering::Relaxed);
 
+    let sim_age = state.sim_age_s();
+    // borrow the cached effective weights directly — no per-drain clone of
+    // the full weight set (the PJRT path copies inside run_batch, the
+    // native path reads the slices in place)
     let (ws, alphas, refreshed) = state.current_weights();
-    let ws = ws.clone();
-    let alphas = alphas.clone();
     if refreshed {
         metrics.weight_refreshes.fetch_add(1, Ordering::Relaxed);
     }
-    let sim_age = state.sim_age_s();
 
     let mut taken = 0usize;
     for &launch in &plan.launches {
         let count = launch.min(queue.len() - taken);
-        let exe = store.executable(&cfg.vid, cfg.bits, launch)?;
-        let meta = store.meta(&cfg.vid)?;
-        let (ih, iw, ic) = meta.input_hwc;
 
         let xb = &mut xbuf[..launch * feat_len];
         for (i, r) in queue[taken..taken + count].iter().enumerate() {
@@ -259,22 +291,13 @@ fn drain(store: &ArtifactStore, cfg: &ServeConfig, state: &mut PcmState,
             b[..feat_len].copy_from_slice(&a[..feat_len]);
         }
 
-        let mut inputs = Vec::with_capacity(2 + ws.len());
-        inputs.push(HostTensor::new(vec![launch, ih, iw, ic], xb.to_vec()));
-        inputs.extend(ws.iter().cloned());
-        inputs.push(HostTensor::new(vec![alphas.len()], alphas.clone()));
-        let logits = exe.run(&inputs)?;
+        let out = be.run_batch(xb, launch, ws, alphas)?;
         metrics.launches.fetch_add(1, Ordering::Relaxed);
 
         let now = Instant::now();
         for (i, r) in queue[taken..taken + count].iter().enumerate() {
-            let row = &logits[i * classes..(i + 1) * classes];
-            let pred = row
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.total_cmp(b.1))
-                .map(|(c, _)| c as u32)
-                .unwrap();
+            let row = &out[i * classes..(i + 1) * classes];
+            let pred = logits::argmax(row);
             // account BEFORE replying: clients must observe settled metrics
             metrics.completed.fetch_add(1, Ordering::Relaxed);
             metrics.record_latency_us((now - r.submitted).as_secs_f64() * 1e6);

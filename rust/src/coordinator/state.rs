@@ -3,9 +3,9 @@
 
 use std::time::Instant;
 
+use crate::backend::HostTensor;
 use crate::eval::{DeployedLayer, DeployedModel};
 use crate::pcm::{gdc, PcmParams};
-use crate::runtime::HostTensor;
 use crate::util::rng::Rng;
 
 /// Live PCM state behind the serving loop.

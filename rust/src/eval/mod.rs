@@ -3,13 +3,18 @@
 //! Per run: program the variant's weights into simulated PCM (programming
 //! noise + per-device drift exponents), then for each requested time point
 //! read the conductances (drift + 1/f noise), compute the per-layer GDC
-//! factors, and execute the exported HLO graph over the test set.
+//! factors, and execute the test set through an [`InferenceBackend`] —
+//! the native simulator by default, or the exported HLO graphs via PJRT
+//! ([`EvalOpts::backend`]). The physics is identical either way; only the
+//! execution engine changes.
 
 use std::sync::Arc;
 
+use crate::backend::{self, BackendKind, HostTensor, InferenceBackend};
 use crate::nn::{expand_dw_dense, LayerKind, ModelMeta, Tensor};
 use crate::pcm::{gdc, PcmParams, ProgrammedWeights};
-use crate::runtime::{ArtifactStore, HostTensor};
+use crate::runtime::ArtifactStore;
+use crate::util::logits;
 use crate::util::rng::Rng;
 
 /// One layer's deployed state: PCM-programmed (analog) or exact (digital).
@@ -57,22 +62,18 @@ impl DeployedModel {
                    use_gdc: bool) -> (Vec<HostTensor>, Vec<f32>) {
         let mut ws = Vec::with_capacity(self.layers.len());
         let mut alphas = Vec::with_capacity(self.layers.len());
-        for (lm, dl) in self.meta.layers.iter().zip(self.layers.iter()) {
+        for dl in self.layers.iter() {
             match dl {
                 DeployedLayer::Analog(p) => {
                     let w = p.read_weights(t_seconds, params, rng);
-                    ws.push(HostTensor::new(
-                        vec![p.rows, p.cols],
-                        w,
-                    ));
+                    ws.push(HostTensor::new(vec![p.rows, p.cols], w));
                     alphas.push(if use_gdc { gdc::alpha(p, t_seconds) } else { 1.0 });
                 }
                 DeployedLayer::Digital(t) => {
-                    ws.push(HostTensor::new(t.shape.clone(), t.data.clone()));
+                    ws.push(HostTensor::from_tensor(t));
                     alphas.push(1.0);
                 }
             }
-            let _ = lm;
         }
         (ws, alphas)
     }
@@ -90,6 +91,8 @@ pub struct EvalOpts {
     pub seed: u64,
     pub use_gdc: bool,
     pub params: PcmParams,
+    /// which execution engine runs the test set
+    pub backend: BackendKind,
 }
 
 impl Default for EvalOpts {
@@ -102,20 +105,34 @@ impl Default for EvalOpts {
             seed: 0xA11A,
             use_gdc: true,
             params: PcmParams::default(),
+            backend: BackendKind::default(),
         }
     }
 }
 
 /// Accuracy of `vid` at each `times[i]` seconds, for `opts.runs` independent
-/// programming runs. Returns `accs[time_idx][run_idx]` in [0, 1].
+/// programming runs, on the backend selected by `opts.backend`. Returns
+/// `accs[time_idx][run_idx]` in [0, 1].
 pub fn drift_accuracy(store: &ArtifactStore, vid: &str, times: &[f64],
                       opts: &EvalOpts) -> anyhow::Result<Vec<Vec<f64>>> {
+    let be = backend::create(opts.backend, store, vid, opts.bits)?;
+    drift_accuracy_on(be.as_ref(), store, vid, times, opts)
+}
+
+/// Like [`drift_accuracy`], over a caller-constructed backend — the
+/// extension hook for custom engines (anything implementing
+/// [`InferenceBackend`]) and for pinning the engine explicitly in tests.
+pub fn drift_accuracy_on(be: &dyn InferenceBackend, store: &ArtifactStore,
+                         vid: &str, times: &[f64], opts: &EvalOpts)
+                         -> anyhow::Result<Vec<Vec<f64>>> {
     let meta = store.meta(vid)?;
     let task = if meta.model.contains("vww") { "vww" } else { "kws" };
     let ds = store.dataset(task)?;
     let n = ds.len().min(opts.max_samples);
-    let exe = store.executable(vid, opts.bits, opts.batch)?;
+    anyhow::ensure!(n > 0, "dataset for {task} is empty");
+    be.prepare(opts.batch)?;
     let classes = meta.num_classes;
+    let (ih, iw, ic) = meta.input_hwc;
 
     let mut out = vec![Vec::with_capacity(opts.runs); times.len()];
     for run in 0..opts.runs {
@@ -127,24 +144,10 @@ pub fn drift_accuracy(store: &ArtifactStore, vid: &str, times: &[f64],
             let mut lo = 0usize;
             while lo < n {
                 let xb = ds.padded_batch(lo, opts.batch);
-                let (ih, iw, ic) = meta.input_hwc;
-                let mut inputs = Vec::with_capacity(2 + ws.len());
-                inputs.push(HostTensor::new(vec![opts.batch, ih, iw, ic], xb));
-                inputs.extend(ws.iter().cloned());
-                inputs.push(HostTensor::new(vec![alphas.len()], alphas.clone()));
-                let logits = exe.run(&inputs)?;
+                debug_assert_eq!(xb.len(), opts.batch * ih * iw * ic);
+                let preds = be.run_batch(&xb, opts.batch, &ws, &alphas)?;
                 let hi = (lo + opts.batch).min(n);
-                for (i, row) in logits.chunks_exact(classes).enumerate().take(hi - lo) {
-                    let pred = row
-                        .iter()
-                        .enumerate()
-                        .max_by(|a, b| a.1.total_cmp(b.1))
-                        .map(|(c, _)| c as u32)
-                        .unwrap();
-                    if pred == ds.y[lo + i] {
-                        correct += 1;
-                    }
-                }
+                correct += logits::count_correct(&preds, classes, &ds.y[lo..hi]);
                 lo = hi;
             }
             out[ti].push(correct as f64 / n as f64);

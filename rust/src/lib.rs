@@ -6,8 +6,30 @@
 //!   AOT-lowered to the HLO artifacts this crate loads;
 //! * L3 (this crate): the AON-CiM accelerator model — PCM device physics,
 //!   layer mapper, cycle/energy model — and the always-on serving
-//!   coordinator executing the exported graphs via PJRT.
+//!   coordinator.
+//!
+//! # Execution backends
+//!
+//! All inference flows through one trait, [`backend::InferenceBackend`]:
+//!
+//! ```text
+//!   eval / coordinator / CLI / benches
+//!            |
+//!            v  run_batch(x, batch, effective_weights, gdc)
+//!   +-------------------+---------------------------------+
+//!   | NativeBackend     | PjrtBackend  (feature = "pjrt") |
+//!   | pure-Rust im2col/ | AOT-exported HLO graphs via the |
+//!   | GEMM simulator    | xla crate / PJRT CPU client     |
+//!   +-------------------+---------------------------------+
+//! ```
+//!
+//! The native backend is the default and needs neither the XLA native
+//! library nor generated HLO artifacts, so `cargo build && cargo test`
+//! are hermetic. Select engines with [`backend::BackendKind`]
+//! (`EvalOpts::backend`, `ServeConfig::backend`, `--backend` on the CLI).
+//! `xla` types never escape the `runtime` module.
 
+pub mod backend;
 pub mod bench;
 pub mod coordinator;
 pub mod crossbar;

@@ -7,6 +7,7 @@
 //!   report   accelerator performance summary (Table 2 style)
 //!   selftest sanity-check the artifact bundle end to end
 
+use analognets::backend::BackendKind;
 use analognets::coordinator::{Coordinator, ServeConfig};
 use analognets::crossbar::ArrayGeom;
 use analognets::eval::{drift_accuracy, EvalOpts};
@@ -24,7 +25,9 @@ const USAGE: &str = "usage: analognets <serve|eval|map|report|selftest> [options
   map      --vid kws_full_e10_8b [--rows 1024 --cols 512] [--split]
   report   --vid kws_full_e10_8b [--bits 8]
   selftest
-options: --artifacts <dir> (or env ANALOGNETS_ARTIFACTS)";
+options: --artifacts <dir> (or env ANALOGNETS_ARTIFACTS)
+         --backend native|pjrt (serve/eval/selftest; default native — pjrt
+                                needs a build with `--features pjrt`)";
 
 fn main() {
     let args = Args::from_env();
@@ -58,6 +61,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let bits = args.opt_usize("bits", 8) as u32;
     let n_requests = args.opt_usize("requests", 500);
     let mut cfg = ServeConfig::new(&vid, bits);
+    cfg.backend = BackendKind::from_args(args)?;
     cfg.time_scale = args.opt_f64("time-scale", 1e4);
     let store = ArtifactStore::open_default()?;
     let meta = store.meta(&vid)?;
@@ -65,8 +69,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let ds = store.dataset(task)?;
     drop(store);
 
-    println!("[serve] starting coordinator for {vid} ({bits}-bit), \
-              time scale {}x", cfg.time_scale);
+    println!("[serve] starting coordinator for {vid} ({bits}-bit) on the \
+              `{}` backend, time scale {}x", cfg.backend, cfg.time_scale);
     let coord = Coordinator::start(cfg)?;
     let feat = ds.feat_len();
     let mut correct = 0usize;
@@ -94,11 +98,14 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
         bits,
         runs: args.opt_usize("runs", 5),
         max_samples: args.opt_usize("samples", 256),
+        backend: BackendKind::from_args(args)?,
         ..Default::default()
     };
     let times: Vec<f64> = FIG7_TIMES.iter().map(|(_, t)| *t).collect();
-    println!("[eval] {vid} at {bits}-bit, {} runs x {} samples (fp ref {:.2}%)",
-             opts.runs, opts.max_samples, 100.0 * meta.fp_test_acc);
+    println!("[eval] {vid} at {bits}-bit on `{}`, {} runs x {} samples \
+              (fp ref {:.2}%)",
+             opts.backend, opts.runs, opts.max_samples,
+             100.0 * meta.fp_test_acc);
     let accs = drift_accuracy(&store, &vid, &times, &opts)?;
     let mut t = Table::new(&format!("drift accuracy: {vid}"),
                            &["time", "acc mean %", "acc std %"]);
@@ -161,9 +168,10 @@ fn cmd_report(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_selftest(_args: &Args) -> anyhow::Result<()> {
+fn cmd_selftest(args: &Args) -> anyhow::Result<()> {
     let store = ArtifactStore::open_default()?;
-    println!("platform: {}", store.runtime.platform());
+    println!("backends: native{}",
+             if BackendKind::Pjrt.available() { ", pjrt" } else { "" });
     println!("variants: {}", store.manifest.variants.len());
     for e in &store.manifest.variants {
         let meta = store.meta(&e.vid)?;
@@ -177,10 +185,13 @@ fn cmd_selftest(_args: &Args) -> anyhow::Result<()> {
     if let Some(e) = store.manifest.variants.first() {
         let meta = store.meta(&e.vid)?;
         let bits = meta.trained_adc_bits.unwrap_or(8);
+        let backend = BackendKind::from_args(args)?;
         let accs = drift_accuracy(
             &store, &e.vid, &[25.0],
-            &EvalOpts { bits, runs: 1, max_samples: 64, ..Default::default() })?;
-        println!("selftest eval {} @25s: {:.2}%", e.vid, 100.0 * accs[0][0]);
+            &EvalOpts { bits, runs: 1, max_samples: 64, backend,
+                        ..Default::default() })?;
+        println!("selftest eval {} @25s on `{backend}`: {:.2}%",
+                 e.vid, 100.0 * accs[0][0]);
     }
     println!("selftest OK");
     Ok(())

@@ -187,6 +187,20 @@ impl ModelMeta {
             })
             .collect()
     }
+
+    /// Exported serving-graph batch sizes at `bits`, ascending and deduped —
+    /// the shared source of truth for every backend's `batch_sizes()`.
+    pub fn serving_batch_sizes(&self, bits: u32) -> Vec<usize> {
+        let mut sizes: Vec<usize> = self
+            .hlo_keys()
+            .into_iter()
+            .filter(|(b, _)| *b == bits)
+            .map(|(_, n)| n)
+            .collect();
+        sizes.sort_unstable();
+        sizes.dedup();
+        sizes
+    }
 }
 
 #[cfg(test)]
@@ -217,5 +231,7 @@ mod tests {
         assert_eq!(m.hlo_for(8, 256), Some("m_8b_b256.hlo.txt"));
         assert_eq!(m.hlo_for(6, 256), None);
         assert_eq!(m.hlo_keys(), vec![(8, 256)]);
+        assert_eq!(m.serving_batch_sizes(8), vec![256]);
+        assert!(m.serving_batch_sizes(6).is_empty());
     }
 }

@@ -1,131 +1,123 @@
-//! PJRT runtime: load AOT-compiled HLO text, compile once, execute many.
+//! Artifact loading and (optionally) PJRT execution.
 //!
-//! Wraps the `xla` crate (xla_extension 0.5.1 / PJRT CPU).  The interchange
-//! format is HLO *text* — see DESIGN.md section 7 and
-//! /opt/xla-example/README.md for why serialized protos are rejected.
+//! [`ArtifactStore`] — manifest-driven discovery of exported metadata,
+//! weights, and datasets — is always available and is all the `native`
+//! backend needs. The PJRT pieces ([`Runtime`], [`Executable`], and
+//! `ArtifactStore::executable`) wrap the `xla` crate (xla_extension 0.5.1 /
+//! PJRT CPU) and exist only with the `pjrt` cargo feature; this module is
+//! the one place in the crate where `xla` types appear. The interchange
+//! format is HLO *text* — see DESIGN.md section 7 for why serialized protos
+//! are rejected.
 
 pub mod store;
 
 pub use store::ArtifactStore;
 
-use std::path::Path;
+// Backend-neutral since the InferenceBackend redesign; re-exported here for
+// continuity with older call sites.
+pub use crate::backend::HostTensor;
 
-/// A host-side tensor to feed the executable.
-#[derive(Clone, Debug)]
-pub struct HostTensor {
-    pub shape: Vec<usize>,
-    pub data: Vec<f32>,
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt_exec::{Executable, Runtime};
 
-impl HostTensor {
-    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
-        assert_eq!(shape.iter().product::<usize>(), data.len());
-        HostTensor { shape, data }
+#[cfg(feature = "pjrt")]
+mod pjrt_exec {
+    use std::path::Path;
+
+    use crate::backend::HostTensor;
+
+    fn to_literal(t: &HostTensor) -> anyhow::Result<xla::Literal> {
+        let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&t.data).reshape(&dims)?)
     }
 
-    fn to_literal(&self) -> anyhow::Result<xla::Literal> {
-        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
-    }
-}
-
-/// The PJRT client (CPU).
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-impl Runtime {
-    pub fn cpu() -> anyhow::Result<Self> {
-        Ok(Runtime {
-            client: xla::PjRtClient::cpu()?,
-        })
+    /// The PJRT client (CPU).
+    pub struct Runtime {
+        client: xla::PjRtClient,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load HLO text and compile to an executable.
-    pub fn load_hlo(&self, path: &Path) -> anyhow::Result<Executable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str()
-                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        Ok(Executable {
-            exe,
-            name: path.file_name().unwrap().to_string_lossy().into_owned(),
-        })
-    }
-}
-
-/// One compiled inference graph.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
-
-impl Executable {
-    /// Execute with f32 host tensors; the exported graphs return a 1-tuple
-    /// whose element is the logits tensor (flattened on return).
-    pub fn run(&self, inputs: &[HostTensor]) -> anyhow::Result<Vec<f32>> {
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<anyhow::Result<_>>()?;
-        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn demo_path() -> Option<std::path::PathBuf> {
-        let p = crate::nn::manifest::artifacts_dir().join("cim_mvm.hlo.txt");
-        p.exists().then_some(p)
-    }
-
-    #[test]
-    fn host_tensor_validates_shape() {
-        let t = HostTensor::new(vec![2, 3], vec![0.0; 6]);
-        assert_eq!(t.shape, vec![2, 3]);
-    }
-
-    #[test]
-    #[should_panic]
-    fn host_tensor_rejects_bad_shape() {
-        HostTensor::new(vec![2, 3], vec![0.0; 5]);
-    }
-
-    #[test]
-    fn cim_mvm_artifact_roundtrip() {
-        // needs `make artifacts`; skip silently when absent so unit tests
-        // stay hermetic (the integration suite requires it)
-        let Some(path) = demo_path() else { return };
-        let rt = Runtime::cpu().unwrap();
-        let exe = rt.load_hlo(&path).unwrap();
-        // graph: x[256,432] @ w[432,128], r_dac=1, r_adc=8, 9/8 bits
-        let m = 256;
-        let k = 432;
-        let n = 128;
-        let x = HostTensor::new(vec![m, k], vec![0.5f32; m * k]);
-        let mut wdat = vec![0f32; k * n];
-        for j in 0..n {
-            wdat[j] = 1.0 / k as f32; // first input row of weights
+    impl Runtime {
+        pub fn cpu() -> anyhow::Result<Self> {
+            Ok(Runtime {
+                client: xla::PjRtClient::cpu()?,
+            })
         }
-        let w = HostTensor::new(vec![k, n], wdat);
-        let out = exe.run(&[x, w]).unwrap();
-        assert_eq!(out.len(), m * n);
-        // expected: DAC(0.5)=0.5 (on grid for 9 bits? step=1/255; 0.5*255
-        // rounds to 128 -> 128/255); acc = 128/255 / 432 * 432? no: only
-        // row 0 of w is nonzero => acc = x[i,0]*w[0,j] = dac(0.5)/432
-        let dac = (0.5f32 * 255.0).round() / 255.0;
-        let adc_step = 8.0 / 127.0;
-        let want = ((dac * (1.0 / 432.0)) / adc_step).round() * adc_step;
-        assert!((out[0] - want).abs() < 1e-6, "{} vs {}", out[0], want);
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load HLO text and compile to an executable.
+        pub fn load_hlo(&self, path: &Path) -> anyhow::Result<Executable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            Ok(Executable {
+                exe,
+                name: path.file_name().unwrap().to_string_lossy().into_owned(),
+            })
+        }
+    }
+
+    /// One compiled inference graph.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        pub name: String,
+    }
+
+    impl Executable {
+        /// Execute with f32 host tensors; the exported graphs return a
+        /// 1-tuple whose element is the logits tensor (flattened on return).
+        pub fn run(&self, inputs: &[HostTensor]) -> anyhow::Result<Vec<f32>> {
+            let lits: Vec<xla::Literal> = inputs
+                .iter()
+                .map(to_literal)
+                .collect::<anyhow::Result<_>>()?;
+            let result =
+                self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+            let out = result.to_tuple1()?;
+            Ok(out.to_vec::<f32>()?)
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        fn demo_path() -> Option<std::path::PathBuf> {
+            let p = crate::nn::manifest::artifacts_dir().join("cim_mvm.hlo.txt");
+            p.exists().then_some(p)
+        }
+
+        #[test]
+        fn cim_mvm_artifact_roundtrip() {
+            // needs `make artifacts` AND a real xla crate; skip silently
+            // when either is absent so unit tests stay hermetic (the
+            // integration suite requires the artifacts)
+            let Some(path) = demo_path() else { return };
+            let Ok(rt) = Runtime::cpu() else { return };
+            let exe = rt.load_hlo(&path).unwrap();
+            // graph: x[256,432] @ w[432,128], r_dac=1, r_adc=8, 9/8 bits
+            let m = 256;
+            let k = 432;
+            let n = 128;
+            let x = HostTensor::new(vec![m, k], vec![0.5f32; m * k]);
+            let mut wdat = vec![0f32; k * n];
+            for j in 0..n {
+                wdat[j] = 1.0 / k as f32; // first input row of weights
+            }
+            let w = HostTensor::new(vec![k, n], wdat);
+            let out = exe.run(&[x, w]).unwrap();
+            assert_eq!(out.len(), m * n);
+            // expected: DAC(0.5) on the 9-bit grid, only row 0 of w nonzero
+            // => acc = dac(0.5)/432, then ADC-quantized at 8 bits
+            let dac = (0.5f32 * 255.0).round() / 255.0;
+            let adc_step = 8.0 / 127.0;
+            let want = ((dac * (1.0 / 432.0)) / adc_step).round() * adc_step;
+            assert!((out[0] - want).abs() < 1e-6, "{} vs {}", out[0], want);
+        }
     }
 }

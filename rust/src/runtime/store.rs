@@ -1,29 +1,36 @@
-//! Artifact store: manifest-driven discovery + compiled-executable cache.
+//! Artifact store: manifest-driven discovery + caches.
+//!
+//! Always provides parsed metadata, loaded weights, and datasets (all the
+//! `native` backend needs). With the `pjrt` feature it additionally owns a
+//! lazily-created PJRT client and the compiled-executable cache, so benches
+//! and the coordinator never recompile a graph — and a store opened only
+//! for metadata never pays for (or requires) the XLA library at all.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::nn::{Manifest, ModelMeta};
-use crate::runtime::{Executable, Runtime};
 
-/// Caches parsed metadata, loaded weights and compiled executables so
-/// benches and the coordinator never recompile a graph.
 pub struct ArtifactStore {
     pub manifest: Manifest,
-    pub runtime: Runtime,
-    exes: Mutex<HashMap<String, Arc<Executable>>>,
     metas: Mutex<HashMap<String, Arc<ModelMeta>>>,
     weights: Mutex<HashMap<String, Arc<Vec<crate::nn::Tensor>>>>,
+    #[cfg(feature = "pjrt")]
+    runtime: Mutex<Option<Arc<crate::runtime::Runtime>>>,
+    #[cfg(feature = "pjrt")]
+    exes: Mutex<HashMap<String, Arc<crate::runtime::Executable>>>,
 }
 
 impl ArtifactStore {
     pub fn open(dir: &std::path::Path) -> anyhow::Result<Self> {
         Ok(ArtifactStore {
             manifest: Manifest::load(dir)?,
-            runtime: Runtime::cpu()?,
-            exes: Mutex::new(HashMap::new()),
             metas: Mutex::new(HashMap::new()),
             weights: Mutex::new(HashMap::new()),
+            #[cfg(feature = "pjrt")]
+            runtime: Mutex::new(None),
+            #[cfg(feature = "pjrt")]
+            exes: Mutex::new(HashMap::new()),
         })
     }
 
@@ -57,9 +64,27 @@ impl ArtifactStore {
         Ok(w)
     }
 
+    pub fn dataset(&self, task: &str) -> anyhow::Result<crate::datasets::Dataset> {
+        crate::datasets::Dataset::load(&self.manifest.dataset_path(task))
+    }
+
+    /// The PJRT client, created on first use (so opening a store never
+    /// requires the XLA library unless something actually executes HLO).
+    #[cfg(feature = "pjrt")]
+    pub fn runtime(&self) -> anyhow::Result<Arc<crate::runtime::Runtime>> {
+        let mut guard = self.runtime.lock().unwrap();
+        if let Some(rt) = guard.as_ref() {
+            return Ok(rt.clone());
+        }
+        let rt = Arc::new(crate::runtime::Runtime::cpu()?);
+        *guard = Some(rt.clone());
+        Ok(rt)
+    }
+
     /// Compiled executable for (vid, bits, batch); compiles at most once.
+    #[cfg(feature = "pjrt")]
     pub fn executable(&self, vid: &str, bits: u32, batch: usize)
-                      -> anyhow::Result<Arc<Executable>> {
+                      -> anyhow::Result<Arc<crate::runtime::Executable>> {
         let key = format!("{vid}/{bits}b_b{batch}");
         if let Some(e) = self.exes.lock().unwrap().get(&key) {
             return Ok(e.clone());
@@ -71,12 +96,9 @@ impl ArtifactStore {
                 meta.hlo_keys()
             )
         })?;
-        let exe = Arc::new(self.runtime.load_hlo(&self.manifest.hlo_path(file))?);
+        let rt = self.runtime()?;
+        let exe = Arc::new(rt.load_hlo(&self.manifest.hlo_path(file))?);
         self.exes.lock().unwrap().insert(key, exe.clone());
         Ok(exe)
-    }
-
-    pub fn dataset(&self, task: &str) -> anyhow::Result<crate::datasets::Dataset> {
-        crate::datasets::Dataset::load(&self.manifest.dataset_path(task))
     }
 }

@@ -5,34 +5,42 @@
 //! ReLU, with global average pooling before the dense head, and exact
 //! (unquantized) compute for `analog=false` layers (Fig. 9 ablation).
 
+use std::sync::Arc;
+
 use crate::nn::{LayerKind, ModelMeta};
 use crate::quant;
 use crate::simulator::{gemm, im2col};
 
-/// Per-layer effective weights in *graph* shape (dw analog: dense [9C, C]).
-pub type EffectiveWeights = Vec<Vec<f32>>;
-
 pub struct NativeModel {
-    pub meta: ModelMeta,
+    meta: Arc<ModelMeta>,
     pub threads: usize,
 }
 
 impl NativeModel {
-    pub fn new(meta: ModelMeta) -> Self {
-        NativeModel { meta, threads: 1 }
+    pub fn new(meta: impl Into<Arc<ModelMeta>>) -> Self {
+        Self::with_threads(meta, 1)
     }
 
-    pub fn with_threads(meta: ModelMeta, threads: usize) -> Self {
-        NativeModel { meta, threads }
+    pub fn with_threads(meta: impl Into<Arc<ModelMeta>>, threads: usize) -> Self {
+        NativeModel {
+            meta: meta.into(),
+            threads,
+        }
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
     }
 
     /// Forward a batch: `x` is [batch, H, W, C] flat; returns logits
     /// [batch, classes].
     ///
-    /// `weights[l]` must match the layer's graph weight shape; `gdc[l]` is
-    /// the drift-compensation scale (1.0 when freshly programmed).
-    pub fn forward(&self, x: &[f32], batch: usize, weights: &EffectiveWeights,
-                   gdc: &[f32], adc_bits: u32) -> Vec<f32> {
+    /// `weights[l]` must match the layer's graph weight shape (anything
+    /// slice-like works: `Vec<f32>`, `HostTensor`, ...); `gdc[l]` is the
+    /// drift-compensation scale (1.0 when freshly programmed).
+    pub fn forward<W: AsRef<[f32]>>(&self, x: &[f32], batch: usize,
+                                    weights: &[W], gdc: &[f32],
+                                    adc_bits: u32) -> Vec<f32> {
         let (ih, iw, ic) = self.meta.input_hwc;
         assert_eq!(x.len(), batch * ih * iw * ic, "input shape mismatch");
         assert_eq!(weights.len(), self.meta.layers.len());
@@ -42,7 +50,7 @@ impl NativeModel {
         let mut h = x.to_vec();
         let (mut ch, mut cw, mut cc) = (ih, iw, ic);
         for (li, lm) in self.meta.layers.iter().enumerate() {
-            let w = &weights[li];
+            let w = weights[li].as_ref();
             let gw: Vec<usize> = lm.graph_weight_shape.clone();
             match lm.kind {
                 LayerKind::Dw3x3 if !lm.analog => {
@@ -136,18 +144,10 @@ impl NativeModel {
         h
     }
 
-    /// Argmax predictions from logits.
+    /// Argmax predictions from logits (thin wrapper over the shared
+    /// [`util::logits`](crate::util::logits) helpers).
     pub fn predict(logits: &[f32], classes: usize) -> Vec<u32> {
-        logits
-            .chunks_exact(classes)
-            .map(|row| {
-                row.iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.total_cmp(b.1))
-                    .map(|(i, _)| i as u32)
-                    .unwrap_or(0)
-            })
-            .collect()
+        crate::util::logits::predictions(logits, classes)
     }
 }
 

@@ -1,0 +1,58 @@
+//! Logits post-processing shared by every execution consumer.
+//!
+//! One implementation of argmax/accuracy instead of the three hand-rolled
+//! loops that used to live in `simulator::forward`, `eval`, and
+//! `coordinator::server`. Tie-breaking matches the originals: `max_by`
+//! over `f32::total_cmp`, so the *last* maximal class wins and NaN orders
+//! deterministically.
+
+/// Index of the maximal logit in one row (0 for an empty row).
+pub fn argmax(row: &[f32]) -> u32 {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i as u32)
+        .unwrap_or(0)
+}
+
+/// Argmax predictions for flattened `[rows, classes]` logits.
+pub fn predictions(logits: &[f32], classes: usize) -> Vec<u32> {
+    logits.chunks_exact(classes).map(argmax).collect()
+}
+
+/// Correct predictions over the first `labels.len()` rows — extra logits
+/// rows (batch padding) are ignored, so callers can pass a padded batch's
+/// output against the true-sample labels directly.
+pub fn count_correct(logits: &[f32], classes: usize, labels: &[u32]) -> usize {
+    logits
+        .chunks_exact(classes)
+        .zip(labels.iter())
+        .filter(|(row, &y)| argmax(row) == y)
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic_and_ties() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.7]), 1);
+        assert_eq!(argmax(&[]), 0);
+        // last maximal element wins, matching the previous max_by loops
+        assert_eq!(argmax(&[0.5, 0.5]), 1);
+    }
+
+    #[test]
+    fn predictions_rows() {
+        assert_eq!(predictions(&[0.1, 0.9, 0.7, 0.3], 2), vec![1, 0]);
+    }
+
+    #[test]
+    fn count_correct_ignores_padding() {
+        // 3 logits rows, only 2 labelled samples (third row is padding)
+        let logits = [0.0, 1.0, 1.0, 0.0, 9.0, 0.0];
+        assert_eq!(count_correct(&logits, 2, &[1, 0]), 2);
+        assert_eq!(count_correct(&logits, 2, &[1, 1]), 1);
+    }
+}

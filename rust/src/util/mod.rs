@@ -1,12 +1,14 @@
 //! Offline-environment utility substrates.
 //!
-//! The build environment vendors only the `xla` crate's dependency closure,
-//! so the usual ecosystem crates (rand, serde, clap, criterion) are
-//! unavailable; these modules provide the small subset the project needs
-//! (see DESIGN.md "Substitutions").
+//! The build environment has no crates.io registry, so the usual ecosystem
+//! crates (rand, serde, clap, criterion) are unavailable; these modules
+//! provide the small subset the project needs (see DESIGN.md
+//! "Substitutions"), and `rust/vendor/` carries the `anyhow` shim and the
+//! `xla` API stub the Cargo manifest resolves against.
 
 pub mod cli;
 pub mod json;
+pub mod logits;
 pub mod rng;
 pub mod stats;
 pub mod table;

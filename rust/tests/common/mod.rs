@@ -1,5 +1,9 @@
 //! Shared helpers for integration tests.
 
+// each test binary compiles this module independently and may use only a
+// subset of the helpers
+#![allow(dead_code)]
+
 use analognets::runtime::ArtifactStore;
 
 /// Open the artifact store, or None when `make artifacts` has not run

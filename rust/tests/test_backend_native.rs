@@ -1,0 +1,219 @@
+//! Hermetic backend/serving integration: a synthetic artifact bundle
+//! (manifest + meta + ANWT weights + ANDS dataset, no HLO files) written to
+//! a temp directory, served end-to-end over `NativeBackend`.  Runs on a
+//! fresh checkout with no `make artifacts`, no XLA library, and no `pjrt`
+//! feature — this is the tier-1 coverage for the unified InferenceBackend
+//! API: submit -> batch -> execute -> respond.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use analognets::backend::{BackendKind, NativeBackend};
+use analognets::coordinator::{Coordinator, ServeConfig};
+use analognets::eval::{drift_accuracy, drift_accuracy_on, EvalOpts};
+use analognets::runtime::ArtifactStore;
+
+const VID: &str = "tiny_native";
+
+const META: &str = r#"{
+  "model": "tiny_kws", "variant": "tiny", "input_hwc": [4, 4, 1],
+  "num_classes": 2, "eta": 0.0, "fp_test_acc": 1.0, "trained_adc_bits": 8,
+  "layers": [
+    {"name": "c0", "kind": "conv3x3", "in_ch": 1, "out_ch": 2,
+     "stride": [1, 1], "relu": true, "analog": true,
+     "in_h": 4, "in_w": 4, "out_h": 4, "out_w": 4,
+     "k_gemm": 9, "weight_shape": [9, 2], "graph_weight_shape": [9, 2],
+     "w_scale": 1.0, "w_max": 1.0, "r_dac": 8.0, "r_adc": 8.0,
+     "dig_scale": [1, 1], "dig_bias": [0, 0]},
+    {"name": "fc", "kind": "dense", "in_ch": 2, "out_ch": 2,
+     "stride": [1, 1], "relu": false, "analog": true,
+     "in_h": 4, "in_w": 4, "out_h": 1, "out_w": 1,
+     "k_gemm": 2, "weight_shape": [2, 2], "graph_weight_shape": [2, 2],
+     "w_scale": 1.0, "w_max": 1.0, "r_dac": 8.0, "r_adc": 8.0,
+     "dig_scale": [1, 1], "dig_bias": [0.3, 0.0]}
+  ],
+  "hlo": {}
+}"#;
+
+fn write_anwt(path: &Path, tensors: &[(&[u32], Vec<f32>)]) {
+    let mut b = Vec::new();
+    b.extend_from_slice(b"ANWT");
+    b.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for (shape, data) in tensors {
+        b.extend_from_slice(&(shape.len() as u32).to_le_bytes());
+        for &d in *shape {
+            b.extend_from_slice(&d.to_le_bytes());
+        }
+        for v in data {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    std::fs::write(path, b).unwrap();
+}
+
+fn write_ands(path: &Path, dims: &[u32], x: &[f32], y: &[u32]) {
+    let mut b = Vec::new();
+    b.extend_from_slice(b"ANDS");
+    b.extend_from_slice(&(y.len() as u32).to_le_bytes());
+    b.extend_from_slice(&(dims.len() as u32).to_le_bytes());
+    for &d in dims {
+        b.extend_from_slice(&d.to_le_bytes());
+    }
+    for v in x {
+        b.extend_from_slice(&v.to_le_bytes());
+    }
+    for v in y {
+        b.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path, b).unwrap();
+}
+
+/// Write the complete synthetic bundle and return its directory.
+fn synth_artifacts(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("analognets_backend_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        format!(
+            r#"[{{"vid":"{VID}","task":"kws","model":"tiny_kws","eta":0.0,
+                "trained_bits":8,"fp_test_acc":1.0,
+                "meta":"{VID}.meta.json","weights":"{VID}.weights.bin",
+                "hlo":{{}}}}]"#
+        ),
+    )
+    .unwrap();
+    std::fs::write(dir.join(format!("{VID}.meta.json")), META).unwrap();
+
+    // conv: center tap -> ch0 at 1.0, ch1 at 0.5.  The dense head turns
+    // pooled brightness into a threshold classifier: class 0's logit is the
+    // constant dig_bias 0.3, class 1's logit is pooled ch0 (~0.17 for dim
+    // frames, ~0.88 for bright ones) — separable well beyond the PCM
+    // programming-noise margin.
+    let mut w0 = vec![0f32; 18];
+    w0[4 * 2] = 1.0;
+    w0[4 * 2 + 1] = 0.5;
+    let w1 = vec![0.0, 1.0, 0.0, 0.0];
+    write_anwt(
+        &dir.join(format!("{VID}.weights.bin")),
+        &[(&[9, 2][..], w0), (&[2, 2][..], w1)],
+    );
+
+    // 8 labelled samples: label 1 = bright frames, label 0 = dim frames
+    let n = 8usize;
+    let feat = 16usize;
+    let mut x = Vec::with_capacity(n * feat);
+    let mut y = Vec::with_capacity(n);
+    for s in 0..n {
+        let bright = s % 2 == 1;
+        let base = if bright { 0.8 } else { 0.1 };
+        for i in 0..feat {
+            x.push(base + 0.01 * (i as f32));
+        }
+        y.push(bright as u32);
+    }
+    write_ands(&dir.join("kws_test.bin"), &[4, 4, 1], &x, &y);
+    dir
+}
+
+fn serving_cfg(dir: PathBuf) -> ServeConfig {
+    let mut cfg = ServeConfig::new(VID, 8);
+    cfg.artifacts_dir = dir;
+    cfg.max_wait = Duration::from_millis(1);
+    cfg.time_scale = 1e4;
+    cfg
+}
+
+#[test]
+fn native_coordinator_serves_end_to_end() {
+    let dir = synth_artifacts("serve");
+    let cfg = serving_cfg(dir);
+    assert_eq!(cfg.backend, BackendKind::Native);
+    let coord = Arc::new(Coordinator::start(cfg).unwrap());
+    assert_eq!(coord.feat_len, 16);
+    assert_eq!(coord.classes, 2);
+
+    // concurrent clients force the batcher through the submit->drain path
+    let clients = 4;
+    let per_client = 10;
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let coord = coord.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..per_client {
+                let v = ((c * per_client + i) % 7) as f32 / 7.0;
+                let resp = coord.infer(vec![v; 16]).unwrap();
+                assert_eq!(resp.logits.len(), 2);
+                assert!(resp.pred < 2);
+                assert!(resp.sim_age_s >= 25.0, "age {}", resp.sim_age_s);
+                assert!(resp.logits.iter().all(|l| l.is_finite()));
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = coord.metrics.summary();
+    assert_eq!(m.completed as usize, clients * per_client);
+    assert_eq!(m.requests, m.completed);
+    assert!(m.launches >= 1 && m.launches <= m.completed, "{m}");
+    eprintln!("hermetic native coordinator metrics: {m}");
+}
+
+#[test]
+fn native_coordinator_rejects_bad_feature_length() {
+    let dir = synth_artifacts("badlen");
+    let coord = Coordinator::start(serving_cfg(dir)).unwrap();
+    assert!(coord.submit(vec![0.0; 3]).is_err());
+    coord.stop().unwrap();
+}
+
+#[test]
+fn native_eval_runs_without_hlo_artifacts() {
+    let dir = synth_artifacts("eval");
+    let store = ArtifactStore::open(&dir).unwrap();
+    let opts = EvalOpts {
+        bits: 8,
+        batch: 4,
+        max_samples: 8,
+        runs: 2,
+        backend: BackendKind::Native,
+        ..Default::default()
+    };
+    let accs = drift_accuracy(&store, VID, &[25.0, 86_400.0], &opts).unwrap();
+    assert_eq!(accs.len(), 2);
+    for per_time in &accs {
+        assert_eq!(per_time.len(), opts.runs);
+        for a in per_time {
+            assert!((0.0..=1.0).contains(a), "accuracy out of range: {a}");
+        }
+    }
+    // the bright/dim threshold task is separable with margin: fresh
+    // accuracy must be high even with programming noise
+    let fresh: f64 = accs[0].iter().sum::<f64>() / accs[0].len() as f64;
+    assert!(fresh >= 0.75, "fresh accuracy collapsed: {fresh}");
+
+    // the caller-constructed-backend hook must agree with the factory path
+    // bit for bit (same EvalOpts seed => same programming/read noise)
+    let meta = store.meta(VID).unwrap();
+    let be = NativeBackend::new(meta, opts.bits);
+    let accs_on =
+        drift_accuracy_on(&be, &store, VID, &[25.0, 86_400.0], &opts).unwrap();
+    assert_eq!(accs, accs_on);
+}
+
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn pjrt_backend_unavailable_without_feature() {
+    let dir = synth_artifacts("nopjrt");
+    // the factory refuses…
+    let store = ArtifactStore::open(&dir).unwrap();
+    let err = analognets::backend::create(BackendKind::Pjrt, &store, VID, 8)
+        .err()
+        .expect("pjrt must be unavailable in default builds");
+    assert!(err.to_string().contains("pjrt"), "{err}");
+    // …and so does the coordinator, with an early error on start
+    let cfg = serving_cfg(dir).with_backend(BackendKind::Pjrt);
+    assert!(Coordinator::start(cfg).is_err());
+}

@@ -1,13 +1,13 @@
-//! Integration over the AOT bridge: exported HLO graphs vs the Rust-native
-//! simulator, and artifact-bundle consistency.  Requires `make artifacts`.
+//! Integration over the AOT bridge: artifact-bundle consistency always;
+//! exported HLO graphs vs the Rust-native simulator when built with
+//! `--features pjrt`.  Artifact-dependent tests require `make artifacts`
+//! and skip themselves otherwise.
 
 mod common;
 
 use analognets::eval::DeployedModel;
 use analognets::nn::LayerKind;
 use analognets::pcm::PcmParams;
-use analognets::runtime::HostTensor;
-use analognets::simulator::NativeModel;
 use analognets::util::rng::Rng;
 
 #[test]
@@ -36,9 +36,16 @@ fn artifact_bundle_consistent() {
     }
 }
 
+/// Cross-backend consistency through the unified API: the same drifted
+/// weights must produce (near-)identical logits on `NativeBackend` and
+/// `PjrtBackend`.  Only meaningful with a real xla crate, hence the
+/// feature gate; skips when the artifacts or the PJRT runtime are absent.
+#[cfg(feature = "pjrt")]
 #[test]
-fn hlo_graph_matches_native_simulator() {
-    let Some(store) = common::store_or_skip("hlo_graph_matches_native") else {
+fn native_and_pjrt_backends_agree() {
+    use analognets::backend::{self, BackendKind, InferenceBackend};
+
+    let Some(store) = common::store_or_skip("native_and_pjrt_agree") else {
         return;
     };
     let Some(vid) = common::pick_vid(&store, &["kws_full_e10_8b", "kws_base"])
@@ -47,37 +54,35 @@ fn hlo_graph_matches_native_simulator() {
     };
     let meta = store.meta(&vid).unwrap();
     let bits = meta.trained_adc_bits.unwrap_or(8);
-    let Ok(exe) = store.executable(&vid, bits, 128) else {
-        eprintln!("SKIP: no 128-batch graph for {vid}");
-        return;
-    };
-    let ds = store.dataset("kws").unwrap();
     let batch = 128;
+    if meta.hlo_for(bits, batch).is_none() {
+        eprintln!("SKIP: no {batch}-batch graph for {vid}");
+        return;
+    }
+    let pjrt = backend::create(BackendKind::Pjrt, &store, &vid, bits).unwrap();
+    if let Err(e) = pjrt.prepare(batch) {
+        eprintln!("SKIP: PJRT unavailable ({e})");
+        return;
+    }
+    let native = backend::create(BackendKind::Native, &store, &vid, bits).unwrap();
+    let ds = store.dataset("kws").unwrap();
 
-    // ideal PCM (no noise): both paths see identical weights
+    // ideal PCM (no noise): both backends see identical weights
     let params = PcmParams::ideal();
     let mut rng = Rng::new(42);
     let dep = DeployedModel::program(&store, &vid, &params, &mut rng).unwrap();
     let (ws, alphas) = dep.read_at(25.0, &params, &mut rng, true);
 
-    let (ih, iw, ic) = meta.input_hwc;
     let xb = ds.padded_batch(0, batch);
-    let mut inputs = Vec::with_capacity(2 + ws.len());
-    inputs.push(HostTensor::new(vec![batch, ih, iw, ic], xb.clone()));
-    inputs.extend(ws.iter().cloned());
-    inputs.push(HostTensor::new(vec![alphas.len()], alphas.clone()));
-    let hlo_logits = exe.run(&inputs).unwrap();
-
-    let native = NativeModel::with_threads((*meta).clone(), 4);
-    let wvecs: Vec<Vec<f32>> = ws.iter().map(|t| t.data.clone()).collect();
-    let native_logits = native.forward(&xb, batch, &wvecs, &alphas, bits);
+    let hlo_logits = pjrt.run_batch(&xb, batch, &ws, &alphas).unwrap();
+    let native_logits = native.run_batch(&xb, batch, &ws, &alphas).unwrap();
 
     assert_eq!(hlo_logits.len(), native_logits.len());
     // two fp32 implementations of the same quantized graph: identical
     // argmax on virtually all rows, logits close
     let classes = meta.num_classes;
-    let pred_h = NativeModel::predict(&hlo_logits, classes);
-    let pred_n = NativeModel::predict(&native_logits, classes);
+    let pred_h = analognets::util::logits::predictions(&hlo_logits, classes);
+    let pred_n = analognets::util::logits::predictions(&native_logits, classes);
     let agree = pred_h.iter().zip(&pred_n).filter(|(a, b)| a == b).count();
     assert!(agree >= batch * 98 / 100, "argmax agreement {agree}/{batch}");
     let mut big = 0;
@@ -118,6 +123,9 @@ fn dw_expansion_matches_meta_graph_shape() {
     }
 }
 
+/// Runs on whichever backend `EvalOpts::backend` defaults to (native), so
+/// this is exercised in hermetic builds too — it only needs the artifact
+/// bundle's weights + datasets, not the HLO graphs.
 #[test]
 fn drift_degrades_and_gdc_helps_end_to_end() {
     let Some(store) = common::store_or_skip("drift_degrades_e2e") else {

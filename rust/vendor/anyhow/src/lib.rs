@@ -1,0 +1,131 @@
+//! Minimal, API-compatible shim of the `anyhow` crate for the offline
+//! build environment (the crates.io registry is not vendored here).
+//!
+//! Implements the subset the workspace uses: [`Error`], [`Result`], the
+//! blanket `From<E: std::error::Error>` conversion that makes `?` work, and
+//! the `anyhow!` / `bail!` / `ensure!` macros. Error *chains* and
+//! downcasting are intentionally out of scope — the wrapped error is
+//! flattened to its `Display` rendering at conversion time.
+
+use std::fmt;
+
+/// A type-erased error, rendered eagerly to a message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything printable (the `anyhow!` macro calls this).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:#}` on real anyhow prints the whole chain; the shim carries a
+        // single flattened message, so both renderings coincide.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`: that keeps this blanket conversion coherent with the
+// reflexive `From<T> for T` impl in core.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(&e)
+    }
+}
+
+/// `anyhow::Result<T>`: `std::result::Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or a printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built like `anyhow!`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(
+                ::std::concat!("condition failed: ", ::std::stringify!($cond)),
+            ));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path/7f3a")?;
+        Ok(())
+    }
+
+    fn ensures(x: i32) -> Result<i32> {
+        ensure!(x > 0, "x must be positive, got {x}");
+        Ok(x)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let n = 3;
+        let e = anyhow!("n = {}", n);
+        assert_eq!(e.to_string(), "n = 3");
+        let e = anyhow!("n = {n}");
+        assert_eq!(e.to_string(), "n = 3");
+        assert!(ensures(5).is_ok());
+        assert_eq!(
+            ensures(-1).unwrap_err().to_string(),
+            "x must be positive, got -1"
+        );
+    }
+
+    #[test]
+    fn alternate_format_matches_plain() {
+        let e = anyhow!("msg");
+        assert_eq!(format!("{e:#}"), format!("{e}"));
+    }
+}

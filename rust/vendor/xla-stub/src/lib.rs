@@ -1,0 +1,152 @@
+//! Build-only stub of the `xla` crate (xla-rs, PJRT CPU backend).
+//!
+//! The real crate links the XLA native library (`xla_extension`), which is
+//! not present in hermetic CI environments. This stub mirrors the API
+//! surface `analognets::runtime` uses so `--features pjrt` always *type
+//! checks*; attempting to create a [`PjRtClient`] at runtime returns a
+//! descriptive error instead. To run real HLO graphs, replace the `xla`
+//! path dependency in `rust/Cargo.toml` with a real xla-rs checkout.
+
+use std::fmt;
+
+/// Error type standing in for `xla::Error`.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn stub() -> Self {
+        Error(
+            "xla stub crate: the real XLA/PJRT native library is not linked \
+             in this build; see rust/Cargo.toml `[dependencies] xla` to swap \
+             in a real xla-rs checkout"
+                .to_string(),
+        )
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Host literal (stub: shape bookkeeping only, no device buffers).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    dims: Vec<i64>,
+    len: usize,
+}
+
+impl Literal {
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            len: data.len(),
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.len {
+            return Err(Error(format!(
+                "reshape: {} elements into shape {dims:?}",
+                self.len
+            )));
+        }
+        Ok(Literal {
+            dims: dims.to_vec(),
+            len: self.len,
+        })
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(Error::stub())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::stub())
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module proto (stub: checks the file exists and is readable).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        std::fs::metadata(path)
+            .map_err(|e| Error(format!("read {path}: {e}")))?;
+        Ok(HloModuleProto)
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client. The stub cannot create one: this is the single runtime
+/// choke point that reports the missing native library.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::stub())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::stub())
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub())
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::stub())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_creation_reports_stub() {
+        let err = PjRtClient::cpu().err().expect("stub must refuse");
+        assert!(err.to_string().contains("xla stub"));
+    }
+
+    #[test]
+    fn literal_shape_math() {
+        let l = Literal::vec1(&[0.0; 6]);
+        assert!(l.reshape(&[2, 3]).is_ok());
+        assert!(l.reshape(&[4, 2]).is_err());
+        assert_eq!(l.dims(), &[6]);
+    }
+}
