@@ -73,12 +73,17 @@ fn main() -> anyhow::Result<()> {
     let mut r = Rng::new(3);
     let a: Vec<f32> = (0..m * k).map(|_| r.gauss(0.0, 1.0) as f32).collect();
     let b: Vec<f32> = (0..k * n2).map(|_| r.gauss(0.0, 1.0) as f32).collect();
-    for threads in [1usize, 4, 8] {
+    for threads in [1usize, 4, 8, 0] {
+        let label = if threads == 0 {
+            format!("auto({})", gemm::effective_threads(0))
+        } else {
+            threads.to_string()
+        };
         let timing = time_it(1, 5, || {
             let _ = gemm::gemm_parallel(&a, &b, m, k, n2, threads);
         });
         let gflops = 2.0 * (m * k * n2) as f64 / (timing.min_us * 1e3);
-        t.row(&[format!("native GEMM 4096x576x128 t={threads}"),
+        t.row(&[format!("native GEMM 4096x576x128 t={label}"),
                 format!("{:.1}ms min, {gflops:.1} GFLOP/s",
                         timing.min_us / 1e3)]);
     }

@@ -1,0 +1,179 @@
+//! Layer-serial serving benchmark (the CI bench-smoke workload).
+//!
+//! Generates a synthetic artifact bundle, drives the coordinator with 4
+//! concurrent clients twice — once pinned to single-request launches
+//! (`max_batch = 1`), once with the batched layer-serial drain — and emits
+//! a machine-readable `bench_out/BENCH_native.json` with req/s, latency
+//! percentiles, and per-layer GEMM GFLOP/s. With `--baseline <file>` the
+//! run fails if batched req/s drops >30% below the committed baseline
+//! (the CI regression gate).
+//!
+//! Knobs: `--fast` (smaller request counts), `--requests N` (per client),
+//! `--max-batch N`, `--baseline <json>`, `--strict` (make the 2x
+//! batched-vs-single speedup target a hard failure).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use analognets::bench::{self, save_json, time_it, BenchOpts};
+use analognets::coordinator::metrics::MetricsSummary;
+use analognets::coordinator::{Coordinator, ServeConfig};
+use analognets::datasets::synth::{self, SynthSpec};
+use analognets::simulator::gemm;
+use analognets::timing::layer_gemm_dims;
+use analognets::util::cli::Args;
+use analognets::util::json::Json;
+use analognets::util::rng::Rng;
+
+const CLIENTS: usize = 4;
+/// per-client submissions kept in flight (pipelined open-loop load)
+const WINDOW: usize = 16;
+
+fn num(x: f64) -> Json {
+    Json::Num(if x.is_finite() { x } else { 0.0 })
+}
+
+/// Drive `CLIENTS` pipelined client threads; returns measured req/s and the
+/// coordinator's own metrics summary.
+fn run_load(cfg: ServeConfig, per_client: usize, feat: usize)
+            -> anyhow::Result<(f64, MetricsSummary)> {
+    let coord = Arc::new(Coordinator::start(cfg)?);
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..CLIENTS {
+        let coord = coord.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut pending = VecDeque::with_capacity(WINDOW);
+            for i in 0..per_client {
+                let v = 0.1 + 0.8 * (((c * per_client + i) % 13) as f32 / 13.0);
+                let rx = coord.submit(vec![v; feat]).expect("submit");
+                pending.push_back(rx);
+                if pending.len() >= WINDOW {
+                    let _ = pending.pop_front().unwrap().recv().expect("recv");
+                }
+            }
+            for rx in pending {
+                let _ = rx.recv().expect("recv tail");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("client thread");
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let req_s = (CLIENTS * per_client) as f64 / elapsed;
+    let summary = coord.metrics.summary();
+    match Arc::try_unwrap(coord) {
+        Ok(c) => c.stop()?,
+        Err(_) => anyhow::bail!("coordinator handle still shared"),
+    }
+    Ok((req_s, summary))
+}
+
+fn mode_json(req_s: f64, m: &MetricsSummary) -> Json {
+    let mut o = match m.to_json() {
+        Json::Obj(o) => o,
+        _ => unreachable!("MetricsSummary::to_json returns an object"),
+    };
+    o.insert("req_s".to_string(), num(req_s));
+    Json::Obj(o)
+}
+
+fn main() -> anyhow::Result<()> {
+    let opts = BenchOpts::from_env_args();
+    let args = Args::from_env();
+    let per_client = args.opt_usize("requests", if opts.fast { 200 } else { 800 });
+    let max_batch = args.opt_usize("max-batch", 32);
+
+    let spec = SynthSpec::bench("bench_serving");
+    let dir = synth::write_bundle_tmp("bench_serving", &spec)?;
+    let feat = spec.feat_len();
+    // mirror backend::create's automatic pool policy (cores capped at 8) so
+    // the per-layer GFLOP/s below are measured at the same lane count the
+    // serving runs above actually used
+    let threads = gemm::effective_threads(0).min(8);
+    println!("[bench_serving] synthetic bundle `{}` at {} ({} GEMM lanes, \
+              {CLIENTS} clients x {per_client} requests)",
+             spec.vid, dir.display(), threads);
+
+    let mk_cfg = |max_batch: usize| {
+        let mut cfg = ServeConfig::new(&spec.vid, 8);
+        cfg.artifacts_dir = dir.clone();
+        cfg.max_batch = max_batch;
+        cfg.max_wait = Duration::from_micros(500);
+        cfg
+    };
+
+    // ---- single-request baseline vs batched layer-serial drain ---------
+    println!("[bench_serving] single-request baseline (max_batch=1)...");
+    let (rps_single, m_single) = run_load(mk_cfg(1), per_client, feat)?;
+    println!("  {rps_single:.0} req/s   {m_single}");
+    println!("[bench_serving] batched layer-serial (max_batch={max_batch})...");
+    let (rps_batched, m_batched) = run_load(mk_cfg(max_batch), per_client, feat)?;
+    println!("  {rps_batched:.0} req/s   {m_batched}");
+    let speedup = rps_batched / rps_single;
+    println!("[bench_serving] batched speedup: {speedup:.2}x");
+
+    // ---- per-layer GEMM GFLOP/s at the batched launch shape ------------
+    let store = analognets::runtime::ArtifactStore::open(&dir)?;
+    let meta = store.meta(&spec.vid)?;
+    let mut per_layer = Vec::new();
+    let mut rng = Rng::new(17);
+    for lm in &meta.layers {
+        let (m, k, n) = layer_gemm_dims(lm, max_batch);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.gauss(0.0, 1.0) as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.gauss(0.0, 1.0) as f32).collect();
+        let t = time_it(2, if opts.fast { 5 } else { 15 }, || {
+            let _ = gemm::gemm_parallel(&a, &b, m, k, n, threads);
+        });
+        let gflops = 2.0 * (m * k * n) as f64 / (t.min_us * 1e3);
+        println!("  layer {:<4} GEMM {m}x{k}x{n}: {gflops:.2} GFLOP/s", lm.name);
+        let mut o = BTreeMap::new();
+        o.insert("name".to_string(), Json::Str(lm.name.clone()));
+        o.insert("m".to_string(), num(m as f64));
+        o.insert("k".to_string(), num(k as f64));
+        o.insert("n".to_string(), num(n as f64));
+        o.insert("gflops".to_string(), num(gflops));
+        per_layer.push(Json::Obj(o));
+    }
+
+    // ---- BENCH_native.json ---------------------------------------------
+    let mut root = BTreeMap::new();
+    root.insert("schema".to_string(), num(1.0));
+    root.insert("bench".to_string(), Json::Str("serving".to_string()));
+    root.insert("backend".to_string(), Json::Str("native".to_string()));
+    root.insert("vid".to_string(), Json::Str(spec.vid.clone()));
+    root.insert("threads".to_string(), num(threads as f64));
+    root.insert("clients".to_string(), num(CLIENTS as f64));
+    root.insert("requests_per_client".to_string(), num(per_client as f64));
+    root.insert("max_batch".to_string(), num(max_batch as f64));
+    // headline metrics (the regression gate reads `req_s`)
+    root.insert("req_s".to_string(), num(rps_batched));
+    root.insert("p50_us".to_string(), num(m_batched.p50_us));
+    root.insert("p99_us".to_string(), num(m_batched.p99_us));
+    root.insert("speedup_vs_single".to_string(), num(speedup));
+    root.insert("single".to_string(), mode_json(rps_single, &m_single));
+    root.insert("batched".to_string(), mode_json(rps_batched, &m_batched));
+    root.insert("per_layer_gemm".to_string(), Json::Arr(per_layer));
+    save_json("BENCH_native.json", &Json::Obj(root));
+
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // ---- gates ----------------------------------------------------------
+    if let Some(baseline) = &opts.baseline {
+        bench::check_regression(rps_batched, std::path::Path::new(baseline),
+                                "req_s", 0.30)?;
+    }
+    if speedup < 2.0 {
+        let msg = format!(
+            "batched speedup {speedup:.2}x is below the 2x target \
+             (machine-dependent; {threads} lanes available)"
+        );
+        if opts.strict {
+            anyhow::bail!("{msg}");
+        }
+        eprintln!("[bench_serving] warning: {msg}");
+    }
+    Ok(())
+}

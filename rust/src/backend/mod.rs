@@ -55,6 +55,18 @@ pub trait InferenceBackend {
     /// [`FALLBACK_BATCH_SIZES`] when none are exported.
     fn batch_sizes(&self) -> Vec<usize>;
 
+    /// Whether `run_batch` accepts *arbitrary* batch sizes (no static graph
+    /// shapes). Dynamic engines let the serving coordinator drain up to
+    /// `ServeConfig::max_batch` queued requests into a single layer-serial
+    /// launch with zero padding ([`batcher::plan_dynamic`]); static engines
+    /// (PJRT's AOT graphs) go through the padded [`batcher::plan`] path.
+    ///
+    /// [`batcher::plan`]: crate::coordinator::batcher::plan
+    /// [`batcher::plan_dynamic`]: crate::coordinator::batcher::plan_dynamic
+    fn supports_dynamic_batch(&self) -> bool {
+        false
+    }
+
     /// Cheap liveness check: can this backend execute at all? PJRT verifies
     /// the runtime/client can be created (catching a missing XLA native
     /// library) *without* compiling any graph, so callers like
@@ -175,15 +187,31 @@ impl std::str::FromStr for BackendKind {
 
 /// Construct the requested backend for `vid` against an opened artifact
 /// store. The returned trait object borrows the store (PJRT compiles its
-/// executables through the store's cache).
+/// executables through the store's cache). The native GEMM pool is sized
+/// automatically (all cores, capped at 8); use [`create_with_threads`] to
+/// pin it.
 pub fn create<'a>(kind: BackendKind, store: &'a ArtifactStore, vid: &str,
                   bits: u32) -> anyhow::Result<Box<dyn InferenceBackend + 'a>> {
+    create_with_threads(kind, store, vid, bits, 0)
+}
+
+/// [`create`] with an explicit native GEMM thread-pool size. `threads == 0`
+/// keeps the automatic policy (`available_parallelism`, capped at 8 — the
+/// layer shapes we serve stop scaling past that). PJRT ignores the knob:
+/// its intra-op parallelism belongs to the XLA runtime.
+pub fn create_with_threads<'a>(kind: BackendKind, store: &'a ArtifactStore,
+                               vid: &str, bits: u32, threads: usize)
+                               -> anyhow::Result<Box<dyn InferenceBackend + 'a>> {
     match kind {
         BackendKind::Native => {
             let meta = store.meta(vid)?;
-            let threads = std::thread::available_parallelism()
-                .map(|n| n.get().min(8))
-                .unwrap_or(1);
+            let threads = if threads == 0 {
+                std::thread::available_parallelism()
+                    .map(|n| n.get().min(8))
+                    .unwrap_or(1)
+            } else {
+                threads
+            };
             Ok(Box::new(NativeBackend::with_threads(meta, bits, threads)))
         }
         BackendKind::Pjrt => create_pjrt(store, vid, bits),

@@ -22,7 +22,9 @@ impl NativeBackend {
         Self::with_threads(meta, bits, 1)
     }
 
-    /// GEMM parallelised over `threads` row chunks.
+    /// GEMM parallelised over `threads` row chunks (`0` = all available
+    /// cores) on a persistent worker pool owned by the model — spawned
+    /// here, parked between launches, never re-created on the hot path.
     pub fn with_threads(meta: impl Into<Arc<ModelMeta>>, bits: u32,
                         threads: usize) -> Self {
         NativeBackend {
@@ -43,6 +45,13 @@ impl InferenceBackend for NativeBackend {
 
     fn bits(&self) -> u32 {
         self.bits
+    }
+
+    /// The native GEMM has no static-shape constraint: the coordinator may
+    /// drain any number of queued requests (up to its `max_batch`) into one
+    /// layer-serial `run_batch` with zero padded slots.
+    fn supports_dynamic_batch(&self) -> bool {
+        true
     }
 
     /// Prefer the exported serving-graph batch sizes (so native and PJRT

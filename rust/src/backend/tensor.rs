@@ -19,6 +19,12 @@ impl HostTensor {
         HostTensor { shape, data }
     }
 
+    /// An all-zero tensor of the given shape (batched scratch / test rigs).
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        HostTensor { shape, data: vec![0f32; n] }
+    }
+
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
@@ -50,6 +56,13 @@ mod tests {
     #[should_panic]
     fn host_tensor_rejects_bad_shape() {
         HostTensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn zeros_has_shape_product_elements() {
+        let t = HostTensor::zeros(vec![3, 4]);
+        assert_eq!(t.numel(), 12);
+        assert!(t.data.iter().all(|&v| v == 0.0));
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! Benchmark harness (criterion is not vendored; every `cargo bench` target
 //! is a `harness = false` binary built on these helpers).
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
-/// Where bench binaries drop their table/CSV outputs.
+use crate::util::json::{self, Json};
+
+/// Where bench binaries drop their table/CSV/JSON outputs.
 pub fn out_dir() -> PathBuf {
     let d = PathBuf::from("bench_out");
     let _ = std::fs::create_dir_all(&d);
@@ -19,6 +21,37 @@ pub fn save(name: &str, content: &str) {
     } else {
         println!("[bench] wrote {}", p.display());
     }
+}
+
+/// Save a machine-readable bench artifact (e.g. `BENCH_native.json`).
+pub fn save_json(name: &str, v: &Json) {
+    let mut s = json::write(v);
+    s.push('\n');
+    save(name, &s);
+}
+
+/// CI regression gate: compare a measured value against field `key` of a
+/// committed baseline JSON; fail when it drops more than `max_drop`
+/// (fraction, e.g. 0.30 = 30%) below the baseline. Improvements always
+/// pass — the baseline is a floor, ratcheted up by committing fresh CI
+/// numbers.
+pub fn check_regression(current: f64, baseline_path: &Path, key: &str,
+                        max_drop: f64) -> anyhow::Result<()> {
+    let v = json::parse_file(baseline_path)?;
+    let base = v.req(key)?.as_f64()?;
+    let floor = base * (1.0 - max_drop);
+    anyhow::ensure!(
+        current >= floor,
+        "{key} regressed: {current:.1} is below the floor {floor:.1} \
+         ({:.0}% of committed baseline {base:.1} in {})",
+        100.0 * (1.0 - max_drop),
+        baseline_path.display()
+    );
+    println!(
+        "[bench] regression gate OK: {key} {current:.1} >= floor {floor:.1} \
+         (baseline {base:.1})"
+    );
+    Ok(())
 }
 
 /// Timing statistics over repeated runs of `f` (after `warmup` runs).
@@ -63,7 +96,8 @@ pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
     }
 }
 
-/// Shared bench CLI knobs (`--runs`, `--samples`, `--fast`, `--backend`).
+/// Shared bench CLI knobs (`--runs`, `--samples`, `--fast`, `--backend`,
+/// `--baseline`, `--strict`).
 pub struct BenchOpts {
     pub runs: usize,
     pub max_samples: usize,
@@ -72,6 +106,12 @@ pub struct BenchOpts {
     /// `--backend pjrt` with a `--features pjrt` build to reproduce the
     /// figures over the exported HLO graphs)
     pub backend: crate::backend::BackendKind,
+    /// path to a committed baseline JSON; benches that support it exit
+    /// non-zero when their headline metric regresses past the gate
+    pub baseline: Option<String>,
+    /// turn machine-dependent soft targets (e.g. batched speedup) into
+    /// hard failures
+    pub strict: bool,
 }
 
 impl BenchOpts {
@@ -86,6 +126,8 @@ impl BenchOpts {
             fast,
             backend: crate::backend::BackendKind::from_args(&a)
                 .expect("--backend native|pjrt"),
+            baseline: a.opt("baseline").map(String::from),
+            strict: a.flag("strict"),
         }
     }
 }
@@ -93,6 +135,19 @@ impl BenchOpts {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn regression_gate_floor_math() {
+        let dir = std::env::temp_dir().join("analognets_bench_gate_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("base.json");
+        std::fs::write(&p, "{\"req_s\": 100.0}").unwrap();
+        assert!(check_regression(200.0, &p, "req_s", 0.3).is_ok());
+        assert!(check_regression(71.0, &p, "req_s", 0.3).is_ok());
+        assert!(check_regression(69.0, &p, "req_s", 0.3).is_err());
+        assert!(check_regression(100.0, &p, "missing_key", 0.3).is_err());
+        assert!(check_regression(1.0, &dir.join("nope.json"), "req_s", 0.3).is_err());
+    }
 
     #[test]
     fn time_it_counts() {

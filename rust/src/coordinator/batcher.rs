@@ -1,8 +1,14 @@
 //! Dynamic batching policy.
 //!
-//! The exported serving graphs come in a few fixed batch sizes (XLA shapes
-//! are static); the batcher packs the waiting queue into the cheapest
-//! sequence of graph launches, padding the tail.
+//! Two planners, chosen by the backend's shape constraints
+//! (`InferenceBackend::supports_dynamic_batch`):
+//!
+//! * [`plan`] — the exported serving graphs come in a few fixed batch sizes
+//!   (XLA shapes are static); pack the waiting queue into the cheapest
+//!   sequence of graph launches, padding the tail.
+//! * [`plan_dynamic`] — the native layer-serial engine accepts any batch;
+//!   drain the queue FIFO into chunks of at most `max_batch` with zero
+//!   padded slots.
 
 /// A planned sequence of graph launches for `queued` requests.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -32,6 +38,20 @@ pub fn plan(queued: usize, mut sizes: Vec<usize>) -> BatchPlan {
         launches.push(fit);
     }
     BatchPlan { launches, padding }
+}
+
+/// FIFO plan for dynamically-shaped engines: full `max_batch` launches
+/// followed by one exact-size tail launch. Never pads.
+pub fn plan_dynamic(queued: usize, max_batch: usize) -> BatchPlan {
+    assert!(max_batch > 0, "max_batch must be positive");
+    let mut launches = Vec::with_capacity(queued.div_ceil(max_batch));
+    let mut left = queued;
+    while left > 0 {
+        let b = left.min(max_batch);
+        launches.push(b);
+        left -= b;
+    }
+    BatchPlan { launches, padding: 0 }
 }
 
 #[cfg(test)]
@@ -64,6 +84,35 @@ mod tests {
         let p = plan(3, vec![1, 8, 32]);
         assert_eq!(p.launches, vec![8]);
         assert_eq!(p.padding, 5);
+    }
+
+    #[test]
+    fn dynamic_caps_at_max_batch_and_never_pads() {
+        let p = plan_dynamic(10, 4);
+        assert_eq!(p.launches, vec![4, 4, 2]);
+        assert_eq!(p.padding, 0);
+        let p = plan_dynamic(4, 4);
+        assert_eq!(p.launches, vec![4]);
+        let p = plan_dynamic(3, 64);
+        assert_eq!(p.launches, vec![3]);
+        let p = plan_dynamic(0, 8);
+        assert!(p.launches.is_empty());
+    }
+
+    #[test]
+    fn prop_dynamic_covers_queue_fifo() {
+        for q in 1..300 {
+            for mb in [1usize, 3, 8, 32] {
+                let p = plan_dynamic(q, mb);
+                assert_eq!(p.launches.iter().sum::<usize>(), q, "q={q} mb={mb}");
+                assert_eq!(p.padding, 0);
+                // FIFO chunking: every launch but the last is exactly full
+                for l in &p.launches[..p.launches.len() - 1] {
+                    assert_eq!(*l, mb);
+                }
+                assert!(*p.launches.last().unwrap() <= mb);
+            }
+        }
     }
 
     #[test]

@@ -1,19 +1,43 @@
-//! Serving metrics: counters + latency reservoir.
+//! Serving metrics: counters, throughput clock, latency reservoir.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::Instant;
 
-#[derive(Default)]
+use crate::util::json::Json;
+
 pub struct Metrics {
+    /// wall-clock origin for throughput (created with the coordinator)
+    t0: Instant,
     pub requests: AtomicU64,
     pub completed: AtomicU64,
     pub launches: AtomicU64,
+    /// total request slots dispatched across launches (mean batch size =
+    /// `batched_slots / launches`; for dynamic plans padded slots are zero
+    /// so this equals `completed`)
+    pub batched_slots: AtomicU64,
     pub padded_slots: AtomicU64,
     pub weight_refreshes: AtomicU64,
     /// per-request end-to-end latencies, microseconds
     lat_us: Mutex<Vec<f64>>,
     /// simulated accelerator energy, nanojoules
     pub sim_energy_nj: Mutex<f64>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            t0: Instant::now(),
+            requests: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            launches: AtomicU64::new(0),
+            batched_slots: AtomicU64::new(0),
+            padded_slots: AtomicU64::new(0),
+            weight_refreshes: AtomicU64::new(0),
+            lat_us: Mutex::new(Vec::new()),
+            sim_energy_nj: Mutex::new(0.0),
+        }
+    }
 }
 
 impl Metrics {
@@ -29,15 +53,33 @@ impl Metrics {
         self.lat_us.lock().unwrap().clone()
     }
 
+    /// Seconds since the metrics (i.e. the coordinator) were created.
+    pub fn elapsed_s(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
     pub fn summary(&self) -> MetricsSummary {
         let lat = self.latencies_us();
         let completed = self.completed.load(Ordering::Relaxed);
+        let launches = self.launches.load(Ordering::Relaxed);
+        let elapsed_s = self.elapsed_s();
         MetricsSummary {
             requests: self.requests.load(Ordering::Relaxed),
             completed,
-            launches: self.launches.load(Ordering::Relaxed),
+            launches,
             padded_slots: self.padded_slots.load(Ordering::Relaxed),
             weight_refreshes: self.weight_refreshes.load(Ordering::Relaxed),
+            elapsed_s,
+            req_per_sec: if elapsed_s > 0.0 {
+                completed as f64 / elapsed_s
+            } else {
+                0.0
+            },
+            mean_batch: if launches == 0 {
+                0.0
+            } else {
+                self.batched_slots.load(Ordering::Relaxed) as f64 / launches as f64
+            },
             p50_us: crate::util::stats::percentile(&lat, 50.0),
             p99_us: crate::util::stats::percentile(&lat, 99.0),
             mean_us: crate::util::stats::mean(&lat),
@@ -57,21 +99,53 @@ pub struct MetricsSummary {
     pub launches: u64,
     pub padded_slots: u64,
     pub weight_refreshes: u64,
+    pub elapsed_s: f64,
+    /// completed requests per wall second since coordinator start
+    pub req_per_sec: f64,
+    /// mean dispatched batch size (request slots per launch)
+    pub mean_batch: f64,
     pub p50_us: f64,
     pub p99_us: f64,
     pub mean_us: f64,
     pub sim_uj_per_inf: f64,
 }
 
+impl MetricsSummary {
+    /// Machine-readable form (the `BENCH_native.json` building block).
+    /// Non-finite values (e.g. percentiles of an empty reservoir) are
+    /// serialized as 0 so the output is always valid JSON.
+    pub fn to_json(&self) -> Json {
+        fn num(x: f64) -> Json {
+            Json::Num(if x.is_finite() { x } else { 0.0 })
+        }
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("requests".to_string(), num(self.requests as f64));
+        m.insert("completed".to_string(), num(self.completed as f64));
+        m.insert("launches".to_string(), num(self.launches as f64));
+        m.insert("padded_slots".to_string(), num(self.padded_slots as f64));
+        m.insert("weight_refreshes".to_string(),
+                 num(self.weight_refreshes as f64));
+        m.insert("elapsed_s".to_string(), num(self.elapsed_s));
+        m.insert("req_per_sec".to_string(), num(self.req_per_sec));
+        m.insert("mean_batch".to_string(), num(self.mean_batch));
+        m.insert("p50_us".to_string(), num(self.p50_us));
+        m.insert("p99_us".to_string(), num(self.p99_us));
+        m.insert("mean_us".to_string(), num(self.mean_us));
+        m.insert("sim_uj_per_inf".to_string(), num(self.sim_uj_per_inf));
+        Json::Obj(m)
+    }
+}
+
 impl std::fmt::Display for MetricsSummary {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "req={} done={} launches={} padded={} refreshes={} \
-             lat p50={:.0}us p99={:.0}us mean={:.0}us sim_energy={:.2}uJ/inf",
-            self.requests, self.completed, self.launches, self.padded_slots,
-            self.weight_refreshes, self.p50_us, self.p99_us, self.mean_us,
-            self.sim_uj_per_inf
+            "req={} done={} launches={} batch={:.1} padded={} refreshes={} \
+             rps={:.0} lat p50={:.0}us p99={:.0}us mean={:.0}us \
+             sim_energy={:.2}uJ/inf",
+            self.requests, self.completed, self.launches, self.mean_batch,
+            self.padded_slots, self.weight_refreshes, self.req_per_sec,
+            self.p50_us, self.p99_us, self.mean_us, self.sim_uj_per_inf
         )
     }
 }
@@ -85,6 +159,8 @@ mod tests {
         let m = Metrics::default();
         m.requests.store(10, Ordering::Relaxed);
         m.completed.store(10, Ordering::Relaxed);
+        m.launches.store(2, Ordering::Relaxed);
+        m.batched_slots.store(10, Ordering::Relaxed);
         for i in 0..10 {
             m.record_latency_us(i as f64);
         }
@@ -93,5 +169,20 @@ mod tests {
         assert_eq!(s.completed, 10);
         assert!((s.p50_us - 4.5).abs() < 1e-9);
         assert!((s.sim_uj_per_inf - 1.0).abs() < 1e-9);
+        assert!((s.mean_batch - 5.0).abs() < 1e-9);
+        // throughput clock started at Metrics creation, so rps is finite
+        // and positive once anything completed
+        assert!(s.elapsed_s > 0.0);
+        assert!(s.req_per_sec > 0.0);
+    }
+
+    #[test]
+    fn json_form_is_finite_and_writable() {
+        let m = Metrics::default();
+        let j = m.summary().to_json(); // empty reservoir => NaN percentiles
+        let txt = crate::util::json::write(&j);
+        assert!(txt.contains("\"p50_us\":0"), "{txt}");
+        // round-trips through our own parser
+        assert!(crate::util::json::parse(&txt).is_ok());
     }
 }

@@ -1,10 +1,12 @@
 //! The always-on serving coordinator (L3).
 //!
 //! Owns the request loop of the AON-CiM accelerator: clients submit feature
-//! frames (KWS spectrograms / VWW images), the batcher groups them onto the
-//! exported serving graphs, the PCM state manager advances the drift clock
-//! and periodically recalibrates GDC, and the executor runs the compiled
-//! PJRT graph. Python is never on this path.
+//! frames (KWS spectrograms / VWW images), the batcher drains them into
+//! layer-serial batched launches (zero-padding FIFO chunks on the native
+//! engine, padded static-graph plans on PJRT), the PCM state manager
+//! advances the drift clock and periodically recalibrates GDC, and the
+//! executor is any [`backend::InferenceBackend`](crate::backend). Python is
+//! never on this path.
 
 pub mod batcher;
 pub mod metrics;

@@ -5,6 +5,15 @@
 //! default (hermetic: no XLA, no exported HLO), or the compiled PJRT
 //! graphs when built with the `pjrt` feature and configured via
 //! [`ServeConfig::backend`].
+//!
+//! Engines that accept arbitrary batch shapes
+//! (`InferenceBackend::supports_dynamic_batch`, i.e. the native
+//! layer-serial engine) get the zero-padding FIFO drain: up to
+//! [`ServeConfig::max_batch`] queued requests are packed into a *single*
+//! `run_batch`, which executes one im2col + one batched GEMM per layer
+//! across the whole batch — the AON-CiM layer-serial schedule. Static-shape
+//! engines (PJRT) keep the padded multi-launch plan over their exported
+//! graph sizes.
 
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
@@ -33,6 +42,13 @@ pub struct ServeConfig {
     pub backend: BackendKind,
     /// batcher window: how long to wait for more requests after the first
     pub max_wait: Duration,
+    /// largest single launch for dynamically-shaped backends (`0` = use the
+    /// backend's largest advertised batch size). Ignored by static-shape
+    /// engines, whose launch sizes are fixed by their exported graphs.
+    pub max_batch: usize,
+    /// native GEMM worker-pool size (`0` = automatic: all cores, capped
+    /// at 8). Ignored by the PJRT backend.
+    pub threads: usize,
     /// simulated seconds per wall second (drift clock acceleration)
     pub time_scale: f64,
     pub seed: u64,
@@ -50,6 +66,8 @@ impl ServeConfig {
             bits,
             backend: BackendKind::default(),
             max_wait: Duration::from_millis(2),
+            max_batch: 0,
+            threads: 0,
             time_scale: 1.0,
             seed: 7,
             refresh_every_s: 60.0,
@@ -61,6 +79,12 @@ impl ServeConfig {
     /// Builder-style backend selection.
     pub fn with_backend(mut self, backend: BackendKind) -> Self {
         self.backend = backend;
+        self
+    }
+
+    /// Builder-style dynamic-batch cap.
+    pub fn with_max_batch(mut self, max_batch: usize) -> Self {
+        self.max_batch = max_batch;
         self
     }
 }
@@ -174,12 +198,100 @@ impl Drop for Coordinator {
     }
 }
 
+/// Everything the drain path needs besides the queue and the PCM state;
+/// resolved once at worker start, never on the dispatch path.
+struct Dispatcher<'a> {
+    be: &'a (dyn InferenceBackend + 'a),
+    metrics: &'a Metrics,
+    /// static launch shapes (ascending), for the padded plan
+    batch_sizes: Vec<usize>,
+    /// true: FIFO zero-padding plan over `max_batch`-sized chunks
+    dynamic: bool,
+    max_batch: usize,
+    /// reusable input buffer (largest launch) — no hot-path allocation
+    xbuf: Vec<f32>,
+    feat_len: usize,
+    classes: usize,
+    nj_per_inf: f64,
+}
+
+impl Dispatcher<'_> {
+    fn drain(&mut self, state: &mut PcmState, queue: &mut Vec<Request>)
+             -> anyhow::Result<()> {
+        if queue.is_empty() {
+            return Ok(());
+        }
+        let plan = if self.dynamic {
+            batcher::plan_dynamic(queue.len(), self.max_batch)
+        } else {
+            batcher::plan(queue.len(), self.batch_sizes.clone())
+        };
+        self.metrics
+            .padded_slots
+            .fetch_add(plan.padding as u64, Ordering::Relaxed);
+
+        let sim_age = state.sim_age_s();
+        // borrow the cached effective weights directly — no per-drain clone
+        // of the full weight set (the PJRT path copies inside run_batch,
+        // the native path reads the slices in place)
+        let (ws, alphas, refreshed) = state.current_weights();
+        if refreshed {
+            self.metrics.weight_refreshes.fetch_add(1, Ordering::Relaxed);
+        }
+
+        let feat_len = self.feat_len;
+        let mut taken = 0usize;
+        for &launch in &plan.launches {
+            let count = launch.min(queue.len() - taken);
+
+            let xb = &mut self.xbuf[..launch * feat_len];
+            for (i, r) in queue[taken..taken + count].iter().enumerate() {
+                xb[i * feat_len..(i + 1) * feat_len].copy_from_slice(&r.features);
+            }
+            for i in count..launch {
+                // pad with the first request's features (static plans only;
+                // dynamic launches are always exact)
+                let (a, b) = xb.split_at_mut(i * feat_len);
+                b[..feat_len].copy_from_slice(&a[..feat_len]);
+            }
+
+            let out = self.be.run_batch(xb, launch, ws, alphas)?;
+            self.metrics.launches.fetch_add(1, Ordering::Relaxed);
+            self.metrics
+                .batched_slots
+                .fetch_add(count as u64, Ordering::Relaxed);
+
+            let now = Instant::now();
+            for (i, r) in queue[taken..taken + count].iter().enumerate() {
+                let row = &out[i * self.classes..(i + 1) * self.classes];
+                let pred = logits::argmax(row);
+                // account BEFORE replying: clients must observe settled
+                // metrics
+                self.metrics.completed.fetch_add(1, Ordering::Relaxed);
+                self.metrics
+                    .record_latency_us((now - r.submitted).as_secs_f64() * 1e6);
+                self.metrics.add_energy_nj(self.nj_per_inf);
+                let _ = r.reply.send(Response {
+                    pred,
+                    logits: row.to_vec(),
+                    latency: now - r.submitted,
+                    sim_age_s: sim_age,
+                });
+            }
+            taken += count;
+        }
+        queue.clear();
+        Ok(())
+    }
+}
+
 fn worker(cfg: ServeConfig, rx: mpsc::Receiver<Msg>, metrics: Arc<Metrics>)
           -> anyhow::Result<()> {
     // the worker owns the artifact store and the backend (PJRT handles,
     // when in play, stay on-thread)
     let store = ArtifactStore::open(&cfg.artifacts_dir)?;
-    let be = backend::create(cfg.backend, &store, &cfg.vid, cfg.bits)?;
+    let be = backend::create_with_threads(cfg.backend, &store, &cfg.vid,
+                                          cfg.bits, cfg.threads)?;
     // model geometry is invariant across launches: resolve it once here,
     // never on the dispatch path
     let feat_len = be.feat_len();
@@ -213,11 +325,31 @@ fn worker(cfg: ServeConfig, rx: mpsc::Receiver<Msg>, metrics: Arc<Metrics>)
     let mut state = PcmState::new(deployed, params, cfg.seed ^ 0xD1F7, cfg.time_scale);
     state.refresh_every_s = cfg.refresh_every_s;
 
-    let max_batch = *batch_sizes.last().unwrap();
-    let max_queue = max_batch * 4;
+    let dynamic = be.supports_dynamic_batch();
+    let largest_static = *batch_sizes.last().unwrap();
+    let max_batch = if cfg.max_batch > 0 {
+        cfg.max_batch
+    } else {
+        largest_static
+    };
+    // largest single launch either plan can produce, sizing the input buffer
+    let xcap = if dynamic { max_batch } else { largest_static };
+    if dynamic {
+        be.prepare(max_batch)?;
+    }
+    let max_queue = xcap * 4;
     let mut queue: Vec<Request> = Vec::with_capacity(max_queue);
-    // reusable input buffer (largest batch) — no allocation on the hot path
-    let mut xbuf = vec![0f32; max_batch * feat_len];
+    let mut disp = Dispatcher {
+        be: be.as_ref(),
+        metrics: &metrics,
+        batch_sizes,
+        dynamic,
+        max_batch,
+        xbuf: vec![0f32; xcap * feat_len],
+        feat_len,
+        classes,
+        nj_per_inf,
+    };
 
     loop {
         // block for the first request
@@ -235,82 +367,19 @@ fn worker(cfg: ServeConfig, rx: mpsc::Receiver<Msg>, metrics: Arc<Metrics>)
             match rx.recv_timeout(deadline - now) {
                 Ok(Msg::Req(r)) => queue.push(r),
                 Ok(Msg::Stop) => {
-                    drain(be.as_ref(), &mut state, &mut queue, &metrics,
-                          &batch_sizes, &mut xbuf, feat_len, classes,
-                          nj_per_inf)?;
+                    disp.drain(&mut state, &mut queue)?;
                     return Ok(());
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
         }
-        drain(be.as_ref(), &mut state, &mut queue, &metrics, &batch_sizes,
-              &mut xbuf, feat_len, classes, nj_per_inf)?;
+        disp.drain(&mut state, &mut queue)?;
 
         // drift management between dispatches
         if cfg.reprogram && state.needs_reprogram() {
             state.reprogram(&store, &cfg.vid)?;
         }
     }
-    Ok(())
-}
-
-#[allow(clippy::too_many_arguments)]
-fn drain(be: &dyn InferenceBackend, state: &mut PcmState,
-         queue: &mut Vec<Request>, metrics: &Metrics, batch_sizes: &[usize],
-         xbuf: &mut [f32], feat_len: usize, classes: usize,
-         nj_per_inf: f64) -> anyhow::Result<()> {
-    if queue.is_empty() {
-        return Ok(());
-    }
-    let plan = batcher::plan(queue.len(), batch_sizes.to_vec());
-    metrics
-        .padded_slots
-        .fetch_add(plan.padding as u64, Ordering::Relaxed);
-
-    let sim_age = state.sim_age_s();
-    // borrow the cached effective weights directly — no per-drain clone of
-    // the full weight set (the PJRT path copies inside run_batch, the
-    // native path reads the slices in place)
-    let (ws, alphas, refreshed) = state.current_weights();
-    if refreshed {
-        metrics.weight_refreshes.fetch_add(1, Ordering::Relaxed);
-    }
-
-    let mut taken = 0usize;
-    for &launch in &plan.launches {
-        let count = launch.min(queue.len() - taken);
-
-        let xb = &mut xbuf[..launch * feat_len];
-        for (i, r) in queue[taken..taken + count].iter().enumerate() {
-            xb[i * feat_len..(i + 1) * feat_len].copy_from_slice(&r.features);
-        }
-        for i in count..launch {
-            // pad with the first request's features
-            let (a, b) = xb.split_at_mut(i * feat_len);
-            b[..feat_len].copy_from_slice(&a[..feat_len]);
-        }
-
-        let out = be.run_batch(xb, launch, ws, alphas)?;
-        metrics.launches.fetch_add(1, Ordering::Relaxed);
-
-        let now = Instant::now();
-        for (i, r) in queue[taken..taken + count].iter().enumerate() {
-            let row = &out[i * classes..(i + 1) * classes];
-            let pred = logits::argmax(row);
-            // account BEFORE replying: clients must observe settled metrics
-            metrics.completed.fetch_add(1, Ordering::Relaxed);
-            metrics.record_latency_us((now - r.submitted).as_secs_f64() * 1e6);
-            metrics.add_energy_nj(nj_per_inf);
-            let _ = r.reply.send(Response {
-                pred,
-                logits: row.to_vec(),
-                latency: now - r.submitted,
-                sim_age_s: sim_age,
-            });
-        }
-        taken += count;
-    }
-    queue.clear();
     Ok(())
 }

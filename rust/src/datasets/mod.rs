@@ -1,4 +1,7 @@
-//! Test-set loading (ANDS binary, written by `python/compile/data.py`).
+//! Test-set loading (ANDS binary, written by `python/compile/data.py`) and
+//! synthetic artifact-bundle generation ([`synth`]).
+
+pub mod synth;
 
 use std::io::Read;
 use std::path::Path;

@@ -1,0 +1,324 @@
+//! Synthetic artifact bundles: a complete on-disk artifact directory
+//! (manifest + meta + ANWT weights + ANDS dataset, no HLO files) generated
+//! in-process.
+//!
+//! Everything that consumes artifacts — the serving coordinator, eval, the
+//! serving bench, hermetic tests — can run against one of these bundles on
+//! a fresh checkout: no `make artifacts`, no Python, no XLA. The writers
+//! mirror the binary formats of `python/compile/export.py` exactly, so the
+//! bundle exercises the same `ArtifactStore` loading paths as real exports.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+/// Shape of a generated bundle: a stack of stride-1 SAME conv3x3 layers
+/// followed by a global-average-pool dense head.
+#[derive(Clone, Debug)]
+pub struct SynthSpec {
+    /// variant id (manifest key, file prefix)
+    pub vid: String,
+    /// dataset task name; the dataset file is `<task>_test.bin`
+    pub task: String,
+    /// square input: H = W = `hw`
+    pub hw: usize,
+    pub in_ch: usize,
+    /// output channels of each conv3x3 layer, in order
+    pub conv_ch: Vec<usize>,
+    pub classes: usize,
+    /// labelled samples in the test set
+    pub samples: usize,
+    /// whether layers run on the simulated analog array (DAC/ADC quant +
+    /// PCM programming) or exactly on the digital path
+    pub analog: bool,
+    pub seed: u64,
+}
+
+impl SynthSpec {
+    /// Minimal two-layer bundle (conv + dense): fast to program, used by
+    /// hermetic tests.
+    pub fn tiny(vid: &str) -> Self {
+        SynthSpec {
+            vid: vid.to_string(),
+            task: "kws".to_string(),
+            hw: 4,
+            in_ch: 1,
+            conv_ch: vec![2],
+            classes: 2,
+            samples: 8,
+            analog: true,
+            seed: 7,
+        }
+    }
+
+    /// The serving-bench workload: per-sample conv rows (6x6 = 36) sit
+    /// *below* `gemm::PAR_ROW_THRESHOLD`, so single-request launches run
+    /// the GEMM single-threaded while batched launches cross the threshold
+    /// and use the worker pool — the regime the layer-serial batcher is
+    /// designed for.
+    pub fn bench(vid: &str) -> Self {
+        SynthSpec {
+            vid: vid.to_string(),
+            task: "kws".to_string(),
+            hw: 6,
+            in_ch: 1,
+            conv_ch: vec![8, 16],
+            classes: 2,
+            samples: 64,
+            analog: true,
+            seed: 11,
+        }
+    }
+
+    /// A single *digital* (exact, unquantized) dense layer with identity
+    /// weights over a `[1, 1, classes]` input: logits == features, bit for
+    /// bit. Tests use it to observe batch assembly directly — any
+    /// cross-request mixup or reordering in the batcher is visible in the
+    /// response payload.
+    pub fn identity_dense(vid: &str, classes: usize) -> Self {
+        SynthSpec {
+            vid: vid.to_string(),
+            task: "kws".to_string(),
+            hw: 1,
+            in_ch: classes,
+            conv_ch: vec![],
+            classes,
+            samples: 8,
+            analog: false,
+            seed: 3,
+        }
+    }
+
+    pub fn feat_len(&self) -> usize {
+        self.hw * self.hw * self.in_ch
+    }
+}
+
+/// Write the complete bundle into `dir` (created if missing).
+pub fn write_bundle(dir: &Path, spec: &SynthSpec) -> anyhow::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let meta = meta_json(spec);
+    std::fs::write(dir.join(format!("{}.meta.json", spec.vid)),
+                   json::write(&meta))?;
+    write_weights(&dir.join(format!("{}.weights.bin", spec.vid)), spec)?;
+    write_dataset(&dir.join(format!("{}_test.bin", spec.task)), spec)?;
+
+    let mut entry = BTreeMap::new();
+    entry.insert("vid".to_string(), Json::Str(spec.vid.clone()));
+    entry.insert("task".to_string(), Json::Str(spec.task.clone()));
+    entry.insert("model".to_string(), Json::Str("synth".to_string()));
+    entry.insert("eta".to_string(), Json::Num(0.0));
+    entry.insert("trained_bits".to_string(), Json::Num(8.0));
+    entry.insert("fp_test_acc".to_string(), Json::Num(1.0));
+    entry.insert("meta".to_string(),
+                 Json::Str(format!("{}.meta.json", spec.vid)));
+    entry.insert("weights".to_string(),
+                 Json::Str(format!("{}.weights.bin", spec.vid)));
+    let manifest = Json::Arr(vec![Json::Obj(entry)]);
+    std::fs::write(dir.join("manifest.json"), json::write(&manifest))?;
+    Ok(())
+}
+
+/// Write the bundle into a fresh process-unique temp directory and return
+/// its path (callers may delete it when done).
+pub fn write_bundle_tmp(tag: &str, spec: &SynthSpec)
+                        -> anyhow::Result<std::path::PathBuf> {
+    let dir = std::env::temp_dir()
+        .join(format!("analognets_synth_{}_{tag}", std::process::id()));
+    write_bundle(&dir, spec)?;
+    Ok(dir)
+}
+
+fn usizes(v: &[usize]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+fn f32s(v: &[f32]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn layer_json(name: &str, kind: &str, in_ch: usize, out_ch: usize, hw: usize,
+              out_hw: usize, k_gemm: usize, analog: bool, relu: bool) -> Json {
+    let mut l = BTreeMap::new();
+    l.insert("name".to_string(), Json::Str(name.to_string()));
+    l.insert("kind".to_string(), Json::Str(kind.to_string()));
+    l.insert("in_ch".to_string(), Json::Num(in_ch as f64));
+    l.insert("out_ch".to_string(), Json::Num(out_ch as f64));
+    l.insert("stride".to_string(), usizes(&[1, 1]));
+    l.insert("relu".to_string(), Json::Bool(relu));
+    l.insert("analog".to_string(), Json::Bool(analog));
+    l.insert("in_h".to_string(), Json::Num(hw as f64));
+    l.insert("in_w".to_string(), Json::Num(hw as f64));
+    l.insert("out_h".to_string(), Json::Num(out_hw as f64));
+    l.insert("out_w".to_string(), Json::Num(out_hw as f64));
+    l.insert("k_gemm".to_string(), Json::Num(k_gemm as f64));
+    l.insert("weight_shape".to_string(), usizes(&[k_gemm, out_ch]));
+    l.insert("graph_weight_shape".to_string(), usizes(&[k_gemm, out_ch]));
+    l.insert("w_scale".to_string(), Json::Num(1.0));
+    l.insert("w_max".to_string(), Json::Num(1.0));
+    l.insert("r_dac".to_string(), Json::Num(8.0));
+    l.insert("r_adc".to_string(), Json::Num(8.0));
+    l.insert("dig_scale".to_string(), f32s(&vec![1.0f32; out_ch]));
+    l.insert("dig_bias".to_string(), f32s(&vec![0.0f32; out_ch]));
+    Json::Obj(l)
+}
+
+fn meta_json(spec: &SynthSpec) -> Json {
+    let mut layers = Vec::new();
+    let mut ch = spec.in_ch;
+    for (i, &out_c) in spec.conv_ch.iter().enumerate() {
+        layers.push(layer_json(&format!("c{i}"), "conv3x3", ch, out_c,
+                               spec.hw, spec.hw, 9 * ch, spec.analog, true));
+        ch = out_c;
+    }
+    layers.push(layer_json("fc", "dense", ch, spec.classes, spec.hw, 1, ch,
+                           spec.analog, false));
+
+    let mut m = BTreeMap::new();
+    m.insert("model".to_string(), Json::Str("synth".to_string()));
+    m.insert("variant".to_string(), Json::Str(spec.vid.clone()));
+    m.insert("input_hwc".to_string(),
+             usizes(&[spec.hw, spec.hw, spec.in_ch]));
+    m.insert("num_classes".to_string(), Json::Num(spec.classes as f64));
+    m.insert("eta".to_string(), Json::Num(0.0));
+    m.insert("fp_test_acc".to_string(), Json::Num(1.0));
+    m.insert("trained_adc_bits".to_string(), Json::Num(8.0));
+    m.insert("layers".to_string(), Json::Arr(layers));
+    m.insert("hlo".to_string(), Json::Obj(BTreeMap::new()));
+    Json::Obj(m)
+}
+
+/// ANWT weight file: per-layer tensors, deterministic from the spec seed.
+/// Conv layers get a dominant positive center tap plus small Gaussian
+/// jitter (activations survive ReLU); the dense head reads the first
+/// pooled channels so bright/dim inputs stay separable. The identity spec
+/// writes an exact identity matrix.
+fn write_weights(path: &Path, spec: &SynthSpec) -> anyhow::Result<()> {
+    let mut rng = Rng::new(spec.seed);
+    let mut tensors: Vec<(Vec<u32>, Vec<f32>)> = Vec::new();
+    let mut ch = spec.in_ch;
+    for &out_c in &spec.conv_ch {
+        let k = 9 * ch;
+        let mut w = vec![0f32; k * out_c];
+        for (i, v) in w.iter_mut().enumerate() {
+            *v = 0.08 * rng.gauss(0.0, 1.0) as f32;
+            // center tap (ky=1, kx=1): rows 4*ch .. 5*ch of the [9ch, out]
+            // matrix
+            let row = i / out_c;
+            if (4 * ch..5 * ch).contains(&row) {
+                *v += 0.5;
+            }
+        }
+        tensors.push((vec![k as u32, out_c as u32], w));
+        ch = out_c;
+    }
+    // dense head: class j reads pooled channel j (mod ch)
+    let mut w = vec![0f32; ch * spec.classes];
+    for j in 0..spec.classes {
+        w[(j % ch) * spec.classes + j] = 1.0;
+    }
+    tensors.push((vec![ch as u32, spec.classes as u32], w));
+
+    let mut b = Vec::new();
+    b.extend_from_slice(b"ANWT");
+    b.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for (shape, data) in &tensors {
+        b.extend_from_slice(&(shape.len() as u32).to_le_bytes());
+        for d in shape {
+            b.extend_from_slice(&d.to_le_bytes());
+        }
+        for v in data {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    std::fs::write(path, b)?;
+    Ok(())
+}
+
+/// ANDS dataset: alternating dim/bright frames (labels 0/1 mod `classes`)
+/// with a small per-pixel ramp so samples are pairwise distinct.
+fn write_dataset(path: &Path, spec: &SynthSpec) -> anyhow::Result<()> {
+    let feat = spec.feat_len();
+    let mut x = Vec::with_capacity(spec.samples * feat);
+    let mut y = Vec::with_capacity(spec.samples);
+    for s in 0..spec.samples {
+        let label = s % spec.classes.max(1);
+        let base = 0.1 + 0.7 * label as f32 / spec.classes.max(1) as f32;
+        for i in 0..feat {
+            x.push(base + 0.01 * (i as f32) + 0.001 * (s as f32));
+        }
+        y.push(label as u32);
+    }
+
+    let mut b = Vec::new();
+    b.extend_from_slice(b"ANDS");
+    b.extend_from_slice(&(y.len() as u32).to_le_bytes());
+    b.extend_from_slice(&3u32.to_le_bytes());
+    for d in [spec.hw, spec.hw, spec.in_ch] {
+        b.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+    for v in &x {
+        b.extend_from_slice(&v.to_le_bytes());
+    }
+    for v in &y {
+        b.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path, b)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{BackendKind, InferenceBackend};
+    use crate::runtime::ArtifactStore;
+
+    #[test]
+    fn bundle_loads_and_serves_a_batch() {
+        let spec = SynthSpec::bench("synthmod");
+        let dir = write_bundle_tmp("synthmod", &spec).unwrap();
+        let store = ArtifactStore::open(&dir).unwrap();
+        let meta = store.meta("synthmod").unwrap();
+        assert_eq!(meta.layers.len(), 3);
+        assert_eq!(meta.input_hwc, (6, 6, 1));
+        let w = store.weights("synthmod").unwrap();
+        assert_eq!(w.len(), meta.layers.len());
+        for (t, lm) in w.iter().zip(meta.layers.iter()) {
+            assert_eq!(t.shape, lm.graph_weight_shape);
+        }
+        let ds = store.dataset("kws").unwrap();
+        assert_eq!(ds.len(), 64);
+        assert_eq!(ds.feat_len(), 36);
+
+        // the bundle executes end-to-end on the native backend
+        let be = crate::backend::create(BackendKind::Native, &store,
+                                        "synthmod", 8).unwrap();
+        let ws: Vec<crate::backend::HostTensor> =
+            w.iter().map(crate::backend::HostTensor::from_tensor).collect();
+        let gdc = vec![1.0f32; ws.len()];
+        let xb = ds.padded_batch(0, 4);
+        let out = be.run_batch(&xb, 4, &ws, &gdc).unwrap();
+        assert_eq!(out.len(), 4 * 2);
+        assert!(out.iter().all(|v| v.is_finite()));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn identity_bundle_is_exact() {
+        let spec = SynthSpec::identity_dense("ident", 3);
+        let dir = write_bundle_tmp("ident", &spec).unwrap();
+        let store = ArtifactStore::open(&dir).unwrap();
+        let be = crate::backend::create(BackendKind::Native, &store, "ident",
+                                        8).unwrap();
+        let w = store.weights("ident").unwrap();
+        let ws: Vec<crate::backend::HostTensor> =
+            w.iter().map(crate::backend::HostTensor::from_tensor).collect();
+        let x = vec![0.25f32, -1.5, 3.0];
+        let out = be.run_batch(&x, 1, &ws, &[1.0]).unwrap();
+        assert_eq!(out, x, "digital identity dense must be exact");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -21,6 +21,7 @@ use analognets::util::table::Table;
 
 const USAGE: &str = "usage: analognets <serve|eval|map|report|selftest> [options]
   serve    --vid kws_full_e10_8b [--bits 8] [--requests 500] [--time-scale 1e4]
+           [--max-batch N (0=auto)] [--threads N (0=auto)]
   eval     --vid kws_full_e10_8b [--bits 8] [--runs 5] [--samples 256]
   map      --vid kws_full_e10_8b [--rows 1024 --cols 512] [--split]
   report   --vid kws_full_e10_8b [--bits 8]
@@ -63,6 +64,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let mut cfg = ServeConfig::new(&vid, bits);
     cfg.backend = BackendKind::from_args(args)?;
     cfg.time_scale = args.opt_f64("time-scale", 1e4);
+    cfg.max_batch = args.opt_usize("max-batch", 0);
+    cfg.threads = args.opt_usize("threads", 0);
     let store = ArtifactStore::open_default()?;
     let meta = store.meta(&vid)?;
     let task = if meta.model.contains("vww") { "vww" } else { "kws" };

@@ -2,8 +2,31 @@
 //!
 //! C[M,N] = A[M,K] @ B[K,N], row-major.  The kernel is a straightforward
 //! i-k-j loop with a register-blocked inner loop — the B row reuse along `j`
-//! autovectorizes well; the §Perf pass adds thread-level parallelism over
-//! row chunks.
+//! autovectorizes well.  Thread-level parallelism over row chunks runs on
+//! the persistent [`pool::WorkerPool`](crate::simulator::pool::WorkerPool)
+//! (no per-call thread spawning; each output row is computed independently
+//! with an identical accumulation order, so chunking never changes results).
+
+use crate::simulator::pool;
+
+/// Row count below which parallel dispatch is not worth the latch overhead:
+/// a chunked launch costs ~2 channel/condvar round trips per lane, which at
+/// fewer than this many rows exceeds the GEMM work itself for the layer
+/// shapes we serve.  Callers asking for many threads on a small `m` are
+/// deliberately (and now visibly) run single-threaded.
+pub const PAR_ROW_THRESHOLD: usize = 64;
+
+/// Resolve a thread-count knob: `0` means "use every available core"
+/// (`std::thread::available_parallelism`), anything else is taken as-is.
+pub fn effective_threads(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    } else {
+        threads
+    }
+}
 
 /// Single-threaded blocked GEMM.
 pub fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
@@ -34,25 +57,27 @@ pub fn gemm_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usi
     }
 }
 
-/// Multi-threaded GEMM over row chunks (scoped threads, no deps).
+/// Multi-threaded GEMM over row chunks on the process-wide persistent
+/// worker pool ([`pool::global`]).  `threads == 0` means
+/// [`effective_threads`] (all cores); `m < `[`PAR_ROW_THRESHOLD`] always
+/// runs single-threaded regardless of `threads` (see the constant's docs).
+/// Engines that own a pool (`NativeModel`) call it directly instead.
 pub fn gemm_parallel(a: &[f32], b: &[f32], m: usize, k: usize, n: usize,
                      threads: usize) -> Vec<f32> {
-    if threads <= 1 || m < 64 {
-        return gemm(a, b, m, k, n);
-    }
     let mut c = vec![0f32; m * n];
-    let chunk = (m + threads - 1) / threads;
-    std::thread::scope(|s| {
-        for (ci, cchunk) in c.chunks_mut(chunk * n).enumerate() {
-            let lo = ci * chunk;
-            let rows = cchunk.len() / n;
-            let a = &a[lo * k..(lo + rows) * k];
-            s.spawn(move || {
-                gemm_into(a, b, cchunk, rows, k, n);
-            });
-        }
-    });
+    gemm_parallel_into(a, b, &mut c, m, k, n, threads);
     c
+}
+
+/// [`gemm_parallel`] into a preallocated buffer.
+pub fn gemm_parallel_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize,
+                          k: usize, n: usize, threads: usize) {
+    let lanes = effective_threads(threads);
+    if lanes <= 1 || m < PAR_ROW_THRESHOLD {
+        gemm_into(a, b, c, m, k, n);
+    } else {
+        pool::global().gemm_chunks(a, b, c, m, k, n, lanes);
+    }
 }
 
 #[cfg(test)]
@@ -97,6 +122,39 @@ mod tests {
         let c1 = gemm(&a, &b, m, k, n);
         let c2 = gemm_parallel(&a, &b, m, k, n, 4);
         assert_eq!(c1, c2);
+    }
+
+    /// Satellite invariant: chunked parallel dispatch is bit-exact against
+    /// the serial kernel over ragged row-chunk shapes (m not divisible by
+    /// the lane count, m straddling the threshold, more lanes than rows).
+    #[test]
+    fn prop_parallel_bit_exact_ragged_shapes() {
+        let mut rng = Rng::new(0xBEEF);
+        for trial in 0..40 {
+            let m = 1 + rng.below(300);
+            let k = 1 + rng.below(48);
+            let n = 1 + rng.below(24);
+            let threads = rng.below(9); // includes 0 = available_parallelism
+            let a: Vec<f32> = (0..m * k).map(|_| rng.gauss(0.0, 1.0) as f32).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.gauss(0.0, 1.0) as f32).collect();
+            let c1 = gemm(&a, &b, m, k, n);
+            let c2 = gemm_parallel(&a, &b, m, k, n, threads);
+            assert_eq!(c1, c2,
+                       "trial {trial}: m={m} k={k} n={n} threads={threads}");
+        }
+    }
+
+    #[test]
+    fn threshold_and_thread_knob_semantics() {
+        // documented: below the threshold the row count wins over `threads`
+        assert_eq!(PAR_ROW_THRESHOLD, 64);
+        assert!(effective_threads(0) >= 1);
+        assert_eq!(effective_threads(3), 3);
+        // small-m calls still produce correct results at any thread count
+        let a = vec![1.0f32; 4 * 2];
+        let b = vec![2.0f32; 2 * 3];
+        let c = gemm_parallel(&a, &b, 4, 2, 3, 0);
+        assert!(c.iter().all(|&v| v == 4.0));
     }
 
     #[test]

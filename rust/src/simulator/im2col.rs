@@ -22,8 +22,31 @@ pub fn patches3x3(
     let (sh, sw) = stride;
     let ho = out_dim(h, sh);
     let wo = out_dim(w, sw);
+    let mut out = vec![0f32; n * ho * wo * 9 * c];
+    patches3x3_into(x, &mut out, n, h, w, c, stride);
+    out
+}
+
+/// [`patches3x3`] into a caller-provided buffer (hot path: the batched
+/// engine ping-pongs two preallocated scratch buffers instead of allocating
+/// a patch matrix per layer).  `out` must be exactly `n*ho*wo*9c` long; it
+/// is fully overwritten (zero-padding included).
+pub fn patches3x3_into(
+    x: &[f32],
+    out: &mut [f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    stride: (usize, usize),
+) {
+    let (sh, sw) = stride;
+    let ho = out_dim(h, sh);
+    let wo = out_dim(w, sw);
     let k = 9 * c;
-    let mut out = vec![0f32; n * ho * wo * k];
+    assert_eq!(x.len(), n * h * w * c, "im2col input shape");
+    assert_eq!(out.len(), n * ho * wo * k, "im2col output shape");
+    out.fill(0.0);
     for ni in 0..n {
         for oh in 0..ho {
             for ow in 0..wo {
@@ -46,12 +69,21 @@ pub fn patches3x3(
             }
         }
     }
-    out
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn into_matches_allocating_and_clears_stale_data() {
+        let (n, h, w, c) = (2, 5, 4, 3);
+        let x: Vec<f32> = (0..n * h * w * c).map(|i| (i as f32).sin()).collect();
+        let want = patches3x3(&x, n, h, w, c, (2, 1));
+        let mut out = vec![123.0f32; want.len()]; // stale garbage
+        patches3x3_into(&x, &mut out, n, h, w, c, (2, 1));
+        assert_eq!(out, want);
+    }
 
     #[test]
     fn out_dims() {

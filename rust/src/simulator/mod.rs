@@ -9,5 +9,7 @@
 pub mod forward;
 pub mod gemm;
 pub mod im2col;
+pub mod pool;
 
 pub use forward::NativeModel;
+pub use pool::WorkerPool;

@@ -1,0 +1,303 @@
+//! Persistent worker pool for row-parallel GEMM.
+//!
+//! The serving hot path used to spawn scoped threads on *every*
+//! `gemm_parallel` call; at serving rates that is thousands of
+//! thread-spawn/join cycles per second. A [`WorkerPool`] is created once
+//! (owned by `NativeModel`, or process-wide via [`global`]) and its workers
+//! park on a job queue between launches, so a batched GEMM costs one channel
+//! send per row chunk instead of one thread spawn.
+//!
+//! The pool is std-only: `mpsc` job queue + `Mutex`/`Condvar` completion
+//! latch. Jobs carry raw-pointer views of the caller's slices; soundness
+//! comes from the dispatch protocol — the caller blocks on the latch until
+//! every submitted chunk has run, so the borrowed buffers strictly outlive
+//! the jobs that touch them, and row chunks of `C` are disjoint by
+//! construction (`chunks_mut`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+use crate::simulator::gemm;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed set of parked worker threads executing row-chunk GEMM jobs.
+///
+/// `lanes` counts the caller thread too: a pool built with `threads = 4`
+/// spawns 3 workers and runs the first chunk inline, so a 4-lane GEMM uses
+/// exactly 4 cores. `threads == 0` means [`gemm::effective_threads`]
+/// (`available_parallelism`), and `threads <= 1` spawns no workers at all —
+/// every call degenerates to the single-threaded kernel.
+pub struct WorkerPool {
+    tx: Mutex<Option<mpsc::Sender<Job>>>,
+    workers: Vec<JoinHandle<()>>,
+    lanes: usize,
+}
+
+impl WorkerPool {
+    pub fn new(threads: usize) -> Self {
+        let lanes = gemm::effective_threads(threads);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::with_capacity(lanes.saturating_sub(1));
+        for i in 0..lanes.saturating_sub(1) {
+            let rx = rx.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("gemm-worker-{i}"))
+                .spawn(move || loop {
+                    // take the lock only long enough to pop one job
+                    let job = rx.lock().unwrap().recv();
+                    match job {
+                        Ok(j) => j(),
+                        Err(_) => break, // pool dropped
+                    }
+                })
+                .expect("spawn gemm worker");
+            workers.push(h);
+        }
+        WorkerPool {
+            tx: Mutex::new(Some(tx)),
+            workers,
+            lanes,
+        }
+    }
+
+    /// Parallel lanes this pool can drive (workers + the calling thread).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    fn submit(&self, job: Job) {
+        self.tx
+            .lock()
+            .unwrap()
+            .as_ref()
+            .expect("worker pool already shut down")
+            .send(job)
+            .expect("gemm worker hung up");
+    }
+
+    /// `C[M,N] = A[M,K] @ B[K,N]` over this pool's lanes. Falls back to the
+    /// single-threaded kernel below [`gemm::PAR_ROW_THRESHOLD`] rows.
+    pub fn gemm_into(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize,
+                     k: usize, n: usize) {
+        self.gemm_chunks(a, b, c, m, k, n, self.lanes);
+    }
+
+    /// Like [`gemm_into`](Self::gemm_into) with an explicit chunk count
+    /// (`lanes` row chunks are dispatched; parallelism is additionally
+    /// bounded by the pool's worker count).
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_chunks(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize,
+                       k: usize, n: usize, lanes: usize) {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), k * n);
+        assert_eq!(c.len(), m * n);
+        let lanes = lanes.min(m).max(1);
+        if lanes <= 1 || m < gemm::PAR_ROW_THRESHOLD || self.workers.is_empty() {
+            gemm::gemm_into(a, b, c, m, k, n);
+            return;
+        }
+        let chunk = m.div_ceil(lanes);
+        let latch = Arc::new(Latch::new());
+        let mut submitted = 0usize;
+        let mut chunks = c.chunks_mut(chunk * n).enumerate();
+        let (_, head) = chunks.next().expect("m > 0");
+        for (ci, cchunk) in chunks {
+            let lo = ci * chunk;
+            let rows = cchunk.len() / n;
+            let ra = RawSlice::of(&a[lo * k..(lo + rows) * k]);
+            let rb = RawSlice::of(b);
+            let rc = RawSliceMut::of(cchunk);
+            let latch = latch.clone();
+            submitted += 1;
+            self.submit(Box::new(move || {
+                // SAFETY: the caller blocks on `latch.wait` until this job
+                // has arrived, so `a`, `b` and this (disjoint) chunk of `c`
+                // outlive the job.
+                unsafe {
+                    gemm::gemm_into(ra.get(), rb.get(), rc.get_mut(), rows, k, n);
+                }
+                latch.arrive();
+            }));
+        }
+        // the calling thread is a lane too: it computes the first chunk
+        let head_rows = head.len() / n;
+        gemm::gemm_into(&a[..head_rows * k], b, head, head_rows, k, n);
+        latch.wait(submitted);
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // closing the channel wakes every worker out of recv()
+        *self.tx.lock().unwrap() = None;
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Process-wide pool sized to `available_parallelism`, created on first use.
+/// Backs the free-function [`gemm::gemm_parallel`] so one-off callers
+/// (benches, tests) share workers instead of spawning their own.
+pub fn global() -> &'static WorkerPool {
+    static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+    GLOBAL.get_or_init(|| WorkerPool::new(0))
+}
+
+/// Count-up completion latch: jobs `arrive`, the dispatcher waits for all.
+struct Latch {
+    done: AtomicUsize,
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new() -> Self {
+        Latch {
+            done: AtomicUsize::new(0),
+            lock: Mutex::new(()),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn arrive(&self) {
+        // hold the lock across the increment so a waiter can't check the
+        // counter between our store and our notify and then sleep forever
+        let _g = self.lock.lock().unwrap();
+        self.done.fetch_add(1, Ordering::Release);
+        self.cv.notify_all();
+    }
+
+    fn wait(&self, target: usize) {
+        let mut g = self.lock.lock().unwrap();
+        while self.done.load(Ordering::Acquire) < target {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+/// Raw view of a shared f32 slice, Send across the job channel.
+#[derive(Clone, Copy)]
+struct RawSlice {
+    ptr: *const f32,
+    len: usize,
+}
+
+unsafe impl Send for RawSlice {}
+
+impl RawSlice {
+    fn of(s: &[f32]) -> Self {
+        RawSlice { ptr: s.as_ptr(), len: s.len() }
+    }
+
+    /// SAFETY: caller must guarantee the source slice outlives the use.
+    unsafe fn get<'a>(self) -> &'a [f32] {
+        std::slice::from_raw_parts(self.ptr, self.len)
+    }
+}
+
+/// Raw view of an exclusive f32 slice, Send across the job channel.
+#[derive(Clone, Copy)]
+struct RawSliceMut {
+    ptr: *mut f32,
+    len: usize,
+}
+
+unsafe impl Send for RawSliceMut {}
+
+impl RawSliceMut {
+    fn of(s: &mut [f32]) -> Self {
+        RawSliceMut { ptr: s.as_mut_ptr(), len: s.len() }
+    }
+
+    /// SAFETY: caller must guarantee exclusivity and lifetime of the source.
+    unsafe fn get_mut<'a>(self) -> &'a mut [f32] {
+        std::slice::from_raw_parts_mut(self.ptr, self.len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pool_matches_single_thread() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.lanes(), 4);
+        let mut rng = Rng::new(42);
+        for (m, k, n) in [(64, 9, 8), (127, 17, 5), (300, 36, 16)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.gauss(0.0, 1.0) as f32).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.gauss(0.0, 1.0) as f32).collect();
+            let mut c1 = vec![0f32; m * n];
+            let mut c2 = vec![0f32; m * n];
+            gemm::gemm_into(&a, &b, &mut c1, m, k, n);
+            pool.gemm_into(&a, &b, &mut c2, m, k, n);
+            assert_eq!(c1, c2, "pool result differs at {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_calls() {
+        let pool = WorkerPool::new(3);
+        let (m, k, n) = (96, 4, 4);
+        let a: Vec<f32> = (0..m * k).map(|i| i as f32 * 0.01).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| i as f32 * 0.1).collect();
+        let mut want = vec![0f32; m * n];
+        gemm::gemm_into(&a, &b, &mut want, m, k, n);
+        let mut c = vec![0f32; m * n];
+        for _ in 0..50 {
+            c.fill(7.0); // gemm_into must overwrite
+            pool.gemm_into(&a, &b, &mut c, m, k, n);
+            assert_eq!(c, want);
+        }
+    }
+
+    #[test]
+    fn single_lane_pool_spawns_no_workers() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.lanes(), 1);
+        let a = vec![1.0f32; 128 * 2];
+        let b = vec![1.0f32; 2 * 2];
+        let mut c = vec![0f32; 128 * 2];
+        pool.gemm_into(&a, &b, &mut c, 128, 2, 2);
+        assert!(c.iter().all(|&v| v == 2.0));
+    }
+
+    #[test]
+    fn zero_threads_means_available_parallelism() {
+        let pool = WorkerPool::new(0);
+        assert!(pool.lanes() >= 1);
+        assert_eq!(pool.lanes(), gemm::effective_threads(0));
+    }
+
+    #[test]
+    fn concurrent_callers_share_one_pool() {
+        let pool = Arc::new(WorkerPool::new(4));
+        let (m, k, n) = (128, 8, 8);
+        let a: Vec<f32> = (0..m * k).map(|i| (i % 13) as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i % 7) as f32).collect();
+        let mut want = vec![0f32; m * n];
+        gemm::gemm_into(&a, &b, &mut want, m, k, n);
+        let want = Arc::new(want);
+        let a = Arc::new(a);
+        let b = Arc::new(b);
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let (pool, a, b, want) = (pool.clone(), a.clone(), b.clone(), want.clone());
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..20 {
+                    let mut c = vec![0f32; m * n];
+                    pool.gemm_into(&a, &b, &mut c, m, k, n);
+                    assert_eq!(&c, want.as_ref());
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

@@ -10,7 +10,7 @@
 
 pub mod perf;
 
-pub use perf::{layer_perf, model_perf, LayerPerf, ModelPerf};
+pub use perf::{layer_gemm_dims, layer_perf, model_perf, LayerPerf, ModelPerf};
 
 use crate::crossbar::ArrayGeom;
 

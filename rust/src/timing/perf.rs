@@ -78,6 +78,21 @@ pub fn model_perf(m: &ModelMapping, bits: u32, em: &EnergyModel) -> ModelPerf {
     }
 }
 
+/// The host-simulator GEMM shape `(M, K, N)` one layer multiplies at
+/// `batch` samples under the layer-serial schedule: `M` im2col rows across
+/// the whole batch, `K` the crossbar-row inner dimension, `N` the output
+/// channels. This is what the native engine actually executes (the
+/// accelerator-side analog timing above counts MVMs instead); the serving
+/// bench uses it to report per-layer GEMM GFLOP/s.
+pub fn layer_gemm_dims(lm: &crate::nn::LayerMeta, batch: usize)
+                       -> (usize, usize, usize) {
+    let m = match lm.kind {
+        crate::nn::LayerKind::Dense => batch,
+        _ => batch * lm.out_h * lm.out_w,
+    };
+    (m, lm.k_gemm, lm.graph_weight_shape[1])
+}
+
 /// Inference rate under split-GEMM mapping (Table 3): every allocated tile
 /// of a layer operates sequentially per output pixel, and row-split partial
 /// sums are accumulated digitally.
@@ -141,6 +156,37 @@ mod tests {
         assert!(digital_ns(512) < crate::timing::t_cim_ns(8));
         // and exactly meets the worst case at 4 bits with <=128 cols
         assert!(digital_ns(128) <= crate::timing::t_cim_ns(4));
+    }
+
+    #[test]
+    fn gemm_dims_scale_with_batch() {
+        let lm = crate::nn::LayerMeta {
+            name: "c0".into(),
+            kind: LayerKind::Conv3x3,
+            in_ch: 4,
+            out_ch: 16,
+            stride: (1, 1),
+            relu: true,
+            analog: true,
+            in_h: 6,
+            in_w: 6,
+            out_h: 6,
+            out_w: 6,
+            k_gemm: 36,
+            weight_shape: vec![36, 16],
+            graph_weight_shape: vec![36, 16],
+            w_scale: 1.0,
+            w_max: 1.0,
+            r_dac: 8.0,
+            r_adc: 8.0,
+            dig_scale: vec![1.0; 16],
+            dig_bias: vec![0.0; 16],
+        };
+        assert_eq!(layer_gemm_dims(&lm, 1), (36, 36, 16));
+        assert_eq!(layer_gemm_dims(&lm, 8), (8 * 36, 36, 16));
+        let mut dense = lm.clone();
+        dense.kind = LayerKind::Dense;
+        assert_eq!(layer_gemm_dims(&dense, 8).0, 8);
     }
 
     #[test]

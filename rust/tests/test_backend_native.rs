@@ -9,10 +9,12 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Duration;
 
-use analognets::backend::{BackendKind, NativeBackend};
+use analognets::backend::{BackendKind, InferenceBackend, NativeBackend};
 use analognets::coordinator::{Coordinator, ServeConfig};
 use analognets::eval::{drift_accuracy, drift_accuracy_on, EvalOpts};
+use analognets::pcm::PcmParams;
 use analognets::runtime::ArtifactStore;
+use analognets::util::rng::Rng;
 
 const VID: &str = "tiny_native";
 
@@ -159,6 +161,40 @@ fn native_coordinator_serves_end_to_end() {
     assert_eq!(m.requests, m.completed);
     assert!(m.launches >= 1 && m.launches <= m.completed, "{m}");
     eprintln!("hermetic native coordinator metrics: {m}");
+}
+
+/// The layer-serial correctness invariant behind the coordinator's dynamic
+/// batcher: one `run_batch(N)` over drifted PCM weights is bit-identical
+/// to N sequential single-request runs — batching can never change a
+/// served result, only its latency.
+#[test]
+fn batched_run_batch_is_bit_identical_to_sequential() {
+    let dir = synth_artifacts("batchserial");
+    let store = ArtifactStore::open(&dir).unwrap();
+    let meta = store.meta(VID).unwrap();
+    // multi-lane pool on purpose: chunked row dispatch must not change bits
+    let be = NativeBackend::with_threads(meta, 8, 4);
+    let params = PcmParams::default();
+    let mut rng = Rng::new(33);
+    let dep = analognets::eval::DeployedModel::program(&store, VID, &params,
+                                                       &mut rng).unwrap();
+    let (ws, alphas) = dep.read_at(3600.0, &params, &mut rng, true);
+
+    let n = 6;
+    let feat = 16;
+    let mut x = Vec::with_capacity(n * feat);
+    for s in 0..n {
+        for i in 0..feat {
+            x.push(0.05 * (s as f32 + 1.0) + 0.01 * i as f32);
+        }
+    }
+    let batched = be.run_batch(&x, n, &ws, &alphas).unwrap();
+    assert_eq!(batched.len(), n * 2);
+    for s in 0..n {
+        let one = be.run_batch(&x[s * feat..(s + 1) * feat], 1, &ws, &alphas)
+            .unwrap();
+        assert_eq!(one[..], batched[s * 2..(s + 1) * 2], "sample {s} diverged");
+    }
 }
 
 #[test]

@@ -1,0 +1,119 @@
+//! Coordinator batching behaviour over the dynamic (layer-serial) drain,
+//! hermetic via synthetic artifact bundles: batch assembly, the `max_batch`
+//! cap, timeout flush, and request/response integrity (each request gets
+//! exactly its own logits back — any FIFO mixup in batch assembly would
+//! corrupt the payload of the identity model).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use analognets::coordinator::{Coordinator, ServeConfig};
+use analognets::datasets::synth::{self, SynthSpec};
+
+const CLASSES: usize = 4;
+
+/// Identity-model coordinator: a single digital dense layer whose logits
+/// are bit-identical to the submitted features.
+fn identity_coord(tag: &str, max_batch: usize, max_wait_ms: u64)
+                  -> (Coordinator, std::path::PathBuf) {
+    let spec = SynthSpec::identity_dense("ident_batch", CLASSES);
+    let dir = synth::write_bundle_tmp(tag, &spec).unwrap();
+    let mut cfg = ServeConfig::new("ident_batch", 8);
+    cfg.artifacts_dir = dir.clone();
+    cfg.max_batch = max_batch;
+    cfg.max_wait = Duration::from_millis(max_wait_ms);
+    let coord = Coordinator::start(cfg).unwrap();
+    (coord, dir)
+}
+
+fn features(i: usize) -> Vec<f32> {
+    (0..CLASSES).map(|j| i as f32 + 0.125 * j as f32).collect()
+}
+
+#[test]
+fn assembles_queue_into_capped_fifo_batches() {
+    let (coord, dir) = identity_coord("assemble", 4, 300);
+    // submit 10 requests inside one batching window: the dynamic plan must
+    // produce ceil(10/4) = 3 launches ([4, 4, 2]) with zero padded slots
+    let rxs: Vec<_> = (0..10).map(|i| coord.submit(features(i)).unwrap()).collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap();
+        // identity model: the response carries exactly this request's
+        // features — batch assembly preserved request identity
+        assert_eq!(resp.logits, features(i), "request {i} got foreign logits");
+        assert_eq!(resp.pred as usize, CLASSES - 1, "argmax is the last channel");
+    }
+    let m = coord.metrics.summary();
+    assert_eq!(m.completed, 10);
+    // all 10 usually land in one 300ms window (plan [4, 4, 2]); under CI
+    // scheduling jitter they may split across windows, but every split
+    // still needs at least ceil(10/4) capped launches and never pads
+    assert!(m.launches >= 3 && m.launches <= 10, "{m}");
+    assert_eq!(m.padded_slots, 0, "dynamic plans must never pad: {m}");
+    assert!(m.mean_batch <= 4.0 + 1e-9, "cap exceeded: {m}");
+    coord.stop().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn max_batch_cap_is_respected_under_flood() {
+    let (coord, dir) = identity_coord("flood", 4, 5);
+    let n = 40;
+    let rxs: Vec<_> = (0..n).map(|i| coord.submit(features(i)).unwrap()).collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.logits, features(i), "request {i}");
+    }
+    let m = coord.metrics.summary();
+    assert_eq!(m.completed as usize, n);
+    // every launch carries at most max_batch requests, so there are at
+    // least ceil(n / max_batch) launches, and never any padding
+    assert!(m.launches as usize >= n / 4, "{m}");
+    assert_eq!(m.padded_slots, 0, "{m}");
+    assert!(m.mean_batch <= 4.0 + 1e-9, "cap exceeded: {m}");
+    coord.stop().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn timeout_flushes_a_partial_batch() {
+    let (coord, dir) = identity_coord("timeout", 32, 20);
+    // a single request can never fill max_batch: only the max_wait timeout
+    // can flush it
+    let t0 = std::time::Instant::now();
+    let resp = coord.infer(features(7)).unwrap();
+    assert_eq!(resp.logits, features(7));
+    assert!(t0.elapsed() < Duration::from_secs(5), "flush never happened");
+    let m = coord.metrics.summary();
+    assert_eq!(m.completed, 1);
+    assert_eq!(m.launches, 1);
+    assert_eq!(m.padded_slots, 0, "{m}");
+    coord.stop().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn concurrent_clients_get_their_own_responses() {
+    let (coord, dir) = identity_coord("integrity", 8, 1);
+    let coord = Arc::new(coord);
+    let mut handles = Vec::new();
+    for c in 0..4usize {
+        let coord = coord.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..25usize {
+                let id = c * 1000 + i;
+                let resp = coord.infer(features(id)).unwrap();
+                assert_eq!(resp.logits, features(id),
+                           "client {c} request {i} got foreign logits");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = coord.metrics.summary();
+    assert_eq!(m.completed, 100);
+    assert_eq!(m.padded_slots, 0, "{m}");
+    assert!(m.req_per_sec > 0.0, "{m}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
