@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
                                     ("256x256", 256, 256),
                                     ("128x128", 128, 128),
                                     ("64x64", 64, 64)] {
-            let geom = ArrayGeom::new(rows, cols);
+            let geom = ArrayGeom::new(rows, cols, 4)?;
             match map_model(&meta, geom) {
                 Ok(mm) => {
                     let p = model_perf(&mm, 8, &em);

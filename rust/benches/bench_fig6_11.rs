@@ -39,8 +39,8 @@ fn main() -> anyhow::Result<()> {
              100.0 * m.effective_utilization());
 
     let mut csv = String::from("config,layer,alloc_tiles,grid_tiles,row_splits\n");
-    for (label, geom) in [("128x128", ArrayGeom::new(128, 128)),
-                          ("64x64", ArrayGeom::new(64, 64))] {
+    for (label, geom) in [("128x128", ArrayGeom::new(128, 128, 4)?),
+                          ("64x64", ArrayGeom::new(64, 64, 4)?)] {
         let s = split_map_model(&meta, geom);
         println!("\n=== Figure 11b/c: MicroNet-KWS-S split onto {label} \
                   tiles: {} tiles, eff util {:.1}% ===",

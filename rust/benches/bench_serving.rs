@@ -1,29 +1,52 @@
-//! Layer-serial serving benchmark (the CI bench-smoke workload).
+//! Layer-serial serving benchmark (the CI bench-smoke + analog-smoke
+//! workloads).
 //!
 //! Generates a synthetic artifact bundle, drives the coordinator with 4
-//! concurrent clients twice — once pinned to single-request launches
-//! (`max_batch = 1`), once with the batched layer-serial drain — and emits
-//! a machine-readable `bench_out/BENCH_native.json` with req/s, latency
-//! percentiles, and per-layer GEMM GFLOP/s. With `--baseline <file>` the
-//! run fails if batched req/s drops >30% below the committed baseline
-//! (the CI regression gate).
+//! concurrent clients — single-request launches vs the batched layer-serial
+//! drain on the native engine, plus a batched run on the tile-faithful
+//! AnalogCim engine — and emits machine-readable
+//! `bench_out/BENCH_native.json` / `bench_out/BENCH_analog.json` with
+//! req/s, latency percentiles, and (native) per-layer GEMM GFLOP/s.
+//!
+//! The analog side additionally runs two accuracy gates:
+//! * a degenerate-noise logits-consistency check — with the exact stored
+//!   weights (no PCM in the loop) and a 12-bit ADC, the analog engine's
+//!   argmax must match the native engine's on every dataset sample (always
+//!   enforced: this is the "clean physics degenerates to the reference"
+//!   invariant);
+//! * a clean-weights drift-accuracy comparison through `eval::drift_accuracy`
+//!   (ideal PCM, t = 25 s): with `--baseline`, the native/analog accuracy
+//!   gap must stay within `analog_acc_gap_max` from ci/bench_baseline.json.
+//!
+//! A Figure-7-style drift sweep (25 s -> 1 yr, paper-default PCM params)
+//! also runs end-to-end on the analog backend and is recorded in
+//! BENCH_analog.json.
 //!
 //! Knobs: `--fast` (smaller request counts), `--requests N` (per client),
 //! `--max-batch N`, `--baseline <json>`, `--strict` (make the 2x
-//! batched-vs-single speedup target a hard failure).
+//! batched-vs-single speedup target a hard failure), `--analog-only`
+//! (skip the native load/GEMM sections; the CI analog-smoke job),
+//! `--native-only` (skip the analog sections and their gates; the CI
+//! bench-smoke job — analog-smoke owns the analog work, so the two jobs
+//! never duplicate it).
 
 use std::collections::{BTreeMap, VecDeque};
+use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use analognets::backend::{self, BackendKind, HostTensor, InferenceBackend};
 use analognets::bench::{self, save_json, time_it, BenchOpts};
 use analognets::coordinator::metrics::MetricsSummary;
 use analognets::coordinator::{Coordinator, ServeConfig};
 use analognets::datasets::synth::{self, SynthSpec};
+use analognets::eval::{drift_accuracy, EvalOpts};
+use analognets::pcm::{PcmParams, FIG7_TIMES, T_25S};
 use analognets::simulator::gemm;
 use analognets::timing::layer_gemm_dims;
 use analognets::util::cli::Args;
-use analognets::util::json::Json;
+use analognets::util::json::{self, Json};
+use analognets::util::logits;
 use analognets::util::rng::Rng;
 
 const CLIENTS: usize = 4;
@@ -71,6 +94,17 @@ fn run_load(cfg: ServeConfig, per_client: usize, feat: usize)
     Ok((req_s, summary))
 }
 
+/// The serving config both engines are benchmarked under — one source for
+/// the batching window and bitwidth, so the native and analog req/s in
+/// BENCH_native.json / BENCH_analog.json stay comparable by construction.
+fn bench_cfg(vid: &str, dir: &Path, max_batch: usize) -> ServeConfig {
+    let mut cfg = ServeConfig::new(vid, 8);
+    cfg.artifacts_dir = dir.to_path_buf();
+    cfg.max_batch = max_batch;
+    cfg.max_wait = Duration::from_micros(500);
+    cfg
+}
+
 fn mode_json(req_s: f64, m: &MetricsSummary) -> Json {
     let mut o = match m.to_json() {
         Json::Obj(o) => o,
@@ -85,6 +119,10 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let per_client = args.opt_usize("requests", if opts.fast { 200 } else { 800 });
     let max_batch = args.opt_usize("max-batch", 32);
+    let analog_only = args.flag("analog-only");
+    let native_only = args.flag("native-only");
+    anyhow::ensure!(!(analog_only && native_only),
+                    "--analog-only and --native-only are mutually exclusive");
 
     let spec = SynthSpec::bench("bench_serving");
     let dir = synth::write_bundle_tmp("bench_serving", &spec)?;
@@ -97,83 +135,235 @@ fn main() -> anyhow::Result<()> {
               {CLIENTS} clients x {per_client} requests)",
              spec.vid, dir.display(), threads);
 
-    let mk_cfg = |max_batch: usize| {
-        let mut cfg = ServeConfig::new(&spec.vid, 8);
-        cfg.artifacts_dir = dir.clone();
-        cfg.max_batch = max_batch;
-        cfg.max_wait = Duration::from_micros(500);
-        cfg
-    };
+    let mk_cfg = |max_batch: usize| bench_cfg(&spec.vid, &dir, max_batch);
 
-    // ---- single-request baseline vs batched layer-serial drain ---------
-    println!("[bench_serving] single-request baseline (max_batch=1)...");
-    let (rps_single, m_single) = run_load(mk_cfg(1), per_client, feat)?;
-    println!("  {rps_single:.0} req/s   {m_single}");
-    println!("[bench_serving] batched layer-serial (max_batch={max_batch})...");
-    let (rps_batched, m_batched) = run_load(mk_cfg(max_batch), per_client, feat)?;
-    println!("  {rps_batched:.0} req/s   {m_batched}");
-    let speedup = rps_batched / rps_single;
-    println!("[bench_serving] batched speedup: {speedup:.2}x");
+    // ---- native: single-request baseline vs batched layer-serial -------
+    let mut native_gate: Option<f64> = None;
+    let mut native_speedup: Option<f64> = None;
+    if !analog_only {
+        println!("[bench_serving] single-request baseline (max_batch=1)...");
+        let (rps_single, m_single) = run_load(mk_cfg(1), per_client, feat)?;
+        println!("  {rps_single:.0} req/s   {m_single}");
+        println!("[bench_serving] batched layer-serial (max_batch={max_batch})...");
+        let (rps_batched, m_batched) = run_load(mk_cfg(max_batch), per_client, feat)?;
+        println!("  {rps_batched:.0} req/s   {m_batched}");
+        let speedup = rps_batched / rps_single;
+        println!("[bench_serving] batched speedup: {speedup:.2}x");
+        native_gate = Some(rps_batched);
+        native_speedup = Some(speedup);
 
-    // ---- per-layer GEMM GFLOP/s at the batched launch shape ------------
-    let store = analognets::runtime::ArtifactStore::open(&dir)?;
-    let meta = store.meta(&spec.vid)?;
-    let mut per_layer = Vec::new();
-    let mut rng = Rng::new(17);
-    for lm in &meta.layers {
-        let (m, k, n) = layer_gemm_dims(lm, max_batch);
-        let a: Vec<f32> = (0..m * k).map(|_| rng.gauss(0.0, 1.0) as f32).collect();
-        let b: Vec<f32> = (0..k * n).map(|_| rng.gauss(0.0, 1.0) as f32).collect();
-        let t = time_it(2, if opts.fast { 5 } else { 15 }, || {
-            let _ = gemm::gemm_parallel(&a, &b, m, k, n, threads);
-        });
-        let gflops = 2.0 * (m * k * n) as f64 / (t.min_us * 1e3);
-        println!("  layer {:<4} GEMM {m}x{k}x{n}: {gflops:.2} GFLOP/s", lm.name);
-        let mut o = BTreeMap::new();
-        o.insert("name".to_string(), Json::Str(lm.name.clone()));
-        o.insert("m".to_string(), num(m as f64));
-        o.insert("k".to_string(), num(k as f64));
-        o.insert("n".to_string(), num(n as f64));
-        o.insert("gflops".to_string(), num(gflops));
-        per_layer.push(Json::Obj(o));
+        // ---- per-layer GEMM GFLOP/s at the batched launch shape --------
+        let store = analognets::runtime::ArtifactStore::open(&dir)?;
+        let meta = store.meta(&spec.vid)?;
+        let mut per_layer = Vec::new();
+        let mut rng = Rng::new(17);
+        for lm in &meta.layers {
+            let (m, k, n) = layer_gemm_dims(lm, max_batch);
+            let a: Vec<f32> = (0..m * k).map(|_| rng.gauss(0.0, 1.0) as f32).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.gauss(0.0, 1.0) as f32).collect();
+            let t = time_it(2, if opts.fast { 5 } else { 15 }, || {
+                let _ = gemm::gemm_parallel(&a, &b, m, k, n, threads);
+            });
+            let gflops = 2.0 * (m * k * n) as f64 / (t.min_us * 1e3);
+            println!("  layer {:<4} GEMM {m}x{k}x{n}: {gflops:.2} GFLOP/s", lm.name);
+            let mut o = BTreeMap::new();
+            o.insert("name".to_string(), Json::Str(lm.name.clone()));
+            o.insert("m".to_string(), num(m as f64));
+            o.insert("k".to_string(), num(k as f64));
+            o.insert("n".to_string(), num(n as f64));
+            o.insert("gflops".to_string(), num(gflops));
+            per_layer.push(Json::Obj(o));
+        }
+
+        // ---- BENCH_native.json -----------------------------------------
+        let mut root = BTreeMap::new();
+        root.insert("schema".to_string(), num(1.0));
+        root.insert("bench".to_string(), Json::Str("serving".to_string()));
+        root.insert("backend".to_string(), Json::Str("native".to_string()));
+        root.insert("vid".to_string(), Json::Str(spec.vid.clone()));
+        root.insert("threads".to_string(), num(threads as f64));
+        root.insert("clients".to_string(), num(CLIENTS as f64));
+        root.insert("requests_per_client".to_string(), num(per_client as f64));
+        root.insert("max_batch".to_string(), num(max_batch as f64));
+        // headline metrics (the regression gate reads `req_s`)
+        root.insert("req_s".to_string(), num(rps_batched));
+        root.insert("p50_us".to_string(), num(m_batched.p50_us));
+        root.insert("p99_us".to_string(), num(m_batched.p99_us));
+        root.insert("speedup_vs_single".to_string(), num(speedup));
+        root.insert("single".to_string(), mode_json(rps_single, &m_single));
+        root.insert("batched".to_string(), mode_json(rps_batched, &m_batched));
+        root.insert("per_layer_gemm".to_string(), Json::Arr(per_layer));
+        save_json("BENCH_native.json", &Json::Obj(root));
     }
 
-    // ---- BENCH_native.json ---------------------------------------------
-    let mut root = BTreeMap::new();
-    root.insert("schema".to_string(), num(1.0));
-    root.insert("bench".to_string(), Json::Str("serving".to_string()));
-    root.insert("backend".to_string(), Json::Str("native".to_string()));
-    root.insert("vid".to_string(), Json::Str(spec.vid.clone()));
-    root.insert("threads".to_string(), num(threads as f64));
-    root.insert("clients".to_string(), num(CLIENTS as f64));
-    root.insert("requests_per_client".to_string(), num(per_client as f64));
-    root.insert("max_batch".to_string(), num(max_batch as f64));
-    // headline metrics (the regression gate reads `req_s`)
-    root.insert("req_s".to_string(), num(rps_batched));
-    root.insert("p50_us".to_string(), num(m_batched.p50_us));
-    root.insert("p99_us".to_string(), num(m_batched.p99_us));
-    root.insert("speedup_vs_single".to_string(), num(speedup));
-    root.insert("single".to_string(), mode_json(rps_single, &m_single));
-    root.insert("batched".to_string(), mode_json(rps_batched, &m_batched));
-    root.insert("per_layer_gemm".to_string(), Json::Arr(per_layer));
-    save_json("BENCH_native.json", &Json::Obj(root));
+    // analog sections (serving load, consistency + accuracy gates, drift
+    // sweep, BENCH_analog.json): owned by the CI analog-smoke job, so the
+    // bench-smoke job skips them with --native-only instead of running the
+    // same workload twice
+    if !native_only {
+        run_analog(&dir, &spec, per_client, max_batch, threads, &opts)?;
+    }
 
     let _ = std::fs::remove_dir_all(&dir);
 
-    // ---- gates ----------------------------------------------------------
+    // ---- native gates ---------------------------------------------------
     if let Some(baseline) = &opts.baseline {
-        bench::check_regression(rps_batched, std::path::Path::new(baseline),
-                                "req_s", 0.30)?;
-    }
-    if speedup < 2.0 {
-        let msg = format!(
-            "batched speedup {speedup:.2}x is below the 2x target \
-             (machine-dependent; {threads} lanes available)"
-        );
-        if opts.strict {
-            anyhow::bail!("{msg}");
+        if let Some(rps_batched) = native_gate {
+            bench::check_regression(rps_batched, Path::new(baseline), "req_s",
+                                    0.30)?;
         }
-        eprintln!("[bench_serving] warning: {msg}");
+    }
+    if let Some(speedup) = native_speedup {
+        if speedup < 2.0 {
+            let msg = format!(
+                "batched speedup {speedup:.2}x is below the 2x target \
+                 (machine-dependent; {threads} lanes available)"
+            );
+            if opts.strict {
+                anyhow::bail!("{msg}");
+            }
+            eprintln!("[bench_serving] warning: {msg}");
+        }
+    }
+    Ok(())
+}
+
+/// The analog half of the bench: batched serving load on the tile-faithful
+/// engine, the degenerate-noise argmax-consistency check (always enforced),
+/// the clean-weights accuracy gap through `eval::drift_accuracy` (gated by
+/// `analog_acc_gap_max` when `--baseline` is given), the Fig.7-style drift
+/// sweep, and `bench_out/BENCH_analog.json`.
+fn run_analog(dir: &Path, spec: &SynthSpec, per_client: usize,
+              max_batch: usize, threads: usize, opts: &BenchOpts)
+              -> anyhow::Result<()> {
+    let feat = spec.feat_len();
+
+    // ---- batched serving on the tile-faithful engine --------------------
+    println!("[bench_serving] analog tile-faithful serving \
+              (max_batch={max_batch})...");
+    let mut acfg = bench_cfg(&spec.vid, dir, max_batch);
+    acfg.backend = BackendKind::AnalogCim;
+    let (rps_analog, m_analog) = run_load(acfg, per_client, feat)?;
+    println!("  {rps_analog:.0} req/s   {m_analog}");
+
+    // ---- degenerate-noise logits consistency vs native ------------------
+    // no PCM in the loop at all: the exact stored weights, unity GDC, a
+    // 12-bit ADC. On the AON array every layer of the bench model fits a
+    // single tile, so per-tile ADC quantization must reproduce the native
+    // argmax on every sample.
+    let store = analognets::runtime::ArtifactStore::open(dir)?;
+    let meta = store.meta(&spec.vid)?;
+    let w = store.weights(&spec.vid)?;
+    let ws: Vec<HostTensor> = w.iter().map(HostTensor::from_tensor).collect();
+    let unity = vec![1.0f32; ws.len()];
+    let ds = store.dataset(&spec.task)?;
+    let n = ds.len();
+    let xb = ds.padded_batch(0, n);
+    let nat = backend::create(BackendKind::Native, &store, &spec.vid, 12)?;
+    let ana = backend::create(BackendKind::AnalogCim, &store, &spec.vid, 12)?;
+    let lo_n = nat.run_batch(&xb, n, &ws, &unity)?;
+    let lo_a = ana.run_batch(&xb, n, &ws, &unity)?;
+    let classes = meta.num_classes;
+    let pred_n = logits::predictions(&lo_n, classes);
+    let pred_a = logits::predictions(&lo_a, classes);
+    let argmax_matches = pred_n.iter().zip(pred_a.iter())
+        .filter(|(a, b)| a == b).count();
+    let max_abs_diff = lo_n.iter().zip(lo_a.iter())
+        .map(|(a, b)| (a - b).abs() as f64)
+        .fold(0.0f64, f64::max);
+    println!("[bench_serving] analog-vs-native consistency: {argmax_matches}/{n} \
+              argmax matches, max |logit diff| {max_abs_diff:.2e}");
+    anyhow::ensure!(
+        argmax_matches == n,
+        "degenerate-noise analog execution changed {} / {n} predictions \
+         against the native reference",
+        n - argmax_matches
+    );
+
+    // ---- clean-weights accuracy through eval::drift_accuracy ------------
+    // ideal PCM (no programming/read noise, no drift) at t = 25 s: the two
+    // engines should agree; the committed baseline bounds the gap.
+    let clean = EvalOpts {
+        bits: 8,
+        batch: 16,
+        max_samples: 64,
+        runs: 1,
+        params: PcmParams::ideal(),
+        backend: BackendKind::Native,
+        t_drift: Some(T_25S),
+        ..Default::default()
+    };
+    let acc_native = drift_accuracy(&store, &spec.vid, &clean.sweep_times(),
+                                    &clean)?[0][0];
+    let clean_analog = EvalOpts { backend: BackendKind::AnalogCim, ..clean };
+    let acc_analog = drift_accuracy(&store, &spec.vid,
+                                    &clean_analog.sweep_times(),
+                                    &clean_analog)?[0][0];
+    let acc_gap = (acc_native - acc_analog).abs();
+    println!("[bench_serving] clean-weights accuracy: native {:.2}% vs \
+              analog {:.2}% (gap {:.4})",
+             100.0 * acc_native, 100.0 * acc_analog, acc_gap);
+
+    // ---- Fig.7-style drift sweep on the analog backend ------------------
+    let sweep_opts = EvalOpts {
+        bits: 8,
+        batch: 16,
+        max_samples: if opts.fast { 32 } else { 64 },
+        runs: 1,
+        backend: BackendKind::AnalogCim,
+        ..Default::default()
+    };
+    let times: Vec<f64> = FIG7_TIMES.iter().map(|(_, t)| *t).collect();
+    let sweep = drift_accuracy(&store, &spec.vid, &times, &sweep_opts)?;
+    let mut sweep_json = Vec::new();
+    for ((label, t), accs) in FIG7_TIMES.iter().zip(sweep.iter()) {
+        println!("  analog drift {label:>4}: {:.2}%", 100.0 * accs[0]);
+        let mut o = BTreeMap::new();
+        o.insert("label".to_string(), Json::Str(label.to_string()));
+        o.insert("t_s".to_string(), num(*t));
+        o.insert("acc".to_string(), num(accs[0]));
+        sweep_json.push(Json::Obj(o));
+    }
+
+    // ---- BENCH_analog.json ----------------------------------------------
+    let mut aroot = BTreeMap::new();
+    aroot.insert("schema".to_string(), num(1.0));
+    aroot.insert("bench".to_string(), Json::Str("serving".to_string()));
+    aroot.insert("backend".to_string(), Json::Str("analog".to_string()));
+    aroot.insert("vid".to_string(), Json::Str(spec.vid.clone()));
+    aroot.insert("threads".to_string(), num(threads as f64));
+    aroot.insert("clients".to_string(), num(CLIENTS as f64));
+    aroot.insert("requests_per_client".to_string(), num(per_client as f64));
+    aroot.insert("max_batch".to_string(), num(max_batch as f64));
+    aroot.insert("req_s".to_string(), num(rps_analog));
+    aroot.insert("p50_us".to_string(), num(m_analog.p50_us));
+    aroot.insert("p99_us".to_string(), num(m_analog.p99_us));
+    aroot.insert("batched".to_string(), mode_json(rps_analog, &m_analog));
+    let mut cons = BTreeMap::new();
+    cons.insert("samples".to_string(), num(n as f64));
+    cons.insert("argmax_matches".to_string(), num(argmax_matches as f64));
+    cons.insert("max_abs_logit_diff".to_string(), num(max_abs_diff));
+    aroot.insert("consistency".to_string(), Json::Obj(cons));
+    let mut cl = BTreeMap::new();
+    cl.insert("acc_native".to_string(), num(acc_native));
+    cl.insert("acc_analog".to_string(), num(acc_analog));
+    cl.insert("acc_gap".to_string(), num(acc_gap));
+    aroot.insert("clean_weights".to_string(), Json::Obj(cl));
+    aroot.insert("drift_sweep".to_string(), Json::Arr(sweep_json));
+    save_json("BENCH_analog.json", &Json::Obj(aroot));
+
+    // clean-weights accuracy gate: the analog engine may not diverge
+    // from the native reference beyond the committed floor
+    if let Some(baseline) = &opts.baseline {
+        let v = json::parse_file(Path::new(baseline))?;
+        let max_gap = v.req("analog_acc_gap_max")?.as_f64()?;
+        anyhow::ensure!(
+            acc_gap <= max_gap,
+            "clean-weights analog accuracy diverged from native by \
+             {acc_gap:.4} (gate: {max_gap:.4} in {baseline})"
+        );
+        println!("[bench_serving] analog accuracy gate OK: gap {acc_gap:.4} \
+                  <= {max_gap:.4}");
     }
     Ok(())
 }

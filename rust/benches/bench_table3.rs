@@ -31,8 +31,8 @@ fn main() -> anyhow::Result<()> {
 
     for (label, geom, paper_u, paper_r) in [
         ("1024x512", ArrayGeom::AON, "9%", "4122"),
-        ("128x128", ArrayGeom::new(128, 128), "40%", "1467"),
-        ("64x64", ArrayGeom::new(64, 64), "66%", "642"),
+        ("128x128", ArrayGeom::new(128, 128, 4)?, "40%", "1467"),
+        ("64x64", ArrayGeom::new(64, 64, 4)?, "66%", "642"),
     ] {
         let (util, rate) = if geom.rows == 1024 {
             // fits whole: layer-serial on the single big array

@@ -1,0 +1,183 @@
+//! The tile-faithful AnalogCim execution engine behind [`InferenceBackend`].
+//!
+//! Same weight-fed contract as the native backend — callers program the
+//! model onto simulated PCM (`eval::DeployedModel` /
+//! `coordinator::PcmState`), read the drifted conductances at the drift
+//! time of interest, and hand the effective weights plus per-layer GDC
+//! factors to `run_batch` — but execution goes through
+//! [`simulator::AnalogModel`](crate::simulator::AnalogModel): one MVM per
+//! mapped crossbar tile, per-tile-column ADC quantization at the
+//! GDC-scaled range, digital f32 accumulation across K-tiles. This is the
+//! engine that makes the `crossbar`/`mapping` modules load-bearing: the
+//! array geometry changes the computed numbers, not just reports.
+
+use std::sync::Arc;
+
+use crate::backend::{weight_fed_batch_sizes, HostTensor, InferenceBackend};
+use crate::crossbar::ArrayGeom;
+use crate::nn::ModelMeta;
+use crate::simulator::AnalogModel;
+
+/// Executes the deployed model tile by tile on a simulated CiM array.
+/// Needs no XLA library and no exported HLO artifacts; select it with
+/// `--backend analog` / [`BackendKind::AnalogCim`](crate::backend::BackendKind).
+pub struct AnalogCimBackend {
+    model: AnalogModel,
+    bits: u32,
+}
+
+impl AnalogCimBackend {
+    /// Single-threaded execution on the paper's 1024x512 mux-4 AON array.
+    pub fn new(meta: impl Into<Arc<ModelMeta>>, bits: u32) -> Self {
+        Self::with_geom(meta, bits, ArrayGeom::AON, 1)
+    }
+
+    /// [`new`](Self::new) with a worker-pool size (`0` = all available
+    /// cores), still on the AON array geometry.
+    pub fn with_threads(meta: impl Into<Arc<ModelMeta>>, bits: u32,
+                        threads: usize) -> Self {
+        Self::with_geom(meta, bits, ArrayGeom::AON, threads)
+    }
+
+    /// Custom array geometry: the tile-ablation entry point (`eval
+    /// --backend analog --rows/--cols/--mux`). Smaller arrays split layers
+    /// across more tiles, which means more independent ADC quantizations
+    /// per output — the Table-3 accuracy/utilization trade-off.
+    pub fn with_geom(meta: impl Into<Arc<ModelMeta>>, bits: u32,
+                     geom: ArrayGeom, threads: usize) -> Self {
+        AnalogCimBackend {
+            model: AnalogModel::with_threads(meta, geom, threads),
+            bits,
+        }
+    }
+
+    pub fn geom(&self) -> ArrayGeom {
+        self.model.geom()
+    }
+
+    /// Crossbar tiles the model occupies across all analog layers.
+    pub fn tiles_total(&self) -> usize {
+        self.model.tiles_total()
+    }
+}
+
+impl InferenceBackend for AnalogCimBackend {
+    fn name(&self) -> &'static str {
+        "analog"
+    }
+
+    fn meta(&self) -> &ModelMeta {
+        self.model.meta()
+    }
+
+    fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// The tiled engine is layer-serial over the whole batch like the
+    /// native one, so the coordinator may drain any number of queued
+    /// requests into a single launch with zero padded slots.
+    fn supports_dynamic_batch(&self) -> bool {
+        true
+    }
+
+    fn batch_sizes(&self) -> Vec<usize> {
+        weight_fed_batch_sizes(self.meta(), self.bits)
+    }
+
+    fn run_batch(&self, x: &[f32], batch: usize, weights: &[HostTensor],
+                 gdc: &[f32]) -> anyhow::Result<Vec<f32>> {
+        self.validate_args(x, batch, weights, gdc)?;
+        let meta = self.meta();
+        for (t, lm) in weights.iter().zip(meta.layers.iter()) {
+            let want: usize = lm.graph_weight_shape.iter().product();
+            anyhow::ensure!(
+                t.numel() == want,
+                "analog backend: layer {} weight has {} elements, graph \
+                 shape {:?} needs {want}",
+                lm.name,
+                t.numel(),
+                lm.graph_weight_shape
+            );
+        }
+        Ok(self.model.forward(x, batch, weights, gdc, self.bits))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::FALLBACK_BATCH_SIZES;
+    use crate::util::json;
+
+    fn tiny_meta() -> ModelMeta {
+        let src = r#"{
+          "model": "tiny", "variant": "t", "input_hwc": [1, 1, 4],
+          "num_classes": 2, "eta": 0.0, "fp_test_acc": 1.0,
+          "trained_adc_bits": null,
+          "layers": [{"name": "fc", "kind": "dense", "in_ch": 4, "out_ch": 2,
+            "stride": [1,1], "relu": false, "analog": true,
+            "in_h": 1, "in_w": 1, "out_h": 1, "out_w": 1,
+            "k_gemm": 4, "weight_shape": [4, 2], "graph_weight_shape": [4, 2],
+            "w_scale": 1.0, "w_max": 1.0, "r_dac": 8.0, "r_adc": 8.0,
+            "dig_scale": [1, 1], "dig_bias": [0, 0]}],
+          "hlo": {}
+        }"#;
+        ModelMeta::from_json(&json::parse(src).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn runs_a_batch_and_validates_inputs() {
+        let be = AnalogCimBackend::new(tiny_meta(), 8);
+        assert_eq!(be.name(), "analog");
+        assert_eq!(be.bits(), 8);
+        assert_eq!(be.geom(), ArrayGeom::AON);
+        assert_eq!(be.tiles_total(), 1);
+        assert!(be.supports_dynamic_batch());
+        assert!(be.probe().is_ok());
+
+        let w = HostTensor::new(
+            vec![4, 2],
+            vec![1.0, 0.0, 1.0, 0.0, 0.0, 1.0, 0.0, 1.0],
+        );
+        let x = vec![0.9, 0.8, 0.1, 0.0, /* sample 2 */ 0.0, 0.1, 0.7, 0.9];
+        let logits = be.run_batch(&x, 2, &[w.clone()], &[1.0]).unwrap();
+        assert_eq!(logits.len(), 4);
+        assert!(logits[0] > logits[1], "{logits:?}");
+        assert!(logits[3] > logits[2], "{logits:?}");
+
+        // wrong weight count / gdc length / input length all refuse
+        assert!(be.run_batch(&x, 2, &[], &[1.0]).is_err());
+        assert!(be.run_batch(&x, 2, &[w.clone()], &[]).is_err());
+        assert!(be.run_batch(&x[..4], 2, &[w], &[1.0]).is_err());
+    }
+
+    #[test]
+    fn custom_geometry_splits_into_tiles() {
+        let geom = ArrayGeom::new(2, 1, 1).unwrap();
+        let be = AnalogCimBackend::with_geom(tiny_meta(), 12, geom, 2);
+        assert_eq!(be.geom(), geom);
+        assert_eq!(be.tiles_total(), 2 * 2); // [4 x 2] on 2x1 tiles
+        let w = HostTensor::new(
+            vec![4, 2],
+            vec![1.0, 0.0, 1.0, 0.0, 0.0, 1.0, 0.0, 1.0],
+        );
+        let x = vec![0.9, 0.8, 0.1, 0.0];
+        let logits = be.run_batch(&x, 1, &[w], &[1.0]).unwrap();
+        assert_eq!(logits.len(), 2);
+        assert!(logits[0] > logits[1], "{logits:?}");
+    }
+
+    #[test]
+    fn fallback_batch_sizes_match_native_policy() {
+        let be = AnalogCimBackend::new(tiny_meta(), 8);
+        assert_eq!(be.batch_sizes(), FALLBACK_BATCH_SIZES.to_vec());
+        let mut meta = tiny_meta();
+        meta.hlo
+            .insert("8b_b32".to_string(), "t_8b_b32.hlo.txt".to_string());
+        let be8 = AnalogCimBackend::new(meta.clone(), 8);
+        assert_eq!(be8.batch_sizes(), vec![32]);
+        let be4 = AnalogCimBackend::new(meta, 4);
+        assert!(be4.batch_sizes().is_empty());
+    }
+}

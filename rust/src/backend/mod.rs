@@ -1,25 +1,32 @@
 //! Unified inference-execution API.
 //!
 //! The paper evaluates one deployed model on two engines — a calibrated
-//! simulator and real hardware. This repo mirrors that with two execution
+//! simulator and real hardware. This repo mirrors that with three execution
 //! paths behind one trait:
 //!
 //! * [`NativeBackend`] — the pure-Rust simulator forward pass
-//!   (`simulator::NativeModel`). Always available; the default everywhere.
+//!   (`simulator::NativeModel`): full-K GEMM, ADC quantized *after*
+//!   accumulation. Always available; the default everywhere.
+//! * [`AnalogCimBackend`] — the tile-faithful engine
+//!   (`simulator::AnalogModel`): one MVM per mapped crossbar tile, ADC
+//!   quantized *per tile* before digital accumulation — the schedule the
+//!   AON-CiM hardware actually imposes. Always available.
 //! * [`PjrtBackend`] — the AOT-exported HLO graphs executed via PJRT.
 //!   Compiled only with the `pjrt` cargo feature.
 //!
 //! `eval`, the serving `coordinator`, the CLI, examples, and benches all
 //! program weights onto the simulated PCM array, read them back (drifted,
-//! noisy), and hand the effective weights to `run_batch` — they never know
-//! which engine executes. Backends are selected by [`BackendKind`] and
-//! constructed with [`create`].
+//! noisy, at the drift time of interest), and hand the effective weights to
+//! `run_batch` — they never know which engine executes. Backends are
+//! selected by [`BackendKind`] and constructed with [`create`].
 
+mod analog;
 mod native;
 #[cfg(feature = "pjrt")]
 mod pjrt;
 mod tensor;
 
+pub use analog::AnalogCimBackend;
 pub use native::NativeBackend;
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
@@ -32,6 +39,20 @@ use crate::runtime::ArtifactStore;
 /// no serving graphs (the native GEMM accepts any batch; these keep the
 /// dynamic batcher's padding small).
 pub const FALLBACK_BATCH_SIZES: &[usize] = &[1, 2, 4, 8, 16, 32, 64, 128];
+
+/// Serving batch sizes for weight-fed engines with no static-shape
+/// constraint (native, analog): prefer the bundle's exported serving-graph
+/// sizes so every backend behaves identically under the batcher; fall back
+/// to [`FALLBACK_BATCH_SIZES`] only when the bundle exports *no* graphs at
+/// all. A bundle that has graphs, just none at this bitwidth, deliberately
+/// returns empty so serving at a wrong `--bits` still fails fast instead of
+/// silently quantizing at a bitwidth the model was never exported for.
+pub(crate) fn weight_fed_batch_sizes(meta: &ModelMeta, bits: u32) -> Vec<usize> {
+    if meta.hlo.is_empty() {
+        return FALLBACK_BATCH_SIZES.to_vec();
+    }
+    meta.serving_batch_sizes(bits)
+}
 
 /// One inference engine executing a deployed model.
 ///
@@ -136,6 +157,9 @@ pub enum BackendKind {
     /// Pure-Rust simulator forward pass (always available).
     #[default]
     Native,
+    /// Tile-faithful crossbar execution: per-tile MVM + per-tile ADC
+    /// quantization on the mapped array geometry (always available).
+    AnalogCim,
     /// Compiled HLO graphs via PJRT (requires the `pjrt` cargo feature).
     Pjrt,
 }
@@ -144,14 +168,18 @@ impl BackendKind {
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         match s {
             "native" | "sim" => Ok(BackendKind::Native),
+            "analog" | "analog-cim" | "cim" => Ok(BackendKind::AnalogCim),
             "pjrt" | "xla" => Ok(BackendKind::Pjrt),
-            _ => anyhow::bail!("unknown backend `{s}` (expected native|pjrt)"),
+            _ => anyhow::bail!(
+                "unknown backend `{s}` (expected native|analog|pjrt)"
+            ),
         }
     }
 
     pub fn as_str(&self) -> &'static str {
         match self {
             BackendKind::Native => "native",
+            BackendKind::AnalogCim => "analog",
             BackendKind::Pjrt => "pjrt",
         }
     }
@@ -165,7 +193,7 @@ impl BackendKind {
     /// Whether this binary can construct the backend at all.
     pub fn available(&self) -> bool {
         match self {
-            BackendKind::Native => true,
+            BackendKind::Native | BackendKind::AnalogCim => true,
             BackendKind::Pjrt => cfg!(feature = "pjrt"),
         }
     }
@@ -205,16 +233,33 @@ pub fn create_with_threads<'a>(kind: BackendKind, store: &'a ArtifactStore,
     match kind {
         BackendKind::Native => {
             let meta = store.meta(vid)?;
-            let threads = if threads == 0 {
-                std::thread::available_parallelism()
-                    .map(|n| n.get().min(8))
-                    .unwrap_or(1)
-            } else {
-                threads
-            };
-            Ok(Box::new(NativeBackend::with_threads(meta, bits, threads)))
+            Ok(Box::new(NativeBackend::with_threads(meta, bits,
+                                                    auto_threads(threads))))
+        }
+        BackendKind::AnalogCim => {
+            // the factory always builds the paper's AON array; use
+            // `AnalogCimBackend::with_geom` + `eval::drift_accuracy_on` for
+            // tile-geometry ablations
+            let meta = store.meta(vid)?;
+            Ok(Box::new(AnalogCimBackend::with_threads(meta, bits,
+                                                       auto_threads(threads))))
         }
         BackendKind::Pjrt => create_pjrt(store, vid, bits),
+    }
+}
+
+/// The automatic worker-pool policy behind [`create`]: all cores, capped at
+/// 8 (the layer shapes we serve stop scaling past that). An explicit
+/// `threads` is taken as-is. Public so caller-constructed backends (the
+/// tile-ablation path building `AnalogCimBackend::with_geom` directly) can
+/// apply the same policy as the factory.
+pub fn auto_threads(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get().min(8))
+            .unwrap_or(1)
+    } else {
+        threads
     }
 }
 
@@ -241,11 +286,17 @@ mod tests {
     #[test]
     fn kind_parses_and_prints() {
         assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("analog").unwrap(),
+                   BackendKind::AnalogCim);
+        assert_eq!(BackendKind::parse("analog-cim").unwrap(),
+                   BackendKind::AnalogCim);
         assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
         assert!(BackendKind::parse("tpu").is_err());
         assert_eq!(BackendKind::Native.to_string(), "native");
+        assert_eq!(BackendKind::AnalogCim.to_string(), "analog");
         assert_eq!(BackendKind::default(), BackendKind::Native);
         assert!(BackendKind::Native.available());
+        assert!(BackendKind::AnalogCim.available());
     }
 
     #[test]

@@ -3,7 +3,7 @@
 
 use std::sync::Arc;
 
-use crate::backend::{HostTensor, InferenceBackend, FALLBACK_BATCH_SIZES};
+use crate::backend::{weight_fed_batch_sizes, HostTensor, InferenceBackend};
 use crate::nn::ModelMeta;
 use crate::simulator::NativeModel;
 
@@ -54,19 +54,11 @@ impl InferenceBackend for NativeBackend {
         true
     }
 
-    /// Prefer the exported serving-graph batch sizes (so native and PJRT
-    /// behave identically under the batcher). Only a bundle that exports
-    /// *no* serving graphs at all falls back to powers of two — the native
-    /// GEMM has no static-shape constraint. A bundle that has graphs, just
-    /// none at this bitwidth, deliberately returns empty so serving at a
-    /// wrong `--bits` still fails fast instead of silently quantizing at a
-    /// bitwidth the model was never exported for.
+    /// Prefer the exported serving-graph batch sizes (so every backend
+    /// behaves identically under the batcher); see
+    /// [`weight_fed_batch_sizes`] for the fallback/fail-fast policy.
     fn batch_sizes(&self) -> Vec<usize> {
-        let meta = self.meta();
-        if meta.hlo.is_empty() {
-            return FALLBACK_BATCH_SIZES.to_vec();
-        }
-        meta.serving_batch_sizes(self.bits)
+        weight_fed_batch_sizes(self.meta(), self.bits)
     }
 
     fn run_batch(&self, x: &[f32], batch: usize, weights: &[HostTensor],
@@ -91,6 +83,7 @@ impl InferenceBackend for NativeBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::FALLBACK_BATCH_SIZES;
     use crate::util::json;
 
     fn tiny_meta() -> ModelMeta {

@@ -2,9 +2,10 @@
 //! with PCM drift management in the background of every dispatch.
 //!
 //! The executor is any [`InferenceBackend`] — the native simulator by
-//! default (hermetic: no XLA, no exported HLO), or the compiled PJRT
-//! graphs when built with the `pjrt` feature and configured via
-//! [`ServeConfig::backend`].
+//! default (hermetic: no XLA, no exported HLO), the tile-faithful AnalogCim
+//! engine (`ServeConfig::backend = BackendKind::AnalogCim`, optionally at a
+//! pre-aged drift time via [`ServeConfig::drift_time`]), or the compiled
+//! PJRT graphs when built with the `pjrt` feature.
 //!
 //! Engines that accept arbitrary batch shapes
 //! (`InferenceBackend::supports_dynamic_batch`, i.e. the native
@@ -51,6 +52,11 @@ pub struct ServeConfig {
     pub threads: usize,
     /// simulated seconds per wall second (drift clock acceleration)
     pub time_scale: f64,
+    /// device age (simulated seconds since programming) the serving clock
+    /// starts at — `--t-drift`: serve a day-old (86 400) or year-old array
+    /// immediately instead of waiting for the accelerated clock to get
+    /// there. Clamped below at t_c = 25 s by the PCM state.
+    pub drift_time: f64,
     pub seed: u64,
     /// simulated seconds between weight refreshes (fresh read noise + GDC)
     pub refresh_every_s: f64,
@@ -69,6 +75,7 @@ impl ServeConfig {
             max_batch: 0,
             threads: 0,
             time_scale: 1.0,
+            drift_time: crate::pcm::T_C_SECONDS,
             seed: 7,
             refresh_every_s: 60.0,
             reprogram: false,
@@ -85,6 +92,12 @@ impl ServeConfig {
     /// Builder-style dynamic-batch cap.
     pub fn with_max_batch(mut self, max_batch: usize) -> Self {
         self.max_batch = max_batch;
+        self
+    }
+
+    /// Builder-style initial device age (drift-aware serving).
+    pub fn with_drift_time(mut self, drift_time_s: f64) -> Self {
+        self.drift_time = drift_time_s;
         self
     }
 }
@@ -324,6 +337,7 @@ fn worker(cfg: ServeConfig, rx: mpsc::Receiver<Msg>, metrics: Arc<Metrics>)
     let deployed = DeployedModel::program(&store, &cfg.vid, &params, &mut rng)?;
     let mut state = PcmState::new(deployed, params, cfg.seed ^ 0xD1F7, cfg.time_scale);
     state.refresh_every_s = cfg.refresh_every_s;
+    state.set_initial_age(cfg.drift_time);
 
     let dynamic = be.supports_dynamic_batch();
     let largest_static = *batch_sizes.last().unwrap();

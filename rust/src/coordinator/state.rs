@@ -55,6 +55,18 @@ impl PcmState {
         self.age_offset_s + self.programmed_at.elapsed().as_secs_f64() * self.time_scale
     }
 
+    /// Start the drift clock at `age_s` simulated seconds after programming
+    /// (drift-aware serving: bring the coordinator up against an array that
+    /// has already aged a day or a year, `ServeConfig::drift_time`).
+    /// Ages below t_c = 25 s clamp to t_c — devices are never read before
+    /// programming settles. Invalidates the cached weight read so the next
+    /// dispatch sees conductances drifted to the new age.
+    pub fn set_initial_age(&mut self, age_s: f64) {
+        self.age_offset_s = age_s.max(crate::pcm::T_C_SECONDS);
+        self.cached = None;
+        self.cached_at_s = f64::NEG_INFINITY;
+    }
+
     /// Mean GDC factor right now (drift health indicator).
     pub fn mean_alpha(&self) -> f64 {
         let t = self.sim_age_s();
@@ -153,6 +165,21 @@ mod tests {
         let w1 = st.current_weights().0[0].data.clone();
         let w2 = st.current_weights().0[0].data.clone();
         assert_eq!(w1, w2);
+    }
+
+    #[test]
+    fn initial_age_clamps_and_invalidates_cache() {
+        let mut st = PcmState::new(tiny_deployed(), PcmParams::default(), 1, 0.0);
+        st.refresh_every_s = 1e9;
+        let fresh = st.current_weights().0[0].data.clone();
+        st.set_initial_age(86_400.0);
+        assert!(st.sim_age_s() >= 86_400.0);
+        let aged = st.current_weights();
+        assert!(aged.2, "cache must be invalidated by set_initial_age");
+        assert_ne!(fresh, aged.0[0].data, "aged read must differ");
+        // ages below t_c clamp up to t_c
+        st.set_initial_age(0.0);
+        assert!((st.sim_age_s() - crate::pcm::T_C_SECONDS).abs() < 1e-6);
     }
 
     #[test]

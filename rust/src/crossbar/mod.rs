@@ -23,12 +23,28 @@ impl ArrayGeom {
         adc_mux: 4,
     };
 
-    pub fn new(rows: usize, cols: usize) -> Self {
-        ArrayGeom {
-            rows,
-            cols,
-            adc_mux: 4,
-        }
+    /// A custom geometry. The analog column-mux ratio is an explicit design
+    /// parameter (it sets the ADC count and the conversion phasing), so
+    /// callers state it instead of inheriting a silent mux-4 default; the
+    /// columns must divide evenly into mux groups so every ADC serves a
+    /// full group.
+    pub fn new(rows: usize, cols: usize, adc_mux: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!(rows >= 1 && cols >= 1,
+                        "array must be at least 1x1 (got {rows}x{cols})");
+        anyhow::ensure!(adc_mux >= 1, "adc mux ratio must be >= 1");
+        anyhow::ensure!(
+            cols % adc_mux == 0,
+            "cols {cols} do not divide into mux-{adc_mux} groups \
+             (each ADC must serve a full column group)"
+        );
+        Ok(ArrayGeom { rows, cols, adc_mux })
+    }
+
+    /// Same geometry with a different mux ratio (validated like [`new`]).
+    ///
+    /// [`new`]: ArrayGeom::new
+    pub fn with_mux(self, adc_mux: usize) -> anyhow::Result<Self> {
+        Self::new(self.rows, self.cols, adc_mux)
     }
 
     /// Total weight cells (differential pairs).
@@ -47,7 +63,7 @@ impl ArrayGeom {
     /// need `ceil(cols_used / adcs)` conversion phases, capped at `adc_mux`.
     pub fn adc_phases(&self, cols_used: usize) -> usize {
         let adcs = self.adcs();
-        ((cols_used + adcs - 1) / adcs).clamp(1, self.adc_mux)
+        cols_used.div_ceil(adcs).clamp(1, self.adc_mux)
     }
 
     /// Peak MACs per full-array MVM.
@@ -69,5 +85,26 @@ mod tests {
         assert_eq!(g.adc_phases(128), 1);
         assert_eq!(g.adc_phases(129), 2);
         assert_eq!(g.adc_phases(1), 1);
+    }
+
+    #[test]
+    fn new_takes_mux_explicitly_and_validates() {
+        let g = ArrayGeom::new(64, 64, 2).unwrap();
+        assert_eq!(g.adc_mux, 2);
+        assert_eq!(g.adcs(), 32);
+        // the paper's array, spelled out
+        assert_eq!(ArrayGeom::new(1024, 512, 4).unwrap(), ArrayGeom::AON);
+        // mux must divide the columns; degenerate shapes refuse
+        assert!(ArrayGeom::new(64, 65, 4).is_err());
+        assert!(ArrayGeom::new(64, 64, 0).is_err());
+        assert!(ArrayGeom::new(0, 64, 4).is_err());
+        assert!(ArrayGeom::new(64, 0, 4).is_err());
+    }
+
+    #[test]
+    fn with_mux_revalidates() {
+        let g = ArrayGeom::AON.with_mux(8).unwrap();
+        assert_eq!(g.adcs(), 64);
+        assert!(ArrayGeom::new(64, 60, 4).unwrap().with_mux(8).is_err());
     }
 }

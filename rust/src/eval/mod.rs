@@ -4,9 +4,11 @@
 //! noise + per-device drift exponents), then for each requested time point
 //! read the conductances (drift + 1/f noise), compute the per-layer GDC
 //! factors, and execute the test set through an [`InferenceBackend`] —
-//! the native simulator by default, or the exported HLO graphs via PJRT
-//! ([`EvalOpts::backend`]). The physics is identical either way; only the
-//! execution engine changes.
+//! the native simulator by default, the tile-faithful AnalogCim engine, or
+//! the exported HLO graphs via PJRT ([`EvalOpts::backend`]). The physics is
+//! identical every way; only the execution engine changes. Sweep either
+//! the paper's Figure-7 time points or a single `--t-drift` override
+//! ([`EvalOpts::sweep_times`]).
 
 use std::sync::Arc;
 
@@ -93,6 +95,10 @@ pub struct EvalOpts {
     pub params: PcmParams,
     /// which execution engine runs the test set
     pub backend: BackendKind,
+    /// single drift-time override in seconds (`--t-drift` on the CLI):
+    /// when set, [`EvalOpts::sweep_times`] collapses the Figure-7 sweep to
+    /// this one time point — evaluate a day-old or year-old array directly
+    pub t_drift: Option<f64>,
 }
 
 impl Default for EvalOpts {
@@ -106,6 +112,20 @@ impl Default for EvalOpts {
             use_gdc: true,
             params: PcmParams::default(),
             backend: BackendKind::default(),
+            t_drift: None,
+        }
+    }
+}
+
+impl EvalOpts {
+    /// Time points a drift sweep should cover: the single
+    /// [`t_drift`](Self::t_drift) override when set, the paper's Figure-7
+    /// sweep (25 s → 1 yr) otherwise. The shared source of truth for the
+    /// CLI `eval` command and the CI analog-smoke gate.
+    pub fn sweep_times(&self) -> Vec<f64> {
+        match self.t_drift {
+            Some(t) => vec![t],
+            None => crate::pcm::FIG7_TIMES.iter().map(|(_, t)| *t).collect(),
         }
     }
 }

@@ -16,18 +16,21 @@
 //!   eval / coordinator / CLI / benches
 //!            |
 //!            v  run_batch(x, batch, effective_weights, gdc)
-//!   +-------------------+---------------------------------+
-//!   | NativeBackend     | PjrtBackend  (feature = "pjrt") |
-//!   | pure-Rust im2col/ | AOT-exported HLO graphs via the |
-//!   | GEMM simulator    | xla crate / PJRT CPU client     |
-//!   +-------------------+---------------------------------+
+//!   +-------------------+--------------------+----------------------------+
+//!   | NativeBackend     | AnalogCimBackend   | PjrtBackend  ("pjrt")      |
+//!   | pure-Rust im2col/ | tile-faithful:     | AOT-exported HLO graphs    |
+//!   | GEMM, ADC quant   | per-crossbar MVM,  | via the xla crate / PJRT   |
+//!   | after full-K acc  | per-tile ADC quant | CPU client                 |
+//!   +-------------------+--------------------+----------------------------+
 //! ```
 //!
-//! The native backend is the default and needs neither the XLA native
-//! library nor generated HLO artifacts, so `cargo build && cargo test`
-//! are hermetic. Select engines with [`backend::BackendKind`]
-//! (`EvalOpts::backend`, `ServeConfig::backend`, `--backend` on the CLI).
-//! `xla` types never escape the `runtime` module.
+//! The native backend is the default; it and the analog backend need
+//! neither the XLA native library nor generated HLO artifacts, so
+//! `cargo build && cargo test` are hermetic. Select engines with
+//! [`backend::BackendKind`] (`EvalOpts::backend`, `ServeConfig::backend`,
+//! `--backend` on the CLI; drift time via `EvalOpts::t_drift`,
+//! `ServeConfig::drift_time`, `--t-drift`). `xla` types never escape the
+//! `runtime` module.
 
 pub mod backend;
 pub mod bench;

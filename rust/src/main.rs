@@ -7,12 +7,12 @@
 //!   report   accelerator performance summary (Table 2 style)
 //!   selftest sanity-check the artifact bundle end to end
 
-use analognets::backend::BackendKind;
+use analognets::backend::{auto_threads, AnalogCimBackend, BackendKind};
 use analognets::coordinator::{Coordinator, ServeConfig};
 use analognets::crossbar::ArrayGeom;
-use analognets::eval::{drift_accuracy, EvalOpts};
+use analognets::eval::{drift_accuracy, drift_accuracy_on, EvalOpts};
 use analognets::mapping::{layout, map_model};
-use analognets::pcm::FIG7_TIMES;
+use analognets::pcm::{FIG7_TIMES, T_C_SECONDS};
 use analognets::runtime::ArtifactStore;
 use analognets::timing::{model_perf, peak, EnergyModel};
 use analognets::util::cli::Args;
@@ -22,13 +22,17 @@ use analognets::util::table::Table;
 const USAGE: &str = "usage: analognets <serve|eval|map|report|selftest> [options]
   serve    --vid kws_full_e10_8b [--bits 8] [--requests 500] [--time-scale 1e4]
            [--max-batch N (0=auto)] [--threads N (0=auto)]
+           [--t-drift SECONDS (serve a pre-aged array, default 25)]
   eval     --vid kws_full_e10_8b [--bits 8] [--runs 5] [--samples 256]
-  map      --vid kws_full_e10_8b [--rows 1024 --cols 512] [--split]
+           [--t-drift SECONDS (single time point instead of the Fig-7 sweep)]
+           [--rows R --cols C [--mux M]  (analog backend: tile geometry)]
+  map      --vid kws_full_e10_8b [--rows 1024 --cols 512] [--mux 4] [--split]
   report   --vid kws_full_e10_8b [--bits 8]
   selftest
 options: --artifacts <dir> (or env ANALOGNETS_ARTIFACTS)
-         --backend native|pjrt (serve/eval/selftest; default native — pjrt
-                                needs a build with `--features pjrt`)";
+         --backend native|analog|pjrt (serve/eval/selftest; default native —
+                                `analog` is the tile-faithful CiM engine,
+                                pjrt needs a build with `--features pjrt`)";
 
 fn main() {
     let args = Args::from_env();
@@ -66,6 +70,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     cfg.time_scale = args.opt_f64("time-scale", 1e4);
     cfg.max_batch = args.opt_usize("max-batch", 0);
     cfg.threads = args.opt_usize("threads", 0);
+    cfg.drift_time = args.opt_f64("t-drift", T_C_SECONDS);
     let store = ArtifactStore::open_default()?;
     let meta = store.meta(&vid)?;
     let task = if meta.model.contains("vww") { "vww" } else { "kws" };
@@ -73,7 +78,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     drop(store);
 
     println!("[serve] starting coordinator for {vid} ({bits}-bit) on the \
-              `{}` backend, time scale {}x", cfg.backend, cfg.time_scale);
+              `{}` backend, time scale {}x, device age {}s",
+             cfg.backend, cfg.time_scale, cfg.drift_time);
     let coord = Coordinator::start(cfg)?;
     let feat = ds.feat_len();
     let mut correct = 0usize;
@@ -102,17 +108,46 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
         runs: args.opt_usize("runs", 5),
         max_samples: args.opt_usize("samples", 256),
         backend: BackendKind::from_args(args)?,
+        t_drift: args.opt("t-drift")
+            .map(|v| v.parse().expect("float --t-drift")),
         ..Default::default()
     };
-    let times: Vec<f64> = FIG7_TIMES.iter().map(|(_, t)| *t).collect();
+    let times = opts.sweep_times();
+    let labels: Vec<String> = match opts.t_drift {
+        Some(t) => vec![format!("{t}s")],
+        None => FIG7_TIMES.iter().map(|(l, _)| l.to_string()).collect(),
+    };
     println!("[eval] {vid} at {bits}-bit on `{}`, {} runs x {} samples \
               (fp ref {:.2}%)",
              opts.backend, opts.runs, opts.max_samples,
              100.0 * meta.fp_test_acc);
-    let accs = drift_accuracy(&store, &vid, &times, &opts)?;
+
+    // tile-geometry ablation: a custom array geometry changes which
+    // K-slices get independently ADC-quantized, so it only exists on the
+    // tile-faithful engine — built explicitly, run via drift_accuracy_on
+    let custom_geom = args.opt("rows").is_some() || args.opt("cols").is_some()
+        || args.opt("mux").is_some();
+    let accs = if custom_geom {
+        anyhow::ensure!(
+            opts.backend == BackendKind::AnalogCim,
+            "--rows/--cols/--mux select a crossbar tile geometry, which \
+             only the `analog` backend executes (pass --backend analog)"
+        );
+        let geom = ArrayGeom::new(args.opt_usize("rows", 1024),
+                                  args.opt_usize("cols", 512),
+                                  args.opt_usize("mux", 4))?;
+        let be = AnalogCimBackend::with_geom(meta.clone(), bits, geom,
+                                             auto_threads(0));
+        println!("[eval] tile geometry {}x{} mux{} -> {} crossbar tiles",
+                 geom.rows, geom.cols, geom.adc_mux, be.tiles_total());
+        drift_accuracy_on(&be, &store, &vid, &times, &opts)?
+    } else {
+        drift_accuracy(&store, &vid, &times, &opts)?
+    };
+
     let mut t = Table::new(&format!("drift accuracy: {vid}"),
                            &["time", "acc mean %", "acc std %"]);
-    for ((label, _), a) in FIG7_TIMES.iter().zip(accs.iter()) {
+    for (label, a) in labels.iter().zip(accs.iter()) {
         let (m, s) = stats::acc_summary(a);
         t.row(&[label.to_string(), format!("{m:.2}"), format!("{s:.2}")]);
     }
@@ -125,7 +160,8 @@ fn cmd_map(args: &Args) -> anyhow::Result<()> {
     let store = ArtifactStore::open_default()?;
     let meta = store.meta(&vid)?;
     let geom = ArrayGeom::new(args.opt_usize("rows", 1024),
-                              args.opt_usize("cols", 512));
+                              args.opt_usize("cols", 512),
+                              args.opt_usize("mux", 4))?;
     if args.flag("split") {
         let s = analognets::mapping::split_map_model(&meta, geom);
         println!("split mapping on {}x{} tiles: {} tiles allocated, \
@@ -173,7 +209,7 @@ fn cmd_report(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_selftest(args: &Args) -> anyhow::Result<()> {
     let store = ArtifactStore::open_default()?;
-    println!("backends: native{}",
+    println!("backends: native, analog{}",
              if BackendKind::Pjrt.available() { ", pjrt" } else { "" });
     println!("variants: {}", store.manifest.variants.len());
     for e in &store.manifest.variants {

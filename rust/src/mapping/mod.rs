@@ -3,4 +3,5 @@
 pub mod layout;
 pub mod tiler;
 
-pub use tiler::{map_model, MappedLayer, ModelMapping, SplitMapping, split_map_model};
+pub use tiler::{map_model, slice_tile, split_map_model, tile_grid, MappedLayer,
+                ModelMapping, SplitMapping, Tile};

@@ -151,6 +151,60 @@ pub fn map_model(meta: &ModelMeta, geom: ArrayGeom) -> anyhow::Result<ModelMappi
 }
 
 // ---------------------------------------------------------------------------
+// Execution tiling: the crossbar tile grid behind the AnalogCim engine
+// ---------------------------------------------------------------------------
+
+/// One crossbar-sized tile of a layer's [K x N] GEMM rectangle.
+///
+/// `kt`/`ct` index the tile grid (K-splits x column-splits); rows
+/// `k0..k0+rows` and columns `n0..n0+cols` locate the slice in the dense
+/// weight matrix. Edge tiles are ragged (`rows < geom.rows` or
+/// `cols < geom.cols`) when the rectangle does not divide evenly.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Tile {
+    pub kt: usize,
+    pub ct: usize,
+    pub k0: usize,
+    pub rows: usize,
+    pub n0: usize,
+    pub cols: usize,
+}
+
+/// Split a [k x n] weight rectangle into `geom`-sized tiles, row-major over
+/// the (kt, ct) grid. Every weight lands in exactly one tile. Tiles sharing
+/// a `ct` produce partial sums over the same output columns, which the
+/// AnalogCim engine ADC-quantizes per tile and then accumulates digitally
+/// across `kt` — the quantize-before-accumulate order the hardware imposes.
+pub fn tile_grid(k: usize, n: usize, geom: ArrayGeom) -> Vec<Tile> {
+    let k_tiles = k.div_ceil(geom.rows);
+    let n_tiles = n.div_ceil(geom.cols);
+    let mut tiles = Vec::with_capacity(k_tiles * n_tiles);
+    for kt in 0..k_tiles {
+        let k0 = kt * geom.rows;
+        let rows = geom.rows.min(k - k0);
+        for ct in 0..n_tiles {
+            let n0 = ct * geom.cols;
+            let cols = geom.cols.min(n - n0);
+            tiles.push(Tile { kt, ct, k0, rows, n0, cols });
+        }
+    }
+    tiles
+}
+
+/// Copy one tile's weights out of a dense row-major matrix with `n_total`
+/// columns — the sub-matrix a single crossbar is programmed with. Writing
+/// every tile's slice back at its (k0, n0) origin reconstructs the dense
+/// matrix bit-exactly, ragged edges included (property-tested in
+/// tests/test_mapping_props.rs).
+pub fn slice_tile(w: &[f32], n_total: usize, t: &Tile) -> Vec<f32> {
+    let mut out = Vec::with_capacity(t.rows * t.cols);
+    for r in t.k0..t.k0 + t.rows {
+        out.extend_from_slice(&w[r * n_total + t.n0..r * n_total + t.n0 + t.cols]);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
 // Split-GEMM mapping for small crossbars (Appendix D)
 // ---------------------------------------------------------------------------
 
@@ -197,8 +251,8 @@ pub fn split_map_model(meta: &ModelMeta, geom: ArrayGeom) -> SplitMapping {
     for lm in &meta.layers {
         let rows = lm.mapped_rows();
         let cols = lm.mapped_cols();
-        let rt = (rows + geom.rows - 1) / geom.rows;
-        let ct = (cols + geom.cols - 1) / geom.cols;
+        let rt = rows.div_ceil(geom.rows);
+        let ct = cols.div_ceil(geom.cols);
         let grid = rt * ct;
         let alloc = if lm.kind == LayerKind::Dw3x3 {
             // dense-expanded dw: block (i,j) over [9C x C] holds a diagonal
@@ -332,13 +386,13 @@ mod tests {
     #[test]
     fn split_skips_allzero_dw_tiles() {
         let meta = meta_with(&[("dw", "dw3x3", 112, 112, 8)]);
-        let s64 = split_map_model(&meta, ArrayGeom::new(64, 64));
+        let s64 = split_map_model(&meta, ArrayGeom::new(64, 64, 4).unwrap());
         let l = &s64.layers[0];
         // only tiles hit by a diagonal band are allocated
         assert!(l.alloc_tiles < l.grid_tiles, "{} vs {}",
                 l.alloc_tiles, l.grid_tiles);
         // effective utilization improves with smaller tiles (Table 3 trend)
-        let s128 = split_map_model(&meta, ArrayGeom::new(128, 128));
+        let s128 = split_map_model(&meta, ArrayGeom::new(128, 128, 4).unwrap());
         assert!(s64.effective_utilization() > s128.effective_utilization(),
                 "{} vs {}", s64.effective_utilization(),
                 s128.effective_utilization());
@@ -347,9 +401,42 @@ mod tests {
     #[test]
     fn split_dense_layer_uses_full_grid() {
         let meta = meta_with(&[("c", "conv3x3", 64, 128, 8)]); // 576x128
-        let s = split_map_model(&meta, ArrayGeom::new(128, 128));
-        assert_eq!(s.layers[0].grid_tiles, 5 * 1);
+        let s = split_map_model(&meta, ArrayGeom::new(128, 128, 4).unwrap());
+        assert_eq!(s.layers[0].grid_tiles, 5);
         assert_eq!(s.layers[0].alloc_tiles, 5);
         assert_eq!(s.layers[0].row_splits, 5);
+    }
+
+    #[test]
+    fn tile_grid_covers_ragged_rectangles() {
+        let geom = ArrayGeom::new(4, 4, 4).unwrap();
+        let tiles = tile_grid(10, 7, geom);
+        assert_eq!(tiles.len(), 3 * 2);
+        let area: usize = tiles.iter().map(|t| t.rows * t.cols).sum();
+        assert_eq!(area, 10 * 7);
+        for t in &tiles {
+            assert!(t.rows >= 1 && t.rows <= geom.rows);
+            assert!(t.cols >= 1 && t.cols <= geom.cols);
+            assert!(t.k0 + t.rows <= 10 && t.n0 + t.cols <= 7);
+            assert_eq!(t.k0, t.kt * geom.rows);
+            assert_eq!(t.n0, t.ct * geom.cols);
+        }
+        // a rectangle that fits is a single full tile
+        let one = tile_grid(3, 4, geom);
+        assert_eq!(one.len(), 1);
+        assert_eq!((one[0].rows, one[0].cols), (3, 4));
+    }
+
+    #[test]
+    fn slice_tile_extracts_the_submatrix() {
+        let geom = ArrayGeom::new(2, 2, 2).unwrap();
+        // 3x3 matrix 0..9 split on 2x2 tiles
+        let w: Vec<f32> = (0..9).map(|i| i as f32).collect();
+        let tiles = tile_grid(3, 3, geom);
+        assert_eq!(tiles.len(), 4);
+        assert_eq!(slice_tile(&w, 3, &tiles[0]), vec![0.0, 1.0, 3.0, 4.0]);
+        assert_eq!(slice_tile(&w, 3, &tiles[1]), vec![2.0, 5.0]);
+        assert_eq!(slice_tile(&w, 3, &tiles[2]), vec![6.0, 7.0]);
+        assert_eq!(slice_tile(&w, 3, &tiles[3]), vec![8.0]);
     }
 }

@@ -4,21 +4,31 @@
 //! HLO graphs — the math must match the Python side bit-for-bit in intent
 //! (symmetric uniform fake quantization, eq. 4).
 
+/// The quantizer grid for a symmetric `bits`-bit converter over
+/// `[-r_max, r_max]`: `(step, 1/step)` with `2^(bits-1)-1` levels per
+/// side. The single source of the level formula — every quantization in
+/// the crate (the native post-accumulation ADC, the AnalogCim per-tile
+/// ADC, the DACs) must derive its grid here or the engines' bit-identity
+/// guarantee silently breaks.
+#[inline]
+pub fn grid(r_max: f32, bits: u32) -> (f32, f32) {
+    let levels = ((1u32 << (bits - 1)) - 1) as f32;
+    let step = r_max / levels;
+    (step, 1.0 / step)
+}
+
 /// Symmetric uniform fake quantization: clip to [-r, r], round to
 /// `2^(bits-1)-1` levels per side, return the dequantized value.
 #[inline]
 pub fn fake_quant(x: f32, r_max: f32, bits: u32) -> f32 {
-    let levels = ((1u32 << (bits - 1)) - 1) as f32;
-    let step = r_max / levels;
+    let (step, _) = grid(r_max, bits);
     let xc = x.clamp(-r_max, r_max);
     (xc / step).round() * step
 }
 
 /// In-place fake quantization of a buffer.
 pub fn fake_quant_slice(xs: &mut [f32], r_max: f32, bits: u32) {
-    let levels = ((1u32 << (bits - 1)) - 1) as f32;
-    let step = r_max / levels;
-    let inv = 1.0 / step;
+    let (step, inv) = grid(r_max, bits);
     for x in xs {
         let xc = x.clamp(-r_max, r_max);
         *x = (xc * inv).round() * step;
@@ -32,8 +42,7 @@ pub fn dac_bits(adc_bits: u32) -> u32 {
 
 /// Integer code for a value (hardware-side view; for tests/inspection).
 pub fn code(x: f32, r_max: f32, bits: u32) -> i32 {
-    let levels = ((1u32 << (bits - 1)) - 1) as f32;
-    let step = r_max / levels;
+    let (step, _) = grid(r_max, bits);
     (x.clamp(-r_max, r_max) / step).round() as i32
 }
 

@@ -1,0 +1,462 @@
+//! Tile-faithful analog CiM forward pass.
+//!
+//! `NativeModel` fake-quantizes each layer's ADC *after* the full-K GEMM
+//! accumulation — numerically convenient, but not what the hardware does.
+//! On the AON-CiM array every crossbar tile produces *analog* partial sums
+//! that pass through the tile's ADCs **before** the digital processor ever
+//! sees them; K-slices programmed onto different tiles are therefore
+//! quantized independently and only then accumulated in digital f32. That
+//! ordering is exactly where fixed-ADC-gain error enters (Xiao et al. 2021,
+//! "On the Accuracy of Analog Neural Network Inference Accelerators").
+//!
+//! `AnalogModel` executes that schedule: each layer's [K x N] GEMM
+//! rectangle is split into crossbar-sized tiles
+//! ([`mapping::tiler::tile_grid`](crate::mapping::tile_grid)), inputs are
+//! DAC-quantized once per layer, every tile MVM is ADC-quantized per tile
+//! column at the GDC-scaled range, and K-tile partials accumulate in f32.
+//! Execution is layer-serial over the whole batch (the shared-array
+//! schedule `NativeModel::forward` also follows) with tile work fanned out
+//! across the persistent [`WorkerPool`] as (column-band, row-chunk) jobs.
+//!
+//! When a layer fits a single tile (the paper's models on the 1024x512
+//! array) and GDC is exactly 1, the per-tile schedule degenerates to the
+//! native one bit for bit — tested below and in
+//! tests/test_backend_analog.rs. Multi-tile geometries (64x64 ablations)
+//! diverge by design: that divergence *is* the modeled physics.
+
+use std::sync::{Arc, Mutex};
+
+use crate::crossbar::ArrayGeom;
+use crate::mapping::{tile_grid, Tile};
+use crate::nn::{LayerKind, ModelMeta};
+use crate::quant;
+use crate::simulator::forward::{scratch_capacity, Scratch};
+use crate::simulator::im2col;
+use crate::simulator::pool::{Job, RawSlice, RawSliceMut, WorkerPool};
+
+pub struct AnalogModel {
+    meta: Arc<ModelMeta>,
+    geom: ArrayGeom,
+    /// per-layer crossbar tiling of the [K x N] GEMM rectangle; digital
+    /// (`analog = false`) layers never touch the array and carry no plan
+    plans: Vec<Option<Vec<Tile>>>,
+    pool: Arc<WorkerPool>,
+    scratch: Mutex<Scratch>,
+}
+
+impl AnalogModel {
+    /// Single-threaded execution on the paper's 1024x512 mux-4 array.
+    pub fn new(meta: impl Into<Arc<ModelMeta>>) -> Self {
+        Self::with_threads(meta, ArrayGeom::AON, 1)
+    }
+
+    /// Custom array geometry (tile-ablation studies) and worker count
+    /// (`0` = all available cores); the pool is spawned here, never on the
+    /// execution path.
+    pub fn with_threads(meta: impl Into<Arc<ModelMeta>>, geom: ArrayGeom,
+                        threads: usize) -> Self {
+        let meta = meta.into();
+        let plans = meta
+            .layers
+            .iter()
+            .map(|lm| {
+                lm.analog.then(|| {
+                    tile_grid(lm.graph_weight_shape[0],
+                              lm.graph_weight_shape[1], geom)
+                })
+            })
+            .collect();
+        AnalogModel {
+            meta,
+            geom,
+            plans,
+            pool: Arc::new(WorkerPool::new(threads)),
+            scratch: Mutex::new(Scratch::default()),
+        }
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    pub fn geom(&self) -> ArrayGeom {
+        self.geom
+    }
+
+    /// Worker lanes tile jobs are dispatched over.
+    pub fn threads(&self) -> usize {
+        self.pool.lanes()
+    }
+
+    /// Crossbar tiles the model occupies across all analog layers (1 per
+    /// layer on the AON array; more under small-tile ablation geometries).
+    pub fn tiles_total(&self) -> usize {
+        self.plans.iter().flatten().map(|p| p.len()).sum()
+    }
+
+    /// Forward a batch: `x` is [batch, H, W, C] flat; returns logits
+    /// [batch, classes].
+    ///
+    /// The argument contract matches `NativeModel::forward` — `weights[l]`
+    /// in graph shape (the *effective*, possibly drifted read of the
+    /// programmed conductances), `gdc[l]` the layer's drift-compensation
+    /// scale — so the two engines are drop-in interchangeable behind
+    /// `InferenceBackend`. Results are bit-identical for any batch
+    /// decomposition and lane count: every output element's accumulation
+    /// order depends only on its own row and tile plan.
+    pub fn forward<W: AsRef<[f32]>>(&self, x: &[f32], batch: usize,
+                                    weights: &[W], gdc: &[f32],
+                                    adc_bits: u32) -> Vec<f32> {
+        let (ih, iw, ic) = self.meta.input_hwc;
+        assert_eq!(x.len(), batch * ih * iw * ic, "input shape mismatch");
+        assert_eq!(weights.len(), self.meta.layers.len());
+        assert_eq!(gdc.len(), self.meta.layers.len());
+        let b_dac = quant::dac_bits(adc_bits);
+
+        let mut guard = self.scratch.lock().unwrap();
+        guard.ensure(scratch_capacity(&self.meta, batch));
+        let Scratch { ping, pong } = &mut *guard;
+        let (mut cur, mut nxt): (&mut Vec<f32>, &mut Vec<f32>) = (ping, pong);
+        cur[..x.len()].copy_from_slice(x);
+        let mut len = x.len();
+
+        let (mut ch, mut cw, mut cc) = (ih, iw, ic);
+        for (li, lm) in self.meta.layers.iter().enumerate() {
+            let w = weights[li].as_ref();
+            match lm.kind {
+                LayerKind::Dw3x3 if !lm.analog => {
+                    // exact depthwise on the digital processor, compact
+                    // [9, C] — identical to the native engine
+                    let c = lm.in_ch;
+                    assert_eq!(w.len(), 9 * c);
+                    let ho = im2col::out_dim(ch, lm.stride.0);
+                    let wo = im2col::out_dim(cw, lm.stride.1);
+                    let rows = batch * ho * wo;
+                    im2col::patches3x3_into(&cur[..len], &mut nxt[..rows * 9 * c],
+                                            batch, ch, cw, cc, lm.stride);
+                    // patches in `nxt`; depthwise result overwrites `cur`
+                    for r in 0..rows {
+                        for ci in 0..c {
+                            let mut acc = 0f32;
+                            for t in 0..9 {
+                                acc += nxt[r * 9 * c + t * c + ci] * w[t * c + ci];
+                            }
+                            cur[r * c + ci] = acc * lm.dig_scale[ci] + lm.dig_bias[ci];
+                        }
+                    }
+                    len = rows * c;
+                    ch = ho;
+                    cw = wo;
+                }
+                _ => {
+                    // stage the GEMM input so it ends up in `cur` (same
+                    // staging as the native engine)
+                    let (m_rows, k) = match lm.kind {
+                        LayerKind::Conv3x3 | LayerKind::Dw3x3 => {
+                            let ho = im2col::out_dim(ch, lm.stride.0);
+                            let wo = im2col::out_dim(cw, lm.stride.1);
+                            let kk = 9 * cc;
+                            let rows = batch * ho * wo;
+                            im2col::patches3x3_into(&cur[..len],
+                                                    &mut nxt[..rows * kk],
+                                                    batch, ch, cw, cc, lm.stride);
+                            std::mem::swap(&mut cur, &mut nxt);
+                            len = rows * kk;
+                            ch = ho;
+                            cw = wo;
+                            (rows, kk)
+                        }
+                        LayerKind::Conv1x1 => (batch * ch * cw, cc),
+                        LayerKind::Dense => {
+                            // global average pool into `nxt`, then flip
+                            let pix = ch * cw;
+                            let g = &mut nxt[..batch * cc];
+                            g.fill(0.0);
+                            for ni in 0..batch {
+                                for p_ in 0..pix {
+                                    for ci in 0..cc {
+                                        g[ni * cc + ci] += cur[(ni * pix + p_) * cc + ci];
+                                    }
+                                }
+                            }
+                            let inv = 1.0 / pix as f32;
+                            g.iter_mut().for_each(|v| *v *= inv);
+                            std::mem::swap(&mut cur, &mut nxt);
+                            len = batch * cc;
+                            ch = 1;
+                            cw = 1;
+                            (batch, cc)
+                        }
+                    };
+                    let gw = &lm.graph_weight_shape;
+                    assert_eq!(gw[0], k, "{}: K mismatch", lm.name);
+                    let n_cols = gw[1];
+                    assert_eq!(w.len(), k * n_cols, "{}: weight len", lm.name);
+                    debug_assert_eq!(len, m_rows * k);
+
+                    if lm.analog {
+                        // source-line DACs quantize the activations once;
+                        // every tile sees the same driven lines
+                        quant::fake_quant_slice(&mut cur[..m_rows * k], lm.r_dac,
+                                                b_dac);
+                        let plan = self.plans[li]
+                            .as_deref()
+                            .expect("analog layer has a tile plan");
+                        tiled_mvm(&self.pool, &cur[..m_rows * k], w,
+                                  &mut nxt[..m_rows * n_cols], m_rows, k,
+                                  n_cols, plan, lm.r_adc, adc_bits, gdc[li]);
+                    } else {
+                        // digital layers never touch the array: exact GEMM
+                        self.pool.gemm_into(&cur[..m_rows * k], w,
+                                            &mut nxt[..m_rows * n_cols],
+                                            m_rows, k, n_cols);
+                    }
+                    let out = &mut nxt[..m_rows * n_cols];
+                    // digital per-channel affine (folded BN / bias)
+                    for r in 0..m_rows {
+                        let row = &mut out[r * n_cols..(r + 1) * n_cols];
+                        for (j, v) in row.iter_mut().enumerate() {
+                            *v = *v * lm.dig_scale[j] + lm.dig_bias[j];
+                        }
+                    }
+                    std::mem::swap(&mut cur, &mut nxt);
+                    len = m_rows * n_cols;
+                    cc = n_cols;
+                }
+            }
+            if lm.relu {
+                cur[..len].iter_mut().for_each(|v| *v = v.max(0.0));
+            }
+        }
+        cur[..len].to_vec()
+    }
+}
+
+/// One layer's tile-faithful MVM sweep: every crossbar tile of the [k x n]
+/// weight rectangle multiplies the DAC-quantized activations against its
+/// weight slice, the tile's analog partial sums are ADC-quantized per
+/// column at the GDC-scaled range, and the digitized partials accumulate
+/// in f32 across K-tiles into `out`.
+///
+/// Work is dispatched as (column-band, row-chunk) jobs on the worker pool:
+/// tiles sharing a `ct` feed the same output columns, so one job owns one
+/// column band for a chunk of rows and performs the K-tile accumulation
+/// itself — jobs therefore write disjoint rectangles of `out`, which keeps
+/// the dispatch sound and the results independent of the lane count.
+#[allow(clippy::too_many_arguments)]
+fn tiled_mvm(pool: &WorkerPool, a: &[f32], w: &[f32], out: &mut [f32],
+             m: usize, k: usize, n: usize, tiles: &[Tile], r_adc: f32,
+             adc_bits: u32, alpha: f32) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(w.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    // group tiles into column bands (all tiles of one `ct`)
+    let n_bands = tiles.iter().map(|t| t.ct + 1).max().unwrap_or(0);
+    let mut bands: Vec<Vec<Tile>> = vec![Vec::new(); n_bands];
+    for t in tiles {
+        bands[t.ct].push(t.clone());
+    }
+    // split the batch rows so every lane gets work even when the whole
+    // layer fits one tile (the common AON-array case)
+    let lanes = pool.lanes().max(1);
+    let row_chunks = lanes.div_ceil(n_bands.max(1)).min(m).max(1);
+    let rows_per = m.div_ceil(row_chunks);
+
+    // ADC quantizer grid (shared by every tile of the layer) — from the
+    // same source as the native engine's `fake_quant_slice`, which is what
+    // keeps single-tile execution bit-identical to it
+    let (step, inv) = quant::grid(r_adc, adc_bits);
+
+    let ra = RawSlice::of(a);
+    let rw = RawSlice::of(w);
+    let ro = RawSliceMut::of(out);
+    let mut jobs: Vec<Job> = Vec::with_capacity(n_bands * row_chunks);
+    for band in bands {
+        debug_assert!(!band.is_empty(), "tile grid bands are dense");
+        let mut r0 = 0usize;
+        while r0 < m {
+            let rows = rows_per.min(m - r0);
+            let band = band.clone();
+            jobs.push(Box::new(move || {
+                // SAFETY: `run_all` blocks until every job has finished, so
+                // `a`, `w`, `out` outlive the job; jobs write disjoint
+                // (row-chunk x column-band) rectangles of `out`, which
+                // `tile_band` materializes one row-slice at a time via
+                // `slice_at` so no two live `&mut` views ever overlap.
+                unsafe {
+                    tile_band(ra.get(), rw.get(), ro, r0, rows, k, n, &band,
+                              r_adc, step, inv, alpha);
+                }
+            }));
+            r0 += rows;
+        }
+    }
+    pool.run_all(jobs);
+}
+
+/// Rows [r0, r0+rows) of one column band: per K-tile analog MVM, per-tile
+/// ADC quantization (clamp to the full-scale range, round to the GDC-scaled
+/// grid), digital f32 accumulation. The inner product streams K ascending
+/// with the same zero-skip as `gemm::gemm_into`, so a single-tile band at
+/// `alpha == 1` reproduces the native engine's bits exactly.
+///
+/// SAFETY: the caller must guarantee `out` outlives the call and that no
+/// other live view overlaps this band's (row-chunk x column-band)
+/// rectangle; each output row-slice is materialized individually through
+/// `slice_at` so concurrent bands never hold aliasing `&mut` views.
+#[allow(clippy::too_many_arguments)]
+unsafe fn tile_band(a: &[f32], w: &[f32], out: RawSliceMut, r0: usize,
+                    rows: usize, k: usize, n: usize, band: &[Tile],
+                    r_adc: f32, step: f32, inv: f32, alpha: f32) {
+    let n0 = band[0].n0;
+    let nc = band[0].cols;
+    let mut part = vec![0f32; nc];
+    for r in r0..r0 + rows {
+        let arow = &a[r * k..(r + 1) * k];
+        let orow = out.slice_at(r * n + n0, nc);
+        for t in band {
+            debug_assert_eq!((t.n0, t.cols), (n0, nc), "band shares columns");
+            part.fill(0.0);
+            for (ki, &aik) in arow[t.k0..t.k0 + t.rows].iter().enumerate() {
+                if aik == 0.0 {
+                    continue; // quantized activations are often exactly zero
+                }
+                let wrow = &w[(t.k0 + ki) * n + n0..(t.k0 + ki) * n + n0 + nc];
+                for (pj, &wj) in part.iter_mut().zip(wrow.iter()) {
+                    *pj += aik * wj;
+                }
+            }
+            // the tile's ADCs: clamp to full scale, snap to the code grid,
+            // apply the digital GDC gain — then accumulate
+            for (oj, &pj) in orow.iter_mut().zip(part.iter()) {
+                *oj += (pj.clamp(-r_adc, r_adc) * inv).round() * step * alpha;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::NativeModel;
+    use crate::util::json;
+    use crate::util::rng::Rng;
+
+    fn tiny_meta() -> ModelMeta {
+        let src = r#"{
+          "model": "tiny", "variant": "t", "input_hwc": [4, 4, 1],
+          "num_classes": 2, "eta": 0.0, "fp_test_acc": 1.0,
+          "trained_adc_bits": null,
+          "layers": [
+            {"name": "c0", "kind": "conv3x3", "in_ch": 1, "out_ch": 2,
+             "stride": [1, 1], "relu": true, "analog": true,
+             "in_h": 4, "in_w": 4, "out_h": 4, "out_w": 4,
+             "k_gemm": 9, "weight_shape": [9, 2],
+             "graph_weight_shape": [9, 2],
+             "w_scale": 1.0, "w_max": 1.0, "r_dac": 8.0, "r_adc": 8.0,
+             "dig_scale": [1, 1], "dig_bias": [0, 0]},
+            {"name": "fc", "kind": "dense", "in_ch": 2, "out_ch": 2,
+             "stride": [1, 1], "relu": false, "analog": true,
+             "in_h": 4, "in_w": 4, "out_h": 1, "out_w": 1,
+             "k_gemm": 2, "weight_shape": [2, 2],
+             "graph_weight_shape": [2, 2],
+             "w_scale": 1.0, "w_max": 1.0, "r_dac": 8.0, "r_adc": 8.0,
+             "dig_scale": [1, 1], "dig_bias": [0, 0]}
+          ],
+          "hlo": {}
+        }"#;
+        ModelMeta::from_json(&json::parse(src).unwrap()).unwrap()
+    }
+
+    fn random_case(rng: &mut Rng) -> (Vec<f32>, Vec<Vec<f32>>, Vec<f32>) {
+        let batch = 3;
+        let x: Vec<f32> = (0..batch * 16).map(|_| rng.gauss(0.4, 0.3) as f32).collect();
+        let w0: Vec<f32> = (0..18).map(|_| rng.gauss(0.0, 0.4) as f32).collect();
+        let w1: Vec<f32> = (0..4).map(|_| rng.gauss(0.0, 0.4) as f32).collect();
+        (x, vec![w0, w1], vec![1.0, 1.0])
+    }
+
+    #[test]
+    fn single_tile_layers_match_native_bit_for_bit() {
+        // on the AON array both layers fit one tile, so per-tile ADC
+        // degenerates to the native post-accumulation quantization
+        let meta = tiny_meta();
+        let native = NativeModel::with_threads(meta.clone(), 3);
+        let analog = AnalogModel::with_threads(meta, ArrayGeom::AON, 3);
+        assert_eq!(analog.tiles_total(), 2);
+        let mut rng = Rng::new(11);
+        for _ in 0..5 {
+            let (x, ws, gdc) = random_case(&mut rng);
+            let a = analog.forward(&x, 3, &ws, &gdc, 8);
+            let b = native.forward(&x, 3, &ws, &gdc, 8);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn batched_forward_is_bit_identical_to_sequential() {
+        // multi-tile geometry on purpose: K-tile accumulation must be
+        // batch-invariant too
+        let geom = ArrayGeom::new(4, 1, 1).unwrap();
+        let analog = AnalogModel::with_threads(tiny_meta(), geom, 4);
+        assert!(analog.tiles_total() > 4, "{}", analog.tiles_total());
+        let mut rng = Rng::new(12);
+        let (x, ws, gdc) = random_case(&mut rng);
+        let batched = analog.forward(&x, 3, &ws, &gdc, 8);
+        assert_eq!(batched.len(), 3 * 2);
+        for s in 0..3 {
+            let one = analog.forward(&x[s * 16..(s + 1) * 16], 1, &ws, &gdc, 8);
+            assert_eq!(one[..], batched[s * 2..(s + 1) * 2], "sample {s}");
+        }
+    }
+
+    #[test]
+    fn lane_count_does_not_change_bits() {
+        let geom = ArrayGeom::new(5, 1, 1).unwrap();
+        let a1 = AnalogModel::with_threads(tiny_meta(), geom, 1);
+        let a4 = AnalogModel::with_threads(tiny_meta(), geom, 4);
+        let mut rng = Rng::new(13);
+        let (x, ws, gdc) = random_case(&mut rng);
+        assert_eq!(a1.forward(&x, 3, &ws, &gdc, 8),
+                   a4.forward(&x, 3, &ws, &gdc, 8));
+    }
+
+    #[test]
+    fn per_tile_quantization_diverges_from_native_at_low_bits() {
+        // the physics the engine exists to model: splitting K across tiles
+        // quantizes partials independently, which a coarse ADC makes
+        // visible against the post-accumulation reference
+        let geom = ArrayGeom::new(2, 2, 2).unwrap();
+        let native = NativeModel::new(tiny_meta());
+        let analog = AnalogModel::with_threads(tiny_meta(), geom, 1);
+        let mut rng = Rng::new(14);
+        let mut diverged = false;
+        for _ in 0..8 {
+            let (x, ws, gdc) = random_case(&mut rng);
+            if analog.forward(&x, 3, &ws, &gdc, 4)
+                != native.forward(&x, 3, &ws, &gdc, 4)
+            {
+                diverged = true;
+                break;
+            }
+        }
+        assert!(diverged, "4-bit multi-tile execution should not match the \
+                           post-accumulation reference");
+    }
+
+    #[test]
+    fn gdc_scales_tile_outputs() {
+        let meta = tiny_meta();
+        let analog = AnalogModel::new(meta);
+        let x: Vec<f32> = (0..16).map(|i| (i as f32) / 16.0).collect();
+        let mut w0 = vec![0f32; 18];
+        w0[4 * 2] = 0.5; // "drifted" weights at half scale
+        w0[4 * 2 + 1] = 0.25;
+        let w1 = vec![1.0, 0.0, 0.0, 1.0];
+        let weights = vec![w0, w1];
+        let no_comp = analog.forward(&x, 1, &weights, &[1.0, 1.0], 8);
+        let comped = analog.forward(&x, 1, &weights, &[2.0, 1.0], 8);
+        assert!(comped[0] > no_comp[0] * 1.5);
+    }
+}

@@ -24,14 +24,16 @@ use crate::simulator::pool::WorkerPool;
 /// intermediate (patch matrix or activation block) of the model at the
 /// largest batch seen so far.  Layer `k` reads one buffer and writes the
 /// other; ownership flips each step, so no layer ever allocates.
+/// (Shared with the tile-faithful `AnalogModel`, whose layer loop has the
+/// same staging structure.)
 #[derive(Default)]
-struct Scratch {
-    ping: Vec<f32>,
-    pong: Vec<f32>,
+pub(crate) struct Scratch {
+    pub(crate) ping: Vec<f32>,
+    pub(crate) pong: Vec<f32>,
 }
 
 impl Scratch {
-    fn ensure(&mut self, cap: usize) {
+    pub(crate) fn ensure(&mut self, cap: usize) {
         if self.ping.len() < cap {
             self.ping.resize(cap, 0.0);
         }
@@ -43,7 +45,7 @@ impl Scratch {
 
 /// Largest f32 count any single intermediate (input block, im2col patch
 /// matrix, layer output) occupies for `meta` at `batch`.
-fn scratch_capacity(meta: &ModelMeta, batch: usize) -> usize {
+pub(crate) fn scratch_capacity(meta: &ModelMeta, batch: usize) -> usize {
     let (ih, iw, ic) = meta.input_hwc;
     let mut cap = batch * ih * iw * ic;
     let (mut ch, mut cw, mut cc) = (ih, iw, ic);

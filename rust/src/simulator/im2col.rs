@@ -103,7 +103,7 @@ mod tests {
         for oh in 0..h {
             for ow in 0..w {
                 for ci in 0..c {
-                    let got = p[(oh * w + ow) * k + (1 * 3 + 1) * c + ci];
+                    let got = p[(oh * w + ow) * k + 4 * c + ci]; // ky=1,kx=1
                     let want = x[(oh * w + ow) * c + ci];
                     assert_eq!(got, want);
                 }
@@ -116,12 +116,12 @@ mod tests {
         let (n, h, w, c) = (1, 3, 3, 1);
         let x = vec![1f32; 9];
         let p = patches3x3(&x, n, h, w, c, (1, 1));
-        // top-left output pixel: taps with iy<0 or ix<0 must be 0
-        let k = 9;
-        assert_eq!(p[0 * k + 0], 0.0); // (ky=0,kx=0)
-        assert_eq!(p[0 * k + 1], 0.0); // (ky=0,kx=1)
-        assert_eq!(p[0 * k + 3], 0.0); // (ky=1,kx=0)
-        assert_eq!(p[0 * k + 4], 1.0); // center
+        // top-left output pixel (row 0 of the [.., 9] patch matrix): taps
+        // with iy<0 or ix<0 must be 0
+        assert_eq!(p[0], 0.0); // (ky=0,kx=0)
+        assert_eq!(p[1], 0.0); // (ky=0,kx=1)
+        assert_eq!(p[3], 0.0); // (ky=1,kx=0)
+        assert_eq!(p[4], 1.0); // center
     }
 
     #[test]
@@ -130,7 +130,7 @@ mod tests {
         let x: Vec<f32> = (0..16).map(|i| i as f32).collect();
         let p = patches3x3(&x, n, h, w, c, (2, 2));
         let k = 9;
-        // output (1,1) center tap = x[2*1, 2*1] = x[2,2] = 10
-        assert_eq!(p[(1 * 2 + 1) * k + 4], 10.0);
+        // output (1,1) = patch row 3; center tap = x[2*1, 2*1] = x[2,2] = 10
+        assert_eq!(p[3 * k + 4], 10.0);
     }
 }

@@ -1,15 +1,24 @@
-//! Rust-native CiM forward simulator.
+//! Rust-native CiM forward simulators.
 //!
-//! An independent implementation of the exported inference graph (im2col +
-//! GEMM + DAC/ADC quantization + digital affine) used to cross-validate the
-//! PJRT path and to run device-physics experiments without XLA in the loop.
+//! Two independent implementations of the deployed inference graph, used to
+//! cross-validate the PJRT path and to run device-physics experiments
+//! without XLA in the loop:
+//!
+//! * [`NativeModel`] — im2col + full-K GEMM + DAC/ADC fake quantization +
+//!   digital affine, mirroring the exported HLO graph layer by layer;
+//! * [`AnalogModel`] — the tile-faithful schedule: one MVM per mapped
+//!   crossbar tile, per-tile ADC quantization at the GDC-scaled range,
+//!   digital f32 accumulation across K-tiles (see `analog_forward`).
+//!
 //! The im2col ordering and SAME-padding convention are a shared contract
 //! with `python/compile/layers.py`.
 
+pub mod analog_forward;
 pub mod forward;
 pub mod gemm;
 pub mod im2col;
 pub mod pool;
 
+pub use analog_forward::AnalogModel;
 pub use forward::NativeModel;
 pub use pool::WorkerPool;

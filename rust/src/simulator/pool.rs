@@ -20,7 +20,11 @@ use std::thread::JoinHandle;
 
 use crate::simulator::gemm;
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
+/// A unit of pool work. Jobs may capture raw views ([`RawSlice`],
+/// [`RawSliceMut`]) of caller-owned buffers; the dispatch protocol
+/// ([`WorkerPool::run_all`], [`WorkerPool::gemm_chunks`]) blocks the caller
+/// until every job has run, which is what makes those views sound.
+pub type Job = Box<dyn FnOnce() + Send + 'static>;
 
 /// A fixed set of parked worker threads executing row-chunk GEMM jobs.
 ///
@@ -76,6 +80,40 @@ impl WorkerPool {
             .expect("worker pool already shut down")
             .send(job)
             .expect("gemm worker hung up");
+    }
+
+    /// Execute arbitrary jobs across this pool's lanes and block until all
+    /// of them have finished. The calling thread is a lane: it runs the
+    /// first job inline while the workers drain the rest (same latch
+    /// protocol as [`gemm_chunks`](Self::gemm_chunks), so jobs may capture
+    /// raw views of caller-owned buffers — they strictly outlive the jobs).
+    /// Jobs writing the same output buffer must target disjoint regions.
+    ///
+    /// This is the dispatch surface behind the AnalogCim engine's
+    /// per-crossbar-tile MVMs, where each job quantizes and accumulates a
+    /// whole column band and a plain row-chunk GEMM split does not fit.
+    pub fn run_all(&self, jobs: Vec<Job>) {
+        let mut jobs = jobs.into_iter();
+        let Some(head) = jobs.next() else { return };
+        if self.workers.is_empty() {
+            head();
+            for job in jobs {
+                job();
+            }
+            return;
+        }
+        let latch = Arc::new(Latch::new());
+        let mut submitted = 0usize;
+        for job in jobs {
+            let latch = latch.clone();
+            submitted += 1;
+            self.submit(Box::new(move || {
+                job();
+                latch.arrive();
+            }));
+        }
+        head();
+        latch.wait(submitted);
     }
 
     /// `C[M,N] = A[M,K] @ B[K,N]` over this pool's lanes. Falls back to the
@@ -181,7 +219,7 @@ impl Latch {
 
 /// Raw view of a shared f32 slice, Send across the job channel.
 #[derive(Clone, Copy)]
-struct RawSlice {
+pub(crate) struct RawSlice {
     ptr: *const f32,
     len: usize,
 }
@@ -189,19 +227,22 @@ struct RawSlice {
 unsafe impl Send for RawSlice {}
 
 impl RawSlice {
-    fn of(s: &[f32]) -> Self {
+    pub(crate) fn of(s: &[f32]) -> Self {
         RawSlice { ptr: s.as_ptr(), len: s.len() }
     }
 
     /// SAFETY: caller must guarantee the source slice outlives the use.
-    unsafe fn get<'a>(self) -> &'a [f32] {
+    pub(crate) unsafe fn get<'a>(self) -> &'a [f32] {
         std::slice::from_raw_parts(self.ptr, self.len)
     }
 }
 
-/// Raw view of an exclusive f32 slice, Send across the job channel.
+/// Raw view of an exclusive f32 slice, Send across the job channel. Copies
+/// of one view may live in several jobs at once (that is how disjoint
+/// strided regions of a shared output buffer are dispatched); exclusivity
+/// of the *regions actually written* is the dispatcher's obligation.
 #[derive(Clone, Copy)]
-struct RawSliceMut {
+pub(crate) struct RawSliceMut {
     ptr: *mut f32,
     len: usize,
 }
@@ -209,13 +250,27 @@ struct RawSliceMut {
 unsafe impl Send for RawSliceMut {}
 
 impl RawSliceMut {
-    fn of(s: &mut [f32]) -> Self {
+    pub(crate) fn of(s: &mut [f32]) -> Self {
         RawSliceMut { ptr: s.as_mut_ptr(), len: s.len() }
     }
 
     /// SAFETY: caller must guarantee exclusivity and lifetime of the source.
-    unsafe fn get_mut<'a>(self) -> &'a mut [f32] {
+    pub(crate) unsafe fn get_mut<'a>(self) -> &'a mut [f32] {
         std::slice::from_raw_parts_mut(self.ptr, self.len)
+    }
+
+    /// A `&mut` view of `[offset, offset + len)` only. Concurrent jobs
+    /// holding copies of one `RawSliceMut` must go through this (never
+    /// [`get_mut`](Self::get_mut)) so that no two live `&mut` slices ever
+    /// overlap — materializing the whole buffer in several jobs at once
+    /// would alias even if the actual writes are disjoint.
+    ///
+    /// SAFETY: caller must guarantee the range is in bounds, disjoint from
+    /// every other outstanding view, and that the source outlives the use.
+    pub(crate) unsafe fn slice_at<'a>(self, offset: usize, len: usize)
+                                      -> &'a mut [f32] {
+        debug_assert!(offset + len <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(offset), len)
     }
 }
 
@@ -272,6 +327,25 @@ mod tests {
         let pool = WorkerPool::new(0);
         assert!(pool.lanes() >= 1);
         assert_eq!(pool.lanes(), gemm::effective_threads(0));
+    }
+
+    #[test]
+    fn run_all_executes_every_job_exactly_once() {
+        for threads in [1, 4] {
+            let pool = WorkerPool::new(threads);
+            let hits = Arc::new(AtomicUsize::new(0));
+            let jobs: Vec<Job> = (0..13)
+                .map(|_| {
+                    let hits = hits.clone();
+                    Box::new(move || {
+                        hits.fetch_add(1, Ordering::SeqCst);
+                    }) as Job
+                })
+                .collect();
+            pool.run_all(jobs);
+            assert_eq!(hits.load(Ordering::SeqCst), 13, "threads={threads}");
+            pool.run_all(Vec::new()); // empty dispatch is a no-op
+        }
     }
 
     #[test]

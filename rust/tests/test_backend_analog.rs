@@ -1,0 +1,243 @@
+//! Hermetic AnalogCim backend integration: synthetic artifact bundles
+//! (datasets::synth — manifest + meta + ANWT weights + ANDS dataset, no
+//! HLO) executed through the tile-faithful engine. Runs on a fresh checkout
+//! with no `make artifacts`, no XLA library, and no `pjrt` feature.
+//!
+//! The acceptance invariants of the engine live here:
+//! * degenerate physics (noise off, single-tile layers, unity GDC) is
+//!   bit-identical to the native reference, and a >= 12-bit ADC keeps the
+//!   argmax identical even across multi-tile geometries;
+//! * drifted PCM execution is batch-invariant (the coordinator's dynamic
+//!   batcher relies on that);
+//! * `eval::drift_accuracy` and the serving `Coordinator` both run the
+//!   tile-faithful physics end-to-end, including pre-aged serving via
+//!   `ServeConfig::drift_time`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use analognets::backend::{AnalogCimBackend, BackendKind, HostTensor,
+                          InferenceBackend};
+use analognets::coordinator::{Coordinator, ServeConfig};
+use analognets::crossbar::ArrayGeom;
+use analognets::datasets::synth::{self, SynthSpec};
+use analognets::eval::{drift_accuracy, drift_accuracy_on, DeployedModel,
+                       EvalOpts};
+use analognets::pcm::{PcmParams, T_25S, T_1Y};
+use analognets::runtime::ArtifactStore;
+use analognets::util::logits;
+use analognets::util::rng::Rng;
+
+/// Exact stored weights as host tensors + unity GDC (no PCM in the loop).
+fn exact_weights(store: &ArtifactStore, vid: &str)
+                 -> (Vec<HostTensor>, Vec<f32>) {
+    let w = store.weights(vid).unwrap();
+    let ws: Vec<HostTensor> = w.iter().map(HostTensor::from_tensor).collect();
+    let unity = vec![1.0f32; ws.len()];
+    (ws, unity)
+}
+
+#[test]
+fn exact_weights_single_tile_is_bit_identical_to_native() {
+    let spec = SynthSpec::bench("ana_exact");
+    let dir = synth::write_bundle_tmp("ana_exact", &spec).unwrap();
+    let store = ArtifactStore::open(&dir).unwrap();
+    let meta = store.meta(&spec.vid).unwrap();
+    let (ws, unity) = exact_weights(&store, &spec.vid);
+    let ds = store.dataset(&spec.task).unwrap();
+    let n = 8;
+    let xb = ds.padded_batch(0, n);
+
+    let native = analognets::backend::create(BackendKind::Native, &store,
+                                             &spec.vid, 12).unwrap();
+    let analog = AnalogCimBackend::with_threads(meta, 12, 4);
+    // every bench-bundle layer fits one AON tile
+    assert_eq!(analog.tiles_total(), 3);
+    let lo_n = native.run_batch(&xb, n, &ws, &unity).unwrap();
+    let lo_a = analog.run_batch(&xb, n, &ws, &unity).unwrap();
+    assert_eq!(lo_n, lo_a, "single-tile analog execution must reproduce the \
+                            native bits");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn exact_weights_multi_tile_keeps_argmax_at_12_bits() {
+    let spec = SynthSpec::bench("ana_tiles");
+    let dir = synth::write_bundle_tmp("ana_tiles", &spec).unwrap();
+    let store = ArtifactStore::open(&dir).unwrap();
+    let meta = store.meta(&spec.vid).unwrap();
+    let (ws, unity) = exact_weights(&store, &spec.vid);
+    let ds = store.dataset(&spec.task).unwrap();
+    let n = ds.len();
+    let xb = ds.padded_batch(0, n);
+
+    let native = analognets::backend::create(BackendKind::Native, &store,
+                                             &spec.vid, 12).unwrap();
+    // 32x8 tiles force K-splits on the 72x16 middle layer: per-tile ADC
+    // quantization now happens *before* digital accumulation
+    let geom = ArrayGeom::new(32, 8, 4).unwrap();
+    let analog = AnalogCimBackend::with_geom(meta.clone(), 12, geom, 2);
+    assert!(analog.tiles_total() > meta.layers.len(),
+            "geometry must split at least one layer ({} tiles)",
+            analog.tiles_total());
+
+    let lo_n = native.run_batch(&xb, n, &ws, &unity).unwrap();
+    let lo_a = analog.run_batch(&xb, n, &ws, &unity).unwrap();
+    let classes = meta.num_classes;
+    let pred_n = logits::predictions(&lo_n, classes);
+    let pred_a = logits::predictions(&lo_a, classes);
+    // per-tile quantization error is bounded by (#K-tiles) x half an ADC
+    // step per layer; 0.02 is comfortably above that bound for this model
+    // at 12 bits, so every sample with a larger native margin must keep
+    // its argmax
+    let mut checked = 0usize;
+    for s in 0..n {
+        let row = &lo_n[s * classes..(s + 1) * classes];
+        let mut sorted: Vec<f32> = row.to_vec();
+        sorted.sort_by(f32::total_cmp);
+        let margin = sorted[classes - 1] - sorted[classes - 2];
+        if margin > 0.02 {
+            assert_eq!(pred_n[s], pred_a[s],
+                       "sample {s}: 12-bit per-tile quantization flipped a \
+                        {margin:.3}-margin argmax");
+            checked += 1;
+        }
+    }
+    assert!(checked > 0,
+            "margin gate left no samples — synthetic task lost its margin");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The layer-serial correctness invariant behind the coordinator's dynamic
+/// batcher, on the tiled engine over drifted PCM weights: one
+/// `run_batch(N)` is bit-identical to N sequential single-request runs.
+#[test]
+fn batched_analog_run_batch_is_bit_identical_to_sequential() {
+    let spec = SynthSpec::bench("ana_batch");
+    let dir = synth::write_bundle_tmp("ana_batch", &spec).unwrap();
+    let store = ArtifactStore::open(&dir).unwrap();
+    let meta = store.meta(&spec.vid).unwrap();
+    let params = PcmParams::default();
+    let mut rng = Rng::new(33);
+    let dep = DeployedModel::program(&store, &spec.vid, &params, &mut rng)
+        .unwrap();
+    let (ws, alphas) = dep.read_at(3600.0, &params, &mut rng, true);
+
+    let geom = ArrayGeom::new(32, 8, 4).unwrap();
+    let be = AnalogCimBackend::with_geom(meta, 8, geom, 4);
+    let ds = store.dataset(&spec.task).unwrap();
+    let n = 6;
+    let feat = ds.feat_len();
+    let xb = ds.padded_batch(0, n);
+    let batched = be.run_batch(&xb, n, &ws, &alphas).unwrap();
+    assert_eq!(batched.len(), n * 2);
+    for s in 0..n {
+        let one = be
+            .run_batch(&xb[s * feat..(s + 1) * feat], 1, &ws, &alphas)
+            .unwrap();
+        assert_eq!(one[..], batched[s * 2..(s + 1) * 2], "sample {s} diverged");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn analog_drift_sweep_runs_end_to_end() {
+    let spec = SynthSpec::bench("ana_eval");
+    let dir = synth::write_bundle_tmp("ana_eval", &spec).unwrap();
+    let store = ArtifactStore::open(&dir).unwrap();
+
+    // paper-default PCM params across the drift range
+    let opts = EvalOpts {
+        bits: 8,
+        batch: 8,
+        max_samples: 16,
+        runs: 2,
+        backend: BackendKind::AnalogCim,
+        ..Default::default()
+    };
+    let accs = drift_accuracy(&store, &spec.vid, &[T_25S, T_1Y], &opts).unwrap();
+    assert_eq!(accs.len(), 2);
+    for per_time in &accs {
+        assert_eq!(per_time.len(), opts.runs);
+        for a in per_time {
+            assert!((0.0..=1.0).contains(a), "accuracy out of range: {a}");
+        }
+    }
+
+    // clean weights (ideal PCM, t = 25 s): the analog engine must agree
+    // with the native reference run for run — same seed, same reads,
+    // single-tile layers, so the accuracies are exactly equal
+    let clean = EvalOpts {
+        bits: 8,
+        batch: 8,
+        max_samples: 16,
+        runs: 2,
+        params: PcmParams::ideal(),
+        backend: BackendKind::Native,
+        t_drift: Some(T_25S),
+        ..Default::default()
+    };
+    assert_eq!(clean.sweep_times(), vec![T_25S]);
+    let acc_native =
+        drift_accuracy(&store, &spec.vid, &clean.sweep_times(), &clean).unwrap();
+    let clean_analog = EvalOpts { backend: BackendKind::AnalogCim, ..clean };
+    let acc_analog = drift_accuracy(&store, &spec.vid,
+                                    &clean_analog.sweep_times(),
+                                    &clean_analog).unwrap();
+    assert_eq!(acc_native, acc_analog);
+
+    // the caller-constructed-backend hook with an explicit geometry agrees
+    // with the factory path on the AON array
+    let meta = store.meta(&spec.vid).unwrap();
+    let be = AnalogCimBackend::with_geom(meta, 8, ArrayGeom::AON, 1);
+    let acc_on = drift_accuracy_on(&be, &store, &spec.vid,
+                                   &clean_analog.sweep_times(),
+                                   &clean_analog).unwrap();
+    assert_eq!(acc_on, acc_analog);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn analog_coordinator_serves_pre_aged_array() {
+    let spec = SynthSpec::tiny("ana_serve");
+    let dir = synth::write_bundle_tmp("ana_serve", &spec).unwrap();
+    let mut cfg = ServeConfig::new(&spec.vid, 8)
+        .with_backend(BackendKind::AnalogCim)
+        .with_drift_time(86_400.0);
+    assert_eq!(cfg.backend, BackendKind::AnalogCim);
+    cfg.artifacts_dir = dir.clone();
+    cfg.max_wait = Duration::from_millis(1);
+
+    let coord = Arc::new(Coordinator::start(cfg).unwrap());
+    let feat = coord.feat_len;
+    let mut handles = Vec::new();
+    for c in 0..3usize {
+        let coord = coord.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..6usize {
+                let v = ((c * 6 + i) % 7) as f32 / 7.0;
+                let resp = coord.infer(vec![v; feat]).unwrap();
+                assert_eq!(resp.logits.len(), 2);
+                assert!(resp.logits.iter().all(|l| l.is_finite()));
+                // drift-aware serving: the array is already a day old
+                assert!(resp.sim_age_s >= 86_400.0, "age {}", resp.sim_age_s);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = coord.metrics.summary();
+    assert_eq!(m.completed as usize, 3 * 6);
+    match Arc::try_unwrap(coord) {
+        Ok(c) => c.stop().unwrap(),
+        Err(_) => panic!("coordinator handle still shared"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn default_serve_config_starts_at_programming_age() {
+    let cfg = ServeConfig::new("x", 8);
+    assert!((cfg.drift_time - T_25S).abs() < 1e-9);
+}

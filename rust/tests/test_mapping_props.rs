@@ -3,7 +3,7 @@
 //! invariants hold across geometries.
 
 use analognets::crossbar::ArrayGeom;
-use analognets::mapping::{map_model, split_map_model};
+use analognets::mapping::{map_model, slice_tile, split_map_model, tile_grid};
 use analognets::nn::meta::ModelMeta;
 use analognets::timing::perf::split_inference_rate;
 use analognets::timing::{model_perf, EnergyModel};
@@ -95,7 +95,8 @@ fn prop_split_covers_all_weights() {
         if meta.layers.is_empty() {
             continue;
         }
-        for geom in [ArrayGeom::new(128, 128), ArrayGeom::new(64, 64)] {
+        for geom in [ArrayGeom::new(128, 128, 4).unwrap(),
+                     ArrayGeom::new(64, 64, 4).unwrap()] {
             let s = split_map_model(&meta, geom);
             for (sl, lm) in s.layers.iter().zip(meta.layers.iter()) {
                 // allocated tile area must cover every non-zero weight
@@ -108,6 +109,56 @@ fn prop_split_covers_all_weights() {
             let u = s.effective_utilization();
             assert!(u > 0.0 && u <= 1.0, "case {case}: split util {u}");
         }
+    }
+}
+
+/// Satellite invariant behind the AnalogCim engine: for random rectangles
+/// and geometries (mux ratios included), every execution tile fits the
+/// array bounds, the grid covers the rectangle exactly once, and writing
+/// every tile's slice back at its origin reconstructs the dense weight
+/// matrix bit-exactly — ragged edge tiles included.
+#[test]
+fn prop_tiles_fit_bounds_and_reassemble_bit_exact() {
+    let mut rng = Rng::new(2004);
+    for case in 0..60 {
+        let k = 1 + rng.below(300);
+        let n = 1 + rng.below(200);
+        let g_rows = 1 + rng.below(96);
+        let mux = [1, 2, 4][rng.below(3)];
+        let g_cols = mux * (1 + rng.below(64));
+        let geom = ArrayGeom::new(g_rows, g_cols, mux).unwrap();
+        let tiles = tile_grid(k, n, geom);
+        assert_eq!(tiles.len(),
+                   k.div_ceil(geom.rows) * n.div_ceil(geom.cols),
+                   "case {case}: grid size");
+        let mut area = 0usize;
+        for t in &tiles {
+            assert!(t.rows >= 1 && t.rows <= geom.rows,
+                    "case {case}: tile rows {} exceed array {}", t.rows,
+                    geom.rows);
+            assert!(t.cols >= 1 && t.cols <= geom.cols,
+                    "case {case}: tile cols {} exceed array {}", t.cols,
+                    geom.cols);
+            assert!(t.k0 + t.rows <= k && t.n0 + t.cols <= n,
+                    "case {case}: tile out of rectangle bounds");
+            assert_eq!((t.k0, t.n0), (t.kt * geom.rows, t.ct * geom.cols),
+                       "case {case}: tile origin disagrees with grid index");
+            area += t.rows * t.cols;
+        }
+        assert_eq!(area, k * n, "case {case}: tiles must cover exactly once");
+
+        // bit-exact reassembly from per-tile slices
+        let w: Vec<f32> = (0..k * n).map(|_| rng.gauss(0.0, 1.0) as f32).collect();
+        let mut rebuilt = vec![7777.0f32; k * n];
+        for t in &tiles {
+            let s = slice_tile(&w, n, t);
+            assert_eq!(s.len(), t.rows * t.cols);
+            for (ri, row) in s.chunks_exact(t.cols).enumerate() {
+                let dst = (t.k0 + ri) * n + t.n0;
+                rebuilt[dst..dst + t.cols].copy_from_slice(row);
+            }
+        }
+        assert_eq!(rebuilt, w, "case {case}: reassembly must be bit-exact");
     }
 }
 
@@ -129,7 +180,7 @@ fn prop_timing_monotone() {
         assert!(p4.energy_nj < p8.energy_nj, "case {case}");
         assert!(p8.ops == p4.ops);
 
-        let s = split_map_model(&meta, ArrayGeom::new(64, 64));
+        let s = split_map_model(&meta, ArrayGeom::new(64, 64, 4).unwrap());
         let r_split = split_inference_rate(&s, 8, &em);
         assert!(r_split <= p8.inf_per_sec * 1.001,
                 "case {case}: split faster than whole ({r_split} vs {})",

@@ -1,0 +1,146 @@
+#!/usr/bin/env python3
+"""String/comment-aware brace/paren/bracket balance over all .rs files.
+
+Crude syntax sanity for containers without a Rust toolchain (see
+.claude/skills/verify/SKILL.md): catches gross slips — an unclosed
+brace, a stray delimiter in merged code — not real parsing. Exit 1 on
+any imbalance.
+"""
+import sys
+from pathlib import Path
+
+OPEN = {"{": "}", "(": ")", "[": "]"}
+CLOSE = {v: k for k, v in OPEN.items()}
+
+
+def check(path: Path) -> list[str]:
+    src = path.read_text(encoding="utf-8")
+    stack: list[tuple[str, int]] = []
+    errs: list[str] = []
+    i, n, line = 0, len(src), 1
+    state = "code"  # code | line_comment | block_comment | str | char | raw_str
+    block_depth = 0
+    raw_hashes = 0
+    while i < n:
+        c = src[i]
+        nxt = src[i + 1] if i + 1 < n else ""
+        if c == "\n":
+            line += 1
+            if state == "line_comment":
+                state = "code"
+            i += 1
+            continue
+        if state == "line_comment":
+            i += 1
+            continue
+        if state == "block_comment":
+            if c == "/" and nxt == "*":
+                block_depth += 1
+                i += 2
+                continue
+            if c == "*" and nxt == "/":
+                block_depth -= 1
+                if block_depth == 0:
+                    state = "code"
+                i += 2
+                continue
+            i += 1
+            continue
+        if state == "str":
+            if c == "\\":
+                i += 2
+                continue
+            if c == '"':
+                state = "code"
+            i += 1
+            continue
+        if state == "raw_str":
+            if c == '"' and src[i + 1 : i + 1 + raw_hashes] == "#" * raw_hashes:
+                state = "code"
+                i += 1 + raw_hashes
+                continue
+            i += 1
+            continue
+        if state == "char":
+            if c == "\\":
+                i += 2
+                continue
+            if c == "'":
+                state = "code"
+            i += 1
+            continue
+        # state == code
+        if c == "/" and nxt == "/":
+            state = "line_comment"
+            i += 2
+            continue
+        if c == "/" and nxt == "*":
+            state = "block_comment"
+            block_depth = 1
+            i += 2
+            continue
+        if c == "r" and (nxt == '"' or nxt == "#"):
+            j = i + 1
+            hashes = 0
+            while j < n and src[j] == "#":
+                hashes += 1
+                j += 1
+            if j < n and src[j] == '"':
+                state = "raw_str"
+                raw_hashes = hashes
+                i = j + 1
+                continue
+        if c == "b" and nxt == '"':
+            state = "str"
+            i += 2
+            continue
+        if c == '"':
+            state = "str"
+            i += 1
+            continue
+        if c == "'":
+            # lifetime ('a) vs char literal: a char literal closes with '
+            # within a few chars; lifetimes are followed by ident chars and
+            # no closing quote. Handle escapes ('\n') and plain ('x').
+            if nxt == "\\":
+                state = "char"
+                i += 1  # step past the quote only; char state eats the escape
+                continue
+            if i + 2 < n and src[i + 2] == "'":
+                i += 3
+                continue
+            i += 1  # lifetime or label: skip the quote, idents are harmless
+            continue
+        if c in OPEN:
+            stack.append((c, line))
+            i += 1
+            continue
+        if c in CLOSE:
+            if not stack or stack[-1][0] != CLOSE[c]:
+                errs.append(f"{path}:{line}: unmatched `{c}`")
+                if stack:
+                    stack.pop()
+            else:
+                stack.pop()
+            i += 1
+            continue
+        i += 1
+    for d, ln in stack:
+        errs.append(f"{path}:{ln}: unclosed `{d}`")
+    return errs
+
+
+def main() -> int:
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path(".")
+    files = sorted(p for p in root.rglob("*.rs") if "target" not in p.parts)
+    bad = 0
+    for f in files:
+        for e in check(f):
+            print(e)
+            bad += 1
+    print(f"[check_balance] {len(files)} files, {bad} problems")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
