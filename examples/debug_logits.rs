@@ -39,7 +39,8 @@ fn main() -> anyhow::Result<()> {
         .collect();
     let gdc = vec![1.0f32; ws.len()];
 
-    let out = be.run_batch(&ds.padded_batch(0, batch), batch, &ws, &gdc)?;
+    let out = be.run_batch(&ds.padded_batch(0, batch), batch, &ws, &gdc,
+                           &analognets::backend::InferOpts::default())?;
     println!("[{}] logits row0: {:?}", be.name(), &out[..meta.num_classes]);
     let n = batch.min(ds.len());
     let correct = logits::count_correct(&out, meta.num_classes, &ds.y[..n]);

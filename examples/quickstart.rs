@@ -10,7 +10,8 @@
 //! the crate is built with `--features pjrt` (see `--backend pjrt` on the
 //! CLI and the serving examples).
 
-use analognets::backend::{HostTensor, InferenceBackend, NativeBackend};
+use analognets::backend::{HostTensor, InferOpts, InferenceBackend,
+                          NativeBackend};
 use analognets::nn::ModelMeta;
 use analognets::util::json;
 use analognets::util::logits;
@@ -64,13 +65,20 @@ fn main() -> anyhow::Result<()> {
     let x: Vec<f32> = (0..batch * backend.feat_len())
         .map(|i| ((i % 7) as f32) / 7.0)
         .collect();
-    let out = backend.run_batch(&x, batch, &w, &gdc)?;
+    let opts = InferOpts::default();
+    let out = backend.run_batch(&x, batch, &w, &gdc, &opts)?;
     println!("logits [{batch}x{classes}]: {out:?}");
     println!("preds: {:?}", logits::predictions(&out, classes));
 
     // determinism check: the simulator is pure
-    let out2 = backend.run_batch(&x, batch, &w, &gdc)?;
+    let out2 = backend.run_batch(&x, batch, &w, &gdc, &opts)?;
     anyhow::ensure!(out == out2, "native backend must be deterministic");
+
+    // per-request options: the same deployment served at a 4-bit ADC
+    // (paper Table 2) — one argument, no second backend
+    let out4 =
+        backend.run_batch(&x, batch, &w, &gdc, &opts.with_adc_bits(4))?;
+    println!("4-bit logits row0: {:?}", &out4[..classes]);
     println!("quickstart OK");
     Ok(())
 }

@@ -38,8 +38,9 @@ fn main() -> anyhow::Result<()> {
         }
         be.prepare(batch)?;
         let xb = ds.padded_batch(0, batch);
+        let iopts = analognets::backend::InferOpts::default();
         let timing = time_it(3, iters, || {
-            let _ = be.run_batch(&xb, batch, &ws, &alphas).unwrap();
+            let _ = be.run_batch(&xb, batch, &ws, &alphas, &iopts).unwrap();
         });
         per_inf_us.push((batch, timing.p50_us / batch as f64));
         t.row(&[format!("{} exec kws batch={batch}", be.name()),

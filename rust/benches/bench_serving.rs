@@ -20,7 +20,10 @@
 //!
 //! A Figure-7-style drift sweep (25 s -> 1 yr, paper-default PCM params)
 //! also runs end-to-end on the analog backend and is recorded in
-//! BENCH_analog.json.
+//! BENCH_analog.json, together with a 4-bit-ADC serving point (paper
+//! Table 2): the same coordinator driven with per-request
+//! `InferOpts { adc_bits: Some(4) }`, plus the 4-bit clean-weights
+//! accuracy through `eval::drift_accuracy`, under the `adc4` key.
 //!
 //! Knobs: `--fast` (smaller request counts), `--requests N` (per client),
 //! `--max-batch N`, `--baseline <json>`, `--strict` (make the 2x
@@ -35,7 +38,8 @@ use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use analognets::backend::{self, BackendKind, HostTensor, InferenceBackend};
+use analognets::backend::{self, BackendKind, HostTensor, InferOpts,
+                          InferenceBackend};
 use analognets::bench::{self, save_json, time_it, BenchOpts};
 use analognets::coordinator::metrics::MetricsSummary;
 use analognets::coordinator::{Coordinator, ServeConfig};
@@ -57,10 +61,11 @@ fn num(x: f64) -> Json {
     Json::Num(if x.is_finite() { x } else { 0.0 })
 }
 
-/// Drive `CLIENTS` pipelined client threads; returns measured req/s and the
-/// coordinator's own metrics summary.
-fn run_load(cfg: ServeConfig, per_client: usize, feat: usize)
-            -> anyhow::Result<(f64, MetricsSummary)> {
+/// Drive `CLIENTS` pipelined client threads, every request stamped with
+/// `opts`; returns measured req/s and the coordinator's own metrics
+/// summary.
+fn run_load(cfg: ServeConfig, per_client: usize, feat: usize,
+            opts: InferOpts) -> anyhow::Result<(f64, MetricsSummary)> {
     let coord = Arc::new(Coordinator::start(cfg)?);
     let t0 = Instant::now();
     let mut handles = Vec::new();
@@ -70,7 +75,7 @@ fn run_load(cfg: ServeConfig, per_client: usize, feat: usize)
             let mut pending = VecDeque::with_capacity(WINDOW);
             for i in 0..per_client {
                 let v = 0.1 + 0.8 * (((c * per_client + i) % 13) as f32 / 13.0);
-                let rx = coord.submit(vec![v; feat]).expect("submit");
+                let rx = coord.submit_with(vec![v; feat], opts).expect("submit");
                 pending.push_back(rx);
                 if pending.len() >= WINDOW {
                     let _ = pending.pop_front().unwrap().recv().expect("recv");
@@ -142,10 +147,12 @@ fn main() -> anyhow::Result<()> {
     let mut native_speedup: Option<f64> = None;
     if !analog_only {
         println!("[bench_serving] single-request baseline (max_batch=1)...");
-        let (rps_single, m_single) = run_load(mk_cfg(1), per_client, feat)?;
+        let (rps_single, m_single) =
+            run_load(mk_cfg(1), per_client, feat, InferOpts::default())?;
         println!("  {rps_single:.0} req/s   {m_single}");
         println!("[bench_serving] batched layer-serial (max_batch={max_batch})...");
-        let (rps_batched, m_batched) = run_load(mk_cfg(max_batch), per_client, feat)?;
+        let (rps_batched, m_batched) =
+            run_load(mk_cfg(max_batch), per_client, feat, InferOpts::default())?;
         println!("  {rps_batched:.0} req/s   {m_batched}");
         let speedup = rps_batched / rps_single;
         println!("[bench_serving] batched speedup: {speedup:.2}x");
@@ -243,8 +250,21 @@ fn run_analog(dir: &Path, spec: &SynthSpec, per_client: usize,
               (max_batch={max_batch})...");
     let mut acfg = bench_cfg(&spec.vid, dir, max_batch);
     acfg.backend = BackendKind::AnalogCim;
-    let (rps_analog, m_analog) = run_load(acfg, per_client, feat)?;
+    let (rps_analog, m_analog) =
+        run_load(acfg, per_client, feat, InferOpts::default())?;
     println!("  {rps_analog:.0} req/s   {m_analog}");
+
+    // ---- 4-bit ADC serving (paper Table 2) ------------------------------
+    // the same coordinator config, every request stamped with a per-request
+    // 4-bit override — the backend stays configured at 8 bits, the options
+    // select the coarse converters launch by launch
+    println!("[bench_serving] analog 4-bit-ADC serving (per-request \
+              adc_bits=4)...");
+    let mut acfg4 = bench_cfg(&spec.vid, dir, max_batch);
+    acfg4.backend = BackendKind::AnalogCim;
+    let (rps_adc4, m_adc4) = run_load(acfg4, per_client, feat,
+                                      InferOpts::default().with_adc_bits(4))?;
+    println!("  {rps_adc4:.0} req/s   {m_adc4}");
 
     // ---- degenerate-noise logits consistency vs native ------------------
     // no PCM in the loop at all: the exact stored weights, unity GDC, a
@@ -261,8 +281,9 @@ fn run_analog(dir: &Path, spec: &SynthSpec, per_client: usize,
     let xb = ds.padded_batch(0, n);
     let nat = backend::create(BackendKind::Native, &store, &spec.vid, 12)?;
     let ana = backend::create(BackendKind::AnalogCim, &store, &spec.vid, 12)?;
-    let lo_n = nat.run_batch(&xb, n, &ws, &unity)?;
-    let lo_a = ana.run_batch(&xb, n, &ws, &unity)?;
+    let iopts = InferOpts::default();
+    let lo_n = nat.run_batch(&xb, n, &ws, &unity, &iopts)?;
+    let lo_a = ana.run_batch(&xb, n, &ws, &unity, &iopts)?;
     let classes = meta.num_classes;
     let pred_n = logits::predictions(&lo_n, classes);
     let pred_a = logits::predictions(&lo_a, classes);
@@ -303,6 +324,15 @@ fn run_analog(dir: &Path, spec: &SynthSpec, per_client: usize,
     println!("[bench_serving] clean-weights accuracy: native {:.2}% vs \
               analog {:.2}% (gap {:.4})",
              100.0 * acc_native, 100.0 * acc_analog, acc_gap);
+
+    // ---- 4-bit clean-weights accuracy (Table-2 companion number) --------
+    // same eval, per-request `adc_bits: Some(4)` on the analog engine
+    let clean_adc4 = EvalOpts { adc_bits: Some(4), ..clean_analog.clone() };
+    let acc_adc4 = drift_accuracy(&store, &spec.vid, &clean_adc4.sweep_times(),
+                                  &clean_adc4)?[0][0];
+    println!("[bench_serving] 4-bit-ADC analog accuracy: {:.2}% \
+              ({rps_adc4:.0} req/s)",
+             100.0 * acc_adc4);
 
     // ---- Fig.7-style drift sweep on the analog backend ------------------
     let sweep_opts = EvalOpts {
@@ -349,11 +379,21 @@ fn run_analog(dir: &Path, spec: &SynthSpec, per_client: usize,
     cl.insert("acc_analog".to_string(), num(acc_analog));
     cl.insert("acc_gap".to_string(), num(acc_gap));
     aroot.insert("clean_weights".to_string(), Json::Obj(cl));
+    // the Table-2 4-bit serving point: throughput + latency of the
+    // per-request adc_bits=4 load, plus its clean-weights accuracy
+    let mut a4 = BTreeMap::new();
+    a4.insert("adc_bits".to_string(), num(4.0));
+    a4.insert("req_s".to_string(), num(rps_adc4));
+    a4.insert("p50_us".to_string(), num(m_adc4.p50_us));
+    a4.insert("p99_us".to_string(), num(m_adc4.p99_us));
+    a4.insert("acc".to_string(), num(acc_adc4));
+    aroot.insert("adc4".to_string(), Json::Obj(a4));
     aroot.insert("drift_sweep".to_string(), Json::Arr(sweep_json));
     save_json("BENCH_analog.json", &Json::Obj(aroot));
 
     // clean-weights accuracy gate: the analog engine may not diverge
-    // from the native reference beyond the committed floor
+    // from the native reference beyond the committed floor; the analog
+    // throughput additionally gates against its own committed req/s floor
     if let Some(baseline) = &opts.baseline {
         let v = json::parse_file(Path::new(baseline))?;
         let max_gap = v.req("analog_acc_gap_max")?.as_f64()?;
@@ -364,6 +404,8 @@ fn run_analog(dir: &Path, spec: &SynthSpec, per_client: usize,
         );
         println!("[bench_serving] analog accuracy gate OK: gap {acc_gap:.4} \
                   <= {max_gap:.4}");
+        bench::check_regression(rps_analog, Path::new(baseline),
+                                "analog_req_s", 0.30)?;
     }
     Ok(())
 }

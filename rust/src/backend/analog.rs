@@ -13,7 +13,8 @@
 
 use std::sync::Arc;
 
-use crate::backend::{weight_fed_batch_sizes, HostTensor, InferenceBackend};
+use crate::backend::{weight_fed_batch_sizes, HostTensor, InferOpts,
+                     InferenceBackend};
 use crate::crossbar::ArrayGeom;
 use crate::nn::ModelMeta;
 use crate::simulator::AnalogModel;
@@ -66,6 +67,10 @@ impl InferenceBackend for AnalogCimBackend {
         "analog"
     }
 
+    fn kind(&self) -> crate::backend::BackendKind {
+        crate::backend::BackendKind::AnalogCim
+    }
+
     fn meta(&self) -> &ModelMeta {
         self.model.meta()
     }
@@ -86,21 +91,10 @@ impl InferenceBackend for AnalogCimBackend {
     }
 
     fn run_batch(&self, x: &[f32], batch: usize, weights: &[HostTensor],
-                 gdc: &[f32]) -> anyhow::Result<Vec<f32>> {
-        self.validate_args(x, batch, weights, gdc)?;
-        let meta = self.meta();
-        for (t, lm) in weights.iter().zip(meta.layers.iter()) {
-            let want: usize = lm.graph_weight_shape.iter().product();
-            anyhow::ensure!(
-                t.numel() == want,
-                "analog backend: layer {} weight has {} elements, graph \
-                 shape {:?} needs {want}",
-                lm.name,
-                t.numel(),
-                lm.graph_weight_shape
-            );
-        }
-        Ok(self.model.forward(x, batch, weights, gdc, self.bits))
+                 gdc: &[f32], opts: &InferOpts) -> anyhow::Result<Vec<f32>> {
+        self.validate_args(x, batch, weights, gdc, opts)?;
+        Ok(self.model
+            .forward(x, batch, weights, gdc, opts.effective_bits(self.bits)))
     }
 }
 
@@ -141,15 +135,23 @@ mod tests {
             vec![1.0, 0.0, 1.0, 0.0, 0.0, 1.0, 0.0, 1.0],
         );
         let x = vec![0.9, 0.8, 0.1, 0.0, /* sample 2 */ 0.0, 0.1, 0.7, 0.9];
-        let logits = be.run_batch(&x, 2, &[w.clone()], &[1.0]).unwrap();
+        let opts = InferOpts::default();
+        let logits = be.run_batch(&x, 2, &[w.clone()], &[1.0], &opts).unwrap();
         assert_eq!(logits.len(), 4);
         assert!(logits[0] > logits[1], "{logits:?}");
         assert!(logits[3] > logits[2], "{logits:?}");
 
+        // per-request adc_bits override reaches the tiled engine too
+        let coarse = be
+            .run_batch(&x, 2, &[w.clone()], &[1.0],
+                       &InferOpts::default().with_adc_bits(3))
+            .unwrap();
+        assert_ne!(coarse, logits, "3-bit override must change outputs");
+
         // wrong weight count / gdc length / input length all refuse
-        assert!(be.run_batch(&x, 2, &[], &[1.0]).is_err());
-        assert!(be.run_batch(&x, 2, &[w.clone()], &[]).is_err());
-        assert!(be.run_batch(&x[..4], 2, &[w], &[1.0]).is_err());
+        assert!(be.run_batch(&x, 2, &[], &[1.0], &opts).is_err());
+        assert!(be.run_batch(&x, 2, &[w.clone()], &[], &opts).is_err());
+        assert!(be.run_batch(&x[..4], 2, &[w], &[1.0], &opts).is_err());
     }
 
     #[test]
@@ -163,7 +165,9 @@ mod tests {
             vec![1.0, 0.0, 1.0, 0.0, 0.0, 1.0, 0.0, 1.0],
         );
         let x = vec![0.9, 0.8, 0.1, 0.0];
-        let logits = be.run_batch(&x, 1, &[w], &[1.0]).unwrap();
+        let logits = be
+            .run_batch(&x, 1, &[w], &[1.0], &InferOpts::default())
+            .unwrap();
         assert_eq!(logits.len(), 2);
         assert!(logits[0] > logits[1], "{logits:?}");
     }

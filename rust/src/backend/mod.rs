@@ -18,7 +18,11 @@
 //! program weights onto the simulated PCM array, read them back (drifted,
 //! noisy, at the drift time of interest), and hand the effective weights to
 //! `run_batch` — they never know which engine executes. Backends are
-//! selected by [`BackendKind`] and constructed with [`create`].
+//! selected by [`BackendKind`] and constructed with [`create`]. Each
+//! `run_batch` launch additionally carries per-request options
+//! ([`InferOpts`]: device age `t_drift`, quantization `adc_bits`), so
+//! drift-aware serving and the paper's 4-bit ADC scenario are per-request
+//! choices, not per-coordinator configuration.
 
 mod analog;
 mod native;
@@ -54,15 +58,120 @@ pub(crate) fn weight_fed_batch_sizes(meta: &ModelMeta, bits: u32) -> Vec<usize> 
     meta.serving_batch_sizes(bits)
 }
 
+/// Per-request inference options, threaded from a queued request through
+/// the coordinator's batcher into [`InferenceBackend::run_batch`].
+///
+/// Every field is optional; [`InferOpts::default()`] reproduces the
+/// pre-options behavior exactly (serve at the coordinator clock's device
+/// age, quantize at the backend's configured bitwidth). Requests whose
+/// options differ are drained into **separate** batches — one launch
+/// executes under exactly one set of options
+/// ([`batcher::group_fifo`](crate::coordinator::batcher::group_fifo)).
+///
+/// * `t_drift` — the device age (simulated seconds since programming) this
+///   request should be served at. Consumed by the *weight provider*
+///   ([`PcmState::weights_at`](crate::coordinator::PcmState::weights_at)),
+///   which reads the PCM conductances drifted to that age; engines
+///   receive already-drifted weights and ignore the field. Ages below
+///   t_c = 25 s clamp up to t_c.
+/// * `adc_bits` — the ADC bitwidth to quantize this request at (DAC bits
+///   derive from it, eq. 3). Consumed by the engine; the paper's Table 2
+///   4-bit serving scenario is `adc_bits: Some(4)` against a backend
+///   configured at 8. PJRT rejects overrides (its graphs are compiled at
+///   one bitwidth).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct InferOpts {
+    /// device age override in simulated seconds (`None` = serving clock /
+    /// eval time point)
+    pub t_drift: Option<f64>,
+    /// ADC bitwidth override (`None` = the backend's configured bits)
+    pub adc_bits: Option<u32>,
+}
+
+impl InferOpts {
+    /// Builder-style device-age override.
+    pub fn with_t_drift(mut self, t_drift_s: f64) -> Self {
+        self.t_drift = Some(t_drift_s);
+        self
+    }
+
+    /// Builder-style ADC bitwidth override.
+    pub fn with_adc_bits(mut self, adc_bits: u32) -> Self {
+        self.adc_bits = Some(adc_bits);
+        self
+    }
+
+    /// The bitwidth a backend configured at `backend_bits` quantizes this
+    /// request at.
+    pub fn effective_bits(&self, backend_bits: u32) -> u32 {
+        self.adc_bits.unwrap_or(backend_bits)
+    }
+
+    /// Batch-compatibility key: two requests may share one launch iff
+    /// their keys are equal. `t_drift` is clamped to t_c = 25 s *before*
+    /// keying — ages below t_c are all served identically (the PCM state
+    /// clamps its reads the same way), so they must not split into
+    /// separate launches; this also collapses `-0.0`/`0.0`.
+    /// (`f64::to_bits` makes the float field comparable; `u64::MAX` /
+    /// `u32::MAX` are the `None` sentinels, unreachable as real values.)
+    pub fn batch_key(&self) -> (u64, u32) {
+        (
+            self.t_drift
+                .map_or(u64::MAX, |t| crate::pcm::clamp_age(t).to_bits()),
+            self.adc_bits.unwrap_or(u32::MAX),
+        )
+    }
+}
+
+impl PartialEq for InferOpts {
+    fn eq(&self, other: &Self) -> bool {
+        self.batch_key() == other.batch_key()
+    }
+}
+
+impl Eq for InferOpts {}
+
+/// The one capability check for per-request options: can an engine of
+/// `kind`, configured at `backend_bits`, serve `opts` at all? Used both
+/// by [`InferenceBackend::validate_args`] inside `run_batch` *and* by the
+/// serving coordinator at submit time (so an unservable option fails its
+/// own request instead of erroring inside the worker and killing the
+/// session) — one function, so the two checks can never drift apart.
+pub fn validate_opts(kind: BackendKind, backend_bits: u32,
+                     opts: &InferOpts) -> anyhow::Result<()> {
+    if let Some(b) = opts.adc_bits {
+        anyhow::ensure!(
+            (2..=16).contains(&b),
+            "adc_bits override {b} outside the supported 2..=16 range"
+        );
+        anyhow::ensure!(
+            kind != BackendKind::Pjrt || b == backend_bits,
+            "adc_bits override {b} != compiled graph bitwidth \
+             {backend_bits} (the pjrt backend cannot requantize per \
+             request; per-request bitwidths need a weight-fed engine: \
+             --backend native|analog)"
+        );
+    }
+    if let Some(t) = opts.t_drift {
+        anyhow::ensure!(t.is_finite(), "t_drift must be finite, got {t}");
+    }
+    Ok(())
+}
+
 /// One inference engine executing a deployed model.
 ///
 /// `x` is a `[batch, H, W, C]` row-major feature block, `weights[l]` the
 /// *effective* (possibly drifted) weight tensor of layer `l` in graph
-/// shape, and `gdc[l]` its global-drift-compensation scale. Returns the
-/// flattened `[batch, num_classes]` logits.
+/// shape, and `gdc[l]` its global-drift-compensation scale; `opts` carries
+/// the per-request options the whole launch executes under (see
+/// [`InferOpts`]). Returns the flattened `[batch, num_classes]` logits.
 pub trait InferenceBackend {
     /// Short engine name ("native", "pjrt") for logs and tables.
     fn name(&self) -> &'static str;
+
+    /// Which engine family this is — drives the option capability check
+    /// ([`validate_opts`]).
+    fn kind(&self) -> BackendKind;
 
     /// Metadata of the model this backend executes.
     fn meta(&self) -> &ModelMeta;
@@ -106,7 +215,8 @@ pub trait InferenceBackend {
     /// Shared `run_batch` argument validation — one set of diagnostics for
     /// every engine, instead of an opaque executor error deep inside.
     fn validate_args(&self, x: &[f32], batch: usize, weights: &[HostTensor],
-                     gdc: &[f32]) -> anyhow::Result<()> {
+                     gdc: &[f32], opts: &InferOpts) -> anyhow::Result<()> {
+        validate_opts(self.kind(), self.bits(), opts)?;
         let layers = self.meta().layers.len();
         anyhow::ensure!(
             weights.len() == layers,
@@ -127,13 +237,32 @@ pub trait InferenceBackend {
             x.len(),
             self.feat_len()
         );
+        for (t, lm) in weights.iter().zip(self.meta().layers.iter()) {
+            let want: usize = lm.graph_weight_shape.iter().product();
+            anyhow::ensure!(
+                t.numel() == want,
+                "{} backend: layer {} weight has {} elements, graph \
+                 shape {:?} needs {want}",
+                self.name(),
+                lm.name,
+                t.numel(),
+                lm.graph_weight_shape
+            );
+        }
         Ok(())
     }
 
-    /// Execute one batch; see the trait docs for the argument contract.
-    /// Implementations call [`validate_args`](Self::validate_args) first.
+    /// Execute one batch under one set of per-request options; see the
+    /// trait docs for the argument contract. Implementations call
+    /// [`validate_args`](Self::validate_args) first. Pass
+    /// `&InferOpts::default()` for the backend's configured behavior.
+    ///
+    /// `opts.adc_bits` selects the quantization bitwidth for this launch;
+    /// `opts.t_drift` is metadata for the weight provider (the weights
+    /// handed in are expected to already be read at that age) and is
+    /// ignored by engines.
     fn run_batch(&self, x: &[f32], batch: usize, weights: &[HostTensor],
-                 gdc: &[f32]) -> anyhow::Result<Vec<f32>>;
+                 gdc: &[f32], opts: &InferOpts) -> anyhow::Result<Vec<f32>>;
 
     /// Input feature dimensions (height, width, channels).
     fn input_hwc(&self) -> (usize, usize, usize) {
@@ -302,5 +431,33 @@ mod tests {
     #[test]
     fn pjrt_availability_tracks_feature() {
         assert_eq!(BackendKind::Pjrt.available(), cfg!(feature = "pjrt"));
+    }
+
+    #[test]
+    fn infer_opts_keys_and_defaults() {
+        let d = InferOpts::default();
+        assert_eq!(d.effective_bits(8), 8);
+        assert_eq!(d, InferOpts::default());
+
+        let aged = InferOpts::default().with_t_drift(86_400.0);
+        let aged2 = InferOpts { t_drift: Some(86_400.0), adc_bits: None };
+        assert_eq!(aged, aged2);
+        assert_ne!(aged.batch_key(), d.batch_key());
+
+        let b4 = InferOpts::default().with_adc_bits(4);
+        assert_eq!(b4.effective_bits(8), 4);
+        assert_ne!(b4, d);
+        assert_ne!(b4, aged);
+        // both fields participate in the launch-compatibility key
+        assert_ne!(aged.with_adc_bits(4).batch_key(), aged.batch_key());
+
+        // sub-t_c ages are all served identically, so they key identically
+        // (and stay distinct from "no override": the serving clock moves)
+        let t_c = crate::pcm::T_C_SECONDS;
+        assert_eq!(InferOpts::default().with_t_drift(0.0),
+                   InferOpts::default().with_t_drift(10.0));
+        assert_eq!(InferOpts::default().with_t_drift(-0.0),
+                   InferOpts::default().with_t_drift(t_c));
+        assert_ne!(InferOpts::default().with_t_drift(t_c), d);
     }
 }

@@ -6,7 +6,7 @@
 
 use std::sync::Arc;
 
-use crate::backend::{HostTensor, InferenceBackend};
+use crate::backend::{HostTensor, InferOpts, InferenceBackend};
 use crate::nn::ModelMeta;
 use crate::runtime::ArtifactStore;
 
@@ -38,6 +38,10 @@ impl InferenceBackend for PjrtBackend<'_> {
         "pjrt"
     }
 
+    fn kind(&self) -> crate::backend::BackendKind {
+        crate::backend::BackendKind::Pjrt
+    }
+
     fn meta(&self) -> &ModelMeta {
         &self.meta
     }
@@ -62,8 +66,11 @@ impl InferenceBackend for PjrtBackend<'_> {
     }
 
     fn run_batch(&self, x: &[f32], batch: usize, weights: &[HostTensor],
-                 gdc: &[f32]) -> anyhow::Result<Vec<f32>> {
-        self.validate_args(x, batch, weights, gdc)?;
+                 gdc: &[f32], opts: &InferOpts) -> anyhow::Result<Vec<f32>> {
+        // validate_args -> backend::validate_opts refuses any adc_bits
+        // override here: the quantizers are baked into the AOT-compiled
+        // graph, so a per-request bitwidth cannot be honored
+        self.validate_args(x, batch, weights, gdc, opts)?;
         let (ih, iw, ic) = self.meta.input_hwc;
         let exe = self.store.executable(&self.vid, self.bits, batch)?;
         let mut inputs = Vec::with_capacity(2 + weights.len());

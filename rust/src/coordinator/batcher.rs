@@ -9,6 +9,11 @@
 //! * [`plan_dynamic`] — the native layer-serial engine accepts any batch;
 //!   drain the queue FIFO into chunks of at most `max_batch` with zero
 //!   padded slots.
+//!
+//! Before either planner runs, the drained queue is partitioned by
+//! per-request options ([`group_fifo`]): a launch executes under exactly
+//! one `InferOpts` (one device age, one ADC bitwidth), so requests with
+//! differing options never share a batch.
 
 /// A planned sequence of graph launches for `queued` requests.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -38,6 +43,26 @@ pub fn plan(queued: usize, mut sizes: Vec<usize>) -> BatchPlan {
         launches.push(fit);
     }
     BatchPlan { launches, padding }
+}
+
+/// Partition `items` into launch-compatible groups: two items share a
+/// group iff their keys are equal, FIFO order is preserved within each
+/// group, and groups are ordered by first arrival. The serving drain uses
+/// this with [`InferOpts::batch_key`](crate::backend::InferOpts::batch_key)
+/// so requests with differing per-request options land in separate
+/// batches; with uniform keys it degenerates to one group (the
+/// pre-options drain, unchanged).
+pub fn group_fifo<T, K: PartialEq>(items: Vec<T>,
+                                   key: impl Fn(&T) -> K) -> Vec<Vec<T>> {
+    let mut groups: Vec<(K, Vec<T>)> = Vec::new();
+    for it in items {
+        let k = key(&it);
+        match groups.iter_mut().find(|(gk, _)| *gk == k) {
+            Some((_, g)) => g.push(it),
+            None => groups.push((k, vec![it])),
+        }
+    }
+    groups.into_iter().map(|(_, g)| g).collect()
 }
 
 /// FIFO plan for dynamically-shaped engines: full `max_batch` launches
@@ -113,6 +138,22 @@ mod tests {
                 assert!(*p.launches.last().unwrap() <= mb);
             }
         }
+    }
+
+    #[test]
+    fn group_fifo_partitions_by_key_preserving_order() {
+        let items: Vec<(u32, usize)> =
+            vec![(7, 0), (7, 1), (4, 2), (7, 3), (4, 4), (9, 5)];
+        let groups = group_fifo(items, |&(k, _)| k);
+        assert_eq!(groups.len(), 3);
+        // groups ordered by first arrival, FIFO within each group
+        assert_eq!(groups[0], vec![(7, 0), (7, 1), (7, 3)]);
+        assert_eq!(groups[1], vec![(4, 2), (4, 4)]);
+        assert_eq!(groups[2], vec![(9, 5)]);
+        // uniform keys degenerate to a single group
+        let one = group_fifo(vec![1, 2, 3], |_| 0u8);
+        assert_eq!(one, vec![vec![1, 2, 3]]);
+        assert!(group_fifo(Vec::<u8>::new(), |_| 0u8).is_empty());
     }
 
     #[test]

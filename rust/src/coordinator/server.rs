@@ -3,25 +3,34 @@
 //!
 //! The executor is any [`InferenceBackend`] — the native simulator by
 //! default (hermetic: no XLA, no exported HLO), the tile-faithful AnalogCim
-//! engine (`ServeConfig::backend = BackendKind::AnalogCim`, optionally at a
-//! pre-aged drift time via [`ServeConfig::drift_time`]), or the compiled
-//! PJRT graphs when built with the `pjrt` feature.
+//! engine (`ServeConfig::backend = BackendKind::AnalogCim`), or the
+//! compiled PJRT graphs when built with the `pjrt` feature.
+//!
+//! Every request carries its own [`InferOpts`] (device age `t_drift`, ADC
+//! bitwidth `adc_bits`): the drain partitions the queue into
+//! option-compatible groups ([`batcher::group_fifo`]) and executes each
+//! group as its own launch sequence, reading PCM weights at the group's
+//! requested age ([`PcmState::weights_at`]) and quantizing at the group's
+//! bitwidth. Requests without options (`InferOpts::default()` —
+//! [`Coordinator::submit`]) serve at the coordinator clock's current
+//! device age and the backend's configured bits, exactly as before the
+//! options existed.
 //!
 //! Engines that accept arbitrary batch shapes
 //! (`InferenceBackend::supports_dynamic_batch`, i.e. the native
-//! layer-serial engine) get the zero-padding FIFO drain: up to
-//! [`ServeConfig::max_batch`] queued requests are packed into a *single*
-//! `run_batch`, which executes one im2col + one batched GEMM per layer
-//! across the whole batch — the AON-CiM layer-serial schedule. Static-shape
-//! engines (PJRT) keep the padded multi-launch plan over their exported
-//! graph sizes.
+//! layer-serial engines) get the zero-padding FIFO drain: up to
+//! [`ServeConfig::max_batch`] queued requests per group are packed into a
+//! *single* `run_batch`, which executes one im2col + one batched GEMM per
+//! layer across the whole batch — the AON-CiM layer-serial schedule.
+//! Static-shape engines (PJRT) keep the padded multi-launch plan over
+//! their exported graph sizes.
 
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::backend::{self, BackendKind, InferenceBackend};
+use crate::backend::{self, BackendKind, InferOpts, InferenceBackend};
 use crate::coordinator::batcher;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::state::PcmState;
@@ -52,10 +61,17 @@ pub struct ServeConfig {
     pub threads: usize,
     /// simulated seconds per wall second (drift clock acceleration)
     pub time_scale: f64,
-    /// device age (simulated seconds since programming) the serving clock
-    /// starts at — `--t-drift`: serve a day-old (86 400) or year-old array
+    /// device age (simulated seconds since programming) the serving
+    /// **clock** starts at — serve a day-old (86 400) or year-old array
     /// immediately instead of waiting for the accelerated clock to get
     /// there. Clamped below at t_c = 25 s by the PCM state.
+    ///
+    /// Soft-deprecated as a *request* age: this field only seeds the
+    /// coordinator-wide clock that option-less requests serve at. Requests
+    /// that need a specific device age should carry it themselves via
+    /// [`InferOpts::t_drift`] ([`Coordinator::submit_with`]), which wins
+    /// over the clock for that request and lets one coordinator serve
+    /// many ages concurrently.
     pub drift_time: f64,
     pub seed: u64,
     /// simulated seconds between weight refreshes (fresh read noise + GDC)
@@ -95,7 +111,9 @@ impl ServeConfig {
         self
     }
 
-    /// Builder-style initial device age (drift-aware serving).
+    /// Builder-style initial device age of the serving clock (see
+    /// [`drift_time`](Self::drift_time); per-request ages go through
+    /// [`InferOpts::t_drift`] instead).
     pub fn with_drift_time(mut self, drift_time_s: f64) -> Self {
         self.drift_time = drift_time_s;
         self
@@ -104,6 +122,8 @@ impl ServeConfig {
 
 pub struct Request {
     pub features: Vec<f32>,
+    /// per-request options this request must be served under
+    opts: InferOpts,
     reply: mpsc::Sender<Response>,
     submitted: Instant,
 }
@@ -113,8 +133,14 @@ pub struct Response {
     pub pred: u32,
     pub logits: Vec<f32>,
     pub latency: Duration,
-    /// device age (simulated seconds) when served
+    /// device age (simulated seconds) when served: the request's own
+    /// `InferOpts::t_drift` (clamped at t_c) when set, the coordinator
+    /// clock otherwise
     pub sim_age_s: f64,
+    /// ADC bitwidth this response was computed at: the request's own
+    /// `InferOpts::adc_bits` when set, the backend's configured bits
+    /// otherwise
+    pub adc_bits: u32,
 }
 
 enum Msg {
@@ -129,6 +155,11 @@ pub struct Coordinator {
     pub metrics: Arc<Metrics>,
     pub classes: usize,
     pub feat_len: usize,
+    /// for rejecting per-request options the backend cannot serve *at
+    /// submit time* — a bad option must fail its own request, never reach
+    /// the worker and kill the session for everyone
+    backend: BackendKind,
+    bits: u32,
 }
 
 impl Coordinator {
@@ -160,6 +191,7 @@ impl Coordinator {
         let feat_len = ih * iw * ic;
         drop(store);
 
+        let (backend, bits) = (cfg.backend, cfg.bits);
         let handle = std::thread::Builder::new()
             .name("aon-cim-coordinator".into())
             .spawn(move || worker(cfg, rx, m2))?;
@@ -169,17 +201,35 @@ impl Coordinator {
             metrics,
             classes,
             feat_len,
+            backend,
+            bits,
         })
     }
 
-    /// Submit a request; returns the channel the response arrives on.
+    /// Submit a request with default options (serving-clock device age,
+    /// backend-configured bits); returns the channel the response arrives
+    /// on.
     pub fn submit(&self, features: Vec<f32>) -> anyhow::Result<mpsc::Receiver<Response>> {
+        self.submit_with(features, InferOpts::default())
+    }
+
+    /// Submit a request with explicit per-request options. Requests whose
+    /// options differ are drained into separate batches; a request only
+    /// ever shares a launch with option-identical peers.
+    ///
+    /// Options the backend cannot serve are rejected **here**, so an
+    /// invalid request fails on its own submit instead of erroring inside
+    /// the worker and taking the session down with it.
+    pub fn submit_with(&self, features: Vec<f32>, opts: InferOpts)
+                       -> anyhow::Result<mpsc::Receiver<Response>> {
         anyhow::ensure!(features.len() == self.feat_len, "bad feature length");
+        backend::validate_opts(self.backend, self.bits, &opts)?;
         let (rtx, rrx) = mpsc::channel();
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         self.tx
             .send(Msg::Req(Request {
                 features,
+                opts,
                 reply: rtx,
                 submitted: Instant::now(),
             }))
@@ -187,9 +237,15 @@ impl Coordinator {
         Ok(rrx)
     }
 
-    /// Blocking single inference.
+    /// Blocking single inference with default options.
     pub fn infer(&self, features: Vec<f32>) -> anyhow::Result<Response> {
-        let rx = self.submit(features)?;
+        self.infer_with(features, InferOpts::default())
+    }
+
+    /// Blocking single inference with explicit per-request options.
+    pub fn infer_with(&self, features: Vec<f32>, opts: InferOpts)
+                      -> anyhow::Result<Response> {
+        let rx = self.submit_with(features, opts)?;
         rx.recv().map_err(|_| anyhow::anyhow!("coordinator dropped request"))
     }
 
@@ -229,36 +285,75 @@ struct Dispatcher<'a> {
 }
 
 impl Dispatcher<'_> {
+    /// Drain the queue: partition by per-request options, then execute
+    /// each option group as its own launch sequence. With uniform options
+    /// (the common case) this is exactly the pre-options single-group
+    /// drain.
     fn drain(&mut self, state: &mut PcmState, queue: &mut Vec<Request>)
              -> anyhow::Result<()> {
         if queue.is_empty() {
             return Ok(());
         }
+        // fast path: uniform options (the overwhelmingly common case,
+        // and everything that existed before per-request options) — the
+        // queue is executed in place with zero grouping allocations
+        let k0 = queue[0].opts.batch_key();
+        if queue.iter().all(|r| r.opts.batch_key() == k0) {
+            self.drain_group(state, queue)?;
+            queue.clear();
+            return Ok(());
+        }
+        // mixed options: partition into option-homogeneous groups.
+        // drain(..) (not mem::take) keeps the queue's preallocated
+        // capacity alive across windows.
+        let drained: Vec<Request> = queue.drain(..).collect();
+        let groups = batcher::group_fifo(drained, |r| r.opts.batch_key());
+        for group in groups {
+            self.drain_group(state, &group)?;
+        }
+        Ok(())
+    }
+
+    /// Execute one option-homogeneous group of requests.
+    fn drain_group(&mut self, state: &mut PcmState, group: &[Request])
+                   -> anyhow::Result<()> {
+        let opts = group[0].opts;
         let plan = if self.dynamic {
-            batcher::plan_dynamic(queue.len(), self.max_batch)
+            batcher::plan_dynamic(group.len(), self.max_batch)
         } else {
-            batcher::plan(queue.len(), self.batch_sizes.clone())
+            batcher::plan(group.len(), self.batch_sizes.clone())
         };
         self.metrics
             .padded_slots
             .fetch_add(plan.padding as u64, Ordering::Relaxed);
 
-        let sim_age = state.sim_age_s();
-        // borrow the cached effective weights directly — no per-drain clone
-        // of the full weight set (the PJRT path copies inside run_batch,
-        // the native path reads the slices in place)
-        let (ws, alphas, refreshed) = state.current_weights();
+        // effective weights for this group's device age: an explicit-age
+        // read for `t_drift` requests, the clock-driven cache otherwise.
+        // Either way the borrow is straight out of the state cache — no
+        // per-drain clone of the full weight set (the PJRT path copies
+        // inside run_batch, the native paths read the slices in place).
+        let (ws, alphas, sim_age, refreshed) = match opts.t_drift {
+            Some(t) => state.weights_at(t),
+            None => {
+                let age = state.sim_age_s();
+                let (ws, alphas, refreshed) = state.current_weights();
+                (ws, alphas, age, refreshed)
+            }
+        };
         if refreshed {
-            self.metrics.weight_refreshes.fetch_add(1, Ordering::Relaxed);
+            self.metrics
+                .weight_refreshes
+                .fetch_add(1, Ordering::Relaxed);
         }
+        let adc_bits = opts.effective_bits(self.be.bits());
 
         let feat_len = self.feat_len;
         let mut taken = 0usize;
         for &launch in &plan.launches {
-            let count = launch.min(queue.len() - taken);
+            let count = launch.min(group.len() - taken);
 
             let xb = &mut self.xbuf[..launch * feat_len];
-            for (i, r) in queue[taken..taken + count].iter().enumerate() {
+            for (i, r) in group[taken..taken + count].iter().enumerate() {
                 xb[i * feat_len..(i + 1) * feat_len].copy_from_slice(&r.features);
             }
             for i in count..launch {
@@ -268,14 +363,14 @@ impl Dispatcher<'_> {
                 b[..feat_len].copy_from_slice(&a[..feat_len]);
             }
 
-            let out = self.be.run_batch(xb, launch, ws, alphas)?;
+            let out = self.be.run_batch(xb, launch, ws, alphas, &opts)?;
             self.metrics.launches.fetch_add(1, Ordering::Relaxed);
             self.metrics
                 .batched_slots
                 .fetch_add(count as u64, Ordering::Relaxed);
 
             let now = Instant::now();
-            for (i, r) in queue[taken..taken + count].iter().enumerate() {
+            for (i, r) in group[taken..taken + count].iter().enumerate() {
                 let row = &out[i * self.classes..(i + 1) * self.classes];
                 let pred = logits::argmax(row);
                 // account BEFORE replying: clients must observe settled
@@ -289,11 +384,11 @@ impl Dispatcher<'_> {
                     logits: row.to_vec(),
                     latency: now - r.submitted,
                     sim_age_s: sim_age,
+                    adc_bits,
                 });
             }
             taken += count;
         }
-        queue.clear();
         Ok(())
     }
 }

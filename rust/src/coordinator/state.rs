@@ -8,6 +8,25 @@ use crate::eval::{DeployedLayer, DeployedModel};
 use crate::pcm::{gdc, PcmParams};
 use crate::util::rng::Rng;
 
+/// One cached explicit-age weight read (see [`PcmState::weights_at`]).
+struct AgedRead {
+    /// `f64::to_bits` of the clamped age — exact-match key
+    age_key: u64,
+    /// sim-clock time the read was taken (refresh-cadence staleness;
+    /// deliberately NOT bumped on hits — that would freeze noise forever)
+    read_at_s: f64,
+    /// sim-clock time of the last hit (LRU eviction recency)
+    last_used_s: f64,
+    ws: Vec<HostTensor>,
+    alphas: Vec<f32>,
+}
+
+/// Distinct device ages the explicit-age cache holds at once. Sized for
+/// the expected shape of mixed-age traffic (a handful of cohorts in
+/// steady rotation): with N <= this many ages alternating, every drain
+/// hits the cache instead of re-sampling full-model read noise per group.
+const AGED_CACHE_ENTRIES: usize = 4;
+
 /// Live PCM state behind the serving loop.
 pub struct PcmState {
     pub deployed: DeployedModel,
@@ -23,6 +42,10 @@ pub struct PcmState {
     /// cached effective weights + GDC (refreshed on a simulated-time cadence)
     cached: Option<(Vec<HostTensor>, Vec<f32>)>,
     cached_at_s: f64,
+    /// bounded cache for explicit-age reads ([`Self::weights_at`],
+    /// per-request drift): up to `AGED_CACHE_ENTRIES` device ages, each
+    /// reused until the refresh cadence elapses, LRU-evicted
+    aged: Vec<AgedRead>,
     /// refresh cadence in simulated seconds
     pub refresh_every_s: f64,
     /// reprogram when the mean GDC factor exceeds this
@@ -43,6 +66,7 @@ impl PcmState {
             age_offset_s: crate::pcm::T_C_SECONDS,
             cached: None,
             cached_at_s: f64::NEG_INFINITY,
+            aged: Vec::new(),
             refresh_every_s: 60.0,
             reprogram_alpha: 1.15,
             reprogram_count: 0,
@@ -62,9 +86,10 @@ impl PcmState {
     /// programming settles. Invalidates the cached weight read so the next
     /// dispatch sees conductances drifted to the new age.
     pub fn set_initial_age(&mut self, age_s: f64) {
-        self.age_offset_s = age_s.max(crate::pcm::T_C_SECONDS);
+        self.age_offset_s = crate::pcm::clamp_age(age_s);
         self.cached = None;
         self.cached_at_s = f64::NEG_INFINITY;
+        self.aged.clear();
     }
 
     /// Mean GDC factor right now (drift health indicator).
@@ -93,6 +118,7 @@ impl PcmState {
         self.programmed_at = Instant::now();
         self.cached = None;
         self.cached_at_s = f64::NEG_INFINITY;
+        self.aged.clear();
         self.reprogram_count += 1;
         Ok(())
     }
@@ -113,6 +139,75 @@ impl PcmState {
         }
         let c = self.cached.as_ref().unwrap();
         (&c.0, &c.1, refreshed)
+    }
+
+    /// Effective weights + GDC at an **explicit** device age (per-request
+    /// drift: `InferOpts::t_drift`), independent of the serving clock.
+    /// Ages below t_c = 25 s clamp up to t_c; the clamped age is returned
+    /// so responses can echo the age actually served. A bounded cache
+    /// (`AGED_CACHE_ENTRIES` distinct ages, least-recently-*used*
+    /// eviction) reuses each age's read until
+    /// [`refresh_every_s`](Self::refresh_every_s) of simulated time
+    /// elapses (fresh 1/f read noise after that — the same cadence the
+    /// clock-driven [`current_weights`](Self::current_weights) cache
+    /// follows), so a handful of age cohorts in steady rotation never
+    /// re-sample noise per drain, and a one-shot odd age evicts the
+    /// coldest cohort, not a hot one. The bool is true when this call
+    /// performed a fresh read.
+    pub fn weights_at(&mut self, age_s: f64)
+                      -> (&Vec<HostTensor>, &Vec<f32>, f64, bool) {
+        // same clamp the batch key applies, so key-equal requests are
+        // guaranteed to be age-equal reads
+        let t = crate::pcm::clamp_age(age_s);
+        let age_key = t.to_bits();
+        let now = self.sim_age_s();
+        let hit = self
+            .aged
+            .iter()
+            .position(|a| a.age_key == age_key
+                && now - a.read_at_s < self.refresh_every_s);
+        let (idx, refreshed) = match hit {
+            Some(i) => (i, false),
+            None => {
+                let (ws, alphas) = self.deployed.read_at(
+                    t, &self.params, &mut self.rng, self.gdc_enabled);
+                let entry = AgedRead {
+                    age_key,
+                    read_at_s: now,
+                    last_used_s: now,
+                    ws,
+                    alphas,
+                };
+                if let Some(i) =
+                    self.aged.iter().position(|a| a.age_key == age_key)
+                {
+                    // cadence-expired entry for this age: refresh in place
+                    self.aged[i] = entry;
+                    (i, true)
+                } else {
+                    if self.aged.len() >= AGED_CACHE_ENTRIES {
+                        // evict the least recently *used* age (hits bump
+                        // last_used_s below, so hot cohorts survive a
+                        // one-shot odd age)
+                        let coldest = self
+                            .aged
+                            .iter()
+                            .enumerate()
+                            .min_by(|a, b| {
+                                a.1.last_used_s.total_cmp(&b.1.last_used_s)
+                            })
+                            .map(|(i, _)| i)
+                            .unwrap_or(0);
+                        self.aged.swap_remove(coldest);
+                    }
+                    self.aged.push(entry);
+                    (self.aged.len() - 1, true)
+                }
+            }
+        };
+        let a = &mut self.aged[idx];
+        a.last_used_s = now;
+        (&a.ws, &a.alphas, t, refreshed)
     }
 
     /// Whether the reprogramming policy should fire.
@@ -180,6 +275,34 @@ mod tests {
         // ages below t_c clamp up to t_c
         st.set_initial_age(0.0);
         assert!((st.sim_age_s() - crate::pcm::T_C_SECONDS).abs() < 1e-6);
+    }
+
+    #[test]
+    fn weights_at_clamps_caches_and_ages() {
+        let mut st = PcmState::new(tiny_deployed(), PcmParams::default(), 1, 0.0);
+        st.refresh_every_s = 1e9;
+        // clamped below t_c, and the clamped age is echoed back
+        let (_, _, t, refreshed) = st.weights_at(0.0);
+        assert!((t - crate::pcm::T_C_SECONDS).abs() < 1e-9);
+        assert!(refreshed, "first read of an age is fresh");
+        // same age within the refresh cadence reuses the cached read
+        let day1 = st.weights_at(86_400.0);
+        assert!(day1.3);
+        let day1 = day1.0[0].data.clone();
+        let day2 = st.weights_at(86_400.0);
+        assert!(!day2.3, "same-age read within the cadence is a cache hit");
+        assert_eq!(day1, day2.0[0].data, "same-age reads must hit the cache");
+        // a different age is a fresh (and different) read
+        let year = st.weights_at(31_536_000.0);
+        assert!((year.2 - 31_536_000.0).abs() < 1e-6);
+        let year = year.0[0].data.clone();
+        assert_ne!(day1, year, "a year of drift must change the read");
+        // the cache is multi-entry: alternating ages keep hitting
+        assert!(!st.weights_at(86_400.0).3, "day entry survived the year read");
+        assert!(!st.weights_at(31_536_000.0).3, "year entry still cached");
+        // the explicit-age path must not disturb the clock-driven cache
+        let clock = st.current_weights().0[0].data.clone();
+        assert_ne!(clock, year);
     }
 
     #[test]

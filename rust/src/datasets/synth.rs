@@ -300,7 +300,10 @@ mod tests {
             w.iter().map(crate::backend::HostTensor::from_tensor).collect();
         let gdc = vec![1.0f32; ws.len()];
         let xb = ds.padded_batch(0, 4);
-        let out = be.run_batch(&xb, 4, &ws, &gdc).unwrap();
+        let out = be
+            .run_batch(&xb, 4, &ws, &gdc,
+                       &crate::backend::InferOpts::default())
+            .unwrap();
         assert_eq!(out.len(), 4 * 2);
         assert!(out.iter().all(|v| v.is_finite()));
         let _ = std::fs::remove_dir_all(&dir);
@@ -317,7 +320,10 @@ mod tests {
         let ws: Vec<crate::backend::HostTensor> =
             w.iter().map(crate::backend::HostTensor::from_tensor).collect();
         let x = vec![0.25f32, -1.5, 3.0];
-        let out = be.run_batch(&x, 1, &ws, &[1.0]).unwrap();
+        let out = be
+            .run_batch(&x, 1, &ws, &[1.0],
+                       &crate::backend::InferOpts::default())
+            .unwrap();
         assert_eq!(out, x, "digital identity dense must be exact");
         let _ = std::fs::remove_dir_all(&dir);
     }

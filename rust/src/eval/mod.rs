@@ -12,7 +12,8 @@
 
 use std::sync::Arc;
 
-use crate::backend::{self, BackendKind, HostTensor, InferenceBackend};
+use crate::backend::{self, BackendKind, HostTensor, InferOpts,
+                     InferenceBackend};
 use crate::nn::{expand_dw_dense, LayerKind, ModelMeta, Tensor};
 use crate::pcm::{gdc, PcmParams, ProgrammedWeights};
 use crate::runtime::ArtifactStore;
@@ -99,6 +100,14 @@ pub struct EvalOpts {
     /// when set, [`EvalOpts::sweep_times`] collapses the Figure-7 sweep to
     /// this one time point — evaluate a day-old or year-old array directly
     pub t_drift: Option<f64>,
+    /// per-request ADC bitwidth override (`--adc-bits` on the CLI): every
+    /// `run_batch` of the evaluation executes under
+    /// `InferOpts { adc_bits, .. }`, so e.g. the paper's Table-2 4-bit
+    /// serving scenario evaluates against artifacts exported at 8 bits
+    /// without re-exporting. `None` keeps the backend's configured
+    /// [`bits`](Self::bits). Weight-fed engines only (PJRT graphs are
+    /// compiled at one bitwidth and reject overrides).
+    pub adc_bits: Option<u32>,
 }
 
 impl Default for EvalOpts {
@@ -113,6 +122,7 @@ impl Default for EvalOpts {
             params: PcmParams::default(),
             backend: BackendKind::default(),
             t_drift: None,
+            adc_bits: None,
         }
     }
 }
@@ -153,6 +163,9 @@ pub fn drift_accuracy_on(be: &dyn InferenceBackend, store: &ArtifactStore,
     be.prepare(opts.batch)?;
     let classes = meta.num_classes;
     let (ih, iw, ic) = meta.input_hwc;
+    // the per-request options every launch of this evaluation runs under
+    // (drift time is expressed through `times` / the weight read, not here)
+    let iopts = InferOpts { t_drift: None, adc_bits: opts.adc_bits };
 
     let mut out = vec![Vec::with_capacity(opts.runs); times.len()];
     for run in 0..opts.runs {
@@ -165,7 +178,7 @@ pub fn drift_accuracy_on(be: &dyn InferenceBackend, store: &ArtifactStore,
             while lo < n {
                 let xb = ds.padded_batch(lo, opts.batch);
                 debug_assert_eq!(xb.len(), opts.batch * ih * iw * ic);
-                let preds = be.run_batch(&xb, opts.batch, &ws, &alphas)?;
+                let preds = be.run_batch(&xb, opts.batch, &ws, &alphas, &iopts)?;
                 let hi = (lo + opts.batch).min(n);
                 correct += logits::count_correct(&preds, classes, &ds.y[lo..hi]);
                 lo = hi;

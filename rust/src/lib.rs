@@ -15,7 +15,7 @@
 //! ```text
 //!   eval / coordinator / CLI / benches
 //!            |
-//!            v  run_batch(x, batch, effective_weights, gdc)
+//!            v  run_batch(x, batch, effective_weights, gdc, infer_opts)
 //!   +-------------------+--------------------+----------------------------+
 //!   | NativeBackend     | AnalogCimBackend   | PjrtBackend  ("pjrt")      |
 //!   | pure-Rust im2col/ | tile-faithful:     | AOT-exported HLO graphs    |
@@ -28,9 +28,17 @@
 //! neither the XLA native library nor generated HLO artifacts, so
 //! `cargo build && cargo test` are hermetic. Select engines with
 //! [`backend::BackendKind`] (`EvalOpts::backend`, `ServeConfig::backend`,
-//! `--backend` on the CLI; drift time via `EvalOpts::t_drift`,
-//! `ServeConfig::drift_time`, `--t-drift`). `xla` types never escape the
-//! `runtime` module.
+//! `--backend` on the CLI). Per-request options ride every launch as
+//! [`backend::InferOpts`] — device age `t_drift` and quantization
+//! `adc_bits` (`--t-drift` / `--adc-bits` on the CLI) — so one
+//! coordinator serves many device ages and bitwidths concurrently. `xla`
+//! types never escape the `runtime` module.
+//!
+//! Internally both weight-fed engines are one
+//! [`simulator::LayerExecutor`] (the shared layer-serial staging loop)
+//! driven by a [`simulator::MatmulEngine`] — [`simulator::NativeGemmEngine`]
+//! or the tile-faithful [`simulator::TileGridEngine`] — so a staging fix
+//! or a new layer kind lands in every engine by construction.
 
 pub mod backend;
 pub mod bench;

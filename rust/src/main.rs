@@ -7,7 +7,8 @@
 //!   report   accelerator performance summary (Table 2 style)
 //!   selftest sanity-check the artifact bundle end to end
 
-use analognets::backend::{auto_threads, AnalogCimBackend, BackendKind};
+use analognets::backend::{auto_threads, AnalogCimBackend, BackendKind,
+                          InferOpts};
 use analognets::coordinator::{Coordinator, ServeConfig};
 use analognets::crossbar::ArrayGeom;
 use analognets::eval::{drift_accuracy, drift_accuracy_on, EvalOpts};
@@ -22,9 +23,13 @@ use analognets::util::table::Table;
 const USAGE: &str = "usage: analognets <serve|eval|map|report|selftest> [options]
   serve    --vid kws_full_e10_8b [--bits 8] [--requests 500] [--time-scale 1e4]
            [--max-batch N (0=auto)] [--threads N (0=auto)]
-           [--t-drift SECONDS (serve a pre-aged array, default 25)]
+           [--t-drift SECONDS (stamp every request with this device age;
+                               also seeds the serving clock, default 25)]
+           [--adc-bits B (stamp every request with this ADC bitwidth,
+                          e.g. 4 for the paper's Table-2 scenario)]
   eval     --vid kws_full_e10_8b [--bits 8] [--runs 5] [--samples 256]
            [--t-drift SECONDS (single time point instead of the Fig-7 sweep)]
+           [--adc-bits B (per-request ADC override, e.g. 4-bit serving)]
            [--rows R --cols C [--mux M]  (analog backend: tile geometry)]
   map      --vid kws_full_e10_8b [--rows 1024 --cols 512] [--mux 4] [--split]
   report   --vid kws_full_e10_8b [--bits 8]
@@ -61,6 +66,12 @@ fn default_vid(args: &Args) -> String {
     args.opt_or("vid", "kws_full_e10_8b")
 }
 
+/// Optional `--adc-bits B` (per-request ADC bitwidth override).
+fn opt_adc_bits(args: &Args) -> Option<u32> {
+    args.opt("adc-bits")
+        .map(|v| v.parse().expect("integer --adc-bits"))
+}
+
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let vid = default_vid(args);
     let bits = args.opt_usize("bits", 8) as u32;
@@ -71,6 +82,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     cfg.max_batch = args.opt_usize("max-batch", 0);
     cfg.threads = args.opt_usize("threads", 0);
     cfg.drift_time = args.opt_f64("t-drift", T_C_SECONDS);
+    // per-request options: an explicit --t-drift stamps each request with
+    // that device age (winning over the serving clock, which it also
+    // seeds for consistent metrics); --adc-bits stamps the quantization
+    // bitwidth. Both absent = default options = pre-options behavior.
+    let req_opts = InferOpts {
+        t_drift: args.opt("t-drift").map(|v| v.parse().expect("float --t-drift")),
+        adc_bits: opt_adc_bits(args),
+    };
     let store = ArtifactStore::open_default()?;
     let meta = store.meta(&vid)?;
     let task = if meta.model.contains("vww") { "vww" } else { "kws" };
@@ -78,14 +97,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     drop(store);
 
     println!("[serve] starting coordinator for {vid} ({bits}-bit) on the \
-              `{}` backend, time scale {}x, device age {}s",
+              `{}` backend, time scale {}x, device age {}s, request opts \
+              {req_opts:?}",
              cfg.backend, cfg.time_scale, cfg.drift_time);
     let coord = Coordinator::start(cfg)?;
     let feat = ds.feat_len();
     let mut correct = 0usize;
     for i in 0..n_requests {
         let s = i % ds.len();
-        let resp = coord.infer(ds.x[s * feat..(s + 1) * feat].to_vec())?;
+        let resp =
+            coord.infer_with(ds.x[s * feat..(s + 1) * feat].to_vec(), req_opts)?;
         if resp.pred == ds.y[s] {
             correct += 1;
         }
@@ -110,6 +131,7 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
         backend: BackendKind::from_args(args)?,
         t_drift: args.opt("t-drift")
             .map(|v| v.parse().expect("float --t-drift")),
+        adc_bits: opt_adc_bits(args),
         ..Default::default()
     };
     let times = opts.sweep_times();
@@ -121,6 +143,9 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
               (fp ref {:.2}%)",
              opts.backend, opts.runs, opts.max_samples,
              100.0 * meta.fp_test_acc);
+    if let Some(b) = opts.adc_bits {
+        println!("[eval] per-request ADC override: quantizing at {b} bits");
+    }
 
     // tile-geometry ablation: a custom array geometry changes which
     // K-slices get independently ADC-quantized, so it only exists on the

@@ -20,6 +20,17 @@ pub use weights::ProgrammedWeights;
 pub const G_MAX_US: f64 = 25.0;
 /// Drift reference time t_c (seconds): devices are read relative to this.
 pub const T_C_SECONDS: f64 = 25.0;
+
+/// Clamp a device age to the earliest readable time: programming
+/// completes at t_c, so ages below it snap up to t_c (non-finite ages —
+/// already rejected upstream — also resolve to t_c via `f64::max`). The
+/// single source of the clamp rule: both the launch-grouping key
+/// (`backend::InferOpts::batch_key`) and the actual weight read
+/// (`coordinator::PcmState::weights_at`) use it, so a request's batch
+/// key and its served age can never disagree.
+pub fn clamp_age(age_s: f64) -> f64 {
+    age_s.max(T_C_SECONDS)
+}
 /// 1/f read-noise reference time t_r (seconds) = 250 ns.
 pub const T_R_SECONDS: f64 = 250e-9;
 

@@ -1,22 +1,27 @@
 //! Tile-faithful analog CiM forward pass.
 //!
-//! `NativeModel` fake-quantizes each layer's ADC *after* the full-K GEMM
-//! accumulation — numerically convenient, but not what the hardware does.
-//! On the AON-CiM array every crossbar tile produces *analog* partial sums
-//! that pass through the tile's ADCs **before** the digital processor ever
-//! sees them; K-slices programmed onto different tiles are therefore
-//! quantized independently and only then accumulated in digital f32. That
-//! ordering is exactly where fixed-ADC-gain error enters (Xiao et al. 2021,
-//! "On the Accuracy of Analog Neural Network Inference Accelerators").
+//! The native engine fake-quantizes each layer's ADC *after* the full-K
+//! GEMM accumulation — numerically convenient, but not what the hardware
+//! does. On the AON-CiM array every crossbar tile produces *analog*
+//! partial sums that pass through the tile's ADCs **before** the digital
+//! processor ever sees them; K-slices programmed onto different tiles are
+//! therefore quantized independently and only then accumulated in digital
+//! f32. That ordering is exactly where fixed-ADC-gain error enters (Xiao
+//! et al. 2021, "On the Accuracy of Analog Neural Network Inference
+//! Accelerators").
 //!
-//! `AnalogModel` executes that schedule: each layer's [K x N] GEMM
-//! rectangle is split into crossbar-sized tiles
-//! ([`mapping::tiler::tile_grid`](crate::mapping::tile_grid)), inputs are
-//! DAC-quantized once per layer, every tile MVM is ADC-quantized per tile
-//! column at the GDC-scaled range, and K-tile partials accumulate in f32.
-//! Execution is layer-serial over the whole batch (the shared-array
-//! schedule `NativeModel::forward` also follows) with tile work fanned out
-//! across the persistent [`WorkerPool`] as (column-band, row-chunk) jobs.
+//! [`TileGridEngine`] is that schedule as a
+//! [`MatmulEngine`](crate::simulator::pipeline::MatmulEngine): each
+//! layer's [K x N] GEMM rectangle is split into crossbar-sized tiles
+//! ([`mapping::tiler::tile_grid`](crate::mapping::tile_grid)), every tile
+//! MVM is ADC-quantized per tile column at the GDC-scaled range, and
+//! K-tile partials accumulate in f32, fanned out across the executor's
+//! persistent [`WorkerPool`] as (column-band, row-chunk) jobs.
+//! [`AnalogModel`] pairs the engine with the shared
+//! [`LayerExecutor`] — all staging (im2col, DAC quantization, pooling,
+//! affine, ReLU) is the *same code* the native engine runs, so the two
+//! engines observe bit-identical pre-matmul staged inputs by construction
+//! (pinned by `tests/test_pipeline.rs`).
 //!
 //! When a layer fits a single tile (the paper's models on the 1024x512
 //! array) and GDC is exactly 1, the per-tile schedule degenerates to the
@@ -24,24 +29,74 @@
 //! tests/test_backend_analog.rs. Multi-tile geometries (64x64 ablations)
 //! diverge by design: that divergence *is* the modeled physics.
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::crossbar::ArrayGeom;
 use crate::mapping::{tile_grid, Tile};
-use crate::nn::{LayerKind, ModelMeta};
+use crate::nn::ModelMeta;
 use crate::quant;
-use crate::simulator::forward::{scratch_capacity, Scratch};
-use crate::simulator::im2col;
+use crate::simulator::pipeline::{LayerExecutor, MatmulCtx, MatmulEngine};
 use crate::simulator::pool::{Job, RawSlice, RawSliceMut, WorkerPool};
 
-pub struct AnalogModel {
-    meta: Arc<ModelMeta>,
+/// The tile-faithful matmul step: per-crossbar-tile MVM with per-tile ADC
+/// quantization before digital accumulation, on a fixed array geometry.
+/// Tile plans are precomputed per layer at construction (digital layers
+/// never touch the array and carry no plan).
+pub struct TileGridEngine {
     geom: ArrayGeom,
-    /// per-layer crossbar tiling of the [K x N] GEMM rectangle; digital
-    /// (`analog = false`) layers never touch the array and carry no plan
+    /// per-layer crossbar tiling of the [K x N] GEMM rectangle, indexed by
+    /// `MatmulCtx::layer_index`
     plans: Vec<Option<Vec<Tile>>>,
-    pool: Arc<WorkerPool>,
-    scratch: Mutex<Scratch>,
+}
+
+impl TileGridEngine {
+    /// Plan every analog layer of `meta` onto `geom`-sized tiles.
+    pub fn new(meta: &ModelMeta, geom: ArrayGeom) -> Self {
+        let plans = meta
+            .layers
+            .iter()
+            .map(|lm| {
+                lm.analog.then(|| {
+                    tile_grid(lm.graph_weight_shape[0],
+                              lm.graph_weight_shape[1], geom)
+                })
+            })
+            .collect();
+        TileGridEngine { geom, plans }
+    }
+
+    pub fn geom(&self) -> ArrayGeom {
+        self.geom
+    }
+
+    /// Crossbar tiles the plan occupies across all analog layers (1 per
+    /// layer on the AON array; more under small-tile ablation geometries).
+    pub fn tiles_total(&self) -> usize {
+        self.plans.iter().flatten().map(|p| p.len()).sum()
+    }
+}
+
+impl MatmulEngine for TileGridEngine {
+    fn name(&self) -> &'static str {
+        "tile-grid"
+    }
+
+    fn analog_matmul(&self, ctx: &MatmulCtx<'_>, a: &[f32], w: &[f32],
+                     out: &mut [f32]) {
+        let plan = self.plans[ctx.layer_index]
+            .as_deref()
+            .expect("analog layer has a tile plan");
+        tiled_mvm(ctx.pool, a, w, out, ctx.m, ctx.k, ctx.n, plan,
+                  ctx.layer.r_adc, ctx.adc_bits, ctx.alpha);
+    }
+}
+
+/// The [`LayerExecutor`] driven by a [`TileGridEngine`]: the drop-in
+/// tile-faithful counterpart of `NativeModel`, sharing its staging loop,
+/// argument contract, and batch-invariance guarantee.
+pub struct AnalogModel {
+    exec: LayerExecutor,
+    engine: TileGridEngine,
 }
 
 impl AnalogModel {
@@ -55,43 +110,27 @@ impl AnalogModel {
     /// execution path.
     pub fn with_threads(meta: impl Into<Arc<ModelMeta>>, geom: ArrayGeom,
                         threads: usize) -> Self {
-        let meta = meta.into();
-        let plans = meta
-            .layers
-            .iter()
-            .map(|lm| {
-                lm.analog.then(|| {
-                    tile_grid(lm.graph_weight_shape[0],
-                              lm.graph_weight_shape[1], geom)
-                })
-            })
-            .collect();
-        AnalogModel {
-            meta,
-            geom,
-            plans,
-            pool: Arc::new(WorkerPool::new(threads)),
-            scratch: Mutex::new(Scratch::default()),
-        }
+        let exec = LayerExecutor::new(meta, threads);
+        let engine = TileGridEngine::new(exec.meta_arc(), geom);
+        AnalogModel { exec, engine }
     }
 
     pub fn meta(&self) -> &ModelMeta {
-        &self.meta
+        self.exec.meta()
     }
 
     pub fn geom(&self) -> ArrayGeom {
-        self.geom
+        self.engine.geom()
     }
 
     /// Worker lanes tile jobs are dispatched over.
     pub fn threads(&self) -> usize {
-        self.pool.lanes()
+        self.exec.lanes()
     }
 
-    /// Crossbar tiles the model occupies across all analog layers (1 per
-    /// layer on the AON array; more under small-tile ablation geometries).
+    /// Crossbar tiles the model occupies across all analog layers.
     pub fn tiles_total(&self) -> usize {
-        self.plans.iter().flatten().map(|p| p.len()).sum()
+        self.engine.tiles_total()
     }
 
     /// Forward a batch: `x` is [batch, H, W, C] flat; returns logits
@@ -107,128 +146,7 @@ impl AnalogModel {
     pub fn forward<W: AsRef<[f32]>>(&self, x: &[f32], batch: usize,
                                     weights: &[W], gdc: &[f32],
                                     adc_bits: u32) -> Vec<f32> {
-        let (ih, iw, ic) = self.meta.input_hwc;
-        assert_eq!(x.len(), batch * ih * iw * ic, "input shape mismatch");
-        assert_eq!(weights.len(), self.meta.layers.len());
-        assert_eq!(gdc.len(), self.meta.layers.len());
-        let b_dac = quant::dac_bits(adc_bits);
-
-        let mut guard = self.scratch.lock().unwrap();
-        guard.ensure(scratch_capacity(&self.meta, batch));
-        let Scratch { ping, pong } = &mut *guard;
-        let (mut cur, mut nxt): (&mut Vec<f32>, &mut Vec<f32>) = (ping, pong);
-        cur[..x.len()].copy_from_slice(x);
-        let mut len = x.len();
-
-        let (mut ch, mut cw, mut cc) = (ih, iw, ic);
-        for (li, lm) in self.meta.layers.iter().enumerate() {
-            let w = weights[li].as_ref();
-            match lm.kind {
-                LayerKind::Dw3x3 if !lm.analog => {
-                    // exact depthwise on the digital processor, compact
-                    // [9, C] — identical to the native engine
-                    let c = lm.in_ch;
-                    assert_eq!(w.len(), 9 * c);
-                    let ho = im2col::out_dim(ch, lm.stride.0);
-                    let wo = im2col::out_dim(cw, lm.stride.1);
-                    let rows = batch * ho * wo;
-                    im2col::patches3x3_into(&cur[..len], &mut nxt[..rows * 9 * c],
-                                            batch, ch, cw, cc, lm.stride);
-                    // patches in `nxt`; depthwise result overwrites `cur`
-                    for r in 0..rows {
-                        for ci in 0..c {
-                            let mut acc = 0f32;
-                            for t in 0..9 {
-                                acc += nxt[r * 9 * c + t * c + ci] * w[t * c + ci];
-                            }
-                            cur[r * c + ci] = acc * lm.dig_scale[ci] + lm.dig_bias[ci];
-                        }
-                    }
-                    len = rows * c;
-                    ch = ho;
-                    cw = wo;
-                }
-                _ => {
-                    // stage the GEMM input so it ends up in `cur` (same
-                    // staging as the native engine)
-                    let (m_rows, k) = match lm.kind {
-                        LayerKind::Conv3x3 | LayerKind::Dw3x3 => {
-                            let ho = im2col::out_dim(ch, lm.stride.0);
-                            let wo = im2col::out_dim(cw, lm.stride.1);
-                            let kk = 9 * cc;
-                            let rows = batch * ho * wo;
-                            im2col::patches3x3_into(&cur[..len],
-                                                    &mut nxt[..rows * kk],
-                                                    batch, ch, cw, cc, lm.stride);
-                            std::mem::swap(&mut cur, &mut nxt);
-                            len = rows * kk;
-                            ch = ho;
-                            cw = wo;
-                            (rows, kk)
-                        }
-                        LayerKind::Conv1x1 => (batch * ch * cw, cc),
-                        LayerKind::Dense => {
-                            // global average pool into `nxt`, then flip
-                            let pix = ch * cw;
-                            let g = &mut nxt[..batch * cc];
-                            g.fill(0.0);
-                            for ni in 0..batch {
-                                for p_ in 0..pix {
-                                    for ci in 0..cc {
-                                        g[ni * cc + ci] += cur[(ni * pix + p_) * cc + ci];
-                                    }
-                                }
-                            }
-                            let inv = 1.0 / pix as f32;
-                            g.iter_mut().for_each(|v| *v *= inv);
-                            std::mem::swap(&mut cur, &mut nxt);
-                            len = batch * cc;
-                            ch = 1;
-                            cw = 1;
-                            (batch, cc)
-                        }
-                    };
-                    let gw = &lm.graph_weight_shape;
-                    assert_eq!(gw[0], k, "{}: K mismatch", lm.name);
-                    let n_cols = gw[1];
-                    assert_eq!(w.len(), k * n_cols, "{}: weight len", lm.name);
-                    debug_assert_eq!(len, m_rows * k);
-
-                    if lm.analog {
-                        // source-line DACs quantize the activations once;
-                        // every tile sees the same driven lines
-                        quant::fake_quant_slice(&mut cur[..m_rows * k], lm.r_dac,
-                                                b_dac);
-                        let plan = self.plans[li]
-                            .as_deref()
-                            .expect("analog layer has a tile plan");
-                        tiled_mvm(&self.pool, &cur[..m_rows * k], w,
-                                  &mut nxt[..m_rows * n_cols], m_rows, k,
-                                  n_cols, plan, lm.r_adc, adc_bits, gdc[li]);
-                    } else {
-                        // digital layers never touch the array: exact GEMM
-                        self.pool.gemm_into(&cur[..m_rows * k], w,
-                                            &mut nxt[..m_rows * n_cols],
-                                            m_rows, k, n_cols);
-                    }
-                    let out = &mut nxt[..m_rows * n_cols];
-                    // digital per-channel affine (folded BN / bias)
-                    for r in 0..m_rows {
-                        let row = &mut out[r * n_cols..(r + 1) * n_cols];
-                        for (j, v) in row.iter_mut().enumerate() {
-                            *v = *v * lm.dig_scale[j] + lm.dig_bias[j];
-                        }
-                    }
-                    std::mem::swap(&mut cur, &mut nxt);
-                    len = m_rows * n_cols;
-                    cc = n_cols;
-                }
-            }
-            if lm.relu {
-                cur[..len].iter_mut().for_each(|v| *v = v.max(0.0));
-            }
-        }
-        cur[..len].to_vec()
+        self.exec.forward(&self.engine, x, batch, weights, gdc, adc_bits)
     }
 }
 

@@ -5,93 +5,25 @@
 //! ReLU, with global average pooling before the dense head, and exact
 //! (unquantized) compute for `analog=false` layers (Fig. 9 ablation).
 //!
-//! Execution is **layer-serial over the whole batch**, mirroring the
-//! AON-CiM schedule: every sample finishes layer `k` on the (simulated)
-//! shared crossbar before any sample starts layer `k+1` — one im2col and
-//! one batched GEMM per layer, never per-request forward passes.  The GEMM
-//! runs on a persistent [`WorkerPool`] owned by the model, and activations
-//! ping-pong between two preallocated scratch buffers, so the serving hot
-//! path performs no per-layer allocation.
+//! [`NativeModel`] is the [`LayerExecutor`] driven by the
+//! [`NativeGemmEngine`]: all staging (im2col, scratch ping-pong, pooling,
+//! affine, ReLU) lives in the shared executor — see
+//! [`pipeline`](crate::simulator::pipeline) — and only the matmul step
+//! (full-K batched GEMM, ADC quantized *after* accumulation) is
+//! engine-specific. Execution is **layer-serial over the whole batch**,
+//! mirroring the AON-CiM schedule: every sample finishes layer `k` on the
+//! (simulated) shared crossbar before any sample starts layer `k+1` — one
+//! im2col and one batched GEMM per layer, never per-request forward
+//! passes, on a persistent worker pool with no per-layer allocation.
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
-use crate::nn::{LayerKind, ModelMeta};
-use crate::quant;
-use crate::simulator::im2col;
-use crate::simulator::pool::WorkerPool;
-
-/// Ping-pong activation scratch: two buffers, each sized for the largest
-/// intermediate (patch matrix or activation block) of the model at the
-/// largest batch seen so far.  Layer `k` reads one buffer and writes the
-/// other; ownership flips each step, so no layer ever allocates.
-/// (Shared with the tile-faithful `AnalogModel`, whose layer loop has the
-/// same staging structure.)
-#[derive(Default)]
-pub(crate) struct Scratch {
-    pub(crate) ping: Vec<f32>,
-    pub(crate) pong: Vec<f32>,
-}
-
-impl Scratch {
-    pub(crate) fn ensure(&mut self, cap: usize) {
-        if self.ping.len() < cap {
-            self.ping.resize(cap, 0.0);
-        }
-        if self.pong.len() < cap {
-            self.pong.resize(cap, 0.0);
-        }
-    }
-}
-
-/// Largest f32 count any single intermediate (input block, im2col patch
-/// matrix, layer output) occupies for `meta` at `batch`.
-pub(crate) fn scratch_capacity(meta: &ModelMeta, batch: usize) -> usize {
-    let (ih, iw, ic) = meta.input_hwc;
-    let mut cap = batch * ih * iw * ic;
-    let (mut ch, mut cw, mut cc) = (ih, iw, ic);
-    for lm in &meta.layers {
-        match lm.kind {
-            LayerKind::Conv3x3 | LayerKind::Dw3x3 => {
-                let ho = im2col::out_dim(ch, lm.stride.0);
-                let wo = im2col::out_dim(cw, lm.stride.1);
-                let out_c = if lm.kind == LayerKind::Dw3x3 && !lm.analog {
-                    lm.in_ch
-                } else {
-                    lm.graph_weight_shape[1]
-                };
-                cap = cap.max(batch * ho * wo * 9 * cc); // patch matrix
-                cap = cap.max(batch * ho * wo * out_c); // layer output
-                ch = ho;
-                cw = wo;
-                cc = out_c;
-            }
-            LayerKind::Conv1x1 => {
-                let out_c = lm.graph_weight_shape[1];
-                cap = cap.max(batch * ch * cw * out_c);
-                cc = out_c;
-            }
-            LayerKind::Dense => {
-                let out_c = lm.graph_weight_shape[1];
-                cap = cap.max(batch * cc); // pooled features
-                cap = cap.max(batch * out_c); // logits
-                ch = 1;
-                cw = 1;
-                cc = out_c;
-            }
-        }
-    }
-    cap
-}
+use crate::nn::ModelMeta;
+use crate::simulator::pipeline::{LayerExecutor, NativeGemmEngine};
 
 pub struct NativeModel {
-    meta: Arc<ModelMeta>,
-    /// persistent row-chunk GEMM workers (created once, parked between
-    /// launches — the old implementation spawned scoped threads per call)
-    pool: Arc<WorkerPool>,
-    /// per-model activation scratch; a Mutex because `forward` takes
-    /// `&self` (the serving coordinator drives one model from one thread,
-    /// so this lock is uncontended on the hot path)
-    scratch: Mutex<Scratch>,
+    exec: LayerExecutor,
+    engine: NativeGemmEngine,
 }
 
 impl NativeModel {
@@ -103,19 +35,18 @@ impl NativeModel {
     /// spawned here, never on the execution path.
     pub fn with_threads(meta: impl Into<Arc<ModelMeta>>, threads: usize) -> Self {
         NativeModel {
-            meta: meta.into(),
-            pool: Arc::new(WorkerPool::new(threads)),
-            scratch: Mutex::new(Scratch::default()),
+            exec: LayerExecutor::new(meta, threads),
+            engine: NativeGemmEngine,
         }
     }
 
     pub fn meta(&self) -> &ModelMeta {
-        &self.meta
+        self.exec.meta()
     }
 
     /// GEMM lanes this model multiplies on (workers + calling thread).
     pub fn threads(&self) -> usize {
-        self.pool.lanes()
+        self.exec.lanes()
     }
 
     /// Forward a batch: `x` is [batch, H, W, C] flat; returns logits
@@ -132,124 +63,7 @@ impl NativeModel {
     pub fn forward<W: AsRef<[f32]>>(&self, x: &[f32], batch: usize,
                                     weights: &[W], gdc: &[f32],
                                     adc_bits: u32) -> Vec<f32> {
-        let (ih, iw, ic) = self.meta.input_hwc;
-        assert_eq!(x.len(), batch * ih * iw * ic, "input shape mismatch");
-        assert_eq!(weights.len(), self.meta.layers.len());
-        assert_eq!(gdc.len(), self.meta.layers.len());
-        let b_dac = quant::dac_bits(adc_bits);
-
-        let mut guard = self.scratch.lock().unwrap();
-        guard.ensure(scratch_capacity(&self.meta, batch));
-        let Scratch { ping, pong } = &mut *guard;
-        let (mut cur, mut nxt): (&mut Vec<f32>, &mut Vec<f32>) = (ping, pong);
-        cur[..x.len()].copy_from_slice(x);
-        let mut len = x.len();
-
-        let (mut ch, mut cw, mut cc) = (ih, iw, ic);
-        for (li, lm) in self.meta.layers.iter().enumerate() {
-            let w = weights[li].as_ref();
-            match lm.kind {
-                LayerKind::Dw3x3 if !lm.analog => {
-                    // exact depthwise on the digital processor, compact [9, C]
-                    let c = lm.in_ch;
-                    assert_eq!(w.len(), 9 * c);
-                    let ho = im2col::out_dim(ch, lm.stride.0);
-                    let wo = im2col::out_dim(cw, lm.stride.1);
-                    let rows = batch * ho * wo;
-                    im2col::patches3x3_into(&cur[..len], &mut nxt[..rows * 9 * c],
-                                            batch, ch, cw, cc, lm.stride);
-                    // patches in `nxt`; depthwise result overwrites `cur`
-                    for r in 0..rows {
-                        for ci in 0..c {
-                            let mut acc = 0f32;
-                            for t in 0..9 {
-                                acc += nxt[r * 9 * c + t * c + ci] * w[t * c + ci];
-                            }
-                            // digital per-channel affine, fused
-                            cur[r * c + ci] = acc * lm.dig_scale[ci] + lm.dig_bias[ci];
-                        }
-                    }
-                    len = rows * c;
-                    ch = ho;
-                    cw = wo;
-                }
-                _ => {
-                    // GEMM path (conv as im2col, 1x1, dense, analog dw):
-                    // stage the GEMM input so it ends up in `cur`
-                    let (m_rows, k) = match lm.kind {
-                        LayerKind::Conv3x3 | LayerKind::Dw3x3 => {
-                            let ho = im2col::out_dim(ch, lm.stride.0);
-                            let wo = im2col::out_dim(cw, lm.stride.1);
-                            let kk = 9 * cc;
-                            let rows = batch * ho * wo;
-                            im2col::patches3x3_into(&cur[..len],
-                                                    &mut nxt[..rows * kk],
-                                                    batch, ch, cw, cc, lm.stride);
-                            std::mem::swap(&mut cur, &mut nxt);
-                            len = rows * kk;
-                            ch = ho;
-                            cw = wo;
-                            (rows, kk)
-                        }
-                        LayerKind::Conv1x1 => (batch * ch * cw, cc),
-                        LayerKind::Dense => {
-                            // global average pool into `nxt`, then flip
-                            let pix = ch * cw;
-                            let g = &mut nxt[..batch * cc];
-                            g.fill(0.0);
-                            for ni in 0..batch {
-                                for p_ in 0..pix {
-                                    for ci in 0..cc {
-                                        g[ni * cc + ci] += cur[(ni * pix + p_) * cc + ci];
-                                    }
-                                }
-                            }
-                            let inv = 1.0 / pix as f32;
-                            g.iter_mut().for_each(|v| *v *= inv);
-                            std::mem::swap(&mut cur, &mut nxt);
-                            len = batch * cc;
-                            ch = 1;
-                            cw = 1;
-                            (batch, cc)
-                        }
-                    };
-                    let gw = &lm.graph_weight_shape;
-                    assert_eq!(gw[0], k, "{}: K mismatch", lm.name);
-                    let n_cols = gw[1];
-                    assert_eq!(w.len(), k * n_cols, "{}: weight len", lm.name);
-                    debug_assert_eq!(len, m_rows * k);
-
-                    if lm.analog {
-                        quant::fake_quant_slice(&mut cur[..m_rows * k], lm.r_dac, b_dac);
-                    }
-                    self.pool.gemm_into(&cur[..m_rows * k], w,
-                                        &mut nxt[..m_rows * n_cols],
-                                        m_rows, k, n_cols);
-                    let out = &mut nxt[..m_rows * n_cols];
-                    if lm.analog {
-                        quant::fake_quant_slice(out, lm.r_adc, adc_bits);
-                        let g = gdc[li];
-                        if (g - 1.0).abs() > 1e-9 {
-                            out.iter_mut().for_each(|v| *v *= g);
-                        }
-                    }
-                    // digital per-channel affine (folded BN / bias)
-                    for r in 0..m_rows {
-                        let row = &mut out[r * n_cols..(r + 1) * n_cols];
-                        for (j, v) in row.iter_mut().enumerate() {
-                            *v = *v * lm.dig_scale[j] + lm.dig_bias[j];
-                        }
-                    }
-                    std::mem::swap(&mut cur, &mut nxt);
-                    len = m_rows * n_cols;
-                    cc = n_cols;
-                }
-            }
-            if lm.relu {
-                cur[..len].iter_mut().for_each(|v| *v = v.max(0.0));
-            }
-        }
-        cur[..len].to_vec()
+        self.exec.forward(&self.engine, x, batch, weights, gdc, adc_bits)
     }
 
     /// Argmax predictions from logits (thin wrapper over the shared
@@ -348,6 +162,23 @@ mod tests {
         let no_comp = m.forward(&x, 1, &weights, &[1.0, 1.0], 8);
         let comped = m.forward(&x, 1, &weights, &[2.0, 1.0], 8);
         assert!(comped[0] > no_comp[0] * 1.5);
+    }
+
+    #[test]
+    fn adc_bits_change_the_computed_numbers() {
+        // per-request `InferOpts::adc_bits` rides this knob: a coarser
+        // converter must actually change analog-layer outputs
+        let meta = tiny_meta();
+        let m = NativeModel::new(meta);
+        let x: Vec<f32> = (0..16).map(|i| 0.3 + (i as f32) / 40.0).collect();
+        let mut rng = crate::util::rng::Rng::new(19);
+        let w0: Vec<f32> = (0..18).map(|_| rng.gauss(0.0, 0.4) as f32).collect();
+        let w1: Vec<f32> = (0..4).map(|_| rng.gauss(0.0, 0.4) as f32).collect();
+        let weights = vec![w0, w1];
+        let gdc = vec![1.0, 1.0];
+        let l8 = m.forward(&x, 1, &weights, &gdc, 8);
+        let l4 = m.forward(&x, 1, &weights, &gdc, 4);
+        assert_ne!(l8, l4, "4-bit conversion must differ from 8-bit");
     }
 
     #[test]

@@ -1,14 +1,22 @@
 //! Rust-native CiM forward simulators.
 //!
-//! Two independent implementations of the deployed inference graph, used to
-//! cross-validate the PJRT path and to run device-physics experiments
-//! without XLA in the loop:
+//! One staging loop, many matmul engines: the full layer-serial schedule
+//! (im2col, scratch ping-pong, pooling, DAC quantization, digital affine,
+//! ReLU) lives in [`pipeline::LayerExecutor`], and the only step that
+//! differs between execution styles — the analog matmul + output
+//! quantization — is a [`pipeline::MatmulEngine`] implementation:
 //!
-//! * [`NativeModel`] — im2col + full-K GEMM + DAC/ADC fake quantization +
-//!   digital affine, mirroring the exported HLO graph layer by layer;
-//! * [`AnalogModel`] — the tile-faithful schedule: one MVM per mapped
-//!   crossbar tile, per-tile ADC quantization at the GDC-scaled range,
-//!   digital f32 accumulation across K-tiles (see `analog_forward`).
+//! * [`NativeModel`] = executor + [`NativeGemmEngine`]: full-K GEMM with
+//!   ADC fake-quantization after accumulation, mirroring the exported HLO
+//!   graph layer by layer;
+//! * [`AnalogModel`] = executor + [`TileGridEngine`]: the tile-faithful
+//!   schedule — one MVM per mapped crossbar tile, per-tile ADC
+//!   quantization at the GDC-scaled range, digital f32 accumulation
+//!   across K-tiles (see `analog_forward`).
+//!
+//! A staging fix or a new layer kind lands in both engines by
+//! construction; a new engine (per-tile GDC, stochastic ADCs, ...) is one
+//! trait impl, not a third copy of the loop.
 //!
 //! The im2col ordering and SAME-padding convention are a shared contract
 //! with `python/compile/layers.py`.
@@ -17,8 +25,10 @@ pub mod analog_forward;
 pub mod forward;
 pub mod gemm;
 pub mod im2col;
+pub mod pipeline;
 pub mod pool;
 
-pub use analog_forward::AnalogModel;
+pub use analog_forward::{AnalogModel, TileGridEngine};
 pub use forward::NativeModel;
+pub use pipeline::{LayerExecutor, MatmulCtx, MatmulEngine, NativeGemmEngine};
 pub use pool::WorkerPool;

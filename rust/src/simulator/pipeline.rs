@@ -1,0 +1,472 @@
+//! The shared layer-pipeline executor: one staging loop, many matmul
+//! engines.
+//!
+//! The AON-CiM accelerator runs a single layer-serial schedule regardless
+//! of how the MVM itself is realized: stage the layer input (im2col patch
+//! extraction, global average pooling), multiply, quantize, apply the
+//! digital per-channel affine, ReLU — with the whole batch finishing layer
+//! `k` before any sample starts layer `k+1`. Historically `NativeModel`
+//! and `AnalogModel` each owned a private copy of that staging loop and
+//! only differed in the multiply+quantize step, which meant every staging
+//! fix or new layer kind had to land twice (the ROADMAP called this
+//! divergence hazard out explicitly).
+//!
+//! [`LayerExecutor`] is that loop, extracted once: it owns the persistent
+//! GEMM [`WorkerPool`] and the ping-pong activation scratch, performs all
+//! engine-independent work (staging, DAC fake-quantization of analog-layer
+//! inputs, exact digital GEMM/depthwise, affine, ReLU), and delegates
+//! exactly one step — the analog matmul + output quantization — to a
+//! [`MatmulEngine`]:
+//!
+//! * [`NativeGemmEngine`] — full-K batched GEMM, ADC fake-quantized
+//!   *after* accumulation, GDC as a single output scale (mirrors the
+//!   exported HLO graph);
+//! * [`TileGridEngine`](crate::simulator::TileGridEngine) — the
+//!   tile-faithful schedule: one MVM per mapped crossbar tile, per-tile
+//!   ADC quantization at the GDC-scaled range, digital f32 accumulation
+//!   across K-tiles (see `analog_forward`).
+//!
+//! A new engine (a per-tile GDC variant, a stochastic-ADC model, an
+//! instrumentation wrapper) is one `MatmulEngine` impl — the staging loop
+//! is shared by construction, which is what the staged-input bit-identity
+//! property test in `tests/test_pipeline.rs` pins down.
+
+use std::sync::{Arc, Mutex};
+
+use crate::nn::{LayerKind, LayerMeta, ModelMeta};
+use crate::quant;
+use crate::simulator::im2col;
+use crate::simulator::pool::WorkerPool;
+
+/// Ping-pong activation scratch: two buffers, each sized for the largest
+/// intermediate (patch matrix or activation block) of the model at the
+/// largest batch seen so far.  Layer `k` reads one buffer and writes the
+/// other; ownership flips each step, so no layer ever allocates.
+#[derive(Default)]
+struct Scratch {
+    ping: Vec<f32>,
+    pong: Vec<f32>,
+}
+
+impl Scratch {
+    fn ensure(&mut self, cap: usize) {
+        if self.ping.len() < cap {
+            self.ping.resize(cap, 0.0);
+        }
+        if self.pong.len() < cap {
+            self.pong.resize(cap, 0.0);
+        }
+    }
+}
+
+/// Largest f32 count any single intermediate (input block, im2col patch
+/// matrix, layer output) occupies for `meta` at `batch`.
+pub fn scratch_capacity(meta: &ModelMeta, batch: usize) -> usize {
+    let (ih, iw, ic) = meta.input_hwc;
+    let mut cap = batch * ih * iw * ic;
+    let (mut ch, mut cw, mut cc) = (ih, iw, ic);
+    for lm in &meta.layers {
+        match lm.kind {
+            LayerKind::Conv3x3 | LayerKind::Dw3x3 => {
+                let ho = im2col::out_dim(ch, lm.stride.0);
+                let wo = im2col::out_dim(cw, lm.stride.1);
+                let out_c = if lm.kind == LayerKind::Dw3x3 && !lm.analog {
+                    lm.in_ch
+                } else {
+                    lm.graph_weight_shape[1]
+                };
+                cap = cap.max(batch * ho * wo * 9 * cc); // patch matrix
+                cap = cap.max(batch * ho * wo * out_c); // layer output
+                ch = ho;
+                cw = wo;
+                cc = out_c;
+            }
+            LayerKind::Conv1x1 => {
+                let out_c = lm.graph_weight_shape[1];
+                cap = cap.max(batch * ch * cw * out_c);
+                cc = out_c;
+            }
+            LayerKind::Dense => {
+                let out_c = lm.graph_weight_shape[1];
+                cap = cap.max(batch * cc); // pooled features
+                cap = cap.max(batch * out_c); // logits
+                ch = 1;
+                cw = 1;
+                cc = out_c;
+            }
+        }
+    }
+    cap
+}
+
+/// Everything a [`MatmulEngine`] may need for one analog layer's multiply:
+/// the executor's worker pool, the layer's metadata and position, the GEMM
+/// shape, and the per-call quantization parameters. Passed by reference so
+/// engine impls stay signature-stable when context grows.
+pub struct MatmulCtx<'a> {
+    /// the executor's persistent worker pool — engines dispatch parallel
+    /// work here instead of spawning threads
+    pub pool: &'a WorkerPool,
+    /// index of the layer in `ModelMeta::layers` (tile plans and other
+    /// per-layer engine state are looked up by this)
+    pub layer_index: usize,
+    /// the layer being executed (quantizer ranges, name for diagnostics)
+    pub layer: &'a LayerMeta,
+    /// GEMM rows: `batch * out_pixels` for convs, `batch` for dense
+    pub m: usize,
+    /// GEMM inner dimension (crossbar rows)
+    pub k: usize,
+    /// GEMM columns (crossbar columns / output channels)
+    pub n: usize,
+    /// the layer's global drift compensation scale (1.0 fresh)
+    pub alpha: f32,
+    /// ADC bitwidth this call quantizes at (per-request capable via
+    /// [`InferOpts`](crate::backend::InferOpts))
+    pub adc_bits: u32,
+}
+
+/// The engine-specific step of the layer pipeline: multiply the staged,
+/// DAC-quantized `[m x k]` activation block `a` against the `[k x n]`
+/// effective weights `w` into `out`, applying the engine's ADC
+/// quantization model and the GDC gain `ctx.alpha`.
+///
+/// Contract (what [`LayerExecutor`] guarantees and expects):
+/// * `a` is already DAC fake-quantized at the layer's `r_dac` — every
+///   engine sees the same driven source lines, bit for bit (the staged
+///   input bit-identity property);
+/// * `out` is an uninitialized scratch view of exactly `m * n` elements
+///   the engine must fully overwrite;
+/// * the engine must be batch-invariant: each output element's
+///   accumulation order may depend only on its own row and the engine's
+///   static per-layer state, never on `m` — the coordinator's dynamic
+///   batcher relies on `run_batch(N)` equalling N single-sample runs;
+/// * the digital per-channel affine and ReLU are applied by the executor
+///   *after* this call — engines produce raw quantized MVM results.
+pub trait MatmulEngine {
+    /// Short engine name for logs and diagnostics.
+    fn name(&self) -> &'static str;
+
+    /// One analog layer's multiply + output quantization; see the trait
+    /// docs for the exact contract.
+    fn analog_matmul(&self, ctx: &MatmulCtx<'_>, a: &[f32], w: &[f32],
+                     out: &mut [f32]);
+}
+
+/// The native matmul step: full-K batched GEMM on the pool, ADC
+/// fake-quantization *after* accumulation, GDC as one output scale —
+/// numerically the exported HLO graph, and the reference the tile-faithful
+/// engine degenerates to on single-tile layers at unity GDC.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeGemmEngine;
+
+impl MatmulEngine for NativeGemmEngine {
+    fn name(&self) -> &'static str {
+        "native-gemm"
+    }
+
+    fn analog_matmul(&self, ctx: &MatmulCtx<'_>, a: &[f32], w: &[f32],
+                     out: &mut [f32]) {
+        ctx.pool.gemm_into(a, w, out, ctx.m, ctx.k, ctx.n);
+        quant::fake_quant_slice(out, ctx.layer.r_adc, ctx.adc_bits);
+        let g = ctx.alpha;
+        if (g - 1.0).abs() > 1e-9 {
+            out.iter_mut().for_each(|v| *v *= g);
+        }
+    }
+}
+
+/// The shared layer-serial execution loop. Owns the persistent GEMM
+/// [`WorkerPool`] and the preallocated ping-pong activation scratch;
+/// executes every engine-independent stage itself (im2col, pooling, exact
+/// digital layers, DAC quantization, digital affine, ReLU) and delegates
+/// the analog multiply to the [`MatmulEngine`] passed to
+/// [`forward`](Self::forward).
+///
+/// `NativeModel` and `AnalogModel` are thin wrappers pairing one executor
+/// with one engine; tests and custom engines may drive an executor
+/// directly.
+pub struct LayerExecutor {
+    meta: Arc<ModelMeta>,
+    /// persistent row-chunk GEMM workers (created once, parked between
+    /// launches — never spawned on the execution path)
+    pool: Arc<WorkerPool>,
+    /// per-executor activation scratch; a Mutex because `forward` takes
+    /// `&self` (the serving coordinator drives one model from one thread,
+    /// so this lock is uncontended on the hot path)
+    scratch: Mutex<Scratch>,
+}
+
+impl LayerExecutor {
+    /// `threads` GEMM lanes (`0` = all available cores); the worker pool
+    /// is spawned here, never on the execution path.
+    pub fn new(meta: impl Into<Arc<ModelMeta>>, threads: usize) -> Self {
+        LayerExecutor {
+            meta: meta.into(),
+            pool: Arc::new(WorkerPool::new(threads)),
+            scratch: Mutex::new(Scratch::default()),
+        }
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    /// Shared handle to the model metadata (engines that precompute
+    /// per-layer state — tile plans — are built against the same meta).
+    pub fn meta_arc(&self) -> &Arc<ModelMeta> {
+        &self.meta
+    }
+
+    /// Parallel lanes the pool can drive (workers + the calling thread).
+    pub fn lanes(&self) -> usize {
+        self.pool.lanes()
+    }
+
+    /// Forward a batch through `engine`: `x` is [batch, H, W, C] flat;
+    /// returns logits [batch, classes].
+    ///
+    /// `weights[l]` must match the layer's graph weight shape (anything
+    /// slice-like works: `Vec<f32>`, `HostTensor`, ...); `gdc[l]` is the
+    /// drift-compensation scale (1.0 when freshly programmed); `adc_bits`
+    /// the converter bitwidth this call quantizes at (DAC bits derive from
+    /// it, eq. 3).
+    ///
+    /// Results are bit-identical for any batch decomposition: running N
+    /// samples in one call equals N single-sample calls, because every
+    /// staging step is row-local and [`MatmulEngine`] impls are required
+    /// to be batch-invariant (the layer-serial correctness invariant the
+    /// coordinator's batcher relies on).
+    pub fn forward<W: AsRef<[f32]>>(&self, engine: &dyn MatmulEngine,
+                                    x: &[f32], batch: usize, weights: &[W],
+                                    gdc: &[f32], adc_bits: u32) -> Vec<f32> {
+        let (ih, iw, ic) = self.meta.input_hwc;
+        assert_eq!(x.len(), batch * ih * iw * ic, "input shape mismatch");
+        assert_eq!(weights.len(), self.meta.layers.len());
+        assert_eq!(gdc.len(), self.meta.layers.len());
+        let b_dac = quant::dac_bits(adc_bits);
+
+        let mut guard = self.scratch.lock().unwrap();
+        guard.ensure(scratch_capacity(&self.meta, batch));
+        let Scratch { ping, pong } = &mut *guard;
+        let (mut cur, mut nxt): (&mut Vec<f32>, &mut Vec<f32>) = (ping, pong);
+        cur[..x.len()].copy_from_slice(x);
+        let mut len = x.len();
+
+        let (mut ch, mut cw, mut cc) = (ih, iw, ic);
+        for (li, lm) in self.meta.layers.iter().enumerate() {
+            let w = weights[li].as_ref();
+            match lm.kind {
+                LayerKind::Dw3x3 if !lm.analog => {
+                    // exact depthwise on the digital processor, compact
+                    // [9, C] — never touches any matmul engine
+                    let c = lm.in_ch;
+                    assert_eq!(w.len(), 9 * c);
+                    let ho = im2col::out_dim(ch, lm.stride.0);
+                    let wo = im2col::out_dim(cw, lm.stride.1);
+                    let rows = batch * ho * wo;
+                    im2col::patches3x3_into(&cur[..len], &mut nxt[..rows * 9 * c],
+                                            batch, ch, cw, cc, lm.stride);
+                    // patches in `nxt`; depthwise result overwrites `cur`
+                    for r in 0..rows {
+                        for ci in 0..c {
+                            let mut acc = 0f32;
+                            for t in 0..9 {
+                                acc += nxt[r * 9 * c + t * c + ci] * w[t * c + ci];
+                            }
+                            // digital per-channel affine, fused
+                            cur[r * c + ci] = acc * lm.dig_scale[ci] + lm.dig_bias[ci];
+                        }
+                    }
+                    len = rows * c;
+                    ch = ho;
+                    cw = wo;
+                }
+                _ => {
+                    // GEMM path (conv as im2col, 1x1, dense, analog dw):
+                    // stage the GEMM input so it ends up in `cur`
+                    let (m_rows, k) = match lm.kind {
+                        LayerKind::Conv3x3 | LayerKind::Dw3x3 => {
+                            let ho = im2col::out_dim(ch, lm.stride.0);
+                            let wo = im2col::out_dim(cw, lm.stride.1);
+                            let kk = 9 * cc;
+                            let rows = batch * ho * wo;
+                            im2col::patches3x3_into(&cur[..len],
+                                                    &mut nxt[..rows * kk],
+                                                    batch, ch, cw, cc, lm.stride);
+                            std::mem::swap(&mut cur, &mut nxt);
+                            len = rows * kk;
+                            ch = ho;
+                            cw = wo;
+                            (rows, kk)
+                        }
+                        LayerKind::Conv1x1 => (batch * ch * cw, cc),
+                        LayerKind::Dense => {
+                            // global average pool into `nxt`, then flip
+                            let pix = ch * cw;
+                            let g = &mut nxt[..batch * cc];
+                            g.fill(0.0);
+                            for ni in 0..batch {
+                                for p_ in 0..pix {
+                                    for ci in 0..cc {
+                                        g[ni * cc + ci] += cur[(ni * pix + p_) * cc + ci];
+                                    }
+                                }
+                            }
+                            let inv = 1.0 / pix as f32;
+                            g.iter_mut().for_each(|v| *v *= inv);
+                            std::mem::swap(&mut cur, &mut nxt);
+                            len = batch * cc;
+                            ch = 1;
+                            cw = 1;
+                            (batch, cc)
+                        }
+                    };
+                    let gw = &lm.graph_weight_shape;
+                    assert_eq!(gw[0], k, "{}: K mismatch", lm.name);
+                    let n_cols = gw[1];
+                    assert_eq!(w.len(), k * n_cols, "{}: weight len", lm.name);
+                    debug_assert_eq!(len, m_rows * k);
+
+                    if lm.analog {
+                        // source-line DACs quantize the activations once;
+                        // every engine sees the same driven lines
+                        quant::fake_quant_slice(&mut cur[..m_rows * k],
+                                                lm.r_dac, b_dac);
+                        let ctx = MatmulCtx {
+                            pool: &self.pool,
+                            layer_index: li,
+                            layer: lm,
+                            m: m_rows,
+                            k,
+                            n: n_cols,
+                            alpha: gdc[li],
+                            adc_bits,
+                        };
+                        engine.analog_matmul(&ctx, &cur[..m_rows * k], w,
+                                             &mut nxt[..m_rows * n_cols]);
+                    } else {
+                        // digital layers never touch the array: exact GEMM
+                        self.pool.gemm_into(&cur[..m_rows * k], w,
+                                            &mut nxt[..m_rows * n_cols],
+                                            m_rows, k, n_cols);
+                    }
+                    let out = &mut nxt[..m_rows * n_cols];
+                    // digital per-channel affine (folded BN / bias)
+                    for r in 0..m_rows {
+                        let row = &mut out[r * n_cols..(r + 1) * n_cols];
+                        for (j, v) in row.iter_mut().enumerate() {
+                            *v = *v * lm.dig_scale[j] + lm.dig_bias[j];
+                        }
+                    }
+                    std::mem::swap(&mut cur, &mut nxt);
+                    len = m_rows * n_cols;
+                    cc = n_cols;
+                }
+            }
+            if lm.relu {
+                cur[..len].iter_mut().for_each(|v| *v = v.max(0.0));
+            }
+        }
+        cur[..len].to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::meta::ModelMeta;
+    use crate::util::json;
+
+    fn tiny_meta() -> ModelMeta {
+        let src = r#"{
+          "model": "tiny", "variant": "t", "input_hwc": [4, 4, 1],
+          "num_classes": 2, "eta": 0.0, "fp_test_acc": 1.0,
+          "trained_adc_bits": null,
+          "layers": [
+            {"name": "c0", "kind": "conv3x3", "in_ch": 1, "out_ch": 2,
+             "stride": [1, 1], "relu": true, "analog": true,
+             "in_h": 4, "in_w": 4, "out_h": 4, "out_w": 4,
+             "k_gemm": 9, "weight_shape": [9, 2],
+             "graph_weight_shape": [9, 2],
+             "w_scale": 1.0, "w_max": 1.0, "r_dac": 8.0, "r_adc": 8.0,
+             "dig_scale": [1, 1], "dig_bias": [0, 0]},
+            {"name": "fc", "kind": "dense", "in_ch": 2, "out_ch": 2,
+             "stride": [1, 1], "relu": false, "analog": true,
+             "in_h": 4, "in_w": 4, "out_h": 1, "out_w": 1,
+             "k_gemm": 2, "weight_shape": [2, 2],
+             "graph_weight_shape": [2, 2],
+             "w_scale": 1.0, "w_max": 1.0, "r_dac": 8.0, "r_adc": 8.0,
+             "dig_scale": [1, 1], "dig_bias": [0, 0]}
+          ],
+          "hlo": {}
+        }"#;
+        ModelMeta::from_json(&json::parse(src).unwrap()).unwrap()
+    }
+
+    /// An engine that counts its invocations and delegates to the native
+    /// step — the executor must call it exactly once per analog layer.
+    struct Counting {
+        inner: NativeGemmEngine,
+        calls: std::sync::atomic::AtomicUsize,
+    }
+
+    impl MatmulEngine for Counting {
+        fn name(&self) -> &'static str {
+            "counting"
+        }
+
+        fn analog_matmul(&self, ctx: &MatmulCtx<'_>, a: &[f32], w: &[f32],
+                         out: &mut [f32]) {
+            self.calls
+                .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            assert_eq!(a.len(), ctx.m * ctx.k);
+            assert_eq!(out.len(), ctx.m * ctx.n);
+            self.inner.analog_matmul(ctx, a, w, out);
+        }
+    }
+
+    #[test]
+    fn executor_consults_engine_once_per_analog_layer() {
+        let exec = LayerExecutor::new(tiny_meta(), 1);
+        let engine = Counting {
+            inner: NativeGemmEngine,
+            calls: std::sync::atomic::AtomicUsize::new(0),
+        };
+        let x: Vec<f32> = (0..16).map(|i| (i as f32) / 16.0).collect();
+        let mut w0 = vec![0f32; 18];
+        w0[4 * 2] = 1.0;
+        let w1 = vec![1.0, 0.0, 0.0, 1.0];
+        let out = exec.forward(&engine, &x, 1, &[w0, w1], &[1.0, 1.0], 8);
+        assert_eq!(out.len(), 2);
+        assert_eq!(engine.calls.load(std::sync::atomic::Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn custom_engine_matches_native_reference() {
+        // a delegating engine is transparent: same bits as the plain
+        // native engine on the same executor
+        let exec = LayerExecutor::new(tiny_meta(), 2);
+        let engine = Counting {
+            inner: NativeGemmEngine,
+            calls: std::sync::atomic::AtomicUsize::new(0),
+        };
+        let mut rng = crate::util::rng::Rng::new(21);
+        let x: Vec<f32> = (0..3 * 16).map(|_| rng.gauss(0.4, 0.3) as f32).collect();
+        let w0: Vec<f32> = (0..18).map(|_| rng.gauss(0.0, 0.4) as f32).collect();
+        let w1: Vec<f32> = (0..4).map(|_| rng.gauss(0.0, 0.4) as f32).collect();
+        let weights = vec![w0, w1];
+        let gdc = vec![1.1, 1.0];
+        let a = exec.forward(&engine, &x, 3, &weights, &gdc, 8);
+        let b = exec.forward(&NativeGemmEngine, &x, 3, &weights, &gdc, 8);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn scratch_capacity_covers_every_intermediate() {
+        let meta = tiny_meta();
+        // input 16, patch matrix 4*4*9 = 144, conv out 32, pooled 2,
+        // logits 2 — the patch matrix dominates at batch 1
+        assert_eq!(scratch_capacity(&meta, 1), 144);
+        assert_eq!(scratch_capacity(&meta, 3), 3 * 144);
+    }
+}

@@ -17,7 +17,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use analognets::backend::{AnalogCimBackend, BackendKind, HostTensor,
-                          InferenceBackend};
+                          InferOpts, InferenceBackend};
 use analognets::coordinator::{Coordinator, ServeConfig};
 use analognets::crossbar::ArrayGeom;
 use analognets::datasets::synth::{self, SynthSpec};
@@ -53,8 +53,9 @@ fn exact_weights_single_tile_is_bit_identical_to_native() {
     let analog = AnalogCimBackend::with_threads(meta, 12, 4);
     // every bench-bundle layer fits one AON tile
     assert_eq!(analog.tiles_total(), 3);
-    let lo_n = native.run_batch(&xb, n, &ws, &unity).unwrap();
-    let lo_a = analog.run_batch(&xb, n, &ws, &unity).unwrap();
+    let opts = InferOpts::default();
+    let lo_n = native.run_batch(&xb, n, &ws, &unity, &opts).unwrap();
+    let lo_a = analog.run_batch(&xb, n, &ws, &unity, &opts).unwrap();
     assert_eq!(lo_n, lo_a, "single-tile analog execution must reproduce the \
                             native bits");
     let _ = std::fs::remove_dir_all(&dir);
@@ -81,8 +82,9 @@ fn exact_weights_multi_tile_keeps_argmax_at_12_bits() {
             "geometry must split at least one layer ({} tiles)",
             analog.tiles_total());
 
-    let lo_n = native.run_batch(&xb, n, &ws, &unity).unwrap();
-    let lo_a = analog.run_batch(&xb, n, &ws, &unity).unwrap();
+    let opts = InferOpts::default();
+    let lo_n = native.run_batch(&xb, n, &ws, &unity, &opts).unwrap();
+    let lo_a = analog.run_batch(&xb, n, &ws, &unity, &opts).unwrap();
     let classes = meta.num_classes;
     let pred_n = logits::predictions(&lo_n, classes);
     let pred_a = logits::predictions(&lo_a, classes);
@@ -129,11 +131,12 @@ fn batched_analog_run_batch_is_bit_identical_to_sequential() {
     let n = 6;
     let feat = ds.feat_len();
     let xb = ds.padded_batch(0, n);
-    let batched = be.run_batch(&xb, n, &ws, &alphas).unwrap();
+    let opts = InferOpts::default();
+    let batched = be.run_batch(&xb, n, &ws, &alphas, &opts).unwrap();
     assert_eq!(batched.len(), n * 2);
     for s in 0..n {
         let one = be
-            .run_batch(&xb[s * feat..(s + 1) * feat], 1, &ws, &alphas)
+            .run_batch(&xb[s * feat..(s + 1) * feat], 1, &ws, &alphas, &opts)
             .unwrap();
         assert_eq!(one[..], batched[s * 2..(s + 1) * 2], "sample {s} diverged");
     }

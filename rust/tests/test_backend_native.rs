@@ -9,7 +9,8 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Duration;
 
-use analognets::backend::{BackendKind, InferenceBackend, NativeBackend};
+use analognets::backend::{BackendKind, InferOpts, InferenceBackend,
+                          NativeBackend};
 use analognets::coordinator::{Coordinator, ServeConfig};
 use analognets::eval::{drift_accuracy, drift_accuracy_on, EvalOpts};
 use analognets::pcm::PcmParams;
@@ -188,10 +189,12 @@ fn batched_run_batch_is_bit_identical_to_sequential() {
             x.push(0.05 * (s as f32 + 1.0) + 0.01 * i as f32);
         }
     }
-    let batched = be.run_batch(&x, n, &ws, &alphas).unwrap();
+    let opts = InferOpts::default();
+    let batched = be.run_batch(&x, n, &ws, &alphas, &opts).unwrap();
     assert_eq!(batched.len(), n * 2);
     for s in 0..n {
-        let one = be.run_batch(&x[s * feat..(s + 1) * feat], 1, &ws, &alphas)
+        let one = be
+            .run_batch(&x[s * feat..(s + 1) * feat], 1, &ws, &alphas, &opts)
             .unwrap();
         assert_eq!(one[..], batched[s * 2..(s + 1) * 2], "sample {s} diverged");
     }

@@ -1,0 +1,132 @@
+//! Per-request inference options end-to-end: one hermetic coordinator
+//! session (synthetic artifact bundle, native backend) serving concurrent
+//! requests with *different* `InferOpts` — two distinct device ages and a
+//! 4-bit ADC override — and every response reflecting its own options.
+//!
+//! This is the acceptance test for the per-request options redesign: the
+//! pre-options API froze one `ServeConfig::drift_time` and one bitwidth
+//! per coordinator; here a single session serves a fresh array, a
+//! year-old array, and a 4-bit Table-2-style request side by side, with
+//! option-incompatible requests drained into separate launches
+//! (`batcher::group_fifo`).
+
+use std::time::Duration;
+
+use analognets::backend::InferOpts;
+use analognets::coordinator::{Coordinator, ServeConfig};
+use analognets::datasets::synth::{self, SynthSpec};
+use analognets::pcm::{T_1Y, T_C_SECONDS};
+
+/// Coordinator over an analog synthetic bundle with a frozen drift clock
+/// (time_scale 0), so option-less requests always serve at exactly t_c.
+fn start_coord(tag: &str, max_wait_ms: u64)
+               -> (Coordinator, std::path::PathBuf, usize) {
+    let spec = SynthSpec::tiny(tag);
+    let dir = synth::write_bundle_tmp(tag, &spec).unwrap();
+    let feat = spec.feat_len();
+    let mut cfg = ServeConfig::new(&spec.vid, 8);
+    cfg.artifacts_dir = dir.clone();
+    cfg.max_wait = Duration::from_millis(max_wait_ms);
+    cfg.time_scale = 0.0;
+    cfg.seed = 99;
+    (Coordinator::start(cfg).unwrap(), dir, feat)
+}
+
+#[test]
+fn one_session_serves_mixed_drift_times_and_adc_bits() {
+    let (coord, dir, feat) = start_coord("opts_mixed", 250);
+    let features = vec![0.9f32; feat];
+
+    // submit four option flavors inside one batching window: the drain
+    // must split them into option-homogeneous launches
+    let rx_fresh = coord
+        .submit_with(features.clone(),
+                     InferOpts::default().with_t_drift(T_C_SECONDS))
+        .unwrap();
+    let rx_aged = coord
+        .submit_with(features.clone(), InferOpts::default().with_t_drift(T_1Y))
+        .unwrap();
+    let rx_4bit = coord
+        .submit_with(features.clone(), InferOpts::default().with_adc_bits(4))
+        .unwrap();
+    let rx_default = coord.submit(features.clone()).unwrap();
+
+    let fresh = rx_fresh.recv().unwrap();
+    let aged = rx_aged.recv().unwrap();
+    let coarse = rx_4bit.recv().unwrap();
+    let default = rx_default.recv().unwrap();
+
+    // every response echoes the options it was actually served under
+    assert_eq!(fresh.sim_age_s, T_C_SECONDS, "explicit fresh age");
+    assert_eq!(fresh.adc_bits, 8);
+    assert_eq!(aged.sim_age_s, T_1Y, "explicit year-old age");
+    assert_eq!(aged.adc_bits, 8);
+    assert_eq!(coarse.sim_age_s, T_C_SECONDS,
+               "no t_drift: the (frozen) serving clock age");
+    assert_eq!(coarse.adc_bits, 4, "per-request 4-bit override");
+    assert_eq!(default.sim_age_s, T_C_SECONDS);
+    assert_eq!(default.adc_bits, 8, "default options keep backend bits");
+
+    // ... and the options change the numbers, not just the labels: a year
+    // of drift moves the conductances, and 4-bit conversion is far
+    // coarser than 8-bit (inputs at 0.9 quantize to different DAC codes)
+    assert_ne!(fresh.logits, aged.logits,
+               "a year of drift must change the served logits");
+    assert_ne!(coarse.logits, default.logits,
+               "the 4-bit request must quantize differently");
+    for r in [&fresh, &aged, &coarse, &default] {
+        assert_eq!(r.logits.len(), 2);
+        assert!(r.logits.iter().all(|l| l.is_finite()));
+    }
+
+    let m = coord.metrics.summary();
+    assert_eq!(m.completed, 4);
+    // four requests, three distinct option groups: at least 3 launches
+    // even when all four land in one batching window, and never any
+    // padding on the dynamic plan
+    assert!(m.launches >= 3, "option groups must not share launches: {m}");
+    assert_eq!(m.padded_slots, 0, "{m}");
+    coord.stop().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn same_opts_requests_still_batch_together() {
+    let (coord, dir, feat) = start_coord("opts_same", 300);
+    let opts = InferOpts::default().with_t_drift(86_400.0).with_adc_bits(6);
+    let rxs: Vec<_> = (0..6)
+        .map(|i| {
+            let mut f = vec![0.5f32; feat];
+            f[0] += 0.01 * i as f32;
+            coord.submit_with(f, opts).unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        let r = rx.recv().unwrap();
+        assert_eq!(r.sim_age_s, 86_400.0);
+        assert_eq!(r.adc_bits, 6);
+    }
+    let m = coord.metrics.summary();
+    assert_eq!(m.completed, 6);
+    // identical options are launch-compatible: the six submits land in a
+    // tight loop (microseconds) against a 300 ms batching window, so if
+    // grouping ever split same-key requests, launches would hit 6 — a
+    // correct batch_key keeps at least two requests in one launch
+    assert!(m.launches < 6, "identical opts must share launches: {m}");
+    assert!(m.mean_batch > 1.0, "{m}");
+    assert_eq!(m.padded_slots, 0, "{m}");
+    coord.stop().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn t_drift_below_t_c_clamps_in_response() {
+    let (coord, dir, feat) = start_coord("opts_clamp", 50);
+    let r = coord
+        .infer_with(vec![0.4f32; feat], InferOpts::default().with_t_drift(0.0))
+        .unwrap();
+    assert_eq!(r.sim_age_s, T_C_SECONDS,
+               "ages below t_c must clamp up to t_c");
+    coord.stop().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -74,8 +74,10 @@ fn native_and_pjrt_backends_agree() {
     let (ws, alphas) = dep.read_at(25.0, &params, &mut rng, true);
 
     let xb = ds.padded_batch(0, batch);
-    let hlo_logits = pjrt.run_batch(&xb, batch, &ws, &alphas).unwrap();
-    let native_logits = native.run_batch(&xb, batch, &ws, &alphas).unwrap();
+    let opts = analognets::backend::InferOpts::default();
+    let hlo_logits = pjrt.run_batch(&xb, batch, &ws, &alphas, &opts).unwrap();
+    let native_logits =
+        native.run_batch(&xb, batch, &ws, &alphas, &opts).unwrap();
 
     assert_eq!(hlo_logits.len(), native_logits.len());
     // two fp32 implementations of the same quantized graph: identical
