@@ -32,10 +32,21 @@
 //! `--native-only` (skip the analog sections and their gates; the CI
 //! bench-smoke job — analog-smoke owns the analog work, so the two jobs
 //! never duplicate it).
+//!
+//! `--wire` additionally measures the TCP front end: a `server::WireServer`
+//! on a loopback port, `--wire-clients` connections (default 8) driving an
+//! *open-loop* Poisson-ish arrival schedule at `--wire-rate` total req/s
+//! for `--wire-duration` seconds. Wall-clock latency is measured from the
+//! socket write to the reply line — wire time included — and the achieved
+//! req/s plus p50/p99/p999 land in a `wire` section of BENCH_native.json,
+//! gated against the `wire_req_s` baseline floor. `--wire-only` (the CI
+//! wire-smoke job) runs just this section.
 
 use std::collections::{BTreeMap, VecDeque};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use analognets::backend::{self, BackendKind, HostTensor, InferOpts,
@@ -46,12 +57,14 @@ use analognets::coordinator::{Coordinator, ServeConfig};
 use analognets::datasets::synth::{self, SynthSpec};
 use analognets::eval::{drift_accuracy, EvalOpts};
 use analognets::pcm::{PcmParams, FIG7_TIMES, T_25S};
+use analognets::server::{client as wire_client, WireConfig, WireServer};
 use analognets::simulator::gemm;
 use analognets::timing::layer_gemm_dims;
 use analognets::util::cli::Args;
 use analognets::util::json::{self, Json};
 use analognets::util::logits;
 use analognets::util::rng::Rng;
+use analognets::util::stats;
 
 const CLIENTS: usize = 4;
 /// per-client submissions kept in flight (pipelined open-loop load)
@@ -126,8 +139,13 @@ fn main() -> anyhow::Result<()> {
     let max_batch = args.opt_usize("max-batch", 32);
     let analog_only = args.flag("analog-only");
     let native_only = args.flag("native-only");
+    let wire_only = args.flag("wire-only");
+    let wire = wire_only || args.flag("wire");
     anyhow::ensure!(!(analog_only && native_only),
                     "--analog-only and --native-only are mutually exclusive");
+    anyhow::ensure!(!(wire_only && (analog_only || native_only)),
+                    "--wire-only cannot be combined with --analog-only or \
+                     --native-only");
 
     let spec = SynthSpec::bench("bench_serving");
     let dir = synth::write_bundle_tmp("bench_serving", &spec)?;
@@ -145,7 +163,7 @@ fn main() -> anyhow::Result<()> {
     // ---- native: single-request baseline vs batched layer-serial -------
     let mut native_gate: Option<f64> = None;
     let mut native_speedup: Option<f64> = None;
-    if !analog_only {
+    if !analog_only && !wire_only {
         println!("[bench_serving] single-request baseline (max_batch=1)...");
         let (rps_single, m_single) =
             run_load(mk_cfg(1), per_client, feat, InferOpts::default())?;
@@ -207,8 +225,13 @@ fn main() -> anyhow::Result<()> {
     // sweep, BENCH_analog.json): owned by the CI analog-smoke job, so the
     // bench-smoke job skips them with --native-only instead of running the
     // same workload twice
-    if !native_only {
+    if !native_only && !wire_only {
         run_analog(&dir, &spec, per_client, max_batch, threads, &opts)?;
+    }
+
+    // TCP front-end load (the CI wire-smoke job runs only this section)
+    if wire {
+        run_wire(&dir, &spec, max_batch, &args, &opts)?;
     }
 
     let _ = std::fs::remove_dir_all(&dir);
@@ -408,4 +431,168 @@ fn run_analog(dir: &Path, spec: &SynthSpec, per_client: usize,
                                 "analog_req_s", 0.30)?;
     }
     Ok(())
+}
+
+/// The wire half of the bench: a `WireServer` on a loopback port, K client
+/// connections driving an open-loop Poisson-ish arrival schedule, latency
+/// measured socket-write -> reply-line. Every reply id is checked against
+/// the per-connection FIFO order, so this doubles as an ordering test under
+/// load. Results merge into BENCH_native.json under `"wire"` and gate
+/// against the committed `wire_req_s` floor when `--baseline` is given.
+fn run_wire(dir: &Path, spec: &SynthSpec, max_batch: usize, args: &Args,
+            opts: &BenchOpts) -> anyhow::Result<()> {
+    let feat = spec.feat_len();
+    let clients = args.opt_usize("wire-clients", 8);
+    let rate = args.opt_f64("wire-rate",
+                            if opts.fast { 400.0 } else { 2000.0 });
+    let duration_s = args.opt_f64("wire-duration",
+                                  if opts.fast { 2.0 } else { 5.0 });
+    anyhow::ensure!(clients > 0 && rate > 0.0 && duration_s > 0.0,
+                    "--wire-clients / --wire-rate / --wire-duration must be \
+                     positive");
+    println!("[bench_serving] wire open-loop load: {clients} connections, \
+              offered {rate:.0} req/s for {duration_s:.1}s...");
+
+    let coord = Arc::new(Coordinator::start(bench_cfg(&spec.vid, dir,
+                                                      max_batch))?);
+    let mut server = WireServer::start(coord.clone(), None,
+                                       WireConfig::default())?;
+    let addr = server.local_addr();
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let per_conn_rate = rate / clients as f64;
+        handles.push(std::thread::spawn(move || {
+            wire_client_load(addr, c, per_conn_rate, duration_s, feat)
+        }));
+    }
+    let mut lat_us: Vec<f64> = Vec::new();
+    for h in handles {
+        lat_us.extend(h.join().expect("wire client thread")?);
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let total = lat_us.len();
+    anyhow::ensure!(total > 0, "wire load produced no replies");
+    let achieved = total as f64 / elapsed;
+    let m = coord.metrics.summary();
+    // a well-formed load must never be rejected, at the wire layer or at
+    // submit time — any reject here is a front-end bug, not backpressure
+    anyhow::ensure!(m.wire_rejects == 0 && m.submit_rejects == 0,
+                    "wire load was rejected: wire_rejects={} \
+                     submit_rejects={}",
+                    m.wire_rejects, m.submit_rejects);
+    let (p50, p99, p999) = (stats::percentile(&lat_us, 50.0),
+                            stats::percentile(&lat_us, 99.0),
+                            stats::percentile(&lat_us, 99.9));
+    println!("  wire: {total} replies, achieved {achieved:.0} req/s \
+              (offered {rate:.0}), p50 {p50:.0}us p99 {p99:.0}us \
+              p999 {p999:.0}us");
+    println!("  {m}");
+
+    server.shutdown();
+    drop(server);
+    match Arc::try_unwrap(coord) {
+        Ok(c) => c.stop()?,
+        Err(_) => anyhow::bail!("coordinator handle still shared"),
+    }
+
+    // ---- merge the `wire` section into BENCH_native.json ----------------
+    // --wire-only runs without the native section, so start from the file
+    // on disk when it exists and a minimal root when it does not
+    let mut w = BTreeMap::new();
+    w.insert("clients".to_string(), num(clients as f64));
+    w.insert("offered_req_s".to_string(), num(rate));
+    w.insert("req_s".to_string(), num(achieved));
+    w.insert("requests".to_string(), num(total as f64));
+    w.insert("duration_s".to_string(), num(elapsed));
+    w.insert("p50_us".to_string(), num(p50));
+    w.insert("p99_us".to_string(), num(p99));
+    w.insert("p999_us".to_string(), num(p999));
+    w.insert("coordinator".to_string(), m.to_json());
+    let path = bench::out_dir().join("BENCH_native.json");
+    let mut root = match json::parse_file(&path) {
+        Ok(Json::Obj(o)) => o,
+        _ => {
+            let mut o = BTreeMap::new();
+            o.insert("schema".to_string(), num(1.0));
+            o.insert("bench".to_string(), Json::Str("serving".to_string()));
+            o.insert("backend".to_string(), Json::Str("native".to_string()));
+            o.insert("vid".to_string(), Json::Str(spec.vid.clone()));
+            o
+        }
+    };
+    root.insert("wire".to_string(), Json::Obj(w));
+    save_json("BENCH_native.json", &Json::Obj(root));
+
+    if let Some(baseline) = &opts.baseline {
+        bench::check_regression(achieved, Path::new(baseline), "wire_req_s",
+                                0.30)?;
+    }
+    Ok(())
+}
+
+/// One load-generator connection: a sender pacing requests on an
+/// exponential inter-arrival clock and a receiver pairing each reply line
+/// with its send-time `Instant` (the wire protocol guarantees per-connection
+/// FIFO replies, so a plain channel of timestamps is enough). Returns the
+/// wall-clock latencies in microseconds.
+fn wire_client_load(addr: SocketAddr, c: usize, rate: f64, duration_s: f64,
+                    feat: usize) -> anyhow::Result<Vec<f64>> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    let mut wr = stream.try_clone()?;
+    let mut rd = BufReader::new(stream);
+    let (sent_tx, sent_rx) = mpsc::channel::<Instant>();
+    let reader = std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+        let mut line = String::new();
+        let mut lat_us = Vec::new();
+        let mut seq = 0usize;
+        while let Ok(sent) = sent_rx.recv() {
+            line.clear();
+            anyhow::ensure!(rd.read_line(&mut line)? > 0,
+                            "server closed the connection mid-load");
+            let rep = wire_client::parse_reply(line.trim_end())?;
+            anyhow::ensure!(rep.ok, "error reply under well-formed load: {:?}",
+                            rep.error);
+            anyhow::ensure!(rep.id == format!("c{c}-{seq}"),
+                            "reply id {} broke FIFO order (expected c{c}-{seq})",
+                            rep.id);
+            lat_us.push(sent.elapsed().as_secs_f64() * 1e6);
+            seq += 1;
+        }
+        Ok(lat_us)
+    });
+
+    let mut rng = Rng::new(0xA11CE ^ ((c as u64 + 1) << 8));
+    let t0 = Instant::now();
+    let mut next_s = 0.0f64;
+    let mut out = String::with_capacity(64 + 12 * feat);
+    let mut x = vec![0.0f32; feat];
+    let mut seq = 0usize;
+    loop {
+        // exponential inter-arrival at `rate` req/s; 1 - uniform() is in
+        // (0, 1], so the log never hits -inf
+        next_s += -(1.0 - rng.uniform()).ln() / rate;
+        if next_s >= duration_s {
+            break;
+        }
+        let target = Duration::from_secs_f64(next_s);
+        let now = t0.elapsed();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        let v = 0.1 + 0.8 * ((seq % 13) as f32 / 13.0);
+        x.fill(v);
+        let id = format!("c{c}-{seq}");
+        out.clear();
+        wire_client::build_x_line(&mut out, &id, &x, None, None);
+        let sent = Instant::now();
+        wr.write_all(out.as_bytes())?;
+        sent_tx.send(sent).expect("receiver alive while sending");
+        seq += 1;
+    }
+    drop(sent_tx); // receiver drains the in-flight tail, then stops
+    wr.flush()?;
+    reader.join().expect("wire reader thread")
 }

@@ -18,6 +18,18 @@ pub struct Metrics {
     pub batched_slots: AtomicU64,
     pub padded_slots: AtomicU64,
     pub weight_refreshes: AtomicU64,
+    /// requests rejected at submit time (`Coordinator::submit_with`: bad
+    /// feature length, options the backend cannot serve, stopped worker) —
+    /// from any source, in-process or wire
+    pub submit_rejects: AtomicU64,
+    /// request lines received on wire connections (including rejected
+    /// ones); zero when no `server::WireServer` fronts this coordinator
+    pub wire_requests: AtomicU64,
+    /// wire-level rejects: lines the server answered with an error line
+    /// *before* submit (malformed JSON, oversized line, bad sample index,
+    /// refused connection). Submit-time failures of wire requests count
+    /// under `submit_rejects` like everyone else's.
+    pub wire_rejects: AtomicU64,
     /// per-request end-to-end latencies, microseconds
     lat_us: Mutex<Vec<f64>>,
     /// simulated accelerator energy, nanojoules
@@ -34,6 +46,9 @@ impl Default for Metrics {
             batched_slots: AtomicU64::new(0),
             padded_slots: AtomicU64::new(0),
             weight_refreshes: AtomicU64::new(0),
+            submit_rejects: AtomicU64::new(0),
+            wire_requests: AtomicU64::new(0),
+            wire_rejects: AtomicU64::new(0),
             lat_us: Mutex::new(Vec::new()),
             sim_energy_nj: Mutex::new(0.0),
         }
@@ -69,6 +84,9 @@ impl Metrics {
             launches,
             padded_slots: self.padded_slots.load(Ordering::Relaxed),
             weight_refreshes: self.weight_refreshes.load(Ordering::Relaxed),
+            submit_rejects: self.submit_rejects.load(Ordering::Relaxed),
+            wire_requests: self.wire_requests.load(Ordering::Relaxed),
+            wire_rejects: self.wire_rejects.load(Ordering::Relaxed),
             elapsed_s,
             req_per_sec: if elapsed_s > 0.0 {
                 completed as f64 / elapsed_s
@@ -99,6 +117,12 @@ pub struct MetricsSummary {
     pub launches: u64,
     pub padded_slots: u64,
     pub weight_refreshes: u64,
+    /// submit-time rejects (any source; see [`Metrics::submit_rejects`])
+    pub submit_rejects: u64,
+    /// wire request lines received (see [`Metrics::wire_requests`])
+    pub wire_requests: u64,
+    /// pre-submit wire rejects (see [`Metrics::wire_rejects`])
+    pub wire_rejects: u64,
     pub elapsed_s: f64,
     /// completed requests per wall second since coordinator start
     pub req_per_sec: f64,
@@ -125,6 +149,9 @@ impl MetricsSummary {
         m.insert("padded_slots".to_string(), num(self.padded_slots as f64));
         m.insert("weight_refreshes".to_string(),
                  num(self.weight_refreshes as f64));
+        m.insert("submit_rejects".to_string(), num(self.submit_rejects as f64));
+        m.insert("wire_requests".to_string(), num(self.wire_requests as f64));
+        m.insert("wire_rejects".to_string(), num(self.wire_rejects as f64));
         m.insert("elapsed_s".to_string(), num(self.elapsed_s));
         m.insert("req_per_sec".to_string(), num(self.req_per_sec));
         m.insert("mean_batch".to_string(), num(self.mean_batch));
@@ -141,10 +168,11 @@ impl std::fmt::Display for MetricsSummary {
         write!(
             f,
             "req={} done={} launches={} batch={:.1} padded={} refreshes={} \
-             rps={:.0} lat p50={:.0}us p99={:.0}us mean={:.0}us \
-             sim_energy={:.2}uJ/inf",
+             submit_rej={} wire={}/{} rps={:.0} lat p50={:.0}us p99={:.0}us \
+             mean={:.0}us sim_energy={:.2}uJ/inf",
             self.requests, self.completed, self.launches, self.mean_batch,
-            self.padded_slots, self.weight_refreshes, self.req_per_sec,
+            self.padded_slots, self.weight_refreshes, self.submit_rejects,
+            self.wire_requests, self.wire_rejects, self.req_per_sec,
             self.p50_us, self.p99_us, self.mean_us, self.sim_uj_per_inf
         )
     }
@@ -184,5 +212,21 @@ mod tests {
         assert!(txt.contains("\"p50_us\":0"), "{txt}");
         // round-trips through our own parser
         assert!(crate::util::json::parse(&txt).is_ok());
+    }
+
+    #[test]
+    fn reject_counters_surface_everywhere() {
+        let m = Metrics::default();
+        m.submit_rejects.store(2, Ordering::Relaxed);
+        m.wire_requests.store(7, Ordering::Relaxed);
+        m.wire_rejects.store(3, Ordering::Relaxed);
+        let s = m.summary();
+        assert_eq!((s.submit_rejects, s.wire_requests, s.wire_rejects),
+                   (2, 7, 3));
+        let txt = crate::util::json::write(&s.to_json());
+        assert!(txt.contains("\"submit_rejects\":2"), "{txt}");
+        assert!(txt.contains("\"wire_requests\":7"), "{txt}");
+        assert!(txt.contains("\"wire_rejects\":3"), "{txt}");
+        assert!(s.to_string().contains("wire=7/3"), "{s}");
     }
 }

@@ -7,6 +7,13 @@
 //! advances the drift clock and periodically recalibrates GDC, and the
 //! executor is any [`backend::InferenceBackend`](crate::backend). Python is
 //! never on this path.
+//!
+//! Clients are either in-process (`Coordinator::submit_with`) or remote
+//! over the wire protocol ([`crate::server::WireServer`], which fronts a
+//! shared coordinator with a TCP listener and feeds the same submit
+//! path). Wire traffic is visible in [`Metrics`] as `wire_requests` /
+//! `wire_rejects`; shared coordinators stop gracefully via
+//! [`Coordinator::request_stop`].
 
 pub mod batcher;
 pub mod metrics;

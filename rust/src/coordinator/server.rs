@@ -222,8 +222,17 @@ impl Coordinator {
     /// the worker and taking the session down with it.
     pub fn submit_with(&self, features: Vec<f32>, opts: InferOpts)
                        -> anyhow::Result<mpsc::Receiver<Response>> {
-        anyhow::ensure!(features.len() == self.feat_len, "bad feature length");
-        backend::validate_opts(self.backend, self.bits, &opts)?;
+        // every failure path below is a submit-time reject; count them so
+        // operators can tell "traffic dropped" from "traffic went bad"
+        if features.len() != self.feat_len {
+            self.metrics.submit_rejects.fetch_add(1, Ordering::Relaxed);
+            anyhow::bail!("bad feature length {} (model wants {})",
+                          features.len(), self.feat_len);
+        }
+        if let Err(e) = backend::validate_opts(self.backend, self.bits, &opts) {
+            self.metrics.submit_rejects.fetch_add(1, Ordering::Relaxed);
+            return Err(e);
+        }
         let (rtx, rrx) = mpsc::channel();
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         self.tx
@@ -233,7 +242,10 @@ impl Coordinator {
                 reply: rtx,
                 submitted: Instant::now(),
             }))
-            .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
+            .map_err(|_| {
+                self.metrics.submit_rejects.fetch_add(1, Ordering::Relaxed);
+                anyhow::anyhow!("coordinator stopped")
+            })?;
         Ok(rrx)
     }
 
@@ -247,6 +259,16 @@ impl Coordinator {
                       -> anyhow::Result<Response> {
         let rx = self.submit_with(features, opts)?;
         rx.recv().map_err(|_| anyhow::anyhow!("coordinator dropped request"))
+    }
+
+    /// Graceful-shutdown hook for shared (`Arc`-held) coordinators: ask
+    /// the worker to drain the queue and exit, without consuming the
+    /// handle. In-flight requests still receive their responses; later
+    /// submits fail with "coordinator stopped" (and count as submit
+    /// rejects). [`stop`](Self::stop) — or `Drop` — still joins the
+    /// worker afterwards.
+    pub fn request_stop(&self) {
+        let _ = self.tx.send(Msg::Stop);
     }
 
     pub fn stop(mut self) -> anyhow::Result<()> {

@@ -39,6 +39,12 @@
 //! driven by a [`simulator::MatmulEngine`] — [`simulator::NativeGemmEngine`]
 //! or the tile-faithful [`simulator::TileGridEngine`] — so a staging fix
 //! or a new layer kind lands in every engine by construction.
+//!
+//! The coordinator also has a network front door: [`server::WireServer`]
+//! speaks a line-delimited JSON protocol over TCP (`serve --listen` on
+//! the CLI), parsing requests with a zero-allocation visiting JSON
+//! reader and dispatching them through the same `submit_with` path as
+//! in-process callers.
 
 pub mod backend;
 pub mod bench;
@@ -51,6 +57,7 @@ pub mod nn;
 pub mod pcm;
 pub mod quant;
 pub mod runtime;
+pub mod server;
 pub mod simulator;
 pub mod timing;
 pub mod util;

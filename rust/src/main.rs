@@ -27,6 +27,12 @@ const USAGE: &str = "usage: analognets <serve|eval|map|report|selftest> [options
                                also seeds the serving clock, default 25)]
            [--adc-bits B (stamp every request with this ADC bitwidth,
                           e.g. 4 for the paper's Table-2 scenario)]
+           [--listen ADDR:PORT (wire-protocol TCP server instead of the
+                                synthetic driver; PORT 0 picks a free port)]
+           [--max-conns N (wire: concurrent connection cap, default 64)]
+           [--max-line-bytes B (wire: request line cap, default 262144)]
+           [--duration SECONDS (wire: serve this long, then exit;
+                                default: until stdin EOF / Ctrl-D)]
   eval     --vid kws_full_e10_8b [--bits 8] [--runs 5] [--samples 256]
            [--t-drift SECONDS (single time point instead of the Fig-7 sweep)]
            [--adc-bits B (per-request ADC override, e.g. 4-bit serving)]
@@ -100,6 +106,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
               `{}` backend, time scale {}x, device age {}s, request opts \
               {req_opts:?}",
              cfg.backend, cfg.time_scale, cfg.drift_time);
+
+    // wire mode: front the coordinator with the TCP line protocol instead
+    // of driving synthetic traffic in-process
+    if let Some(listen) = args.opt("listen") {
+        return serve_wire(args, cfg, listen, ds);
+    }
+
     let coord = Coordinator::start(cfg)?;
     let feat = ds.feat_len();
     let mut correct = 0usize;
@@ -115,6 +128,53 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     println!("[serve] streaming accuracy {:.2}% over {} requests",
              100.0 * correct as f64 / n_requests as f64, n_requests);
     coord.stop()?;
+    Ok(())
+}
+
+/// `serve --listen`: run the wire-protocol server until `--duration`
+/// elapses or stdin reaches EOF, then shut down gracefully (drain the
+/// connections, stop the coordinator, print the final metrics).
+fn serve_wire(args: &Args, cfg: ServeConfig, listen: &str,
+              ds: analognets::datasets::Dataset) -> anyhow::Result<()> {
+    use analognets::server::{WireConfig, WireServer};
+    use std::sync::Arc;
+
+    let wcfg = WireConfig {
+        listen: listen.to_string(),
+        max_conns: args.opt_usize("max-conns", 64),
+        max_line_bytes: args.opt_usize("max-line-bytes", 256 * 1024),
+    };
+    let coord = Arc::new(Coordinator::start(cfg)?);
+    let feat = coord.feat_len;
+    let mut server =
+        WireServer::start(coord.clone(), Some(Arc::new(ds)), wcfg.clone())?;
+    println!("[serve] wire protocol on {} (max_conns={}, max_line_bytes={})",
+             server.local_addr(), wcfg.max_conns, wcfg.max_line_bytes);
+    println!("[serve] try: echo '{{\"id\":\"probe\",\"sample\":0}}' | nc {} {}",
+             server.local_addr().ip(), server.local_addr().port());
+    println!("[serve] request tensors are {feat} floats (`x`)");
+
+    match args.opt("duration") {
+        Some(_) => {
+            let secs = args.opt_f64("duration", 0.0).max(0.0);
+            std::thread::sleep(std::time::Duration::from_secs_f64(secs));
+        }
+        None => {
+            println!("[serve] serving until stdin EOF (Ctrl-D)...");
+            let mut sink = String::new();
+            while std::io::stdin().read_line(&mut sink)? > 0 {
+                sink.clear();
+            }
+        }
+    }
+
+    server.shutdown();
+    drop(server);
+    println!("[serve] {}", coord.metrics.summary());
+    match Arc::try_unwrap(coord) {
+        Ok(c) => c.stop()?,
+        Err(c) => c.request_stop(),
+    }
     Ok(())
 }
 

@@ -1,0 +1,198 @@
+//! Minimal blocking wire client: builds request lines, parses reply
+//! lines. Used by the `--wire` load generator and the loopback tests;
+//! also a reference implementation of the client side of the protocol.
+//!
+//! The client side is allowed to allocate (it models an external caller),
+//! so replies are parsed with the tree-building [`crate::util::json`]
+//! parser rather than the server's visiting reader.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use crate::util::json::{self, Json};
+
+use crate::server::protocol::push_json_str;
+
+/// One parsed reply line.
+#[derive(Clone, Debug, Default)]
+pub struct WireReply {
+    pub id: String,
+    pub ok: bool,
+    /// set on `ok: false` lines
+    pub error: Option<String>,
+    pub pred: u32,
+    pub logits: Vec<f32>,
+    pub sim_age_s: f64,
+    pub adc_bits: u32,
+    pub latency_us: f64,
+}
+
+/// A connected client. Send and receive are independent (requests
+/// pipeline; the server answers in request order), so `send_*` several
+/// times before draining with `recv`.
+pub struct WireClient {
+    write: TcpStream,
+    read: BufReader<TcpStream>,
+    line: String,
+    out: String,
+}
+
+impl WireClient {
+    pub fn connect(addr: impl ToSocketAddrs) -> anyhow::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        let read = BufReader::new(stream.try_clone()?);
+        Ok(WireClient {
+            write: stream,
+            read,
+            line: String::new(),
+            out: String::new(),
+        })
+    }
+
+    /// Send a request carrying an explicit input tensor.
+    pub fn send_x(&mut self, id: &str, x: &[f32], t_drift: Option<f64>,
+                  adc_bits: Option<u32>) -> anyhow::Result<()> {
+        self.out.clear();
+        build_x_line(&mut self.out, id, x, t_drift, adc_bits);
+        self.write.write_all(self.out.as_bytes())?;
+        Ok(())
+    }
+
+    /// Send a request referencing a server-side test-set sample.
+    pub fn send_sample(&mut self, id: &str, sample: usize,
+                       t_drift: Option<f64>, adc_bits: Option<u32>)
+                       -> anyhow::Result<()> {
+        use std::fmt::Write as _;
+        self.out.clear();
+        self.out.push_str("{\"id\":");
+        push_json_str(&mut self.out, id);
+        let _ = write!(self.out, ",\"sample\":{sample}");
+        push_opts(&mut self.out, t_drift, adc_bits);
+        self.out.push_str("}\n");
+        self.write.write_all(self.out.as_bytes())?;
+        Ok(())
+    }
+
+    /// Send a raw line verbatim (protocol tests; a trailing newline is
+    /// added when missing).
+    pub fn send_raw(&mut self, line: &str) -> anyhow::Result<()> {
+        self.write.write_all(line.as_bytes())?;
+        if !line.ends_with('\n') {
+            self.write.write_all(b"\n")?;
+        }
+        Ok(())
+    }
+
+    /// Block for the next reply line.
+    pub fn recv(&mut self) -> anyhow::Result<WireReply> {
+        self.line.clear();
+        let n = self.read.read_line(&mut self.line)?;
+        anyhow::ensure!(n > 0, "server closed the connection");
+        parse_reply(self.line.trim_end())
+    }
+
+    /// Convenience: one tensor request, wait for its reply.
+    pub fn roundtrip_x(&mut self, id: &str, x: &[f32], t_drift: Option<f64>,
+                       adc_bits: Option<u32>) -> anyhow::Result<WireReply> {
+        self.send_x(id, x, t_drift, adc_bits)?;
+        self.recv()
+    }
+}
+
+/// Build a `{"id":..,"x":[..],...}` request line (newline-terminated)
+/// into `out`. Public for the load generator, which paces raw writes
+/// itself.
+pub fn build_x_line(out: &mut String, id: &str, x: &[f32],
+                    t_drift: Option<f64>, adc_bits: Option<u32>) {
+    use std::fmt::Write as _;
+    out.push_str("{\"id\":");
+    push_json_str(out, id);
+    out.push_str(",\"x\":[");
+    for (i, v) in x.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{v}");
+    }
+    out.push(']');
+    push_opts(out, t_drift, adc_bits);
+    out.push_str("}\n");
+}
+
+fn push_opts(out: &mut String, t_drift: Option<f64>, adc_bits: Option<u32>) {
+    use std::fmt::Write as _;
+    if let Some(t) = t_drift {
+        let _ = write!(out, ",\"t_drift\":{t}");
+    }
+    if let Some(b) = adc_bits {
+        let _ = write!(out, ",\"adc_bits\":{b}");
+    }
+}
+
+/// Parse one reply line (without its trailing newline).
+pub fn parse_reply(line: &str) -> anyhow::Result<WireReply> {
+    let v = json::parse(line)
+        .map_err(|e| anyhow::anyhow!("bad reply line {line:?}: {e}"))?;
+    let id = match v.get("id") {
+        Some(Json::Str(s)) => s.clone(),
+        Some(Json::Num(n)) => format!("{n}"),
+        _ => String::new(),
+    };
+    let ok = v.req("ok")?.as_bool()?;
+    if !ok {
+        return Ok(WireReply {
+            id,
+            ok,
+            error: Some(v.req("error")?.as_str()?.to_string()),
+            ..Default::default()
+        });
+    }
+    Ok(WireReply {
+        id,
+        ok,
+        error: None,
+        pred: v.req("pred")?.as_f64()? as u32,
+        logits: v.req("logits")?.f32s()?,
+        sim_age_s: v.req("sim_age_s")?.as_f64()?,
+        adc_bits: v.req("adc_bits")?.as_f64()? as u32,
+        latency_us: v.req("latency_us")?.as_f64()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_lines_parse_back_as_requests() {
+        let mut out = String::new();
+        build_x_line(&mut out, "c1-9", &[0.25, -1.5], Some(86_400.0), Some(4));
+        let mut sc = crate::server::protocol::ReqScratch::new(2);
+        let p = crate::server::protocol::parse_request(
+            out.trim_end().as_bytes(), 2, &mut sc)
+            .unwrap();
+        assert_eq!(sc.id, "c1-9");
+        assert_eq!(sc.features, vec![0.25, -1.5]);
+        assert_eq!(p.t_drift, Some(86_400.0));
+        assert_eq!(p.adc_bits, Some(4));
+    }
+
+    #[test]
+    fn reply_parser_handles_both_shapes() {
+        let ok = parse_reply(
+            r#"{"id":"a","ok":true,"pred":2,"logits":[0.5,1.5,-2],"sim_age_s":25,"adc_bits":8,"latency_us":310.5}"#,
+        )
+        .unwrap();
+        assert!(ok.ok);
+        assert_eq!(ok.id, "a");
+        assert_eq!(ok.pred, 2);
+        assert_eq!(ok.logits, vec![0.5, 1.5, -2.0]);
+        assert_eq!(ok.adc_bits, 8);
+
+        let err = parse_reply(r#"{"id":null,"ok":false,"error":"nope"}"#).unwrap();
+        assert!(!err.ok);
+        assert_eq!(err.error.as_deref(), Some("nope"));
+        assert!(err.id.is_empty());
+    }
+}

@@ -1,0 +1,222 @@
+//! One accepted connection: a reader thread that lexes request lines and
+//! submits them, and a writer thread that streams the responses back.
+//!
+//! The split keeps the protocol pipelined: the reader never blocks on a
+//! response, so a client may keep many requests in flight on one
+//! connection; the writer answers them **in request order** (each job
+//! blocks on its own reply channel before the next), so per-connection
+//! FIFO holds even when the coordinator finishes launches out of order.
+//!
+//! Allocation discipline on the read path: the line buffer, the JSON
+//! scratch, the feature buffer, and the id string are all per-connection
+//! and reused; response ids are recycled back from the writer over a
+//! freelist channel. After warm-up the per-request costs that remain are
+//! the feature vector handed to the coordinator queue (`submit_with`
+//! takes ownership) and the reply channel inside the coordinator — both
+//! identical to what an in-process `submit_with` caller pays. Malformed
+//! and oversized lines are answered with an error line and never
+//! terminate the connection.
+
+use std::borrow::Cow;
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+
+use crate::coordinator::{Coordinator, Response};
+use crate::datasets::Dataset;
+use crate::server::protocol::{self, ReqBody, ReqScratch};
+
+/// Connection-independent serving state, shared by every reader.
+pub(super) struct ConnShared {
+    pub coord: Arc<Coordinator>,
+    /// test set for `"sample"` requests (absent: such requests error)
+    pub dataset: Option<Arc<Dataset>>,
+    /// request lines above this many bytes are rejected with an error
+    /// line — the line buffer never grows past it, so a hostile client
+    /// cannot OOM the server
+    pub max_line_bytes: usize,
+}
+
+/// One response job for the writer, in request order.
+enum Job {
+    Reply { id: String, rx: mpsc::Receiver<Response> },
+    Error { id: Option<String>, msg: Cow<'static, str> },
+}
+
+/// Serve one accepted connection to completion (client close, fatal IO
+/// error, or server shutdown via `TcpStream::shutdown` on a clone).
+pub(super) fn run_connection(stream: TcpStream, shared: Arc<ConnShared>) {
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let _ = stream.set_nodelay(true);
+    let (job_tx, job_rx) = mpsc::channel::<Job>();
+    let (free_tx, free_rx) = mpsc::channel::<String>();
+    let writer = std::thread::Builder::new()
+        .name("wire-writer".into())
+        .spawn(move || writer_loop(write_half, job_rx, free_tx));
+    reader_loop(stream, &shared, &job_tx, &free_rx);
+    // closing the job channel lets the writer drain pending replies, then
+    // exit; join it so the connection slot only frees once both halves
+    // are done
+    drop(job_tx);
+    if let Ok(w) = writer {
+        let _ = w.join();
+    }
+}
+
+fn reader_loop(mut stream: TcpStream, sh: &ConnShared,
+               jobs: &mpsc::Sender<Job>, free: &mpsc::Receiver<String>) {
+    let mut scratch = ReqScratch::new(sh.coord.feat_len);
+    let mut line: Vec<u8> = Vec::with_capacity(sh.max_line_bytes.min(64 * 1024));
+    let mut chunk = [0u8; 4096];
+    let mut oversized = false;
+    loop {
+        let n = match stream.read(&mut chunk) {
+            Ok(0) => return,
+            Ok(n) => n,
+            Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return,
+        };
+        for &b in &chunk[..n] {
+            if b == b'\n' {
+                let alive = if oversized {
+                    oversized = false;
+                    let m = &sh.coord.metrics;
+                    m.wire_requests.fetch_add(1, Ordering::Relaxed);
+                    m.wire_rejects.fetch_add(1, Ordering::Relaxed);
+                    jobs.send(Job::Error {
+                        id: None,
+                        msg: Cow::Borrowed(
+                            "request line exceeds max_line_bytes"),
+                    })
+                    .is_ok()
+                } else {
+                    handle_line(&line, sh, &mut scratch, jobs, free)
+                };
+                line.clear();
+                if !alive {
+                    return; // writer gone: the client hung up
+                }
+            } else if line.len() >= sh.max_line_bytes {
+                // cap reached: stop buffering, remember to reject at the
+                // newline — the line buffer itself never grows further
+                oversized = true;
+            } else {
+                line.push(b);
+            }
+        }
+    }
+}
+
+/// Parse + dispatch one complete line. Returns false when the writer is
+/// gone and the connection should wind down.
+fn handle_line(line: &[u8], sh: &ConnShared, scratch: &mut ReqScratch,
+               jobs: &mpsc::Sender<Job>, free: &mpsc::Receiver<String>)
+               -> bool {
+    let line = match line {
+        [head @ .., b'\r'] => head,
+        l => l,
+    };
+    if line.is_empty() {
+        return true; // blank keep-alive line (e.g. an interactive `nc`)
+    }
+    let m = &sh.coord.metrics;
+    m.wire_requests.fetch_add(1, Ordering::Relaxed);
+
+    let parsed = match protocol::parse_request(line, sh.coord.feat_len, scratch) {
+        Ok(p) => p,
+        Err(e) => {
+            m.wire_rejects.fetch_add(1, Ordering::Relaxed);
+            // echo the id when the line got far enough to carry one
+            let id = (!scratch.id.is_empty()).then(|| take_id(scratch, free));
+            return jobs
+                .send(Job::Error { id, msg: Cow::Owned(e.to_string()) })
+                .is_ok();
+        }
+    };
+
+    // resolve the input tensor: queue ownership of the feature vector is
+    // the one deliberate per-request allocation on this path (see module
+    // docs); the parse scratch keeps its capacity either way
+    let features: Vec<f32> = match parsed.body {
+        ReqBody::Features => scratch.features.clone(),
+        ReqBody::Sample(s) => match &sh.dataset {
+            None => {
+                m.wire_rejects.fetch_add(1, Ordering::Relaxed);
+                let id = Some(take_id(scratch, free));
+                return jobs
+                    .send(Job::Error {
+                        id,
+                        msg: Cow::Borrowed(
+                            "no dataset loaded for `sample` requests"),
+                    })
+                    .is_ok();
+            }
+            Some(ds) if s >= ds.len() => {
+                m.wire_rejects.fetch_add(1, Ordering::Relaxed);
+                let id = Some(take_id(scratch, free));
+                return jobs
+                    .send(Job::Error {
+                        id,
+                        msg: Cow::Borrowed("`sample` index out of range"),
+                    })
+                    .is_ok();
+            }
+            Some(ds) => ds.batch(s, s + 1).to_vec(),
+        },
+    };
+
+    let id = take_id(scratch, free);
+    match sh.coord.submit_with(features, parsed.opts()) {
+        // submit-time rejects (bad options, stopped coordinator) are
+        // counted by the coordinator itself as `submit_rejects`
+        Ok(rx) => jobs.send(Job::Reply { id, rx }).is_ok(),
+        Err(e) => jobs
+            .send(Job::Error { id: Some(id), msg: Cow::Owned(format!("{e:#}")) })
+            .is_ok(),
+    }
+}
+
+/// Move the parsed id out of the scratch, replacing it with a recycled
+/// id string from the writer's freelist (or a fresh empty one when the
+/// writer is momentarily behind).
+fn take_id(scratch: &mut ReqScratch, free: &mpsc::Receiver<String>) -> String {
+    let mut repl = free.try_recv().unwrap_or_default();
+    repl.clear();
+    std::mem::replace(&mut scratch.id, repl)
+}
+
+fn writer_loop(mut stream: TcpStream, jobs: mpsc::Receiver<Job>,
+               free: mpsc::Sender<String>) {
+    let mut out = String::with_capacity(512);
+    while let Ok(job) = jobs.recv() {
+        out.clear();
+        let sent = match job {
+            Job::Reply { id, rx } => {
+                match rx.recv() {
+                    Ok(resp) => protocol::write_response_line(&mut out, &id, &resp),
+                    Err(_) => protocol::write_error_line(
+                        &mut out, Some(&id), "coordinator dropped the request"),
+                }
+                let ok = stream.write_all(out.as_bytes()).is_ok();
+                let _ = free.send(id);
+                ok
+            }
+            Job::Error { id, msg } => {
+                protocol::write_error_line(&mut out, id.as_deref(), &msg);
+                let ok = stream.write_all(out.as_bytes()).is_ok();
+                if let Some(id) = id {
+                    let _ = free.send(id);
+                }
+                ok
+            }
+        };
+        if !sent {
+            break; // client gone: unblock the reader too
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+}

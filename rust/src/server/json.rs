@@ -1,0 +1,476 @@
+//! Visiting/callback JSON reader for the wire protocol (the SNIPPETS §1
+//! idiom: a small dependency-free lexer with a visiting API instead of a
+//! tree builder).
+//!
+//! [`read_object`] lexes one request line and invokes [`Visit`] callbacks
+//! as fields stream by; nothing is ever boxed into a `Json` tree. Values
+//! reach the visitor as borrows:
+//!
+//! * escape-free strings are borrowed straight from the input line;
+//! * escaped strings are decoded into a caller-owned, reusable
+//!   [`Scratch`] buffer (capacity survives across lines);
+//! * numbers are parsed in place from the input bytes.
+//!
+//! After the scratch buffers have warmed up, lexing a line performs **no
+//! heap allocation** — the property `tests/test_wire.rs` pins down with a
+//! counting global allocator. Contrast with [`crate::util::json`], the
+//! tree-building parser used for artifacts and the client side, which
+//! allocates per node.
+//!
+//! The grammar is deliberately the wire subset, not full JSON: one
+//! top-level object whose values are strings, numbers, booleans, null, or
+//! flat arrays of numbers. Nested objects/arrays are rejected with a
+//! [`ParseError`] — the request protocol never needs them, and refusing
+//! them keeps the reader single-pass with zero lookahead state.
+
+/// Position marker for errors raised by a [`Visit`] implementation (the
+/// visitor does not know byte offsets; [`read_object`] fills in the
+/// lexer's position before the error escapes).
+const NO_POS: usize = usize::MAX;
+
+/// A lex or protocol error for one line: a static message plus the byte
+/// offset it was detected at. `Copy` and allocation-free, so malformed
+/// input costs nothing to reject.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParseError {
+    pub msg: &'static str,
+    pub at: usize,
+}
+
+impl ParseError {
+    /// An error raised by a visitor callback (position filled in by the
+    /// lexer).
+    pub fn msg(msg: &'static str) -> Self {
+        ParseError { msg, at: NO_POS }
+    }
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.at == NO_POS {
+            write!(f, "{}", self.msg)
+        } else {
+            write!(f, "{} (byte {})", self.msg, self.at)
+        }
+    }
+}
+
+/// Reusable string-decode buffers: one for the current key, one for the
+/// current value, so an escaped key and an escaped value can be borrowed
+/// simultaneously. Owned per connection and reused line after line.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    key: String,
+    val: String,
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Scratch::default()
+    }
+}
+
+/// One scalar field value, borrowed from the line or the scratch buffer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Scalar<'a> {
+    Str(&'a str),
+    Num(f64),
+    Bool(bool),
+    Null,
+}
+
+/// The field callbacks. Implementations write into their own reusable
+/// state (e.g. push array numbers into a preallocated `Vec<f32>`) and may
+/// reject a field with [`ParseError::msg`], which aborts the line.
+pub trait Visit {
+    /// A scalar field: `"key": value`.
+    fn scalar(&mut self, key: &str, val: Scalar<'_>) -> Result<(), ParseError>;
+
+    /// Start of an array field: `"key": [` — called before any element,
+    /// including for empty arrays.
+    fn begin_array(&mut self, key: &str) -> Result<(), ParseError>;
+
+    /// One element of an array field (arrays carry numbers only on the
+    /// wire).
+    fn array_num(&mut self, key: &str, val: f64) -> Result<(), ParseError>;
+}
+
+/// Lex one line holding a single flat JSON object, invoking `v` per field.
+/// Trailing whitespace is allowed; any other trailing bytes are an error.
+pub fn read_object(line: &[u8], scratch: &mut Scratch, v: &mut dyn Visit)
+                   -> Result<(), ParseError> {
+    let mut lx = Lexer { b: line, i: 0 };
+    lx.ws();
+    lx.expect(b'{', "expected `{`")?;
+    lx.ws();
+    if lx.peek() == Some(b'}') {
+        lx.i += 1;
+    } else {
+        loop {
+            lx.ws();
+            let key = lx.parse_string(&mut scratch.key)?;
+            lx.ws();
+            lx.expect(b':', "expected `:` after key")?;
+            lx.ws();
+            match lx.peek().ok_or(ParseError { msg: "truncated value", at: lx.i })? {
+                b'"' => {
+                    let s = lx.parse_string(&mut scratch.val)?;
+                    v.scalar(key, Scalar::Str(s)).map_err(|e| lx.locate(e))?;
+                }
+                b't' => {
+                    lx.lit(b"true")?;
+                    v.scalar(key, Scalar::Bool(true)).map_err(|e| lx.locate(e))?;
+                }
+                b'f' => {
+                    lx.lit(b"false")?;
+                    v.scalar(key, Scalar::Bool(false)).map_err(|e| lx.locate(e))?;
+                }
+                b'n' => {
+                    lx.lit(b"null")?;
+                    v.scalar(key, Scalar::Null).map_err(|e| lx.locate(e))?;
+                }
+                b'[' => {
+                    lx.i += 1;
+                    v.begin_array(key).map_err(|e| lx.locate(e))?;
+                    lx.ws();
+                    if lx.peek() == Some(b']') {
+                        lx.i += 1;
+                    } else {
+                        loop {
+                            lx.ws();
+                            let n = lx.parse_number()?;
+                            v.array_num(key, n).map_err(|e| lx.locate(e))?;
+                            lx.ws();
+                            match lx.bump()? {
+                                b',' => continue,
+                                b']' => break,
+                                _ => {
+                                    return Err(lx.err_back(
+                                        "expected `,` or `]` in array \
+                                         (arrays carry numbers only)",
+                                    ))
+                                }
+                            }
+                        }
+                    }
+                }
+                b'{' => {
+                    return Err(lx.err("nested objects are not supported \
+                                       on the wire"))
+                }
+                _ => {
+                    let n = lx.parse_number()?;
+                    v.scalar(key, Scalar::Num(n)).map_err(|e| lx.locate(e))?;
+                }
+            }
+            lx.ws();
+            match lx.bump()? {
+                b',' => continue,
+                b'}' => break,
+                _ => return Err(lx.err_back("expected `,` or `}`")),
+            }
+        }
+    }
+    lx.ws();
+    if lx.i != line.len() {
+        return Err(lx.err("trailing bytes after object"));
+    }
+    Ok(())
+}
+
+struct Lexer<'b> {
+    b: &'b [u8],
+    i: usize,
+}
+
+impl<'b> Lexer<'b> {
+    fn ws(&mut self) {
+        while matches!(self.b.get(self.i), Some(b' ' | b'\t' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn err(&self, msg: &'static str) -> ParseError {
+        ParseError { msg, at: self.i }
+    }
+
+    /// Error at the byte just consumed.
+    fn err_back(&self, msg: &'static str) -> ParseError {
+        ParseError { msg, at: self.i.saturating_sub(1) }
+    }
+
+    /// Fill a visitor error's position in.
+    fn locate(&self, mut e: ParseError) -> ParseError {
+        if e.at == NO_POS {
+            e.at = self.i;
+        }
+        e
+    }
+
+    fn bump(&mut self) -> Result<u8, ParseError> {
+        let c = self.peek().ok_or_else(|| self.err("unexpected end of input"))?;
+        self.i += 1;
+        Ok(c)
+    }
+
+    fn expect(&mut self, c: u8, msg: &'static str) -> Result<(), ParseError> {
+        if self.peek() != Some(c) {
+            return Err(self.err(msg));
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn lit(&mut self, lit: &'static [u8]) -> Result<(), ParseError> {
+        if self.b[self.i..].starts_with(lit) {
+            self.i += lit.len();
+            Ok(())
+        } else {
+            Err(self.err("bad literal"))
+        }
+    }
+
+    /// Parse a string: escape-free strings are borrowed from the line,
+    /// escaped ones are decoded into `scratch` (cleared, capacity kept).
+    fn parse_string<'s>(&mut self, scratch: &'s mut String)
+                        -> Result<&'s str, ParseError>
+    where
+        'b: 's,
+    {
+        self.expect(b'"', "expected string")?;
+        let b = self.b;
+        let start = self.i;
+        loop {
+            match b.get(self.i) {
+                None => return Err(ParseError { msg: "unterminated string",
+                                                at: self.i }),
+                Some(b'"') => {
+                    let s = std::str::from_utf8(&b[start..self.i]).map_err(
+                        |_| ParseError { msg: "invalid utf-8 in string",
+                                         at: start },
+                    )?;
+                    self.i += 1;
+                    return Ok(s);
+                }
+                Some(b'\\') => break,
+                Some(c) if *c < 0x20 => {
+                    return Err(self.err("raw control byte in string"))
+                }
+                Some(_) => self.i += 1,
+            }
+        }
+        // slow path: escapes — decode into the reusable scratch buffer
+        scratch.clear();
+        scratch.push_str(std::str::from_utf8(&b[start..self.i]).map_err(
+            |_| ParseError { msg: "invalid utf-8 in string", at: start },
+        )?);
+        loop {
+            let c = *b.get(self.i).ok_or(ParseError {
+                msg: "unterminated string",
+                at: self.i,
+            })?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(&*scratch),
+                b'\\' => {
+                    let e = *b.get(self.i).ok_or(ParseError {
+                        msg: "truncated escape",
+                        at: self.i,
+                    })?;
+                    self.i += 1;
+                    match e {
+                        b'"' => scratch.push('"'),
+                        b'\\' => scratch.push('\\'),
+                        b'/' => scratch.push('/'),
+                        b'n' => scratch.push('\n'),
+                        b't' => scratch.push('\t'),
+                        b'r' => scratch.push('\r'),
+                        b'b' => scratch.push('\u{8}'),
+                        b'f' => scratch.push('\u{c}'),
+                        b'u' => {
+                            if self.i + 4 > b.len() {
+                                return Err(self.err("truncated \\u escape"));
+                            }
+                            let hex = std::str::from_utf8(&b[self.i..self.i + 4])
+                                .map_err(|_| self.err("bad \\u escape"))?;
+                            let cp = u32::from_str_radix(hex, 16)
+                                .map_err(|_| self.err("bad \\u escape"))?;
+                            self.i += 4;
+                            scratch.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                        }
+                        _ => return Err(self.err_back("bad escape")),
+                    }
+                }
+                c if c < 0x20 => {
+                    return Err(self.err_back("raw control byte in string"))
+                }
+                c => {
+                    let s0 = self.i - 1;
+                    let len = utf8_len(c);
+                    if s0 + len > b.len() {
+                        return Err(self.err("truncated utf-8 sequence"));
+                    }
+                    self.i = s0 + len;
+                    scratch.push_str(std::str::from_utf8(&b[s0..self.i]).map_err(
+                        |_| ParseError { msg: "invalid utf-8 in string",
+                                         at: s0 },
+                    )?);
+                }
+            }
+        }
+    }
+
+    /// Parse a number in place (no allocation: the digits are sliced from
+    /// the line and handed to the std float parser).
+    fn parse_number(&mut self) -> Result<f64, ParseError> {
+        let start = self.i;
+        while matches!(
+            self.b.get(self.i),
+            Some(b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        ) {
+            self.i += 1;
+        }
+        if start == self.i {
+            return Err(self.err("expected a number"));
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|_| ParseError { msg: "bad number", at: start })?;
+        s.parse::<f64>()
+            .map_err(|_| ParseError { msg: "bad number", at: start })
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7f => 1,
+        0xc0..=0xdf => 2,
+        0xe0..=0xef => 3,
+        _ => 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Test visitor: records every event as a string (test-only
+    /// allocation; the production visitor in `protocol` writes into
+    /// preallocated buffers instead).
+    #[derive(Default)]
+    struct Rec {
+        events: Vec<String>,
+    }
+
+    impl Visit for Rec {
+        fn scalar(&mut self, key: &str, val: Scalar<'_>) -> Result<(), ParseError> {
+            self.events.push(match val {
+                Scalar::Str(s) => format!("{key}=str:{s}"),
+                Scalar::Num(n) => format!("{key}=num:{n}"),
+                Scalar::Bool(b) => format!("{key}=bool:{b}"),
+                Scalar::Null => format!("{key}=null"),
+            });
+            Ok(())
+        }
+        fn begin_array(&mut self, key: &str) -> Result<(), ParseError> {
+            self.events.push(format!("{key}=["));
+            Ok(())
+        }
+        fn array_num(&mut self, key: &str, val: f64) -> Result<(), ParseError> {
+            self.events.push(format!("{key}+{val}"));
+            Ok(())
+        }
+    }
+
+    fn run(src: &str) -> Result<Vec<String>, ParseError> {
+        let mut sc = Scratch::new();
+        let mut r = Rec::default();
+        read_object(src.as_bytes(), &mut sc, &mut r)?;
+        Ok(r.events)
+    }
+
+    #[test]
+    fn flat_object_all_value_kinds() {
+        let ev = run(r#"{"a": "x", "b": -2.5e1, "c": true, "d": null, "e": [1, 2.5]}"#)
+            .unwrap();
+        assert_eq!(ev, vec!["a=str:x", "b=num:-25", "c=bool:true", "d=null",
+                            "e=[", "e+1", "e+2.5"]);
+    }
+
+    #[test]
+    fn empty_object_and_empty_array() {
+        assert_eq!(run("{}").unwrap(), Vec::<String>::new());
+        assert_eq!(run(r#"{"x": []}"#).unwrap(), vec!["x=["]);
+    }
+
+    #[test]
+    fn escapes_decode_into_scratch() {
+        let ev = run(r#"{"k\"ey": "a\\b\ncA ☕"}"#).unwrap();
+        assert_eq!(ev, vec!["k\"ey=str:a\\b\ncA ☕"]);
+        // \uXXXX decodes to the code point (here 'A')
+        let ev = run("{\"u\": \"\\u0041é\"}").unwrap();
+        assert_eq!(ev, vec!["u=str:Aé"]);
+        // invalid escapes are rejected, not smuggled through
+        assert!(run(r#"{"a": "\q"}"#).is_err());
+        assert!(run(r#"{"a": "\u00zz"}"#).is_err());
+    }
+
+    #[test]
+    fn numbers_parse_in_place() {
+        let ev = run(r#"{"i": 7, "f": 0.125, "e": 1e3, "n": -0.5}"#).unwrap();
+        assert_eq!(ev, vec!["i=num:7", "f=num:0.125", "e=num:1000", "n=num:-0.5"]);
+        assert!(run(r#"{"bad": 1.2.3}"#).is_err());
+        assert!(run(r#"{"bad": --1}"#).is_err());
+    }
+
+    #[test]
+    fn truncated_input_is_an_error_not_a_panic() {
+        for src in ["", "{", r#"{"a""#, r#"{"a":"#, r#"{"a":1"#, r#"{"a":"x"#,
+                    r#"{"a":[1"#, r#"{"a":[1,"#, r#"{"a":"x\"#, r#"{"a":"\u00"#] {
+            assert!(run(src).is_err(), "accepted truncated input {src:?}");
+        }
+    }
+
+    #[test]
+    fn rejects_nesting_and_trailing_garbage() {
+        assert!(run(r#"{"a": {"b": 1}}"#).is_err());
+        assert!(run(r#"{"a": [[1]]}"#).is_err());
+        assert!(run(r#"{"a": ["x"]}"#).is_err());
+        assert!(run(r#"{"a": 1} extra"#).is_err());
+        // trailing whitespace (e.g. a stripped \r) is fine
+        assert!(run("{\"a\": 1} \t").is_ok());
+    }
+
+    #[test]
+    fn visitor_errors_carry_a_position() {
+        struct Nope;
+        impl Visit for Nope {
+            fn scalar(&mut self, _: &str, _: Scalar<'_>) -> Result<(), ParseError> {
+                Err(ParseError::msg("visitor said no"))
+            }
+            fn begin_array(&mut self, _: &str) -> Result<(), ParseError> {
+                Ok(())
+            }
+            fn array_num(&mut self, _: &str, _: f64) -> Result<(), ParseError> {
+                Ok(())
+            }
+        }
+        let e = read_object(br#"{"a": 1}"#, &mut Scratch::new(), &mut Nope)
+            .unwrap_err();
+        assert_eq!(e.msg, "visitor said no");
+        assert_ne!(e.at, super::NO_POS, "position must be filled in");
+        assert!(e.to_string().contains("byte"));
+    }
+
+    #[test]
+    fn scratch_is_reused_across_lines() {
+        let mut sc = Scratch::new();
+        let mut r = Rec::default();
+        read_object(br#"{"a": "x\ny"}"#, &mut sc, &mut r).unwrap();
+        read_object(br#"{"a": "p\tq"}"#, &mut sc, &mut r).unwrap();
+        assert_eq!(r.events, vec!["a=str:x\ny", "a=str:p\tq"]);
+    }
+}

@@ -1,0 +1,203 @@
+//! The TCP front door: a nonblocking accept loop handing connections to
+//! reader/writer thread pairs, bounded by `max_conns`, with a graceful
+//! shutdown that unblocks every in-flight reader.
+
+use std::io::Write;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::Coordinator;
+use crate::datasets::Dataset;
+use crate::server::connection::{self, ConnShared};
+
+/// Wire-server knobs (the coordinator's own knobs live in `ServeConfig`).
+#[derive(Clone, Debug)]
+pub struct WireConfig {
+    /// bind address, e.g. `127.0.0.1:7878` (`:0` picks a free port —
+    /// read it back via [`WireServer::local_addr`])
+    pub listen: String,
+    /// concurrent connection cap: connection `max_conns + 1` is answered
+    /// with one error line and closed
+    pub max_conns: usize,
+    /// per-request-line byte cap (reject with an error line, never OOM)
+    pub max_line_bytes: usize,
+}
+
+impl Default for WireConfig {
+    fn default() -> Self {
+        WireConfig {
+            listen: "127.0.0.1:0".to_string(),
+            max_conns: 64,
+            max_line_bytes: 256 * 1024,
+        }
+    }
+}
+
+/// One live connection as the accept loop tracks it: a stream clone to
+/// shut down on server stop, and the reader thread to join.
+struct ConnSlot {
+    stream: TcpStream,
+    handle: JoinHandle<()>,
+}
+
+struct Inner {
+    stop: AtomicBool,
+    active: AtomicUsize,
+    max_conns: usize,
+    conns: Mutex<Vec<ConnSlot>>,
+    shared: Arc<ConnShared>,
+}
+
+/// A running wire-protocol server. Owns the accept loop; the coordinator
+/// stays caller-owned (shared in via `Arc`), so one process can front the
+/// same coordinator with several listeners or mix wire and in-process
+/// traffic.
+pub struct WireServer {
+    local_addr: SocketAddr,
+    inner: Arc<Inner>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl WireServer {
+    /// Bind `cfg.listen` and start accepting. `dataset` backs `"sample"`
+    /// requests (pass `None` to reject them).
+    pub fn start(coord: Arc<Coordinator>, dataset: Option<Arc<Dataset>>,
+                 cfg: WireConfig) -> anyhow::Result<WireServer> {
+        let listener = TcpListener::bind(&cfg.listen)
+            .map_err(|e| anyhow::anyhow!("bind {}: {e}", cfg.listen))?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let inner = Arc::new(Inner {
+            stop: AtomicBool::new(false),
+            active: AtomicUsize::new(0),
+            max_conns: cfg.max_conns.max(1),
+            conns: Mutex::new(Vec::new()),
+            shared: Arc::new(ConnShared {
+                coord,
+                dataset,
+                max_line_bytes: cfg.max_line_bytes.max(2),
+            }),
+        });
+        let i2 = inner.clone();
+        let accept = std::thread::Builder::new()
+            .name("wire-accept".into())
+            .spawn(move || accept_loop(listener, i2))?;
+        Ok(WireServer { local_addr, inner, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves `:0` to the picked port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Connections currently being served.
+    pub fn active_connections(&self) -> usize {
+        self.inner.active.load(Ordering::Acquire)
+    }
+
+    /// Stop accepting, unblock every connection, and join all threads.
+    /// In-flight requests still receive their response lines (the writer
+    /// drains before exiting). Idempotent; also runs on drop. Stopping
+    /// the *coordinator* is the caller's call — pair this with
+    /// [`Coordinator::request_stop`] for a full graceful stop.
+    pub fn shutdown(&mut self) {
+        self.inner.stop.store(true, Ordering::Release);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WireServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, inner: Arc<Inner>) {
+    loop {
+        if inner.stop.load(Ordering::Acquire) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let _ = stream.set_nonblocking(false);
+                reap_finished(&inner);
+                if inner.active.load(Ordering::Acquire) >= inner.max_conns {
+                    refuse(stream, &inner);
+                    continue;
+                }
+                spawn_connection(stream, &inner);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => std::thread::sleep(Duration::from_millis(2)),
+        }
+    }
+    // shutdown: force every blocked reader out of `read`, then join
+    for slot in inner.conns.lock().unwrap().drain(..) {
+        let _ = slot.stream.shutdown(Shutdown::Both);
+        let _ = slot.handle.join();
+    }
+}
+
+fn spawn_connection(stream: TcpStream, inner: &Arc<Inner>) {
+    let clone = match stream.try_clone() {
+        Ok(c) => c,
+        Err(_) => return,
+    };
+    inner.active.fetch_add(1, Ordering::AcqRel);
+    let sh = inner.shared.clone();
+    let i2 = inner.clone();
+    let spawned = std::thread::Builder::new()
+        .name("wire-conn".into())
+        .spawn(move || {
+            connection::run_connection(stream, sh);
+            i2.active.fetch_sub(1, Ordering::AcqRel);
+        });
+    match spawned {
+        Ok(handle) => inner
+            .conns
+            .lock()
+            .unwrap()
+            .push(ConnSlot { stream: clone, handle }),
+        Err(_) => {
+            inner.active.fetch_sub(1, Ordering::AcqRel);
+        }
+    }
+}
+
+/// Over the connection cap: answer with one error line and close (the
+/// client sees a structured reason, not a silent RST).
+fn refuse(mut stream: TcpStream, inner: &Inner) {
+    let m = &inner.shared.coord.metrics;
+    m.wire_requests.fetch_add(1, Ordering::Relaxed);
+    m.wire_rejects.fetch_add(1, Ordering::Relaxed);
+    let line = format!(
+        "{{\"id\":null,\"ok\":false,\"error\":\"server at connection limit \
+         (max_conns={})\"}}\n",
+        inner.max_conns
+    );
+    let _ = stream.write_all(line.as_bytes());
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// Join reader threads whose connections already ended, so long-running
+/// servers do not accumulate dead slots.
+fn reap_finished(inner: &Inner) {
+    let mut conns = inner.conns.lock().unwrap();
+    let mut i = 0;
+    while i < conns.len() {
+        if conns[i].handle.is_finished() {
+            let slot = conns.swap_remove(i);
+            let _ = slot.handle.join();
+        } else {
+            i += 1;
+        }
+    }
+}

@@ -1,0 +1,40 @@
+//! Wire-protocol serving front end: a std-only TCP server speaking a
+//! line-delimited JSON protocol in front of the
+//! [`Coordinator`](crate::coordinator::Coordinator).
+//!
+//! ```text
+//!   TCP clients (newline-delimited JSON)
+//!        |  {"id":..., "x":[...] | "sample":N, "t_drift"?, "adc_bits"?}
+//!        v
+//!   listener (accept loop, max_conns)            server::listener
+//!        v
+//!   per-connection reader ──> writer             server::connection
+//!        |  visiting JSON lexer, reusable        server::json
+//!        |  scratch buffers (zero-alloc parse)   server::protocol
+//!        v
+//!   Coordinator::submit_with(features, InferOpts)
+//! ```
+//!
+//! Requests are validated through the same `backend::validate_opts` /
+//! `submit_with` path as in-process callers, so a wire request can do
+//! exactly what an embedded caller can — per-request device age and ADC
+//! bitwidth included — and nothing more. Responses echo the client id
+//! plus `pred`, `logits`, `sim_age_s`, `adc_bits`, and `latency_us`
+//! (coordinator-measured; wire time is on top).
+//!
+//! Robustness contract: a malformed or oversized request line is answered
+//! with an `{"ok":false,...}` error line and the connection stays up; the
+//! ingestion path performs no per-request heap allocation after warm-up
+//! except the feature vector handed to the coordinator queue (see
+//! [`connection`] module docs; pinned by `tests/test_wire.rs`). Wire
+//! traffic shows up in the coordinator metrics as `wire_requests` /
+//! `wire_rejects`.
+
+pub mod client;
+mod connection;
+pub mod json;
+mod listener;
+pub mod protocol;
+
+pub use client::{WireClient, WireReply};
+pub use listener::{WireConfig, WireServer};

@@ -1,0 +1,395 @@
+//! The wire line protocol: request grammar over the visiting JSON reader,
+//! plus the response/error line writers.
+//!
+//! Request line (one JSON object per `\n`-terminated line):
+//!
+//! ```text
+//! {"id": <string|integer>,            required; echoed on the reply
+//!  "x": [f32, ...],                   exactly one of `x` (an input tensor
+//!  "sample": <integer>,               of model feature length) or `sample`
+//!                                     (a test-set index on the server)
+//!  "t_drift": <seconds>,              optional InferOpts::t_drift
+//!  "adc_bits": <integer>}             optional InferOpts::adc_bits
+//! ```
+//!
+//! Success reply:
+//!
+//! ```text
+//! {"id": ..., "ok": true, "pred": N, "logits": [...],
+//!  "sim_age_s": S, "adc_bits": B, "latency_us": U}
+//! ```
+//!
+//! Error reply (malformed line, bad option, closed coordinator, ...):
+//!
+//! ```text
+//! {"id": <echoed id or null>, "ok": false, "error": "..."}
+//! ```
+//!
+//! Parsing writes into a per-connection [`ReqScratch`] — the feature
+//! vector, the id, and the string-decode buffers are all reused across
+//! requests, so the ingestion path performs no per-request allocation
+//! (pinned by the counting-allocator test in `tests/test_wire.rs`).
+//! Unknown fields are rejected: a typo'd option must fail loudly, not
+//! silently serve under default options.
+
+use std::fmt::Write as _;
+
+use crate::backend::InferOpts;
+use crate::coordinator::Response;
+use crate::server::json::{self, ParseError, Scalar, Visit};
+
+/// Reusable per-connection parse state. `features` is preallocated to the
+/// model feature length and never grows past it; `id` and the JSON decode
+/// buffers keep their capacity across lines.
+#[derive(Debug)]
+pub struct ReqScratch {
+    pub json: json::Scratch,
+    pub features: Vec<f32>,
+    pub id: String,
+}
+
+impl ReqScratch {
+    pub fn new(feat_len: usize) -> Self {
+        ReqScratch {
+            json: json::Scratch::new(),
+            features: Vec::with_capacity(feat_len),
+            id: String::with_capacity(32),
+        }
+    }
+}
+
+/// Where this request's input comes from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReqBody {
+    /// an explicit tensor: the parsed values sit in [`ReqScratch::features`]
+    Features,
+    /// a server-side test-set sample index
+    Sample(usize),
+}
+
+/// One parsed request line (the id text lives in [`ReqScratch::id`]).
+#[derive(Clone, Copy, Debug)]
+pub struct ParsedReq {
+    pub body: ReqBody,
+    pub t_drift: Option<f64>,
+    pub adc_bits: Option<u32>,
+}
+
+impl ParsedReq {
+    pub fn opts(&self) -> InferOpts {
+        InferOpts { t_drift: self.t_drift, adc_bits: self.adc_bits }
+    }
+}
+
+/// The protocol visitor: streams fields into the scratch buffers.
+struct ReqVisitor<'a> {
+    feat: &'a mut Vec<f32>,
+    id: &'a mut String,
+    feat_cap: usize,
+    has_id: bool,
+    has_x: bool,
+    sample: Option<usize>,
+    t_drift: Option<f64>,
+    adc_bits: Option<u32>,
+}
+
+/// `n` as a non-negative integer index, or an error.
+fn as_index(n: f64, msg: &'static str) -> Result<usize, ParseError> {
+    if n.fract() != 0.0 || !(0.0..9e15).contains(&n) {
+        return Err(ParseError::msg(msg));
+    }
+    Ok(n as usize)
+}
+
+impl Visit for ReqVisitor<'_> {
+    fn scalar(&mut self, key: &str, val: Scalar<'_>) -> Result<(), ParseError> {
+        match key {
+            "id" => {
+                self.id.clear();
+                match val {
+                    Scalar::Str(s) => self.id.push_str(s),
+                    Scalar::Num(n) if n.fract() == 0.0 && n.abs() < 9e15 => {
+                        let _ = write!(self.id, "{}", n as i64);
+                    }
+                    Scalar::Num(n) => {
+                        let _ = write!(self.id, "{n}");
+                    }
+                    _ => return Err(ParseError::msg(
+                        "`id` must be a string or number")),
+                }
+                self.has_id = true;
+            }
+            "t_drift" => match val {
+                Scalar::Num(n) => self.t_drift = Some(n),
+                _ => return Err(ParseError::msg("`t_drift` must be a number")),
+            },
+            "adc_bits" => match val {
+                Scalar::Num(n) => {
+                    self.adc_bits = Some(as_index(
+                        n, "`adc_bits` must be a small integer")?
+                        as u32);
+                }
+                _ => return Err(ParseError::msg(
+                    "`adc_bits` must be a small integer")),
+            },
+            "sample" => match val {
+                Scalar::Num(n) => {
+                    self.sample = Some(as_index(
+                        n, "`sample` must be a non-negative integer")?);
+                }
+                _ => return Err(ParseError::msg(
+                    "`sample` must be a non-negative integer")),
+            },
+            "x" => return Err(ParseError::msg("`x` must be an array of numbers")),
+            _ => return Err(ParseError::msg(
+                "unknown field (expected id, x, sample, t_drift, adc_bits)")),
+        }
+        Ok(())
+    }
+
+    fn begin_array(&mut self, key: &str) -> Result<(), ParseError> {
+        if key != "x" {
+            return Err(ParseError::msg("only `x` may be an array"));
+        }
+        if self.has_x {
+            return Err(ParseError::msg("duplicate `x`"));
+        }
+        self.has_x = true;
+        self.feat.clear();
+        Ok(())
+    }
+
+    fn array_num(&mut self, _key: &str, val: f64) -> Result<(), ParseError> {
+        // capacity-bounded push: an over-long `x` errors out instead of
+        // growing (and reallocating) the preallocated feature buffer
+        if self.feat.len() >= self.feat_cap {
+            return Err(ParseError::msg(
+                "`x` is longer than the model feature length"));
+        }
+        if !val.is_finite() {
+            return Err(ParseError::msg("`x` values must be finite"));
+        }
+        self.feat.push(val as f32);
+        Ok(())
+    }
+}
+
+/// Parse one request line into `scratch`. On success the id is in
+/// `scratch.id` and (for [`ReqBody::Features`]) the tensor is in
+/// `scratch.features`, exactly `feat_len` long.
+pub fn parse_request(line: &[u8], feat_len: usize, scratch: &mut ReqScratch)
+                     -> Result<ParsedReq, ParseError> {
+    scratch.features.clear();
+    scratch.id.clear();
+    let mut v = ReqVisitor {
+        feat: &mut scratch.features,
+        id: &mut scratch.id,
+        feat_cap: feat_len,
+        has_id: false,
+        has_x: false,
+        sample: None,
+        t_drift: None,
+        adc_bits: None,
+    };
+    json::read_object(line, &mut scratch.json, &mut v)?;
+    if !v.has_id {
+        return Err(ParseError::msg("missing `id`"));
+    }
+    let body = match (v.has_x, v.sample) {
+        (true, None) => {
+            if v.feat.len() != feat_len {
+                return Err(ParseError::msg(
+                    "`x` is shorter than the model feature length"));
+            }
+            ReqBody::Features
+        }
+        (false, Some(s)) => ReqBody::Sample(s),
+        _ => {
+            return Err(ParseError::msg(
+                "pass exactly one of `x` or `sample`"))
+        }
+    };
+    Ok(ParsedReq { body, t_drift: v.t_drift, adc_bits: v.adc_bits })
+}
+
+// ---------------------------------------------------------------------------
+// Response writers (append into a reusable per-connection String)
+// ---------------------------------------------------------------------------
+
+/// JSON string literal with the same escaping as `util::json::write`.
+pub fn push_json_str(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// JSON number: non-finite values serialize as 0 (like the metrics
+/// writer), integral values without a fraction.
+fn push_num(out: &mut String, x: f64) {
+    if !x.is_finite() {
+        out.push('0');
+    } else if x.fract() == 0.0 && x.abs() < 9e15 {
+        let _ = write!(out, "{}", x as i64);
+    } else {
+        let _ = write!(out, "{x}");
+    }
+}
+
+/// Append one success line (newline-terminated) for a served response.
+pub fn write_response_line(out: &mut String, id: &str, r: &Response) {
+    out.push_str("{\"id\":");
+    push_json_str(out, id);
+    out.push_str(",\"ok\":true,\"pred\":");
+    let _ = write!(out, "{}", r.pred);
+    out.push_str(",\"logits\":[");
+    for (i, l) in r.logits.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if l.is_finite() {
+            // f32 Display is the shortest round-tripping decimal, so the
+            // client-side f64 parse recovers the exact served logit
+            let _ = write!(out, "{l}");
+        } else {
+            out.push('0');
+        }
+    }
+    out.push_str("],\"sim_age_s\":");
+    push_num(out, r.sim_age_s);
+    out.push_str(",\"adc_bits\":");
+    let _ = write!(out, "{}", r.adc_bits);
+    out.push_str(",\"latency_us\":");
+    push_num(out, r.latency.as_secs_f64() * 1e6);
+    out.push_str("}\n");
+}
+
+/// Append one error line (newline-terminated). `id` is echoed when the
+/// line got far enough to carry one, `null` otherwise.
+pub fn write_error_line(out: &mut String, id: Option<&str>, msg: &str) {
+    out.push_str("{\"id\":");
+    match id {
+        Some(id) => push_json_str(out, id),
+        None => out.push_str("null"),
+    }
+    out.push_str(",\"ok\":false,\"error\":");
+    push_json_str(out, msg);
+    out.push_str("}\n");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn parse(line: &str, feat_len: usize)
+             -> (Result<ParsedReq, ParseError>, ReqScratch) {
+        let mut sc = ReqScratch::new(feat_len);
+        let r = parse_request(line.as_bytes(), feat_len, &mut sc);
+        (r, sc)
+    }
+
+    #[test]
+    fn full_request_with_options() {
+        let (r, sc) = parse(
+            r#"{"id": "c0-17", "x": [0.5, -1, 2.5e-1], "t_drift": 86400, "adc_bits": 4}"#,
+            3,
+        );
+        let p = r.unwrap();
+        assert_eq!(sc.id, "c0-17");
+        assert_eq!(p.body, ReqBody::Features);
+        assert_eq!(sc.features, vec![0.5, -1.0, 0.25]);
+        assert_eq!(p.t_drift, Some(86_400.0));
+        assert_eq!(p.adc_bits, Some(4));
+        let o = p.opts();
+        assert_eq!(o.t_drift, Some(86_400.0));
+        assert_eq!(o.adc_bits, Some(4));
+    }
+
+    #[test]
+    fn sample_reference_and_numeric_id() {
+        let (r, sc) = parse(r#"{"id": 42, "sample": 3}"#, 16);
+        let p = r.unwrap();
+        assert_eq!(sc.id, "42");
+        assert_eq!(p.body, ReqBody::Sample(3));
+        assert_eq!(p.t_drift, None);
+        assert_eq!(p.adc_bits, None);
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        for (line, why) in [
+            (r#"{"x": [1, 2]}"#, "missing id"),
+            (r#"{"id": "a"}"#, "neither x nor sample"),
+            (r#"{"id": "a", "x": [1], "sample": 0}"#, "both x and sample"),
+            (r#"{"id": "a", "x": [1]}"#, "x too short"),
+            (r#"{"id": "a", "x": [1, 2, 3]}"#, "x too long"),
+            (r#"{"id": "a", "x": [1, 2], "extra": 1}"#, "unknown field"),
+            (r#"{"id": "a", "x": "no"}"#, "x not an array"),
+            (r#"{"id": "a", "sample": -1}"#, "negative sample"),
+            (r#"{"id": "a", "sample": 1.5}"#, "fractional sample"),
+            (r#"{"id": "a", "x": [1, 2], "adc_bits": 4.5}"#, "fractional bits"),
+            (r#"{"id": "a", "x": [1, 2], "t_drift": "soon"}"#, "string t_drift"),
+            (r#"{"id": true, "x": [1, 2]}"#, "bool id"),
+            (r#"not json"#, "not json"),
+        ] {
+            assert!(parse(line, 2).0.is_err(), "accepted bad request: {why}");
+        }
+    }
+
+    #[test]
+    fn scratch_survives_and_resets_between_lines() {
+        let mut sc = ReqScratch::new(2);
+        let p1 = parse_request(br#"{"id": "one", "x": [1, 2]}"#, 2, &mut sc)
+            .unwrap();
+        assert_eq!(p1.body, ReqBody::Features);
+        assert_eq!(sc.features, vec![1.0, 2.0]);
+        // a following sample request clears the stale tensor and id
+        let p2 = parse_request(br#"{"id": "two", "sample": 0}"#, 2, &mut sc)
+            .unwrap();
+        assert_eq!(p2.body, ReqBody::Sample(0));
+        assert_eq!(sc.id, "two");
+        assert!(sc.features.is_empty());
+        assert_eq!(sc.features.capacity(), 2, "capacity is kept, not grown");
+    }
+
+    #[test]
+    fn response_lines_roundtrip_through_the_tree_parser() {
+        let mut out = String::new();
+        let resp = Response {
+            pred: 1,
+            logits: vec![0.25, -1.5],
+            latency: Duration::from_micros(120),
+            sim_age_s: 25.0,
+            adc_bits: 8,
+        };
+        write_response_line(&mut out, "a\"b", &resp);
+        assert!(out.ends_with('\n'));
+        let v = crate::util::json::parse(out.trim_end()).unwrap();
+        assert_eq!(v.req("id").unwrap().as_str().unwrap(), "a\"b");
+        assert!(v.req("ok").unwrap().as_bool().unwrap());
+        assert_eq!(v.req("pred").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(v.req("logits").unwrap().f32s().unwrap(), vec![0.25, -1.5]);
+        assert_eq!(v.req("sim_age_s").unwrap().as_f64().unwrap(), 25.0);
+        assert_eq!(v.req("adc_bits").unwrap().as_f64().unwrap(), 8.0);
+        assert_eq!(v.req("latency_us").unwrap().as_f64().unwrap(), 120.0);
+
+        out.clear();
+        write_error_line(&mut out, None, "bad\nline");
+        let v = crate::util::json::parse(out.trim_end()).unwrap();
+        assert!(!v.req("ok").unwrap().as_bool().unwrap());
+        assert_eq!(v.req("error").unwrap().as_str().unwrap(), "bad\nline");
+        assert_eq!(*v.req("id").unwrap(), crate::util::json::Json::Null);
+    }
+}

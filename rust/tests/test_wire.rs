@@ -1,0 +1,375 @@
+//! The wire-protocol front end, end to end over real loopback sockets:
+//! a `WireServer` on `127.0.0.1:0`, `WireClient`s driving it, and the
+//! identity synthetic bundle as an exact oracle (logits == submitted
+//! features, bit for bit — `f32` `Display` emits the shortest
+//! round-tripping decimal, so even the JSON transport is lossless).
+//!
+//! Also pins the ingestion allocation contract with a counting global
+//! allocator: after warm-up, `protocol::parse_request` performs zero
+//! allocations per request line.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::Arc;
+use std::time::Duration;
+
+use analognets::coordinator::{Coordinator, ServeConfig};
+use analognets::datasets::synth::{self, SynthSpec};
+use analognets::pcm::{T_1Y, T_C_SECONDS};
+use analognets::server::protocol::{self, ReqBody, ReqScratch};
+use analognets::server::{WireClient, WireConfig, WireServer};
+
+// ---------------------------------------------------------------------------
+// Counting allocator: every allocation on the current thread bumps a
+// thread-local counter (thread-local so the parallel test harness cannot
+// pollute the measurement; `try_with` so allocations during thread
+// teardown, after TLS destruction, stay safe).
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static TL_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn bump() {
+    let _ = TL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+fn thread_allocs() -> u64 {
+    TL_ALLOCS.try_with(Cell::get).unwrap_or(0)
+}
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize)
+                      -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+#[test]
+fn request_parsing_is_allocation_free_after_warmup() {
+    let feat = 16usize;
+    // a line exercising every hot-path feature: an escaped id (forces the
+    // scratch string decode instead of the borrow fast path), a
+    // full-length tensor, both options
+    let mut line = String::from("{\"id\": \"c0\\u002d17\", \"x\": [");
+    for i in 0..feat {
+        if i > 0 {
+            line.push(',');
+        }
+        line.push_str("0.125");
+    }
+    line.push_str(r#"], "t_drift": 25.5, "adc_bits": 6}"#);
+
+    let mut sc = ReqScratch::new(feat);
+    for _ in 0..3 {
+        protocol::parse_request(line.as_bytes(), feat, &mut sc).unwrap();
+    }
+    let before = thread_allocs();
+    for _ in 0..100 {
+        let p = protocol::parse_request(line.as_bytes(), feat, &mut sc).unwrap();
+        assert_eq!(p.body, ReqBody::Features);
+    }
+    let after = thread_allocs();
+    assert_eq!(after - before, 0,
+               "request parsing allocated {} times over 100 warm requests",
+               after - before);
+    assert_eq!(sc.id, "c0-17");
+    assert_eq!(sc.features.len(), feat);
+}
+
+// ---------------------------------------------------------------------------
+// Loopback servers over synthetic bundles
+// ---------------------------------------------------------------------------
+
+const CLASSES: usize = 4;
+
+/// Identity-model wire server: the response logits are exactly the request
+/// features, so any cross-request mixup on the wire or in the batcher is
+/// visible in the payload. Returns (server, coordinator, bundle dir, feat).
+fn start_identity(tag: &str, tweak: impl FnOnce(&mut WireConfig))
+                  -> (WireServer, Arc<Coordinator>, std::path::PathBuf, usize) {
+    let spec = SynthSpec::identity_dense(&format!("ident_{tag}"), CLASSES);
+    let dir = synth::write_bundle_tmp(&format!("wire_{tag}"), &spec).unwrap();
+    let feat = spec.feat_len();
+    let mut cfg = ServeConfig::new(&spec.vid, 8);
+    cfg.artifacts_dir = dir.clone();
+    cfg.max_wait = Duration::from_millis(2);
+    let coord = Arc::new(Coordinator::start(cfg).unwrap());
+    let store = analognets::runtime::ArtifactStore::open(&dir).unwrap();
+    let ds = Arc::new(store.dataset(&spec.task).unwrap());
+    let mut wcfg = WireConfig::default();
+    tweak(&mut wcfg);
+    let server = WireServer::start(coord.clone(), Some(ds), wcfg).unwrap();
+    (server, coord, dir, feat)
+}
+
+/// Shut the server down, stop the coordinator, remove the bundle.
+fn stop_all(mut server: WireServer, coord: Arc<Coordinator>,
+            dir: &std::path::Path) {
+    server.shutdown();
+    drop(server); // releases the ConnShared -> Coordinator Arc
+    match Arc::try_unwrap(coord) {
+        Ok(c) => c.stop().unwrap(),
+        Err(c) => c.request_stop(),
+    }
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+fn features_for(c: usize, i: usize) -> Vec<f32> {
+    (0..CLASSES)
+        .map(|j| (c * 1000 + i) as f32 + 0.125 * j as f32)
+        .collect()
+}
+
+#[test]
+fn concurrent_clients_roundtrip_exact_logits_per_id() {
+    let (server, coord, dir, feat) = start_identity("e2e", |_| {});
+    assert_eq!(feat, CLASSES);
+    let addr = server.local_addr();
+
+    const NCLIENTS: usize = 3;
+    const PER_CLIENT: usize = 20;
+    let mut handles = Vec::new();
+    for c in 0..NCLIENTS {
+        handles.push(std::thread::spawn(move || {
+            let mut cl = WireClient::connect(addr).unwrap();
+            // pipeline the whole batch, then drain: replies must come back
+            // in request order with each id's own payload
+            for i in 0..PER_CLIENT {
+                cl.send_x(&format!("t{c}-{i}"), &features_for(c, i), None, None)
+                    .unwrap();
+            }
+            for i in 0..PER_CLIENT {
+                let rep = cl.recv().unwrap();
+                assert!(rep.ok, "t{c}-{i}: {:?}", rep.error);
+                assert_eq!(rep.id, format!("t{c}-{i}"), "FIFO order broke");
+                // identity model + shortest-round-trip floats: exact echo
+                assert_eq!(rep.logits, features_for(c, i),
+                           "request t{c}-{i} got foreign logits");
+                assert_eq!(rep.pred as usize, CLASSES - 1);
+                assert!(rep.latency_us >= 0.0);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let m = coord.metrics.summary();
+    assert_eq!(m.wire_requests, (NCLIENTS * PER_CLIENT) as u64);
+    assert_eq!(m.wire_rejects, 0);
+    assert_eq!(m.submit_rejects, 0);
+    assert_eq!(m.completed, (NCLIENTS * PER_CLIENT) as u64);
+    stop_all(server, coord, &dir);
+}
+
+#[test]
+fn per_request_options_ride_the_wire() {
+    // the analog tiny bundle with a frozen drift clock, exactly like
+    // tests/test_infer_opts.rs — but through TCP
+    let spec = SynthSpec::tiny("wire_opts");
+    let dir = synth::write_bundle_tmp("wire_opts", &spec).unwrap();
+    let feat = spec.feat_len();
+    let mut cfg = ServeConfig::new(&spec.vid, 8);
+    cfg.artifacts_dir = dir.clone();
+    cfg.max_wait = Duration::from_millis(2);
+    cfg.time_scale = 0.0;
+    cfg.seed = 99;
+    let coord = Arc::new(Coordinator::start(cfg).unwrap());
+    let server =
+        WireServer::start(coord.clone(), None, WireConfig::default()).unwrap();
+
+    let mut cl = WireClient::connect(server.local_addr()).unwrap();
+    let x = vec![0.9f32; feat];
+    cl.send_x("aged", &x, Some(T_1Y), None).unwrap();
+    cl.send_x("coarse", &x, None, Some(4)).unwrap();
+    cl.send_x("plain", &x, None, None).unwrap();
+
+    let aged = cl.recv().unwrap();
+    let coarse = cl.recv().unwrap();
+    let plain = cl.recv().unwrap();
+    assert!(aged.ok && coarse.ok && plain.ok);
+    assert_eq!(aged.sim_age_s, T_1Y, "t_drift rode the wire");
+    assert_eq!(aged.adc_bits, 8);
+    assert_eq!(coarse.sim_age_s, T_C_SECONDS);
+    assert_eq!(coarse.adc_bits, 4, "adc_bits rode the wire");
+    assert_eq!(plain.sim_age_s, T_C_SECONDS);
+    assert_eq!(plain.adc_bits, 8);
+    // the options changed the numbers, not just the labels
+    assert_ne!(aged.logits, plain.logits,
+               "a year of drift must change the served logits");
+    assert_ne!(coarse.logits, plain.logits,
+               "the 4-bit request must quantize differently");
+
+    drop(cl);
+    stop_all(server, coord, &dir);
+}
+
+#[test]
+fn malformed_lines_answer_errors_and_never_kill_the_connection() {
+    let (server, coord, dir, _feat) = start_identity("mal", |_| {});
+    let mut cl = WireClient::connect(server.local_addr()).unwrap();
+
+    // (line, expected error fragment, expected echoed id)
+    let bad: &[(&str, &str, &str)] = &[
+        ("this is not json", "expected", ""),
+        (r#"{"id": "nox"}"#, "exactly one of", "nox"),
+        (r#"{"id": "both", "x": [1, 2, 3, 4], "sample": 0}"#, "exactly one of",
+         "both"),
+        (r#"{"id": "short", "x": [1]}"#, "shorter than", "short"),
+        (r#"{"id": "long", "x": [1, 2, 3, 4, 5]}"#, "longer than", "long"),
+        (r#"{"id": "typo", "x": [1, 2, 3, 4], "adcbits": 4}"#, "unknown field",
+         "typo"),
+        (r#"{"x": [1, 2, 3, 4]}"#, "missing `id`", ""),
+        (r#"{"id": "deep", "x": [1, 2, 3, 4], "meta": {"a": 1}}"#, "nested",
+         "deep"),
+    ];
+    for (line, frag, want_id) in bad {
+        cl.send_raw(line).unwrap();
+        let rep = cl.recv().unwrap();
+        assert!(!rep.ok, "accepted bad line: {line}");
+        let err = rep.error.unwrap_or_default();
+        assert!(err.contains(frag),
+                "error {err:?} for {line:?} does not mention {frag:?}");
+        assert_eq!(rep.id, *want_id, "id echo for {line:?}");
+    }
+
+    // blank and CRLF-terminated lines: no reply for the former, a normal
+    // reply for the latter — and the connection is still alive
+    cl.send_raw("").unwrap();
+    cl.send_raw("{\"id\": \"crlf\", \"x\": [7, 8, 9, 10]}\r\n").unwrap();
+    let rep = cl.recv().unwrap();
+    assert!(rep.ok, "{:?}", rep.error);
+    assert_eq!(rep.id, "crlf");
+    assert_eq!(rep.logits, vec![7.0, 8.0, 9.0, 10.0]);
+
+    let m = coord.metrics.summary();
+    assert_eq!(m.wire_rejects, bad.len() as u64);
+    assert_eq!(m.wire_requests, bad.len() as u64 + 1,
+               "blank lines are not requests");
+    drop(cl);
+    stop_all(server, coord, &dir);
+}
+
+#[test]
+fn oversized_lines_reject_without_growing_the_buffer() {
+    let (server, coord, dir, _feat) =
+        start_identity("big", |w| w.max_line_bytes = 256);
+    let mut cl = WireClient::connect(server.local_addr()).unwrap();
+
+    // way past the cap: the server must answer (id unknowable -> null) and
+    // keep the connection; the line buffer is capped so this cannot OOM
+    let huge = format!(r#"{{"id": "{}", "x": [1, 2, 3, 4]}}"#,
+                       "z".repeat(4096));
+    cl.send_raw(&huge).unwrap();
+    let rep = cl.recv().unwrap();
+    assert!(!rep.ok);
+    assert!(rep.error.unwrap_or_default().contains("max_line_bytes"));
+    assert!(rep.id.is_empty(), "an oversized line cannot echo an id");
+
+    // same connection, next line: served normally
+    let rep = cl.roundtrip_x("after", &[1.0, 2.0, 3.0, 4.0], None, None)
+        .unwrap();
+    assert!(rep.ok, "{:?}", rep.error);
+    assert_eq!(rep.logits, vec![1.0, 2.0, 3.0, 4.0]);
+
+    let m = coord.metrics.summary();
+    assert_eq!(m.wire_rejects, 1);
+    assert_eq!(m.wire_requests, 2);
+    drop(cl);
+    stop_all(server, coord, &dir);
+}
+
+#[test]
+fn connection_limit_refuses_politely_and_recovers() {
+    let (server, coord, dir, _feat) =
+        start_identity("cap", |w| w.max_conns = 1);
+    let addr = server.local_addr();
+
+    // the roundtrip pins connection 1 as accepted and active
+    let mut c1 = WireClient::connect(addr).unwrap();
+    let rep = c1.roundtrip_x("c1", &[1.0, 2.0, 3.0, 4.0], None, None).unwrap();
+    assert!(rep.ok);
+
+    // connection 2 is over the cap: one structured refusal line, then EOF
+    let mut c2 = WireClient::connect(addr).unwrap();
+    let rep = c2.recv().unwrap();
+    assert!(!rep.ok);
+    assert!(rep.error.unwrap_or_default().contains("connection limit"));
+    assert!(c2.recv().is_err(), "refused connections are closed");
+
+    // client 1 hangs up; once its reader exits, a new connection fits
+    drop(c1);
+    let t0 = std::time::Instant::now();
+    while server.active_connections() > 0 {
+        assert!(t0.elapsed() < Duration::from_secs(5),
+                "connection slot never freed");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let mut c3 = WireClient::connect(addr).unwrap();
+    let rep = c3.roundtrip_x("c3", &[5.0, 6.0, 7.0, 8.0], None, None).unwrap();
+    assert!(rep.ok, "{:?}", rep.error);
+    assert_eq!(rep.logits, vec![5.0, 6.0, 7.0, 8.0]);
+
+    drop(c2);
+    drop(c3);
+    stop_all(server, coord, &dir);
+}
+
+#[test]
+fn sample_requests_serve_dataset_rows_and_check_bounds() {
+    let (server, coord, dir, _feat) = start_identity("samp", |_| {});
+    // the identity bundle's own test set is the oracle: logits == the row
+    let store = analognets::runtime::ArtifactStore::open(&dir).unwrap();
+    let ds = store.dataset("kws").unwrap();
+    let row0: Vec<f32> = ds.batch(0, 1).to_vec();
+
+    let mut cl = WireClient::connect(server.local_addr()).unwrap();
+    cl.send_sample("s0", 0, None, None).unwrap();
+    let rep = cl.recv().unwrap();
+    assert!(rep.ok, "{:?}", rep.error);
+    assert_eq!(rep.id, "s0");
+    assert_eq!(rep.logits, row0, "sample 0 must serve dataset row 0");
+
+    cl.send_sample("oor", ds.len(), None, None).unwrap();
+    let rep = cl.recv().unwrap();
+    assert!(!rep.ok);
+    assert!(rep.error.unwrap_or_default().contains("out of range"));
+    assert_eq!(rep.id, "oor");
+    drop(cl);
+
+    // a second listener on the same coordinator, without a dataset:
+    // `sample` requests answer a structured error instead
+    let mut server2 =
+        WireServer::start(coord.clone(), None, WireConfig::default()).unwrap();
+    let mut cl2 = WireClient::connect(server2.local_addr()).unwrap();
+    cl2.send_sample("nods", 0, None, None).unwrap();
+    let rep = cl2.recv().unwrap();
+    assert!(!rep.ok);
+    assert!(rep.error.unwrap_or_default().contains("no dataset"));
+    drop(cl2);
+    server2.shutdown();
+    drop(server2);
+
+    stop_all(server, coord, &dir);
+}

@@ -1,0 +1,96 @@
+#!/usr/bin/env python3
+"""Ratchet ci/bench_baseline.json floors from measured bench artifacts.
+
+Usage:
+    scripts/ratchet_baseline.py [--native BENCH_native.json]
+                                [--analog BENCH_analog.json]
+                                [--fraction 0.5] [--dry-run]
+
+Downloads of the CI bench artifacts (bench-smoke uploads BENCH_native.json,
+analog-smoke BENCH_analog.json, wire-smoke the wire section inside
+BENCH_native.json) feed the committed smoke floors:
+
+    req_s        <- fraction * BENCH_native.json req_s
+    analog_req_s <- fraction * BENCH_analog.json req_s
+    wire_req_s   <- fraction * BENCH_native.json wire.req_s
+
+Each ratcheted key is marked `measured: true` in the baseline's `measured`
+map so readers can tell a real ratchet from a hand-picked smoke value.
+Floors only move up (a measured value below the committed floor is
+reported, not applied) unless --allow-lower is given. The gate in
+bench::check_regression allows a 30% drop below the floor, so fraction 0.5
+leaves ~2x headroom between a typical run and a failure.
+"""
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+BASELINE = REPO / "ci" / "bench_baseline.json"
+
+
+def load(path):
+    with open(path, encoding="utf-8") as f:
+        return json.load(f)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--native", help="BENCH_native.json artifact "
+                    "(ratchets req_s and, if a wire section is present, "
+                    "wire_req_s)")
+    ap.add_argument("--analog", help="BENCH_analog.json artifact "
+                    "(ratchets analog_req_s)")
+    ap.add_argument("--fraction", type=float, default=0.5,
+                    help="floor = fraction * measured req/s (default 0.5)")
+    ap.add_argument("--allow-lower", action="store_true",
+                    help="let a ratchet lower an existing floor")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="print the would-be baseline, write nothing")
+    args = ap.parse_args()
+    if not args.native and not args.analog:
+        ap.error("give at least one of --native / --analog")
+    if not 0.0 < args.fraction <= 1.0:
+        ap.error("--fraction must be in (0, 1]")
+
+    base = load(BASELINE)
+    measured = base.setdefault("measured", {})
+    updates = []  # (key, measured req/s)
+    if args.native:
+        native = load(args.native)
+        updates.append(("req_s", float(native["req_s"])))
+        if "wire" in native:
+            updates.append(("wire_req_s", float(native["wire"]["req_s"])))
+    if args.analog:
+        updates.append(("analog_req_s", float(load(args.analog)["req_s"])))
+
+    changed = False
+    for key, value in updates:
+        floor = round(args.fraction * value, 1)
+        old = base.get(key)
+        if old is not None and floor < old and not args.allow_lower:
+            print(f"  {key}: measured {value:.1f} -> floor {floor} is BELOW "
+                  f"the committed {old}; skipping (use --allow-lower to "
+                  "accept a regression as the new normal)")
+            continue
+        print(f"  {key}: {old} -> {floor}  (measured {value:.1f}, "
+              f"fraction {args.fraction})")
+        base[key] = floor
+        measured[key] = True
+        changed = True
+
+    if not changed:
+        print("nothing to ratchet")
+        return 0
+    text = json.dumps(base, indent=2) + "\n"
+    if args.dry_run:
+        sys.stdout.write(text)
+    else:
+        BASELINE.write_text(text, encoding="utf-8")
+        print(f"wrote {BASELINE}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
