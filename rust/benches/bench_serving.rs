@@ -25,6 +25,12 @@
 //! `InferOpts { adc_bits: Some(4) }`, plus the 4-bit clean-weights
 //! accuracy through `eval::drift_accuracy`, under the `adc4` key.
 //!
+//! A device-variability fault sweep (stuck-cell fraction x ADC gain/offset
+//! sigma grid, fixed seed, ideal PCM at t = 25 s) lands under the
+//! `fault_sweep` key; the mild cells (stuck <= 1%) gate against
+//! `fault_acc_gap_max` from the committed baseline — per-tile GDC
+//! calibration must hold the accuracy drop there.
+//!
 //! Knobs: `--fast` (smaller request counts), `--requests N` (per client),
 //! `--max-batch N`, `--baseline <json>`, `--strict` (make the 2x
 //! batched-vs-single speedup target a hard failure), `--analog-only`
@@ -56,7 +62,7 @@ use analognets::coordinator::metrics::MetricsSummary;
 use analognets::coordinator::{Coordinator, ServeConfig};
 use analognets::datasets::synth::{self, SynthSpec};
 use analognets::eval::{drift_accuracy, EvalOpts};
-use analognets::pcm::{PcmParams, FIG7_TIMES, T_25S};
+use analognets::pcm::{gdc, FaultSpec, PcmParams, FIG7_TIMES, T_25S};
 use analognets::server::{client as wire_client, WireConfig, WireServer};
 use analognets::simulator::gemm;
 use analognets::timing::layer_gemm_dims;
@@ -298,7 +304,7 @@ fn run_analog(dir: &Path, spec: &SynthSpec, per_client: usize,
     let meta = store.meta(&spec.vid)?;
     let w = store.weights(&spec.vid)?;
     let ws: Vec<HostTensor> = w.iter().map(HostTensor::from_tensor).collect();
-    let unity = vec![1.0f32; ws.len()];
+    let unity = gdc::unity(ws.len());
     let ds = store.dataset(&spec.task)?;
     let n = ds.len();
     let xb = ds.padded_batch(0, n);
@@ -378,6 +384,61 @@ fn run_analog(dir: &Path, spec: &SynthSpec, per_client: usize,
         sweep_json.push(Json::Obj(o));
     }
 
+    // ---- device-variability fault sweep (robustness gate) ---------------
+    // ideal PCM at t = 25 s so the grid isolates the injected faults:
+    // stuck-cell fraction (split evenly between stuck-at-Gmin and
+    // stuck-at-Gmax) x ADC gain/offset sigma, fixed seed. The sigma = 0
+    // column doubles as a Fig.7-style degradation curve over stuck
+    // fraction. Mild cells (stuck fraction <= 1%) gate against the
+    // committed `fault_acc_gap_max` floor: per-tile GDC calibration must
+    // hold the accuracy drop there. The severe cells are reported, not
+    // gated — degrading under heavy faults is the expected physics.
+    const FAULT_SEED: u64 = 0xFA117;
+    let stuck_fracs: [f32; 5] = [0.0, 0.005, 0.01, 0.02, 0.05];
+    let adc_sigmas: [f32; 2] = [0.0, 0.02];
+    let fault_base = EvalOpts {
+        bits: 8,
+        batch: 16,
+        max_samples: if opts.fast { 32 } else { 64 },
+        runs: 1,
+        params: PcmParams::ideal(),
+        backend: BackendKind::AnalogCim,
+        t_drift: Some(T_25S),
+        ..Default::default()
+    };
+    let mut fault_acc =
+        vec![vec![0.0f64; adc_sigmas.len()]; stuck_fracs.len()];
+    for (fi, &frac) in stuck_fracs.iter().enumerate() {
+        for (si, &sigma) in adc_sigmas.iter().enumerate() {
+            let fopts = EvalOpts {
+                faults: FaultSpec {
+                    stuck_min: frac / 2.0,
+                    stuck_max: frac / 2.0,
+                    adc_offset_sigma: sigma,
+                    adc_gain_sigma: sigma,
+                    seed: FAULT_SEED,
+                    ..FaultSpec::none()
+                },
+                ..fault_base.clone()
+            };
+            fault_acc[fi][si] = drift_accuracy(&store, &spec.vid,
+                                               &fopts.sweep_times(),
+                                               &fopts)?[0][0];
+        }
+        let row = adc_sigmas.iter().zip(fault_acc[fi].iter())
+            .map(|(s, a)| format!("adc {s:.2} -> {:.2}%", 100.0 * a))
+            .collect::<Vec<_>>().join("   ");
+        println!("  fault sweep stuck {:>4.1}%: {row}", 100.0 * frac as f64);
+    }
+    let fault_acc_clean = fault_acc[0][0];
+    let fault_mild_gap = stuck_fracs.iter().enumerate()
+        .filter(|(_, &f)| f <= 0.01)
+        .flat_map(|(fi, _)| fault_acc[fi].iter())
+        .map(|a| fault_acc_clean - a)
+        .fold(0.0f64, f64::max);
+    println!("[bench_serving] fault sweep: clean {:.2}%, worst mild-cell \
+              drop {fault_mild_gap:.4}", 100.0 * fault_acc_clean);
+
     // ---- BENCH_analog.json ----------------------------------------------
     let mut aroot = BTreeMap::new();
     aroot.insert("schema".to_string(), num(1.0));
@@ -412,6 +473,21 @@ fn run_analog(dir: &Path, spec: &SynthSpec, per_client: usize,
     a4.insert("acc".to_string(), num(acc_adc4));
     aroot.insert("adc4".to_string(), Json::Obj(a4));
     aroot.insert("drift_sweep".to_string(), Json::Arr(sweep_json));
+    // the fault grid: acc[frac_idx][sigma_idx], plus the clean reference
+    // cell and the worst mild-cell drop the gate below checks
+    let mut fsec = BTreeMap::new();
+    fsec.insert("seed".to_string(), num(FAULT_SEED as f64));
+    fsec.insert("stuck_fracs".to_string(),
+                Json::Arr(stuck_fracs.iter().map(|&f| num(f as f64)).collect()));
+    fsec.insert("adc_sigmas".to_string(),
+                Json::Arr(adc_sigmas.iter().map(|&s| num(s as f64)).collect()));
+    fsec.insert("acc".to_string(),
+                Json::Arr(fault_acc.iter()
+                    .map(|row| Json::Arr(row.iter().map(|&a| num(a)).collect()))
+                    .collect()));
+    fsec.insert("acc_clean".to_string(), num(fault_acc_clean));
+    fsec.insert("mild_gap_max".to_string(), num(fault_mild_gap));
+    aroot.insert("fault_sweep".to_string(), Json::Obj(fsec));
     save_json("BENCH_analog.json", &Json::Obj(aroot));
 
     // clean-weights accuracy gate: the analog engine may not diverge
@@ -427,6 +503,15 @@ fn run_analog(dir: &Path, spec: &SynthSpec, per_client: usize,
         );
         println!("[bench_serving] analog accuracy gate OK: gap {acc_gap:.4} \
                   <= {max_gap:.4}");
+        let fault_gate = v.req("fault_acc_gap_max")?.as_f64()?;
+        anyhow::ensure!(
+            fault_mild_gap <= fault_gate,
+            "mild fault cells (stuck <= 1%, ADC sigma <= 0.02) dropped \
+             accuracy by {fault_mild_gap:.4} (gate: {fault_gate:.4} in \
+             {baseline})"
+        );
+        println!("[bench_serving] fault-sweep gate OK: mild drop \
+                  {fault_mild_gap:.4} <= {fault_gate:.4}");
         bench::check_regression(rps_analog, Path::new(baseline),
                                 "analog_req_s", 0.30)?;
     }

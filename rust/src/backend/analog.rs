@@ -17,6 +17,7 @@ use crate::backend::{weight_fed_batch_sizes, HostTensor, InferOpts,
                      InferenceBackend};
 use crate::crossbar::ArrayGeom;
 use crate::nn::ModelMeta;
+use crate::pcm::{AdcFault, LayerGdc};
 use crate::simulator::AnalogModel;
 
 /// Executes the deployed model tile by tile on a simulated CiM array.
@@ -90,11 +91,22 @@ impl InferenceBackend for AnalogCimBackend {
         weight_fed_batch_sizes(self.meta(), self.bits)
     }
 
+    /// Per-tile GDC calibration targets this engine's array geometry.
+    fn calib_geom(&self) -> Option<ArrayGeom> {
+        Some(self.geom())
+    }
+
     fn run_batch(&self, x: &[f32], batch: usize, weights: &[HostTensor],
-                 gdc: &[f32], opts: &InferOpts) -> anyhow::Result<Vec<f32>> {
+                 gdc: &[LayerGdc], opts: &InferOpts) -> anyhow::Result<Vec<f32>> {
         self.validate_args(x, batch, weights, gdc, opts)?;
-        Ok(self.model
-            .forward(x, batch, weights, gdc, opts.effective_bits(self.bits)))
+        // the ADC-side faults execute here; the weight-side ones already
+        // happened when the provider programmed (and read) the conductances
+        let adc = opts
+            .faults
+            .map(|f| f.adc_fault())
+            .unwrap_or(AdcFault::NONE);
+        Ok(self.model.forward_faulted(x, batch, weights, gdc,
+                                      opts.effective_bits(self.bits), adc))
     }
 }
 
@@ -136,22 +148,48 @@ mod tests {
         );
         let x = vec![0.9, 0.8, 0.1, 0.0, /* sample 2 */ 0.0, 0.1, 0.7, 0.9];
         let opts = InferOpts::default();
-        let logits = be.run_batch(&x, 2, &[w.clone()], &[1.0], &opts).unwrap();
+        let unity = crate::pcm::gdc::unity(1);
+        let logits = be.run_batch(&x, 2, &[w.clone()], &unity, &opts).unwrap();
         assert_eq!(logits.len(), 4);
         assert!(logits[0] > logits[1], "{logits:?}");
         assert!(logits[3] > logits[2], "{logits:?}");
 
         // per-request adc_bits override reaches the tiled engine too
         let coarse = be
-            .run_batch(&x, 2, &[w.clone()], &[1.0],
+            .run_batch(&x, 2, &[w.clone()], &unity,
                        &InferOpts::default().with_adc_bits(3))
             .unwrap();
         assert_ne!(coarse, logits, "3-bit override must change outputs");
 
+        // a fault spec with only zero magnitudes is bit-identical to no
+        // spec at all (the `FaultSpec::none()` regression guarantee), an
+        // ADC-gain spec actually reaches the converters, and per-tile GDC
+        // calibration targets this engine's geometry
+        use crate::pcm::FaultSpec;
+        let same = be
+            .run_batch(&x, 2, &[w.clone()], &unity,
+                       &InferOpts::default().with_faults(FaultSpec::none()))
+            .unwrap();
+        assert_eq!(same, logits, "none-spec must be a strict no-op");
+        let gainy = FaultSpec { adc_gain_sigma: 0.3, seed: 3,
+                                ..FaultSpec::none() };
+        let shifted = be
+            .run_batch(&x, 2, &[w.clone()], &unity,
+                       &InferOpts::default().with_faults(gainy))
+            .unwrap();
+        assert_ne!(shifted, logits, "30% ADC gain sigma must move codes");
+        assert_eq!(be.calib_geom(), Some(ArrayGeom::AON));
+        // invalid specs refuse before execution
+        let bad = FaultSpec { stuck_min: 2.0, ..FaultSpec::none() };
+        assert!(be
+            .run_batch(&x, 2, &[w.clone()], &unity,
+                       &InferOpts::default().with_faults(bad))
+            .is_err());
+
         // wrong weight count / gdc length / input length all refuse
-        assert!(be.run_batch(&x, 2, &[], &[1.0], &opts).is_err());
+        assert!(be.run_batch(&x, 2, &[], &unity, &opts).is_err());
         assert!(be.run_batch(&x, 2, &[w.clone()], &[], &opts).is_err());
-        assert!(be.run_batch(&x[..4], 2, &[w], &[1.0], &opts).is_err());
+        assert!(be.run_batch(&x[..4], 2, &[w], &unity, &opts).is_err());
     }
 
     #[test]
@@ -166,7 +204,8 @@ mod tests {
         );
         let x = vec![0.9, 0.8, 0.1, 0.0];
         let logits = be
-            .run_batch(&x, 1, &[w], &[1.0], &InferOpts::default())
+            .run_batch(&x, 1, &[w], &crate::pcm::gdc::unity(1),
+                       &InferOpts::default())
             .unwrap();
         assert_eq!(logits.len(), 2);
         assert!(logits[0] > logits[1], "{logits:?}");

@@ -36,7 +36,9 @@ pub use native::NativeBackend;
 pub use pjrt::PjrtBackend;
 pub use tensor::HostTensor;
 
+use crate::crossbar::ArrayGeom;
 use crate::nn::ModelMeta;
+use crate::pcm::{FaultSpec, LayerGdc};
 use crate::runtime::ArtifactStore;
 
 /// Batch sizes a [`NativeBackend`] offers when the artifact bundle exports
@@ -79,6 +81,15 @@ pub(crate) fn weight_fed_batch_sizes(meta: &ModelMeta, bits: u32) -> Vec<usize> 
 ///   4-bit serving scenario is `adc_bits: Some(4)` against a backend
 ///   configured at 8. PJRT rejects overrides (its graphs are compiled at
 ///   one bitwidth).
+/// * `faults` — the device-variability scenario
+///   ([`FaultSpec`](crate::pcm::FaultSpec)) this request should be served
+///   under. The weight-side faults are consumed by the weight provider
+///   (the coordinator's `PcmState` programs a faulted copy of the model);
+///   the ADC-side faults by the tile engine. `None` means "whatever the
+///   deployment default is" — the coordinator resolves it against its
+///   configured spec. PJRT rejects any non-none spec (its graphs bake
+///   clean weights in); the native engine rejects ADC-error specs (it has
+///   no tiles to fault).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct InferOpts {
     /// device age override in simulated seconds (`None` = serving clock /
@@ -86,6 +97,8 @@ pub struct InferOpts {
     pub t_drift: Option<f64>,
     /// ADC bitwidth override (`None` = the backend's configured bits)
     pub adc_bits: Option<u32>,
+    /// device-variability scenario override (`None` = deployment default)
+    pub faults: Option<FaultSpec>,
 }
 
 impl InferOpts {
@@ -101,6 +114,12 @@ impl InferOpts {
         self
     }
 
+    /// Builder-style device-variability override.
+    pub fn with_faults(mut self, faults: FaultSpec) -> Self {
+        self.faults = Some(faults);
+        self
+    }
+
     /// The bitwidth a backend configured at `backend_bits` quantizes this
     /// request at.
     pub fn effective_bits(&self, backend_bits: u32) -> u32 {
@@ -113,12 +132,18 @@ impl InferOpts {
     /// clamps its reads the same way), so they must not split into
     /// separate launches; this also collapses `-0.0`/`0.0`.
     /// (`f64::to_bits` makes the float field comparable; `u64::MAX` /
-    /// `u32::MAX` are the `None` sentinels, unreachable as real values.)
-    pub fn batch_key(&self) -> (u64, u32) {
+    /// `u32::MAX` are the `None` sentinels for the first two fields.) The
+    /// fault field keys through `FaultSpec::key`: every none-equivalent
+    /// spec collapses to 0 and `None` ("deployment default") stays its own
+    /// `u64::MAX` class — the coordinator, not the key, resolves what the
+    /// default means, so requests relying on it must not share launches
+    /// with requests pinning an explicit spec.
+    pub fn batch_key(&self) -> (u64, u32, u64) {
         (
             self.t_drift
                 .map_or(u64::MAX, |t| crate::pcm::clamp_age(t).to_bits()),
             self.adc_bits.unwrap_or(u32::MAX),
+            self.faults.map_or(u64::MAX, |f| f.key()),
         )
     }
 }
@@ -154,6 +179,20 @@ pub fn validate_opts(kind: BackendKind, backend_bits: u32,
     }
     if let Some(t) = opts.t_drift {
         anyhow::ensure!(t.is_finite(), "t_drift must be finite, got {t}");
+    }
+    if let Some(f) = &opts.faults {
+        f.validate()?;
+        anyhow::ensure!(
+            kind != BackendKind::Pjrt || f.is_none(),
+            "the pjrt backend cannot serve fault-injected requests (its \
+             compiled graphs bake clean weights in); use --backend \
+             native|analog"
+        );
+        anyhow::ensure!(
+            kind == BackendKind::AnalogCim || !f.has_adc_error(),
+            "adc_offset/adc_gain faults model per-tile converters, which \
+             only the tile-faithful engine has: use --backend analog"
+        );
     }
     Ok(())
 }
@@ -212,10 +251,17 @@ pub trait InferenceBackend {
         Ok(())
     }
 
+    /// The tile geometry per-tile GDC calibration should target, if this
+    /// engine quantizes per tile ([`AnalogCimBackend`] returns its array
+    /// geometry; full-K engines return `None` and get uniform GDC).
+    fn calib_geom(&self) -> Option<ArrayGeom> {
+        None
+    }
+
     /// Shared `run_batch` argument validation — one set of diagnostics for
     /// every engine, instead of an opaque executor error deep inside.
     fn validate_args(&self, x: &[f32], batch: usize, weights: &[HostTensor],
-                     gdc: &[f32], opts: &InferOpts) -> anyhow::Result<()> {
+                     gdc: &[LayerGdc], opts: &InferOpts) -> anyhow::Result<()> {
         validate_opts(self.kind(), self.bits(), opts)?;
         let layers = self.meta().layers.len();
         anyhow::ensure!(
@@ -262,7 +308,7 @@ pub trait InferenceBackend {
     /// handed in are expected to already be read at that age) and is
     /// ignored by engines.
     fn run_batch(&self, x: &[f32], batch: usize, weights: &[HostTensor],
-                 gdc: &[f32], opts: &InferOpts) -> anyhow::Result<Vec<f32>>;
+                 gdc: &[LayerGdc], opts: &InferOpts) -> anyhow::Result<Vec<f32>>;
 
     /// Input feature dimensions (height, width, channels).
     fn input_hwc(&self) -> (usize, usize, usize) {
@@ -440,7 +486,11 @@ mod tests {
         assert_eq!(d, InferOpts::default());
 
         let aged = InferOpts::default().with_t_drift(86_400.0);
-        let aged2 = InferOpts { t_drift: Some(86_400.0), adc_bits: None };
+        let aged2 = InferOpts {
+            t_drift: Some(86_400.0),
+            adc_bits: None,
+            faults: None,
+        };
         assert_eq!(aged, aged2);
         assert_ne!(aged.batch_key(), d.batch_key());
 
@@ -459,5 +509,40 @@ mod tests {
         assert_eq!(InferOpts::default().with_t_drift(-0.0),
                    InferOpts::default().with_t_drift(t_c));
         assert_ne!(InferOpts::default().with_t_drift(t_c), d);
+
+        // the fault field joins the launch-compatibility key: an explicit
+        // none-spec is its own class (distinct from "deployment default"),
+        // and distinct seeds split launches
+        let none_spec = InferOpts::default().with_faults(FaultSpec::none());
+        assert_ne!(none_spec, d);
+        assert_eq!(none_spec.batch_key().2, 0);
+        let s1 = FaultSpec { stuck_min: 0.01, seed: 1, ..FaultSpec::none() };
+        let s2 = FaultSpec { seed: 2, ..s1 };
+        assert_ne!(InferOpts::default().with_faults(s1),
+                   InferOpts::default().with_faults(s2));
+        assert_eq!(InferOpts::default().with_faults(s1),
+                   InferOpts::default().with_faults(s1));
+    }
+
+    #[test]
+    fn validate_opts_gates_fault_specs_per_engine() {
+        let bad = FaultSpec { stuck_min: 2.0, ..FaultSpec::none() };
+        let weighty = FaultSpec { stuck_min: 0.01, ..FaultSpec::none() };
+        let adc = FaultSpec { adc_gain_sigma: 0.02, ..FaultSpec::none() };
+        let ok = |k, f: FaultSpec| {
+            validate_opts(k, 8, &InferOpts::default().with_faults(f))
+        };
+        // invalid specs fail everywhere — this is the submit-time gate
+        assert!(ok(BackendKind::Native, bad).is_err());
+        assert!(ok(BackendKind::AnalogCim, bad).is_err());
+        // weight-side faults run on any weight-fed engine
+        assert!(ok(BackendKind::Native, weighty).is_ok());
+        assert!(ok(BackendKind::AnalogCim, weighty).is_ok());
+        assert!(ok(BackendKind::Pjrt, weighty).is_err());
+        // ADC faults need per-tile converters
+        assert!(ok(BackendKind::Native, adc).is_err());
+        assert!(ok(BackendKind::AnalogCim, adc).is_ok());
+        // explicit none is servable everywhere
+        assert!(ok(BackendKind::Pjrt, FaultSpec::none()).is_ok());
     }
 }

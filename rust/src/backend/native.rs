@@ -6,6 +6,7 @@ use std::sync::Arc;
 use crate::backend::{weight_fed_batch_sizes, HostTensor, InferOpts,
                      InferenceBackend};
 use crate::nn::ModelMeta;
+use crate::pcm::LayerGdc;
 use crate::simulator::NativeModel;
 
 /// Executes the deployed model with `simulator::NativeModel` — im2col +
@@ -67,7 +68,7 @@ impl InferenceBackend for NativeBackend {
     }
 
     fn run_batch(&self, x: &[f32], batch: usize, weights: &[HostTensor],
-                 gdc: &[f32], opts: &InferOpts) -> anyhow::Result<Vec<f32>> {
+                 gdc: &[LayerGdc], opts: &InferOpts) -> anyhow::Result<Vec<f32>> {
         self.validate_args(x, batch, weights, gdc, opts)?;
         Ok(self.model
             .forward(x, batch, weights, gdc, opts.effective_bits(self.bits)))
@@ -112,7 +113,8 @@ mod tests {
         );
         let x = vec![0.9, 0.8, 0.1, 0.0, /* sample 2 */ 0.0, 0.1, 0.7, 0.9];
         let opts = InferOpts::default();
-        let logits = be.run_batch(&x, 2, &[w.clone()], &[1.0], &opts).unwrap();
+        let unity = crate::pcm::gdc::unity(1);
+        let logits = be.run_batch(&x, 2, &[w.clone()], &unity, &opts).unwrap();
         assert_eq!(logits.len(), 4);
         assert!(logits[0] > logits[1], "{logits:?}");
         assert!(logits[3] > logits[2], "{logits:?}");
@@ -120,19 +122,30 @@ mod tests {
         // per-request adc_bits override changes the computed numbers; an
         // out-of-range override refuses
         let coarse = be
-            .run_batch(&x, 2, &[w.clone()], &[1.0],
+            .run_batch(&x, 2, &[w.clone()], &unity,
                        &InferOpts::default().with_adc_bits(3))
             .unwrap();
         assert_ne!(coarse, logits, "3-bit override must change outputs");
         assert!(be
-            .run_batch(&x, 2, &[w.clone()], &[1.0],
+            .run_batch(&x, 2, &[w.clone()], &unity,
                        &InferOpts::default().with_adc_bits(40))
             .is_err());
 
+        // ADC-error fault specs need per-tile converters: refused here
+        let adc_fault = crate::pcm::FaultSpec {
+            adc_gain_sigma: 0.02,
+            ..crate::pcm::FaultSpec::none()
+        };
+        assert!(be
+            .run_batch(&x, 2, &[w.clone()], &unity,
+                       &InferOpts::default().with_faults(adc_fault))
+            .is_err());
+        assert!(be.calib_geom().is_none(), "full-K engine: uniform GDC");
+
         // wrong weight count / gdc length / input length all refuse
-        assert!(be.run_batch(&x, 2, &[], &[1.0], &opts).is_err());
+        assert!(be.run_batch(&x, 2, &[], &unity, &opts).is_err());
         assert!(be.run_batch(&x, 2, &[w.clone()], &[], &opts).is_err());
-        assert!(be.run_batch(&x[..4], 2, &[w], &[1.0], &opts).is_err());
+        assert!(be.run_batch(&x[..4], 2, &[w], &unity, &opts).is_err());
     }
 
     #[test]

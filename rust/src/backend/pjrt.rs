@@ -8,6 +8,7 @@ use std::sync::Arc;
 
 use crate::backend::{HostTensor, InferOpts, InferenceBackend};
 use crate::nn::ModelMeta;
+use crate::pcm::LayerGdc;
 use crate::runtime::ArtifactStore;
 
 /// Executes the exported HLO graphs through the artifact store's compiled-
@@ -66,17 +67,20 @@ impl InferenceBackend for PjrtBackend<'_> {
     }
 
     fn run_batch(&self, x: &[f32], batch: usize, weights: &[HostTensor],
-                 gdc: &[f32], opts: &InferOpts) -> anyhow::Result<Vec<f32>> {
+                 gdc: &[LayerGdc], opts: &InferOpts) -> anyhow::Result<Vec<f32>> {
         // validate_args -> backend::validate_opts refuses any adc_bits
-        // override here: the quantizers are baked into the AOT-compiled
-        // graph, so a per-request bitwidth cannot be honored
+        // override or fault spec here: the quantizers and clean weights
+        // are baked into the AOT-compiled graph
         self.validate_args(x, batch, weights, gdc, opts)?;
         let (ih, iw, ic) = self.meta.input_hwc;
         let exe = self.store.executable(&self.vid, self.bits, batch)?;
         let mut inputs = Vec::with_capacity(2 + weights.len());
         inputs.push(HostTensor::new(vec![batch, ih, iw, ic], x.to_vec()));
         inputs.extend_from_slice(weights);
-        inputs.push(HostTensor::new(vec![gdc.len()], gdc.to_vec()));
+        // the exported graph consumes one scalar per layer: the uniform
+        // alphas (per-tile granularity has no graph input to ride)
+        let flat: Vec<f32> = gdc.iter().map(|g| g.uniform).collect();
+        inputs.push(HostTensor::new(vec![flat.len()], flat));
         exe.run(&inputs)
     }
 }

@@ -30,6 +30,17 @@ pub struct Metrics {
     /// refused connection). Submit-time failures of wire requests count
     /// under `submit_rejects` like everyone else's.
     pub wire_rejects: AtomicU64,
+    /// responses served while the coordinator's health probe judged the
+    /// analog path degraded (canary argmax agreement below threshold) —
+    /// the clients got answers, but under a failing array
+    pub degraded_responses: AtomicU64,
+    /// health probes run (startup, after reprogramming, after refreshes)
+    pub health_probes: AtomicU64,
+    /// canary samples whose analog argmax agreed with the clean native
+    /// reference, across all probes
+    pub canary_agree: AtomicU64,
+    /// canary samples probed, across all probes
+    pub canary_total: AtomicU64,
     /// per-request end-to-end latencies, microseconds
     lat_us: Mutex<Vec<f64>>,
     /// simulated accelerator energy, nanojoules
@@ -49,6 +60,10 @@ impl Default for Metrics {
             submit_rejects: AtomicU64::new(0),
             wire_requests: AtomicU64::new(0),
             wire_rejects: AtomicU64::new(0),
+            degraded_responses: AtomicU64::new(0),
+            health_probes: AtomicU64::new(0),
+            canary_agree: AtomicU64::new(0),
+            canary_total: AtomicU64::new(0),
             lat_us: Mutex::new(Vec::new()),
             sim_energy_nj: Mutex::new(0.0),
         }
@@ -87,6 +102,10 @@ impl Metrics {
             submit_rejects: self.submit_rejects.load(Ordering::Relaxed),
             wire_requests: self.wire_requests.load(Ordering::Relaxed),
             wire_rejects: self.wire_rejects.load(Ordering::Relaxed),
+            degraded_responses: self.degraded_responses.load(Ordering::Relaxed),
+            health_probes: self.health_probes.load(Ordering::Relaxed),
+            canary_agree: self.canary_agree.load(Ordering::Relaxed),
+            canary_total: self.canary_total.load(Ordering::Relaxed),
             elapsed_s,
             req_per_sec: if elapsed_s > 0.0 {
                 completed as f64 / elapsed_s
@@ -123,6 +142,14 @@ pub struct MetricsSummary {
     pub wire_requests: u64,
     /// pre-submit wire rejects (see [`Metrics::wire_rejects`])
     pub wire_rejects: u64,
+    /// responses served while degraded (see [`Metrics::degraded_responses`])
+    pub degraded_responses: u64,
+    /// health probes run (see [`Metrics::health_probes`])
+    pub health_probes: u64,
+    /// canary agreements across probes (see [`Metrics::canary_agree`])
+    pub canary_agree: u64,
+    /// canary samples across probes (see [`Metrics::canary_total`])
+    pub canary_total: u64,
     pub elapsed_s: f64,
     /// completed requests per wall second since coordinator start
     pub req_per_sec: f64,
@@ -152,6 +179,11 @@ impl MetricsSummary {
         m.insert("submit_rejects".to_string(), num(self.submit_rejects as f64));
         m.insert("wire_requests".to_string(), num(self.wire_requests as f64));
         m.insert("wire_rejects".to_string(), num(self.wire_rejects as f64));
+        m.insert("degraded_responses".to_string(),
+                 num(self.degraded_responses as f64));
+        m.insert("health_probes".to_string(), num(self.health_probes as f64));
+        m.insert("canary_agree".to_string(), num(self.canary_agree as f64));
+        m.insert("canary_total".to_string(), num(self.canary_total as f64));
         m.insert("elapsed_s".to_string(), num(self.elapsed_s));
         m.insert("req_per_sec".to_string(), num(self.req_per_sec));
         m.insert("mean_batch".to_string(), num(self.mean_batch));
@@ -168,12 +200,14 @@ impl std::fmt::Display for MetricsSummary {
         write!(
             f,
             "req={} done={} launches={} batch={:.1} padded={} refreshes={} \
-             submit_rej={} wire={}/{} rps={:.0} lat p50={:.0}us p99={:.0}us \
-             mean={:.0}us sim_energy={:.2}uJ/inf",
+             submit_rej={} wire={}/{} degraded={} probes={}:{}/{} rps={:.0} \
+             lat p50={:.0}us p99={:.0}us mean={:.0}us sim_energy={:.2}uJ/inf",
             self.requests, self.completed, self.launches, self.mean_batch,
             self.padded_slots, self.weight_refreshes, self.submit_rejects,
-            self.wire_requests, self.wire_rejects, self.req_per_sec,
-            self.p50_us, self.p99_us, self.mean_us, self.sim_uj_per_inf
+            self.wire_requests, self.wire_rejects, self.degraded_responses,
+            self.health_probes, self.canary_agree, self.canary_total,
+            self.req_per_sec, self.p50_us, self.p99_us, self.mean_us,
+            self.sim_uj_per_inf
         )
     }
 }
@@ -228,5 +262,25 @@ mod tests {
         assert!(txt.contains("\"wire_requests\":7"), "{txt}");
         assert!(txt.contains("\"wire_rejects\":3"), "{txt}");
         assert!(s.to_string().contains("wire=7/3"), "{s}");
+    }
+
+    #[test]
+    fn health_counters_surface_everywhere() {
+        let m = Metrics::default();
+        m.degraded_responses.store(4, Ordering::Relaxed);
+        m.health_probes.store(2, Ordering::Relaxed);
+        m.canary_agree.store(5, Ordering::Relaxed);
+        m.canary_total.store(8, Ordering::Relaxed);
+        let s = m.summary();
+        assert_eq!((s.degraded_responses, s.health_probes,
+                    s.canary_agree, s.canary_total),
+                   (4, 2, 5, 8));
+        let txt = crate::util::json::write(&s.to_json());
+        assert!(txt.contains("\"degraded_responses\":4"), "{txt}");
+        assert!(txt.contains("\"health_probes\":2"), "{txt}");
+        assert!(txt.contains("\"canary_agree\":5"), "{txt}");
+        assert!(txt.contains("\"canary_total\":8"), "{txt}");
+        assert!(s.to_string().contains("degraded=4"), "{s}");
+        assert!(s.to_string().contains("probes=2:5/8"), "{s}");
     }
 }

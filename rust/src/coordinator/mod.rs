@@ -22,5 +22,5 @@ pub mod state;
 
 pub use batcher::BatchPlan;
 pub use metrics::Metrics;
-pub use server::{Coordinator, Request, Response, ServeConfig};
+pub use server::{Coordinator, HealthReport, Request, Response, ServeConfig};
 pub use state::PcmState;

@@ -30,14 +30,16 @@ use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::backend::{self, BackendKind, InferOpts, InferenceBackend};
+use crate::backend::{self, BackendKind, HostTensor, InferOpts,
+                     InferenceBackend};
 use crate::coordinator::batcher;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::state::PcmState;
 use crate::crossbar::ArrayGeom;
 use crate::eval::DeployedModel;
 use crate::mapping::map_model;
-use crate::pcm::PcmParams;
+use crate::nn::{expand_dw_dense, LayerKind};
+use crate::pcm::{FaultSpec, PcmParams};
 use crate::runtime::ArtifactStore;
 use crate::timing::{model_perf, EnergyModel};
 use crate::util::logits;
@@ -78,6 +80,13 @@ pub struct ServeConfig {
     pub refresh_every_s: f64,
     /// reprogram the array when mean GDC alpha exceeds 1.15
     pub reprogram: bool,
+    /// deployment-default device-variability scenario: stamped onto the
+    /// programmed array at worker start ([`PcmState::set_faults`]) and
+    /// re-stamped after every reprogram. Option-less requests serve this
+    /// scenario; requests carrying their own [`InferOpts::faults`] win for
+    /// that request. [`FaultSpec::none()`] (the default) serves the
+    /// pristine array bit for bit.
+    pub faults: FaultSpec,
     pub artifacts_dir: std::path::PathBuf,
 }
 
@@ -95,6 +104,7 @@ impl ServeConfig {
             seed: 7,
             refresh_every_s: 60.0,
             reprogram: false,
+            faults: FaultSpec::none(),
             artifacts_dir: crate::nn::manifest::artifacts_dir(),
         }
     }
@@ -116,6 +126,13 @@ impl ServeConfig {
     /// [`InferOpts::t_drift`] instead).
     pub fn with_drift_time(mut self, drift_time_s: f64) -> Self {
         self.drift_time = drift_time_s;
+        self
+    }
+
+    /// Builder-style deployment-default fault scenario (see
+    /// [`faults`](Self::faults)).
+    pub fn with_faults(mut self, faults: FaultSpec) -> Self {
+        self.faults = faults;
         self
     }
 }
@@ -143,8 +160,26 @@ pub struct Response {
     pub adc_bits: u32,
 }
 
+/// Result of one canary health probe: the worker runs a fixed synthetic
+/// batch through the serving engine under the deployment-default fault
+/// scenario and compares argmax predictions against a clean native
+/// reference computed once at startup. `degraded` means agreement fell
+/// below 3 of 4 — the coordinator keeps serving (graceful degradation),
+/// but every response dispatched while degraded counts under
+/// `Metrics::degraded_responses`.
+#[derive(Clone, Copy, Debug)]
+pub struct HealthReport {
+    /// canary samples probed
+    pub canary: usize,
+    /// canaries whose analog argmax matched the clean native reference
+    pub agree: usize,
+    /// agreement below the 3/4 threshold
+    pub degraded: bool,
+}
+
 enum Msg {
     Req(Request),
+    Probe(mpsc::Sender<HealthReport>),
     Stop,
 }
 
@@ -175,6 +210,14 @@ impl Coordinator {
         // clients would only ever see "coordinator stopped")
         let store = ArtifactStore::open(&cfg.artifacts_dir)?;
         let meta = store.meta(&cfg.vid)?;
+        // the deployment-default fault scenario obeys the same per-engine
+        // gates as per-request specs: an invalid spec (or one this engine
+        // cannot execute, e.g. ADC errors outside AnalogCim) fails here
+        // with its real error instead of inside the worker
+        backend::validate_opts(cfg.backend, cfg.bits, &InferOpts {
+            faults: Some(cfg.faults),
+            ..InferOpts::default()
+        })?;
         {
             let be = backend::create(cfg.backend, &store, &cfg.vid, cfg.bits)?;
             be.probe()?;
@@ -261,6 +304,22 @@ impl Coordinator {
         rx.recv().map_err(|_| anyhow::anyhow!("coordinator dropped request"))
     }
 
+    /// Run a health probe now and return its report: the worker replays
+    /// the canary batch through the serving engine (current device age,
+    /// deployment-default fault scenario) and spot-checks argmax
+    /// consistency against the clean native reference. Also runs
+    /// automatically at startup, after every reprogram, and after each
+    /// weight-refresh cadence; this entry point is for operators who want
+    /// an on-demand answer (and for tests).
+    pub fn probe_health(&self) -> anyhow::Result<HealthReport> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Msg::Probe(rtx))
+            .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
+        rrx.recv()
+            .map_err(|_| anyhow::anyhow!("coordinator stopped"))
+    }
+
     /// Graceful-shutdown hook for shared (`Arc`-held) coordinators: ask
     /// the worker to drain the queue and exit, without consuming the
     /// handle. In-flight requests still receive their responses; later
@@ -304,6 +363,10 @@ struct Dispatcher<'a> {
     feat_len: usize,
     classes: usize,
     nj_per_inf: f64,
+    /// latest health-probe verdict: while true, every response dispatched
+    /// counts under `Metrics::degraded_responses` (the coordinator keeps
+    /// serving — degradation is graceful, not fatal)
+    degraded: bool,
 }
 
 impl Dispatcher<'_> {
@@ -349,18 +412,18 @@ impl Dispatcher<'_> {
             .padded_slots
             .fetch_add(plan.padding as u64, Ordering::Relaxed);
 
-        // effective weights for this group's device age: an explicit-age
-        // read for `t_drift` requests, the clock-driven cache otherwise.
-        // Either way the borrow is straight out of the state cache — no
-        // per-drain clone of the full weight set (the PJRT path copies
-        // inside run_batch, the native paths read the slices in place).
+        // which fault scenario this group serves under: the request's own
+        // spec when it carries one, the deployment default otherwise
+        let spec = opts.faults.unwrap_or_else(|| state.faults());
+        // effective weights for this group's device age and scenario: an
+        // explicit-age read for `t_drift` requests, the clock-driven cache
+        // otherwise. Either way the borrow is straight out of the state
+        // cache — no per-drain clone of the full weight set (the PJRT path
+        // copies inside run_batch, the native paths read the slices in
+        // place).
         let (ws, alphas, sim_age, refreshed) = match opts.t_drift {
-            Some(t) => state.weights_at(t),
-            None => {
-                let age = state.sim_age_s();
-                let (ws, alphas, refreshed) = state.current_weights();
-                (ws, alphas, age, refreshed)
-            }
+            Some(t) => state.weights_at_spec(t, &spec),
+            None => state.current_weights_spec(&spec),
         };
         if refreshed {
             self.metrics
@@ -368,6 +431,14 @@ impl Dispatcher<'_> {
                 .fetch_add(1, Ordering::Relaxed);
         }
         let adc_bits = opts.effective_bits(self.be.bits());
+        // the ADC-side faults execute inside the backend, so the resolved
+        // scenario must ride the launch options (weight-side faults already
+        // live in the conductances read above); a none-equivalent spec
+        // stays out so the clean path is bit-identical to pre-fault serving
+        let run_opts = InferOpts {
+            faults: (!spec.is_none()).then_some(spec),
+            ..opts
+        };
 
         let feat_len = self.feat_len;
         let mut taken = 0usize;
@@ -385,11 +456,16 @@ impl Dispatcher<'_> {
                 b[..feat_len].copy_from_slice(&a[..feat_len]);
             }
 
-            let out = self.be.run_batch(xb, launch, ws, alphas, &opts)?;
+            let out = self.be.run_batch(xb, launch, ws, alphas, &run_opts)?;
             self.metrics.launches.fetch_add(1, Ordering::Relaxed);
             self.metrics
                 .batched_slots
                 .fetch_add(count as u64, Ordering::Relaxed);
+            if self.degraded {
+                self.metrics
+                    .degraded_responses
+                    .fetch_add(count as u64, Ordering::Relaxed);
+            }
 
             let now = Instant::now();
             for (i, r) in group[taken..taken + count].iter().enumerate() {
@@ -413,6 +489,48 @@ impl Dispatcher<'_> {
         }
         Ok(())
     }
+}
+
+/// The worker's canary: a deterministic synthetic batch plus the clean
+/// native reference predictions it was graded against at startup. The
+/// probe replays `x` through the *serving* engine (current device age,
+/// default fault scenario) and counts argmax agreement — a cheap
+/// end-to-end spot-check that the analog path still computes the same
+/// answers as an ideal digital execution.
+struct Canary {
+    x: Vec<f32>,
+    n: usize,
+    ref_preds: Vec<u32>,
+}
+
+/// Run one health probe: serve the canary batch under the deployment
+/// default and grade it against the clean reference. Updates the probe
+/// counters; the caller owns propagating `degraded` to the dispatcher.
+fn probe(be: &dyn InferenceBackend, state: &mut PcmState, canary: &Canary,
+         classes: usize, metrics: &Metrics) -> anyhow::Result<HealthReport> {
+    let spec = state.faults();
+    let popts = InferOpts {
+        faults: (!spec.is_none()).then_some(spec),
+        ..InferOpts::default()
+    };
+    let (ws, alphas, refreshed) = state.current_weights();
+    if refreshed {
+        metrics.weight_refreshes.fetch_add(1, Ordering::Relaxed);
+    }
+    let out = be.run_batch(&canary.x, canary.n, ws, alphas, &popts)?;
+    let agree = (0..canary.n)
+        .filter(|&i| {
+            logits::argmax(&out[i * classes..(i + 1) * classes])
+                == canary.ref_preds[i]
+        })
+        .count();
+    // degraded below 3/4 agreement: drift read noise may flip a borderline
+    // canary, a stuck-cell cluster flips most of them
+    let degraded = agree * 4 < canary.n * 3;
+    metrics.health_probes.fetch_add(1, Ordering::Relaxed);
+    metrics.canary_agree.fetch_add(agree as u64, Ordering::Relaxed);
+    metrics.canary_total.fetch_add(canary.n as u64, Ordering::Relaxed);
+    Ok(HealthReport { canary: canary.n, agree, degraded })
 }
 
 fn worker(cfg: ServeConfig, rx: mpsc::Receiver<Msg>, metrics: Arc<Metrics>)
@@ -454,6 +572,11 @@ fn worker(cfg: ServeConfig, rx: mpsc::Receiver<Msg>, metrics: Arc<Metrics>)
     let deployed = DeployedModel::program(&store, &cfg.vid, &params, &mut rng)?;
     let mut state = PcmState::new(deployed, params, cfg.seed ^ 0xD1F7, cfg.time_scale);
     state.refresh_every_s = cfg.refresh_every_s;
+    // deployment-default fault scenario + per-tile calibration target,
+    // both installed before the clock starts so the first read already
+    // serves the faulted, tile-calibrated array
+    state.set_faults(cfg.faults);
+    state.set_calib_geom(be.calib_geom());
     state.set_initial_age(cfg.drift_time);
 
     let dynamic = be.supports_dynamic_batch();
@@ -468,6 +591,39 @@ fn worker(cfg: ServeConfig, rx: mpsc::Receiver<Msg>, metrics: Arc<Metrics>)
     if dynamic {
         be.prepare(max_batch)?;
     }
+    // canary batch for the health probe: deterministic synthetic features
+    // (a function of the seed alone), graded once against the exact FP
+    // weights on the clean native engine. Static-shape engines probe at
+    // their smallest exported graph size; dynamic engines use 4 samples.
+    let canary_n = if dynamic { 4.min(max_batch.max(1)) } else { batch_sizes[0] };
+    let canary = {
+        let mut crng = Rng::new(cfg.seed ^ 0xCA9A_11A5);
+        let x: Vec<f32> = (0..canary_n * feat_len)
+            .map(|_| crng.uniform() as f32)
+            .collect();
+        let tensors = store.weights(&cfg.vid)?;
+        let mut exact = Vec::with_capacity(tensors.len());
+        for (lm, t) in meta.layers.iter().zip(tensors.iter()) {
+            // same depthwise expansion the PCM programming applies, so the
+            // reference sees the exact weights in the deployed layout
+            if lm.analog && lm.kind == LayerKind::Dw3x3 {
+                exact.push(HostTensor::from_tensor(&expand_dw_dense(t)));
+            } else {
+                exact.push(HostTensor::from_tensor(t));
+            }
+        }
+        let unity = crate::pcm::gdc::unity(exact.len());
+        let nref = backend::create_with_threads(BackendKind::Native, &store,
+                                                &cfg.vid, cfg.bits, 1)?;
+        nref.prepare(canary_n)?;
+        let rout = nref.run_batch(&x, canary_n, &exact, &unity,
+                                  &InferOpts::default())?;
+        let ref_preds: Vec<u32> = (0..canary_n)
+            .map(|i| logits::argmax(&rout[i * classes..(i + 1) * classes]))
+            .collect();
+        Canary { x, n: canary_n, ref_preds }
+    };
+
     let max_queue = xcap * 4;
     let mut queue: Vec<Request> = Vec::with_capacity(max_queue);
     let mut disp = Dispatcher {
@@ -480,12 +636,28 @@ fn worker(cfg: ServeConfig, rx: mpsc::Receiver<Msg>, metrics: Arc<Metrics>)
         feat_len,
         classes,
         nj_per_inf,
+        degraded: false,
     };
+
+    // startup probe: the verdict on the just-deployed (possibly faulted)
+    // array, before any traffic is served under it
+    disp.degraded = probe(disp.be, &mut state, &canary, classes,
+                          &metrics)?.degraded;
+    let mut probed_at_refresh = metrics.weight_refreshes.load(Ordering::Relaxed);
 
     loop {
         // block for the first request
         match rx.recv() {
             Ok(Msg::Req(r)) => queue.push(r),
+            Ok(Msg::Probe(reply)) => {
+                let hr = probe(disp.be, &mut state, &canary, classes,
+                               &metrics)?;
+                disp.degraded = hr.degraded;
+                probed_at_refresh =
+                    metrics.weight_refreshes.load(Ordering::Relaxed);
+                let _ = reply.send(hr);
+                continue;
+            }
             Ok(Msg::Stop) | Err(_) => break,
         }
         // batching window: gather more until max_wait or queue full
@@ -497,9 +669,13 @@ fn worker(cfg: ServeConfig, rx: mpsc::Receiver<Msg>, metrics: Arc<Metrics>)
             }
             match rx.recv_timeout(deadline - now) {
                 Ok(Msg::Req(r)) => queue.push(r),
-                Ok(Msg::Stop) => {
-                    disp.drain(&mut state, &mut queue)?;
-                    return Ok(());
+                Ok(Msg::Probe(reply)) => {
+                    let hr = probe(disp.be, &mut state, &canary, classes,
+                                   &metrics)?;
+                    disp.degraded = hr.degraded;
+                    probed_at_refresh =
+                        metrics.weight_refreshes.load(Ordering::Relaxed);
+                    let _ = reply.send(hr);
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
@@ -508,8 +684,20 @@ fn worker(cfg: ServeConfig, rx: mpsc::Receiver<Msg>, metrics: Arc<Metrics>)
         disp.drain(&mut state, &mut queue)?;
 
         // drift management between dispatches
+        let mut reprogrammed = false;
         if cfg.reprogram && state.needs_reprogram() {
             state.reprogram(&store, &cfg.vid)?;
+            reprogrammed = true;
+        }
+        // re-probe whenever the weights moved since the last verdict
+        // (cadence refresh or the reprogram above): the health answer is a
+        // property of the weights actually being served
+        let refreshes = metrics.weight_refreshes.load(Ordering::Relaxed);
+        if reprogrammed || refreshes != probed_at_refresh {
+            disp.degraded = probe(disp.be, &mut state, &canary, classes,
+                                  &metrics)?.degraded;
+            probed_at_refresh =
+                metrics.weight_refreshes.load(Ordering::Relaxed);
         }
     }
     Ok(())

@@ -1,35 +1,59 @@
 //! PCM array state management: drift clock, periodic weight refresh,
-//! GDC recalibration, and the reprogramming policy.
+//! GDC recalibration, fault-scenario bookkeeping, and the reprogramming
+//! policy.
 
 use std::time::Instant;
 
 use crate::backend::HostTensor;
+use crate::crossbar::ArrayGeom;
 use crate::eval::{DeployedLayer, DeployedModel};
-use crate::pcm::{gdc, PcmParams};
+use crate::pcm::{gdc, FaultSpec, LayerGdc, PcmParams};
 use crate::util::rng::Rng;
 
 /// One cached explicit-age weight read (see [`PcmState::weights_at`]).
 struct AgedRead {
     /// `f64::to_bits` of the clamped age — exact-match key
     age_key: u64,
+    /// `FaultSpec::key()` of the scenario this read was taken under —
+    /// faulted and clean reads of the same age must never alias
+    fault_key: u64,
     /// sim-clock time the read was taken (refresh-cadence staleness;
     /// deliberately NOT bumped on hits — that would freeze noise forever)
     read_at_s: f64,
     /// sim-clock time of the last hit (LRU eviction recency)
     last_used_s: f64,
     ws: Vec<HostTensor>,
-    alphas: Vec<f32>,
+    alphas: Vec<LayerGdc>,
 }
 
-/// Distinct device ages the explicit-age cache holds at once. Sized for
-/// the expected shape of mixed-age traffic (a handful of cohorts in
-/// steady rotation): with N <= this many ages alternating, every drain
-/// hits the cache instead of re-sampling full-model read noise per group.
+/// Distinct (device age, fault scenario) entries the explicit-age cache
+/// holds at once. Sized for the expected shape of mixed traffic (a
+/// handful of cohorts in steady rotation): with N <= this many cohorts
+/// alternating, every drain hits the cache instead of re-sampling
+/// full-model read noise per group.
 const AGED_CACHE_ENTRIES: usize = 4;
+
+/// Non-default fault scenarios whose programmed (faulted) model copies we
+/// keep around. Each is a full `DeployedModel` clone, so the cap is small:
+/// mixed-scenario traffic beyond it re-derives from the pristine copy.
+const DERIVED_CACHE_ENTRIES: usize = 2;
 
 /// Live PCM state behind the serving loop.
 pub struct PcmState {
+    /// the model currently being served: the pristine programming with the
+    /// deployment's default [`FaultSpec`] stamped on
     pub deployed: DeployedModel,
+    /// the fault-free programming every scenario derives from
+    pristine: DeployedModel,
+    /// the deployment's default fault scenario (`none()` unless serving
+    /// was started with `--faults`)
+    faults: FaultSpec,
+    /// per-request fault scenarios other than the default, keyed by
+    /// `FaultSpec::key()` — bounded, insertion-order evicted
+    derived: Vec<(u64, DeployedModel)>,
+    /// tile geometry for per-tile GDC calibration (`None` = uniform GDC,
+    /// the right choice for full-K engines)
+    calib_geom: Option<ArrayGeom>,
     pub params: PcmParams,
     rng: Rng,
     /// wall-clock origin of the current programming
@@ -40,11 +64,12 @@ pub struct PcmState {
     /// simulated age offset (programming completes at t_c = 25 s)
     age_offset_s: f64,
     /// cached effective weights + GDC (refreshed on a simulated-time cadence)
-    cached: Option<(Vec<HostTensor>, Vec<f32>)>,
+    cached: Option<(Vec<HostTensor>, Vec<LayerGdc>)>,
     cached_at_s: f64,
-    /// bounded cache for explicit-age reads ([`Self::weights_at`],
-    /// per-request drift): up to `AGED_CACHE_ENTRIES` device ages, each
-    /// reused until the refresh cadence elapses, LRU-evicted
+    /// bounded cache for explicit-age/scenario reads
+    /// ([`Self::weights_at`], per-request drift and faults): up to
+    /// `AGED_CACHE_ENTRIES` cohorts, each reused until the refresh cadence
+    /// elapses, LRU-evicted
     aged: Vec<AgedRead>,
     /// refresh cadence in simulated seconds
     pub refresh_every_s: f64,
@@ -58,7 +83,11 @@ impl PcmState {
     pub fn new(deployed: DeployedModel, params: PcmParams, seed: u64,
                time_scale: f64) -> Self {
         PcmState {
+            pristine: deployed.clone(),
             deployed,
+            faults: FaultSpec::none(),
+            derived: Vec::new(),
+            calib_geom: None,
             params,
             rng: Rng::new(seed),
             programmed_at: Instant::now(),
@@ -71,6 +100,48 @@ impl PcmState {
             reprogram_alpha: 1.15,
             reprogram_count: 0,
             gdc_enabled: true,
+        }
+    }
+
+    /// Drop every cached read — clock-driven, explicit-age, and derived
+    /// fault models. The single invalidation point: anything that changes
+    /// what a read would return (initial age, reprogramming, fault spec,
+    /// calibration geometry) must go through here so stale weights are
+    /// never served.
+    fn invalidate(&mut self) {
+        self.cached = None;
+        self.cached_at_s = f64::NEG_INFINITY;
+        self.aged.clear();
+        self.derived.clear();
+    }
+
+    /// The deployment's default fault scenario.
+    pub fn faults(&self) -> FaultSpec {
+        self.faults
+    }
+
+    /// Install `spec` as the deployment default: the served model becomes
+    /// the pristine programming with `spec`'s stuck cells / conductance
+    /// spread stamped on, and **every** cached read is dropped — a request
+    /// arriving after this call can never observe pre-fault weights (the
+    /// same invalidation contract `set_initial_age` and `reprogram` keep).
+    pub fn set_faults(&mut self, spec: FaultSpec) {
+        self.faults = spec;
+        self.deployed = self.pristine.clone();
+        if spec.has_weight_faults() {
+            self.deployed.apply_faults(&spec);
+        }
+        self.invalidate();
+    }
+
+    /// Target tile geometry for per-tile GDC calibration (take it from
+    /// [`InferenceBackend::calib_geom`](crate::backend::InferenceBackend::calib_geom)).
+    /// Changing it invalidates cached reads: their alphas were calibrated
+    /// for the old geometry.
+    pub fn set_calib_geom(&mut self, geom: Option<ArrayGeom>) {
+        if self.calib_geom != geom {
+            self.calib_geom = geom;
+            self.invalidate();
         }
     }
 
@@ -87,9 +158,7 @@ impl PcmState {
     /// dispatch sees conductances drifted to the new age.
     pub fn set_initial_age(&mut self, age_s: f64) {
         self.age_offset_s = crate::pcm::clamp_age(age_s);
-        self.cached = None;
-        self.cached_at_s = f64::NEG_INFINITY;
-        self.aged.clear();
+        self.invalidate();
     }
 
     /// Mean GDC factor right now (drift health indicator).
@@ -111,34 +180,64 @@ impl PcmState {
     }
 
     /// Reprogram the array (fresh programming noise, drift clock reset).
+    /// The deployment's default fault scenario survives: stuck cells are
+    /// array properties, so the fresh programming is re-faulted with the
+    /// same spec (same pinned pattern, new programming noise around it).
     pub fn reprogram(&mut self, store: &crate::runtime::ArtifactStore,
                      vid: &str) -> anyhow::Result<()> {
-        self.deployed =
+        self.pristine =
             DeployedModel::program(store, vid, &self.params, &mut self.rng)?;
+        self.deployed = self.pristine.clone();
+        if self.faults.has_weight_faults() {
+            self.deployed.apply_faults(&self.faults);
+        }
         self.programmed_at = Instant::now();
-        self.cached = None;
-        self.cached_at_s = f64::NEG_INFINITY;
-        self.aged.clear();
+        self.invalidate();
         self.reprogram_count += 1;
         Ok(())
     }
 
     /// Effective weights + GDC for the current simulated time, refreshed on
     /// the configured cadence (fresh 1/f read noise on each refresh).
-    /// The bool is true when this call performed a refresh.
-    pub fn current_weights(&mut self) -> (&Vec<HostTensor>, &Vec<f32>, bool) {
+    /// The bool is true when this call performed a refresh. Serves the
+    /// deployment-default fault scenario; per-request scenarios go through
+    /// [`current_weights_spec`](Self::current_weights_spec).
+    pub fn current_weights(&mut self)
+                           -> (&Vec<HostTensor>, &Vec<LayerGdc>, bool) {
         let t = self.sim_age_s();
         let mut refreshed = false;
         if self.cached.is_none() || t - self.cached_at_s >= self.refresh_every_s {
-            let (ws, alphas) =
-                self.deployed
-                    .read_at(t, &self.params, &mut self.rng, self.gdc_enabled);
+            let (ws, alphas) = self.deployed.read_at_calibrated(
+                t, &self.params, &mut self.rng, self.gdc_enabled,
+                self.calib_geom);
             self.cached = Some((ws, alphas));
             self.cached_at_s = t;
             refreshed = true;
         }
         let c = self.cached.as_ref().unwrap();
         (&c.0, &c.1, refreshed)
+    }
+
+    /// [`current_weights`](Self::current_weights) under an explicit fault
+    /// scenario. The default scenario delegates to the clock cache; any
+    /// other spec reads at the cadence-quantized current age through the
+    /// explicit cohort cache, so steady mixed-scenario traffic re-samples
+    /// noise once per cadence, not once per drain. Returns the device age
+    /// actually served.
+    pub fn current_weights_spec(&mut self, spec: &FaultSpec)
+                                -> (&Vec<HostTensor>, &Vec<LayerGdc>, f64, bool) {
+        let now = self.sim_age_s();
+        if spec.key() == self.faults.key() {
+            let (ws, alphas, refreshed) = self.current_weights();
+            return (ws, alphas, now, refreshed);
+        }
+        let q = if self.refresh_every_s > 0.0 && self.refresh_every_s.is_finite() {
+            (now / self.refresh_every_s).floor() * self.refresh_every_s
+        } else {
+            now
+        };
+        let (ws, alphas, _, refreshed) = self.weights_at_spec(q, spec);
+        (ws, alphas, crate::pcm::clamp_age(q), refreshed)
     }
 
     /// Effective weights + GDC at an **explicit** device age (per-request
@@ -155,38 +254,70 @@ impl PcmState {
     /// coldest cohort, not a hot one. The bool is true when this call
     /// performed a fresh read.
     pub fn weights_at(&mut self, age_s: f64)
-                      -> (&Vec<HostTensor>, &Vec<f32>, f64, bool) {
+                      -> (&Vec<HostTensor>, &Vec<LayerGdc>, f64, bool) {
+        let spec = self.faults;
+        self.weights_at_spec(age_s, &spec)
+    }
+
+    /// [`weights_at`](Self::weights_at) under an explicit fault scenario.
+    /// Reads the scenario's own programmed model: the deployment default
+    /// serves `deployed` directly; any other spec derives a faulted copy
+    /// of the pristine programming (bounded cache of
+    /// `DERIVED_CACHE_ENTRIES` scenarios). Cache entries key on
+    /// `(age, FaultSpec::key())`, so faulted and clean cohorts of the
+    /// same age never alias.
+    pub fn weights_at_spec(&mut self, age_s: f64, spec: &FaultSpec)
+                           -> (&Vec<HostTensor>, &Vec<LayerGdc>, f64, bool) {
         // same clamp the batch key applies, so key-equal requests are
         // guaranteed to be age-equal reads
         let t = crate::pcm::clamp_age(age_s);
         let age_key = t.to_bits();
+        let fault_key = spec.key();
         let now = self.sim_age_s();
         let hit = self
             .aged
             .iter()
             .position(|a| a.age_key == age_key
+                && a.fault_key == fault_key
                 && now - a.read_at_s < self.refresh_every_s);
         let (idx, refreshed) = match hit {
             Some(i) => (i, false),
             None => {
-                let (ws, alphas) = self.deployed.read_at(
-                    t, &self.params, &mut self.rng, self.gdc_enabled);
+                let default_key = self.faults.key();
+                if fault_key != default_key {
+                    self.ensure_derived(fault_key, spec);
+                }
+                let (ws, alphas) = {
+                    let model = if fault_key == default_key {
+                        &self.deployed
+                    } else {
+                        &self
+                            .derived
+                            .iter()
+                            .find(|(k, _)| *k == fault_key)
+                            .expect("ensure_derived just inserted it")
+                            .1
+                    };
+                    model.read_at_calibrated(t, &self.params, &mut self.rng,
+                                             self.gdc_enabled, self.calib_geom)
+                };
                 let entry = AgedRead {
                     age_key,
+                    fault_key,
                     read_at_s: now,
                     last_used_s: now,
                     ws,
                     alphas,
                 };
-                if let Some(i) =
-                    self.aged.iter().position(|a| a.age_key == age_key)
-                {
-                    // cadence-expired entry for this age: refresh in place
+                if let Some(i) = self.aged.iter().position(|a| {
+                    a.age_key == age_key && a.fault_key == fault_key
+                }) {
+                    // cadence-expired entry for this cohort: refresh in place
                     self.aged[i] = entry;
                     (i, true)
                 } else {
                     if self.aged.len() >= AGED_CACHE_ENTRIES {
-                        // evict the least recently *used* age (hits bump
+                        // evict the least recently *used* cohort (hits bump
                         // last_used_s below, so hot cohorts survive a
                         // one-shot odd age)
                         let coldest = self
@@ -208,6 +339,21 @@ impl PcmState {
         let a = &mut self.aged[idx];
         a.last_used_s = now;
         (&a.ws, &a.alphas, t, refreshed)
+    }
+
+    /// Materialize (or find) the derived model for a non-default scenario.
+    fn ensure_derived(&mut self, fault_key: u64, spec: &FaultSpec) {
+        if self.derived.iter().any(|(k, _)| *k == fault_key) {
+            return;
+        }
+        let mut m = self.pristine.clone();
+        if spec.has_weight_faults() {
+            m.apply_faults(spec);
+        }
+        if self.derived.len() >= DERIVED_CACHE_ENTRIES {
+            self.derived.remove(0);
+        }
+        self.derived.push((fault_key, m));
     }
 
     /// Whether the reprogramming policy should fire.
@@ -303,6 +449,67 @@ mod tests {
         // the explicit-age path must not disturb the clock-driven cache
         let clock = st.current_weights().0[0].data.clone();
         assert_ne!(clock, year);
+    }
+
+    #[test]
+    fn applying_faults_invalidates_every_cache() {
+        // the cache-staleness contract: after set_faults, no cached clean
+        // read (clock-driven or explicit-age) may ever be served again —
+        // mirrors the set_initial_age / reprogram invalidation
+        let mut st = PcmState::new(tiny_deployed(), PcmParams::default(), 1, 0.0);
+        st.refresh_every_s = 1e9;
+        let clean_clock = st.current_weights().0[0].data.clone();
+        let clean_aged = st.weights_at(86_400.0).0[0].data.clone();
+        // sanity: both caches are now warm
+        assert!(!st.current_weights().2);
+        assert!(!st.weights_at(86_400.0).3);
+
+        let spec = FaultSpec { stuck_max: 0.5, seed: 7, ..FaultSpec::none() };
+        st.set_faults(spec);
+        assert_eq!(st.faults(), spec);
+        let clock = st.current_weights();
+        assert!(clock.2, "clock cache must be invalidated by set_faults");
+        let faulted_clock = clock.0[0].data.clone();
+        assert_ne!(clean_clock, faulted_clock,
+                   "stale clean weights must never be served");
+        let aged = st.weights_at(86_400.0);
+        assert!(aged.3, "aged cache must be invalidated by set_faults");
+        assert_ne!(clean_aged, aged.0[0].data);
+
+        // re-applying the same spec still invalidates (fresh jitter draw
+        // semantics are the caller's concern; staleness is ours)
+        st.set_faults(spec);
+        assert!(st.current_weights().2);
+
+        // calibration-geometry changes invalidate too
+        st.set_calib_geom(Some(crate::crossbar::ArrayGeom::AON));
+        assert!(st.current_weights().2,
+                "calib geometry change must drop cached alphas");
+        st.set_calib_geom(Some(crate::crossbar::ArrayGeom::AON));
+        assert!(!st.current_weights().2, "same geometry is a no-op");
+    }
+
+    #[test]
+    fn per_request_fault_scenarios_get_their_own_reads() {
+        let mut st = PcmState::new(tiny_deployed(), PcmParams::default(), 1, 0.0);
+        st.refresh_every_s = 1e9;
+        let spec = FaultSpec { stuck_max: 0.5, seed: 3, ..FaultSpec::none() };
+        let clean = st.weights_at(86_400.0).0[0].data.clone();
+        let faulted = st.weights_at_spec(86_400.0, &spec);
+        assert!(faulted.3, "a new scenario is a fresh read");
+        let faulted = faulted.0[0].data.clone();
+        assert_ne!(clean, faulted,
+                   "half the cells stuck at G_max must change the read");
+        // both cohorts stay cached side by side
+        assert!(!st.weights_at(86_400.0).3, "clean cohort survived");
+        assert!(!st.weights_at_spec(86_400.0, &spec).3,
+                "faulted cohort cached");
+        // the current-clock path serves non-default scenarios too
+        let (_, _, age, _) = st.current_weights_spec(&spec);
+        assert!(age >= crate::pcm::T_C_SECONDS);
+        // an explicitly-none spec matches the (clean) deployment default
+        let via_none = st.weights_at_spec(86_400.0, &FaultSpec::none());
+        assert!(!via_none.3, "none-spec aliases the clean default cohort");
     }
 
     #[test]

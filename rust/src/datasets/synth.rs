@@ -298,7 +298,7 @@ mod tests {
                                         "synthmod", 8).unwrap();
         let ws: Vec<crate::backend::HostTensor> =
             w.iter().map(crate::backend::HostTensor::from_tensor).collect();
-        let gdc = vec![1.0f32; ws.len()];
+        let gdc = crate::pcm::gdc::unity(ws.len());
         let xb = ds.padded_batch(0, 4);
         let out = be
             .run_batch(&xb, 4, &ws, &gdc,
@@ -321,7 +321,7 @@ mod tests {
             w.iter().map(crate::backend::HostTensor::from_tensor).collect();
         let x = vec![0.25f32, -1.5, 3.0];
         let out = be
-            .run_batch(&x, 1, &ws, &[1.0],
+            .run_batch(&x, 1, &ws, &crate::pcm::gdc::unity(1),
                        &crate::backend::InferOpts::default())
             .unwrap();
         assert_eq!(out, x, "digital identity dense must be exact");

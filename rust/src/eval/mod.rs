@@ -14,19 +14,24 @@ use std::sync::Arc;
 
 use crate::backend::{self, BackendKind, HostTensor, InferOpts,
                      InferenceBackend};
+use crate::crossbar::ArrayGeom;
 use crate::nn::{expand_dw_dense, LayerKind, ModelMeta, Tensor};
-use crate::pcm::{gdc, PcmParams, ProgrammedWeights};
+use crate::pcm::{gdc, FaultSpec, LayerGdc, PcmParams, ProgrammedWeights};
 use crate::runtime::ArtifactStore;
 use crate::util::logits;
 use crate::util::rng::Rng;
 
 /// One layer's deployed state: PCM-programmed (analog) or exact (digital).
+#[derive(Clone)]
 pub enum DeployedLayer {
     Analog(ProgrammedWeights),
     Digital(Tensor),
 }
 
-/// A variant programmed onto the simulated PCM array.
+/// A variant programmed onto the simulated PCM array. `Clone` on purpose:
+/// the serving coordinator keeps a pristine copy and derives faulted
+/// deployments from it without reprogramming.
+#[derive(Clone)]
 pub struct DeployedModel {
     pub meta: Arc<ModelMeta>,
     pub layers: Vec<DeployedLayer>,
@@ -60,9 +65,37 @@ impl DeployedModel {
         Ok(DeployedModel { meta, layers })
     }
 
-    /// Effective weight tensors + GDC vector at `t` seconds after programming.
+    /// Stamp a device-variability scenario onto the programmed array:
+    /// stuck cells and extra conductance spread per analog layer, seeded
+    /// by `(spec.seed, layer index)` so the pattern is a property of the
+    /// spec alone (see `pcm::fault`). Digital layers are untouched. A
+    /// weightless spec is a no-op; call on a fresh program (re-applying
+    /// compounds the conductance jitter).
+    pub fn apply_faults(&mut self, spec: &FaultSpec) {
+        for (li, dl) in self.layers.iter_mut().enumerate() {
+            if let DeployedLayer::Analog(p) = dl {
+                p.apply_faults(spec, li);
+            }
+        }
+    }
+
+    /// Effective weight tensors + GDC vector at `t` seconds after
+    /// programming, with uniform (layer-wide) drift compensation.
     pub fn read_at(&self, t_seconds: f64, params: &PcmParams, rng: &mut Rng,
-                   use_gdc: bool) -> (Vec<HostTensor>, Vec<f32>) {
+                   use_gdc: bool) -> (Vec<HostTensor>, Vec<LayerGdc>) {
+        self.read_at_calibrated(t_seconds, params, rng, use_gdc, None)
+    }
+
+    /// [`read_at`](Self::read_at) with per-tile GDC calibration: when
+    /// `calib` names a tile geometry (take it from
+    /// [`InferenceBackend::calib_geom`]), each analog layer's factors come
+    /// from [`gdc::calibrate`] — every `tile_grid` tile gets its own alpha
+    /// computed from that tile's actual (possibly faulted) conductance
+    /// slice. `None` degenerates to the uniform read bit for bit.
+    pub fn read_at_calibrated(&self, t_seconds: f64, params: &PcmParams,
+                              rng: &mut Rng, use_gdc: bool,
+                              calib: Option<ArrayGeom>)
+                              -> (Vec<HostTensor>, Vec<LayerGdc>) {
         let mut ws = Vec::with_capacity(self.layers.len());
         let mut alphas = Vec::with_capacity(self.layers.len());
         for dl in self.layers.iter() {
@@ -70,11 +103,15 @@ impl DeployedModel {
                 DeployedLayer::Analog(p) => {
                     let w = p.read_weights(t_seconds, params, rng);
                     ws.push(HostTensor::new(vec![p.rows, p.cols], w));
-                    alphas.push(if use_gdc { gdc::alpha(p, t_seconds) } else { 1.0 });
+                    alphas.push(if use_gdc {
+                        gdc::calibrate(p, t_seconds, calib)
+                    } else {
+                        LayerGdc::flat(1.0)
+                    });
                 }
                 DeployedLayer::Digital(t) => {
                     ws.push(HostTensor::from_tensor(t));
-                    alphas.push(1.0);
+                    alphas.push(LayerGdc::flat(1.0));
                 }
             }
         }
@@ -108,6 +145,12 @@ pub struct EvalOpts {
     /// [`bits`](Self::bits). Weight-fed engines only (PJRT graphs are
     /// compiled at one bitwidth and reject overrides).
     pub adc_bits: Option<u32>,
+    /// device-variability scenario (`--faults` on the CLI): stuck cells
+    /// and conductance spread are stamped onto every programming run
+    /// before reading; ADC gain/offset errors ride each `run_batch` via
+    /// `InferOpts::faults`. [`FaultSpec::none()`] (the default) leaves
+    /// every path bit-identical to a fault-free evaluation.
+    pub faults: FaultSpec,
 }
 
 impl Default for EvalOpts {
@@ -123,6 +166,7 @@ impl Default for EvalOpts {
             backend: BackendKind::default(),
             t_drift: None,
             adc_bits: None,
+            faults: FaultSpec::none(),
         }
     }
 }
@@ -164,15 +208,28 @@ pub fn drift_accuracy_on(be: &dyn InferenceBackend, store: &ArtifactStore,
     let classes = meta.num_classes;
     let (ih, iw, ic) = meta.input_hwc;
     // the per-request options every launch of this evaluation runs under
-    // (drift time is expressed through `times` / the weight read, not here)
-    let iopts = InferOpts { t_drift: None, adc_bits: opts.adc_bits };
+    // (drift time is expressed through `times` / the weight read, not
+    // here); a none-spec stays out of the opts so the fault-free path is
+    // bit-identical to the pre-fault evaluator
+    let iopts = InferOpts {
+        t_drift: None,
+        adc_bits: opts.adc_bits,
+        faults: (!opts.faults.is_none()).then_some(opts.faults),
+    };
+    // per-tile GDC calibration kicks in only for engines that quantize
+    // per tile (and only when drift compensation is on at all)
+    let calib = if opts.use_gdc { be.calib_geom() } else { None };
 
     let mut out = vec![Vec::with_capacity(opts.runs); times.len()];
     for run in 0..opts.runs {
         let mut rng = Rng::new(opts.seed ^ (run as u64).wrapping_mul(0x9E37));
-        let dep = DeployedModel::program(store, vid, &opts.params, &mut rng)?;
+        let mut dep = DeployedModel::program(store, vid, &opts.params, &mut rng)?;
+        if opts.faults.has_weight_faults() {
+            dep.apply_faults(&opts.faults);
+        }
         for (ti, &t) in times.iter().enumerate() {
-            let (ws, alphas) = dep.read_at(t, &opts.params, &mut rng, opts.use_gdc);
+            let (ws, alphas) = dep.read_at_calibrated(t, &opts.params, &mut rng,
+                                                      opts.use_gdc, calib);
             let mut correct = 0usize;
             let mut lo = 0usize;
             while lo < n {

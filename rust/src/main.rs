@@ -13,7 +13,7 @@ use analognets::coordinator::{Coordinator, ServeConfig};
 use analognets::crossbar::ArrayGeom;
 use analognets::eval::{drift_accuracy, drift_accuracy_on, EvalOpts};
 use analognets::mapping::{layout, map_model};
-use analognets::pcm::{FIG7_TIMES, T_C_SECONDS};
+use analognets::pcm::{FaultSpec, FIG7_TIMES, T_C_SECONDS};
 use analognets::runtime::ArtifactStore;
 use analognets::timing::{model_perf, peak, EnergyModel};
 use analognets::util::cli::Args;
@@ -27,6 +27,10 @@ const USAGE: &str = "usage: analognets <serve|eval|map|report|selftest> [options
                                also seeds the serving clock, default 25)]
            [--adc-bits B (stamp every request with this ADC bitwidth,
                           e.g. 4 for the paper's Table-2 scenario)]
+           [--faults SPEC (deployment-default device-variability scenario,
+                           e.g. stuck_min=0.01,adc_gain=0.02,seed=7; keys
+                           stuck_min stuck_max g_sigma adc_offset adc_gain
+                           seed — ADC keys need --backend analog)]
            [--listen ADDR:PORT (wire-protocol TCP server instead of the
                                 synthetic driver; PORT 0 picks a free port)]
            [--max-conns N (wire: concurrent connection cap, default 64)]
@@ -36,6 +40,8 @@ const USAGE: &str = "usage: analognets <serve|eval|map|report|selftest> [options
   eval     --vid kws_full_e10_8b [--bits 8] [--runs 5] [--samples 256]
            [--t-drift SECONDS (single time point instead of the Fig-7 sweep)]
            [--adc-bits B (per-request ADC override, e.g. 4-bit serving)]
+           [--faults SPEC (device-variability scenario, same grammar as
+                           serve; stamped onto every programming run)]
            [--rows R --cols C [--mux M]  (analog backend: tile geometry)]
   map      --vid kws_full_e10_8b [--rows 1024 --cols 512] [--mux 4] [--split]
   report   --vid kws_full_e10_8b [--bits 8]
@@ -78,6 +84,12 @@ fn opt_adc_bits(args: &Args) -> Option<u32> {
         .map(|v| v.parse().expect("integer --adc-bits"))
 }
 
+/// Optional `--faults SPEC` (device-variability scenario; see
+/// [`FaultSpec::parse`] for the grammar).
+fn opt_faults(args: &Args) -> anyhow::Result<Option<FaultSpec>> {
+    args.opt("faults").map(FaultSpec::parse).transpose()
+}
+
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let vid = default_vid(args);
     let bits = args.opt_usize("bits", 8) as u32;
@@ -88,6 +100,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     cfg.max_batch = args.opt_usize("max-batch", 0);
     cfg.threads = args.opt_usize("threads", 0);
     cfg.drift_time = args.opt_f64("t-drift", T_C_SECONDS);
+    // the fault scenario is deployment state, not a per-request stamp: it
+    // goes through ServeConfig so the PCM state programs (and calibrates)
+    // the faulted array once, and every option-less request serves it
+    if let Some(f) = opt_faults(args)? {
+        cfg.faults = f;
+    }
     // per-request options: an explicit --t-drift stamps each request with
     // that device age (winning over the serving clock, which it also
     // seeds for consistent metrics); --adc-bits stamps the quantization
@@ -95,6 +113,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let req_opts = InferOpts {
         t_drift: args.opt("t-drift").map(|v| v.parse().expect("float --t-drift")),
         adc_bits: opt_adc_bits(args),
+        faults: None,
     };
     let store = ArtifactStore::open_default()?;
     let meta = store.meta(&vid)?;
@@ -192,6 +211,7 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
         t_drift: args.opt("t-drift")
             .map(|v| v.parse().expect("float --t-drift")),
         adc_bits: opt_adc_bits(args),
+        faults: opt_faults(args)?.unwrap_or_else(FaultSpec::none),
         ..Default::default()
     };
     let times = opts.sweep_times();
@@ -205,6 +225,9 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
              100.0 * meta.fp_test_acc);
     if let Some(b) = opts.adc_bits {
         println!("[eval] per-request ADC override: quantizing at {b} bits");
+    }
+    if !opts.faults.is_none() {
+        println!("[eval] device-variability scenario: {:?}", opts.faults);
     }
 
     // tile-geometry ablation: a custom array geometry changes which

@@ -1,0 +1,294 @@
+//! Device-variability fault injection ("On the Accuracy of Analog Neural
+//! Network Inference Accelerators", arXiv:2109.01262).
+//!
+//! A [`FaultSpec`] bundles the non-idealities that dominate real arrays
+//! beyond the calibrated drift/noise statistics: stuck-at cells (pinned to
+//! G_min or G_max regardless of programming), per-device conductance
+//! variation on top of programming noise, and per-tile ADC offset/gain
+//! error. Everything is seeded: the same spec always produces the same
+//! fault pattern, independent of the deployment RNG, so CI fault-sweep
+//! numbers are reproducible across processes.
+//!
+//! The weight-side faults (stuck cells, conductance sigma) are applied
+//! once, at programming time, by [`ProgrammedWeights::apply_faults`]
+//! (see `weights`); the ADC-side faults are applied at execution time by
+//! the tile-grid engine via [`AdcFault`] — a stuck cell is a property of
+//! the array, an ADC error a property of each tile's converter.
+
+use crate::util::rng::Rng;
+
+/// Odd 64-bit mixing constant (splitmix64's golden-gamma).
+const MIX: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Derive an independent RNG stream for one (seed, tag) pair.
+pub(crate) fn stream(seed: u64, tag: u64) -> Rng {
+    // splitmix-style finalizer so nearby tags decorrelate
+    let mut z = seed ^ tag.wrapping_mul(MIX);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    Rng::new(z ^ (z >> 31))
+}
+
+/// A complete device-variability scenario. `Copy` on purpose: it rides
+/// inside `InferOpts` and batch keys.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultSpec {
+    /// fraction of cells stuck at G_min (read as conductance 0)
+    pub stuck_min: f64,
+    /// fraction of cells stuck at G_max (read as conductance 1)
+    pub stuck_max: f64,
+    /// extra per-device multiplicative conductance sigma (relative)
+    pub g_sigma: f64,
+    /// per-tile ADC offset sigma, as a fraction of the tile's ADC range
+    pub adc_offset_sigma: f64,
+    /// per-tile ADC gain error sigma (relative, around 1.0)
+    pub adc_gain_sigma: f64,
+    /// fault-pattern seed (independent of the deployment RNG)
+    pub seed: u64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+impl FaultSpec {
+    /// The fault-free spec: every path treats it exactly like "no faults".
+    pub fn none() -> Self {
+        FaultSpec {
+            stuck_min: 0.0,
+            stuck_max: 0.0,
+            g_sigma: 0.0,
+            adc_offset_sigma: 0.0,
+            adc_gain_sigma: 0.0,
+            seed: 0,
+        }
+    }
+
+    /// True when every fault magnitude is zero (the seed is irrelevant).
+    pub fn is_none(&self) -> bool {
+        self.stuck_min == 0.0
+            && self.stuck_max == 0.0
+            && self.g_sigma == 0.0
+            && !self.has_adc_error()
+    }
+
+    /// True when any weight-side fault (stuck cells, conductance sigma)
+    /// is active — these change `ProgrammedWeights`, not the engine.
+    pub fn has_weight_faults(&self) -> bool {
+        self.stuck_min > 0.0 || self.stuck_max > 0.0 || self.g_sigma > 0.0
+    }
+
+    /// True when the per-tile ADC transfer function is perturbed.
+    pub fn has_adc_error(&self) -> bool {
+        self.adc_offset_sigma != 0.0 || self.adc_gain_sigma != 0.0
+    }
+
+    /// Reject physically meaningless specs. This is the submit-time gate:
+    /// `backend::validate_opts` calls it so an invalid spec errors at
+    /// `Coordinator::submit` instead of killing the worker mid-batch.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (name, v) in [("stuck_min", self.stuck_min),
+                          ("stuck_max", self.stuck_max)] {
+            anyhow::ensure!(v.is_finite() && (0.0..=1.0).contains(&v),
+                            "fault spec: {name}={v} must be in [0, 1]");
+        }
+        anyhow::ensure!(self.stuck_min + self.stuck_max <= 1.0,
+                        "fault spec: stuck_min + stuck_max = {} exceeds 1",
+                        self.stuck_min + self.stuck_max);
+        for (name, v) in [("g_sigma", self.g_sigma),
+                          ("adc_offset", self.adc_offset_sigma),
+                          ("adc_gain", self.adc_gain_sigma)] {
+            anyhow::ensure!(v.is_finite() && v >= 0.0,
+                            "fault spec: {name}={v} must be finite and >= 0");
+        }
+        Ok(())
+    }
+
+    /// Deterministic cache/batch key. All `none()`-equivalent specs key to
+    /// 0 regardless of seed, so "no faults" is one equivalence class.
+    pub fn key(&self) -> u64 {
+        if self.is_none() {
+            return 0;
+        }
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325; // FNV-1a offset basis
+        for bits in [self.stuck_min.to_bits(),
+                     self.stuck_max.to_bits(),
+                     self.g_sigma.to_bits(),
+                     self.adc_offset_sigma.to_bits(),
+                     self.adc_gain_sigma.to_bits(),
+                     self.seed] {
+            h = (h ^ bits).wrapping_mul(0x1000_0000_01b3);
+        }
+        // never collide with the reserved "no faults" key
+        h | 1
+    }
+
+    /// The execution-time (ADC) part of the spec, for the tile engine.
+    pub fn adc_fault(&self) -> AdcFault {
+        AdcFault {
+            gain_sigma: self.adc_gain_sigma as f32,
+            offset_sigma: self.adc_offset_sigma as f32,
+            seed: self.seed,
+        }
+    }
+
+    /// Parse the CLI grammar: comma-separated `key=value` pairs with keys
+    /// `stuck_min`, `stuck_max`, `g_sigma`, `adc_offset`, `adc_gain`,
+    /// `seed`; omitted keys stay 0. Example:
+    /// `--faults stuck_min=0.01,adc_gain=0.02,seed=7`.
+    pub fn parse(s: &str) -> anyhow::Result<FaultSpec> {
+        let mut spec = FaultSpec::none();
+        for part in s.split(',').filter(|p| !p.trim().is_empty()) {
+            let (k, v) = part.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("fault spec: `{part}` is not key=value")
+            })?;
+            let (k, v) = (k.trim(), v.trim());
+            match k {
+                "stuck_min" => spec.stuck_min = parse_f64(k, v)?,
+                "stuck_max" => spec.stuck_max = parse_f64(k, v)?,
+                "g_sigma" => spec.g_sigma = parse_f64(k, v)?,
+                "adc_offset" => spec.adc_offset_sigma = parse_f64(k, v)?,
+                "adc_gain" => spec.adc_gain_sigma = parse_f64(k, v)?,
+                "seed" => {
+                    spec.seed = v.parse().map_err(|_| {
+                        anyhow::anyhow!("fault spec: seed=`{v}` not an integer")
+                    })?
+                }
+                _ => anyhow::bail!(
+                    "fault spec: unknown key `{k}` (expected stuck_min, \
+                     stuck_max, g_sigma, adc_offset, adc_gain, seed)"
+                ),
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+fn parse_f64(k: &str, v: &str) -> anyhow::Result<f64> {
+    v.parse()
+        .map_err(|_| anyhow::anyhow!("fault spec: {k}=`{v}` not a number"))
+}
+
+/// The ADC-side faults, carried to the tile engine. One converter serves
+/// one tile (through the column mux), so gain/offset are drawn *per tile*
+/// from `(seed, layer, kt, ct)` — stable across batches and processes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdcFault {
+    pub gain_sigma: f32,
+    pub offset_sigma: f32,
+    pub seed: u64,
+}
+
+impl AdcFault {
+    pub const NONE: AdcFault = AdcFault {
+        gain_sigma: 0.0,
+        offset_sigma: 0.0,
+        seed: 0,
+    };
+
+    pub fn is_none(&self) -> bool {
+        self.gain_sigma == 0.0 && self.offset_sigma == 0.0
+    }
+
+    /// This tile's (gain, offset) pair; offset is a fraction of the ADC
+    /// range (the engine scales it by `r_adc`). Fault-free specs return
+    /// exactly `(1.0, 0.0)`.
+    pub fn tile_gain_offset(&self, layer: usize, kt: usize, ct: usize)
+                            -> (f32, f32) {
+        if self.is_none() {
+            return (1.0, 0.0);
+        }
+        let tag = (layer as u64)
+            .wrapping_mul(0x100_0003)
+            .wrapping_add((kt as u64).wrapping_mul(0x10_001))
+            .wrapping_add(ct as u64)
+            ^ 0xADC0;
+        let mut rng = stream(self.seed, tag);
+        let gain = 1.0 + rng.gauss(0.0, self.gain_sigma as f64);
+        let off = rng.gauss(0.0, self.offset_sigma as f64);
+        (gain as f32, off as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_spec_is_inert_and_keys_to_zero() {
+        let n = FaultSpec::none();
+        assert!(n.is_none());
+        assert!(!n.has_weight_faults() && !n.has_adc_error());
+        assert_eq!(n.key(), 0);
+        // the seed does not matter for a zero-magnitude spec
+        assert_eq!(FaultSpec { seed: 99, ..n }.key(), 0);
+        assert!(n.validate().is_ok());
+        assert_eq!(n.adc_fault(), AdcFault::NONE);
+    }
+
+    #[test]
+    fn keys_separate_distinct_specs() {
+        let a = FaultSpec { stuck_min: 0.01, seed: 1, ..FaultSpec::none() };
+        let b = FaultSpec { stuck_min: 0.01, seed: 2, ..FaultSpec::none() };
+        let c = FaultSpec { stuck_min: 0.02, seed: 1, ..FaultSpec::none() };
+        assert_ne!(a.key(), 0);
+        assert_ne!(a.key(), b.key());
+        assert_ne!(a.key(), c.key());
+        assert_eq!(a.key(), a.key());
+    }
+
+    #[test]
+    fn validate_rejects_bad_fractions_and_sigmas() {
+        let n = FaultSpec::none();
+        assert!(FaultSpec { stuck_min: -0.1, ..n }.validate().is_err());
+        assert!(FaultSpec { stuck_max: 1.5, ..n }.validate().is_err());
+        assert!(FaultSpec { stuck_min: 0.6, stuck_max: 0.6, ..n }
+            .validate()
+            .is_err());
+        assert!(FaultSpec { g_sigma: f64::NAN, ..n }.validate().is_err());
+        assert!(FaultSpec { adc_gain_sigma: -1.0, ..n }.validate().is_err());
+        assert!(FaultSpec { stuck_min: 0.5, stuck_max: 0.5, g_sigma: 0.1, ..n }
+            .validate()
+            .is_ok());
+    }
+
+    #[test]
+    fn parse_round_trips_the_cli_grammar() {
+        let s = FaultSpec::parse(
+            "stuck_min=0.01,stuck_max=0.005,g_sigma=0.05,adc_offset=0.02,\
+             adc_gain=0.03,seed=42",
+        )
+        .unwrap();
+        assert_eq!(s.stuck_min, 0.01);
+        assert_eq!(s.stuck_max, 0.005);
+        assert_eq!(s.g_sigma, 0.05);
+        assert_eq!(s.adc_offset_sigma, 0.02);
+        assert_eq!(s.adc_gain_sigma, 0.03);
+        assert_eq!(s.seed, 42);
+        // partial specs default the rest to zero
+        let p = FaultSpec::parse("stuck_max=0.1").unwrap();
+        assert_eq!(p.stuck_max, 0.1);
+        assert_eq!(p.stuck_min, 0.0);
+        // junk is refused
+        assert!(FaultSpec::parse("stuck_min").is_err());
+        assert!(FaultSpec::parse("wat=1").is_err());
+        assert!(FaultSpec::parse("stuck_min=nope").is_err());
+        assert!(FaultSpec::parse("stuck_min=2.0").is_err());
+    }
+
+    #[test]
+    fn adc_fault_draws_are_per_tile_and_deterministic() {
+        let f = AdcFault { gain_sigma: 0.05, offset_sigma: 0.02, seed: 9 };
+        let a = f.tile_gain_offset(0, 0, 0);
+        let b = f.tile_gain_offset(0, 0, 1);
+        let c = f.tile_gain_offset(1, 0, 0);
+        assert_eq!(a, f.tile_gain_offset(0, 0, 0), "same tile, same draw");
+        assert_ne!(a, b, "neighbouring tiles decorrelate");
+        assert_ne!(a, c, "layers decorrelate");
+        assert!((a.0 - 1.0).abs() < 0.5 && a.1.abs() < 0.5);
+        assert_eq!(AdcFault::NONE.tile_gain_offset(3, 2, 1), (1.0, 0.0));
+    }
+}

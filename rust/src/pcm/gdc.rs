@@ -1,12 +1,63 @@
-//! Global drift compensation (Joshi et al., 2020).
+//! Global drift compensation (Joshi et al., 2020), per layer *and* per
+//! tile.
 //!
 //! The *global* component of conductance drift is corrected digitally: the
 //! accelerator periodically reads the summed conductance of a layer's array
 //! section and scales the ADC outputs by `alpha = sum(G_target) /
 //! sum(G_now)`.  Device-to-device variability remains uncompensated — that
 //! residual is exactly what limits accuracy over time in Figure 7.
+//!
+//! Hardware calibrates each crossbar *tile section* independently (each
+//! tile has its own ADC range): [`calibrate`] computes a [`LayerGdc`]
+//! whose `tiles` come from the tile's actual — possibly faulted —
+//! conductance slice, in `mapping::tile_grid` row-major `(kt, ct)` order.
+//! For a single-tile layer the tile alpha equals the layer alpha bit for
+//! bit (the rect sums replicate the full-layer accumulation order), so
+//! calibration introduces no behavioral drift at the no-fault point.
 
 use super::weights::ProgrammedWeights;
+use crate::crossbar::ArrayGeom;
+use crate::mapping::tile_grid;
+
+/// A layer's drift-compensation factors: one `uniform` alpha (engines
+/// without tile granularity, digital layers, PJRT graphs) plus optional
+/// per-tile alphas. Empty `tiles` means "uniform everywhere".
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerGdc {
+    pub uniform: f32,
+    /// per-tile alphas in `tile_grid` row-major `(kt, ct)` order
+    pub tiles: Vec<f32>,
+}
+
+impl LayerGdc {
+    /// A tile-agnostic factor (the pre-calibration behavior).
+    pub fn flat(alpha: f32) -> Self {
+        LayerGdc { uniform: alpha, tiles: Vec::new() }
+    }
+
+    /// The alpha for tile `idx` (plan order); falls back to `uniform`
+    /// when no per-tile calibration exists.
+    pub fn tile(&self, idx: usize) -> f32 {
+        self.tiles.get(idx).copied().unwrap_or(self.uniform)
+    }
+}
+
+impl From<f32> for LayerGdc {
+    fn from(alpha: f32) -> Self {
+        LayerGdc::flat(alpha)
+    }
+}
+
+/// `n` unity factors — the "freshly programmed, no compensation" vector
+/// tests and benches pass alongside exact weights.
+pub fn unity(n: usize) -> Vec<LayerGdc> {
+    vec![LayerGdc::flat(1.0); n]
+}
+
+/// Wrap plain per-layer alphas (no tile granularity).
+pub fn flat_vec(alphas: &[f32]) -> Vec<LayerGdc> {
+    alphas.iter().map(|&a| LayerGdc::flat(a)).collect()
+}
 
 /// Per-layer GDC factor at time `t` (>= 1 once drift sets in).
 pub fn alpha(layer: &ProgrammedWeights, t_seconds: f64) -> f32 {
@@ -21,6 +72,34 @@ pub fn alpha(layer: &ProgrammedWeights, t_seconds: f64) -> f32 {
 /// GDC factors for a whole model.
 pub fn alphas(layers: &[ProgrammedWeights], t_seconds: f64) -> Vec<f32> {
     layers.iter().map(|l| alpha(l, t_seconds)).collect()
+}
+
+/// Calibrate one layer at time `t`. With `calib_geom = Some(geom)` each
+/// `tile_grid` tile of the layer's `[rows x cols]` rectangle gets its own
+/// `alpha_tile = target_gsum(tile) / read_gsum(tile, t)` from its actual
+/// (faulted, drifted) conductance slice; `None` yields the layer-wide
+/// uniform factor only.
+pub fn calibrate(layer: &ProgrammedWeights, t_seconds: f64,
+                 calib_geom: Option<ArrayGeom>) -> LayerGdc {
+    let uniform = alpha(layer, t_seconds);
+    let tiles = match calib_geom {
+        None => Vec::new(),
+        Some(geom) => tile_grid(layer.rows, layer.cols, geom)
+            .iter()
+            .map(|t| {
+                let target =
+                    layer.target_gsum_rect(t.k0, t.rows, t.n0, t.cols);
+                let now = layer.read_gsum_rect(t_seconds, t.k0, t.rows,
+                                               t.n0, t.cols);
+                if now <= 1e-12 {
+                    1.0
+                } else {
+                    (target / now) as f32
+                }
+            })
+            .collect(),
+    };
+    LayerGdc { uniform, tiles }
 }
 
 #[cfg(test)]
@@ -48,6 +127,57 @@ mod tests {
         let a1 = alpha(&l, 3600.0);
         let a2 = alpha(&l, 31_536_000.0);
         assert!(a2 > a1 && a1 > 0.99, "{a1} {a2}");
+    }
+
+    #[test]
+    fn layer_gdc_tile_lookup_falls_back_to_uniform() {
+        let g = LayerGdc::flat(1.5);
+        assert_eq!(g.tile(0), 1.5);
+        assert_eq!(g.tile(7), 1.5);
+        let g = LayerGdc { uniform: 1.5, tiles: vec![1.1, 1.2] };
+        assert_eq!(g.tile(0), 1.1);
+        assert_eq!(g.tile(1), 1.2);
+        assert_eq!(g.tile(2), 1.5, "past the grid -> uniform");
+        assert_eq!(unity(2), vec![LayerGdc::flat(1.0), LayerGdc::flat(1.0)]);
+        assert_eq!(flat_vec(&[1.0, 2.0])[1].uniform, 2.0);
+        assert_eq!(LayerGdc::from(1.25), LayerGdc::flat(1.25));
+    }
+
+    #[test]
+    fn single_tile_calibration_is_bitwise_the_layer_alpha() {
+        // the no-drift guarantee behind the AnalogCim refactor: a layer
+        // that fits one tile calibrates to exactly gdc::alpha
+        let l = programmed();
+        let geom = ArrayGeom::new(64, 32, 4).unwrap();
+        for t in [25.0, 3600.0, 31_536_000.0] {
+            let cal = calibrate(&l, t, Some(geom));
+            assert_eq!(cal.tiles.len(), 1);
+            assert_eq!(cal.tiles[0].to_bits(), cal.uniform.to_bits());
+            assert_eq!(cal.uniform.to_bits(), alpha(&l, t).to_bits());
+        }
+        // and None skips tile calibration entirely
+        assert!(calibrate(&l, 3600.0, None).tiles.is_empty());
+    }
+
+    #[test]
+    fn stuck_cluster_gives_that_tile_its_own_alpha() {
+        // 64x32 layer on 32x32 tiles -> 2 K-tiles; pin a dense G_max
+        // cluster inside tile 0 only
+        let mut l = programmed();
+        l.stuck_pos = (0..8 * 32).map(|i| (i as u32, 1.0f32)).collect();
+        let t = 86_400.0;
+        let geom = ArrayGeom::new(32, 32, 4).unwrap();
+        let cal = calibrate(&l, t, Some(geom));
+        assert_eq!(cal.tiles.len(), 2);
+        assert_ne!(cal.tiles[0], cal.tiles[1]);
+        // the stuck-at-G_max cluster inflates tile 0's conductance sum, so
+        // its compensation factor is the smaller one
+        assert!(cal.tiles[0] < cal.tiles[1],
+                "{} !< {}", cal.tiles[0], cal.tiles[1]);
+        // tile 1 carries no faults: its alpha stays near the clean layer's
+        let clean = programmed();
+        let clean_alpha = calibrate(&clean, t, Some(geom)).tiles[1];
+        assert!((cal.tiles[1] - clean_alpha).abs() < 1e-6);
     }
 
     #[test]

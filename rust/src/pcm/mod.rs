@@ -10,10 +10,13 @@
 //! conventions.
 
 pub mod device;
+pub mod fault;
 pub mod gdc;
 pub mod weights;
 
 pub use device::PcmParams;
+pub use fault::{AdcFault, FaultSpec};
+pub use gdc::LayerGdc;
 pub use weights::ProgrammedWeights;
 
 /// Maximum device conductance, in micro-Siemens.

@@ -7,6 +7,7 @@
 //! time `t` applies drift plus fresh 1/f noise.
 
 use super::device::{self, PcmParams};
+use super::fault::{self, FaultSpec};
 use crate::util::rng::Rng;
 
 /// One layer's worth of PCM state (differential pairs).
@@ -26,6 +27,13 @@ pub struct ProgrammedWeights {
     /// cached 1/f amplitudes Q(G_T) (q_factor has a powf on the hot path)
     pub q_pos: Vec<f32>,
     pub q_neg: Vec<f32>,
+    /// stuck-at devices: sorted `(flat index, pinned conductance)` per
+    /// half-pair. A stuck cell reads its pinned value at every `t` — no
+    /// drift, no 1/f noise, no RNG draw — so empty lists (the no-fault
+    /// case) leave the read path and its RNG stream bit-identical to a
+    /// build without fault support.
+    pub stuck_pos: Vec<(u32, f32)>,
+    pub stuck_neg: Vec<(u32, f32)>,
     /// weight <-> conductance mapping: W = (g_pos - g_neg) * w_scale
     pub w_scale: f32,
 }
@@ -72,6 +80,8 @@ impl ProgrammedWeights {
         ProgrammedWeights {
             rows, cols,
             gt_pos, gt_neg, gp_pos, gp_neg, nu_pos, nu_neg, q_pos, q_neg,
+            stuck_pos: Vec::new(),
+            stuck_neg: Vec::new(),
             w_scale,
         }
     }
@@ -79,6 +89,51 @@ impl ProgrammedWeights {
     /// Number of physical devices (2 per weight: differential pair).
     pub fn device_count(&self) -> usize {
         2 * self.rows * self.cols
+    }
+
+    /// Inject the weight-side faults of `spec` into this freshly-programmed
+    /// layer (call once per programming; re-programming resets the array,
+    /// so faults are re-applied to the new pristine state by the caller).
+    ///
+    /// The fault pattern derives from `(spec.seed, layer_index)` alone —
+    /// never from the deployment RNG — so the same spec pins the same
+    /// cells in every process. Per half-pair, each device draws one
+    /// conductance jitter and one stuck-classification uniform, in index
+    /// order; the jitter is drawn even at `g_sigma = 0` so the stuck
+    /// pattern is invariant across `g_sigma` settings of one seed.
+    ///
+    /// A `FaultSpec` with no weight-side faults returns immediately and
+    /// mutates nothing.
+    pub fn apply_faults(&mut self, spec: &FaultSpec, layer_index: usize) {
+        if !spec.has_weight_faults() {
+            return;
+        }
+        let mut rng = fault::stream(spec.seed, layer_index as u64);
+        let n = self.rows * self.cols;
+        for half in 0..2 {
+            let (gp, stuck) = if half == 0 {
+                (&mut self.gp_pos, &mut self.stuck_pos)
+            } else {
+                (&mut self.gp_neg, &mut self.stuck_neg)
+            };
+            for i in 0..n {
+                let jitter = rng.gauss(0.0, spec.g_sigma);
+                if spec.g_sigma > 0.0 {
+                    gp[i] = (gp[i] as f64 * (1.0 + jitter)).max(0.0) as f32;
+                }
+                let u = rng.uniform();
+                if u < spec.stuck_min {
+                    stuck.push((i as u32, 0.0)); // pinned at G_min
+                } else if u < spec.stuck_min + spec.stuck_max {
+                    stuck.push((i as u32, 1.0)); // pinned at G_max
+                }
+            }
+        }
+    }
+
+    /// Stuck devices across both half-pairs.
+    pub fn stuck_count(&self) -> usize {
+        self.stuck_pos.len() + self.stuck_neg.len()
     }
 
     /// Read effective weights at `t` seconds after programming.
@@ -117,9 +172,28 @@ impl ProgrammedWeights {
             }
             g.max(0.0)
         };
+        // walk the sorted stuck lists alongside the device loop; a stuck
+        // device substitutes its pinned conductance and skips `read_one`
+        // entirely (no drift, no noise, no RNG draw), so the no-fault RNG
+        // stream is untouched
+        let (mut ip, mut ineg) = (0usize, 0usize);
         for i in 0..n {
-            let gp = read_one(self.gp_pos[i], self.q_pos[i], self.nu_pos[i], rng);
-            let gn = read_one(self.gp_neg[i], self.q_neg[i], self.nu_neg[i], rng);
+            let gp = match self.stuck_pos.get(ip) {
+                Some(&(idx, g)) if idx as usize == i => {
+                    ip += 1;
+                    g as f64
+                }
+                _ => read_one(self.gp_pos[i], self.q_pos[i], self.nu_pos[i],
+                              rng),
+            };
+            let gn = match self.stuck_neg.get(ineg) {
+                Some(&(idx, g)) if idx as usize == i => {
+                    ineg += 1;
+                    g as f64
+                }
+                _ => read_one(self.gp_neg[i], self.q_neg[i], self.nu_neg[i],
+                              rng),
+            };
             w[i] = ((gp - gn) * scale) as f32;
         }
         w
@@ -127,20 +201,76 @@ impl ProgrammedWeights {
 
     /// Summed absolute conductance of the *targets* (for GDC calibration).
     pub fn target_gsum(&self) -> f64 {
-        self.gt_pos.iter().map(|&g| g as f64).sum::<f64>()
-            + self.gt_neg.iter().map(|&g| g as f64).sum::<f64>()
+        self.target_gsum_rect(0, self.rows, 0, self.cols)
+    }
+
+    /// `target_gsum` restricted to the `[k0, k0+rows) x [n0, n0+cols)`
+    /// sub-rectangle — the numerator of one tile's GDC alpha. Over the full
+    /// rectangle the accumulation order (flat row-major, positive half
+    /// then negative half) matches `target_gsum` bit for bit, so a
+    /// single-tile layer calibrates to exactly the layer-wide alpha.
+    pub fn target_gsum_rect(&self, k0: usize, rows: usize, n0: usize,
+                            cols: usize) -> f64 {
+        // each half gets its own accumulator, added once at the end — the
+        // same association as `pos.sum() + neg.sum()`
+        let half = |g: &[f32]| -> f64 {
+            let mut s = 0.0;
+            for r in k0..k0 + rows {
+                for c in n0..n0 + cols {
+                    s += g[r * self.cols + c] as f64;
+                }
+            }
+            s
+        };
+        half(&self.gt_pos) + half(&self.gt_neg)
     }
 
     /// Summed absolute conductance at read time (drift only, no read noise —
     /// GDC calibration integrates long enough to average 1/f noise out).
     pub fn read_gsum(&self, t_seconds: f64) -> f64 {
+        self.read_gsum_rect(t_seconds, 0, self.rows, 0, self.cols)
+    }
+
+    /// `read_gsum` restricted to a sub-rectangle — the denominator of one
+    /// tile's GDC alpha. Stuck devices contribute their pinned conductance
+    /// (they do not drift), which is what lets per-tile calibration absorb
+    /// the average effect of a stuck cluster. Accumulation interleaves the
+    /// pos/neg halves per device in flat order, matching `read_gsum`
+    /// bitwise over the full rectangle.
+    pub fn read_gsum_rect(&self, t_seconds: f64, k0: usize, rows: usize,
+                          n0: usize, cols: usize) -> f64 {
         let mut s = 0.0;
-        let n = self.rows * self.cols;
-        for i in 0..n {
-            s += self.gp_pos[i] as f64
-                * device::drift_factor(t_seconds, self.nu_pos[i] as f64);
-            s += self.gp_neg[i] as f64
-                * device::drift_factor(t_seconds, self.nu_neg[i] as f64);
+        for r in k0..k0 + rows {
+            let row0 = r * self.cols + n0;
+            // sorted stuck lists: find each half's first entry in this row
+            // segment once, then walk it alongside the column loop
+            let mut ip = self
+                .stuck_pos
+                .partition_point(|&(idx, _)| (idx as usize) < row0);
+            let mut ineg = self
+                .stuck_neg
+                .partition_point(|&(idx, _)| (idx as usize) < row0);
+            for c in 0..cols {
+                let i = row0 + c;
+                s += match self.stuck_pos.get(ip) {
+                    Some(&(idx, g)) if idx as usize == i => {
+                        ip += 1;
+                        g as f64
+                    }
+                    _ => self.gp_pos[i] as f64
+                        * device::drift_factor(t_seconds,
+                                               self.nu_pos[i] as f64),
+                };
+                s += match self.stuck_neg.get(ineg) {
+                    Some(&(idx, g)) if idx as usize == i => {
+                        ineg += 1;
+                        g as f64
+                    }
+                    _ => self.gp_neg[i] as f64
+                        * device::drift_factor(t_seconds,
+                                               self.nu_neg[i] as f64),
+                };
+            }
         }
         s
     }
@@ -205,6 +335,107 @@ mod tests {
         let s0 = prog.read_gsum(25.0);
         let s1 = prog.read_gsum(86_400.0);
         assert!(s1 < s0);
+    }
+
+    #[test]
+    fn none_fault_spec_is_a_bitwise_noop() {
+        let w = sample_weights();
+        let p = PcmParams::default();
+        let prog_a =
+            ProgrammedWeights::program(&w, 64, 32, 0.0, &p, &mut Rng::new(5));
+        let mut prog_b =
+            ProgrammedWeights::program(&w, 64, 32, 0.0, &p, &mut Rng::new(5));
+        prog_b.apply_faults(&FaultSpec::none(), 0);
+        assert_eq!(prog_b.stuck_count(), 0);
+        assert_eq!(prog_a.gp_pos, prog_b.gp_pos);
+        // the read path (incl. its RNG stream) is bit-identical
+        let ra = prog_a.read_weights(86_400.0, &p, &mut Rng::new(9));
+        let rb = prog_b.read_weights(86_400.0, &p, &mut Rng::new(9));
+        assert_eq!(ra, rb);
+        assert_eq!(prog_a.read_gsum(3600.0).to_bits(),
+                   prog_b.read_gsum(3600.0).to_bits());
+    }
+
+    #[test]
+    fn fault_pattern_depends_only_on_spec_seed_and_layer() {
+        let w = sample_weights();
+        let p = PcmParams::default();
+        let spec = FaultSpec { stuck_min: 0.05, stuck_max: 0.05,
+                               g_sigma: 0.1, seed: 21, ..FaultSpec::none() };
+        // different deployment RNGs, same spec -> same stuck pattern
+        let mut a =
+            ProgrammedWeights::program(&w, 64, 32, 0.0, &p, &mut Rng::new(1));
+        let mut b =
+            ProgrammedWeights::program(&w, 64, 32, 0.0, &p, &mut Rng::new(777));
+        a.apply_faults(&spec, 3);
+        b.apply_faults(&spec, 3);
+        assert!(a.stuck_count() > 0);
+        assert_eq!(a.stuck_pos, b.stuck_pos);
+        assert_eq!(a.stuck_neg, b.stuck_neg);
+        // a different layer index shifts the pattern
+        let mut c =
+            ProgrammedWeights::program(&w, 64, 32, 0.0, &p, &mut Rng::new(1));
+        c.apply_faults(&spec, 4);
+        assert_ne!(a.stuck_pos, c.stuck_pos);
+        // stuck lists arrive sorted (the read path walks them linearly)
+        assert!(a.stuck_pos.windows(2).all(|p| p[0].0 < p[1].0));
+        assert!(a.stuck_neg.windows(2).all(|p| p[0].0 < p[1].0));
+    }
+
+    #[test]
+    fn stuck_cells_are_pinned_and_never_drift() {
+        let w = sample_weights();
+        // no programming/read noise so every change is attributable
+        let p = PcmParams::ideal();
+        let mut rng = Rng::new(6);
+        let mut prog = ProgrammedWeights::program(&w, 64, 32, 0.0, &p, &mut rng);
+        let clean = prog.read_weights(25.0, &p, &mut rng);
+        let spec = FaultSpec { stuck_max: 0.2, seed: 13, ..FaultSpec::none() };
+        prog.apply_faults(&spec, 0);
+        assert!(prog.stuck_count() > 200, "{}", prog.stuck_count());
+        let faulted = prog.read_weights(25.0, &p, &mut rng);
+        // a device stuck at G_max with a zero programmed counterpart reads
+        // +w_scale no matter the age
+        let year = prog.read_weights(31_536_000.0, &p, &mut rng);
+        for &(idx, g) in &prog.stuck_pos {
+            let i = idx as usize;
+            assert_eq!(g, 1.0);
+            if prog.gt_neg[i] == 0.0 && !prog.stuck_neg.iter()
+                .any(|&(j, _)| j == idx)
+            {
+                assert!((faulted[i] - prog.w_scale).abs() < 1e-6,
+                        "stuck read {} vs {}", faulted[i], prog.w_scale);
+                assert_eq!(faulted[i], year[i], "stuck cells must not drift");
+            }
+        }
+        // and the fault moved the layer away from its clean reads
+        assert_ne!(clean, faulted);
+    }
+
+    #[test]
+    fn rect_sums_tile_the_full_sums() {
+        let w = sample_weights();
+        let p = PcmParams::default();
+        let mut rng = Rng::new(12);
+        let mut prog = ProgrammedWeights::program(&w, 64, 32, 0.0, &p, &mut rng);
+        prog.apply_faults(
+            &FaultSpec { stuck_min: 0.1, seed: 3, ..FaultSpec::none() }, 1);
+        // the full-rectangle call IS the layer sum (delegation)
+        assert_eq!(prog.target_gsum().to_bits(),
+                   prog.target_gsum_rect(0, 64, 0, 32).to_bits());
+        assert_eq!(prog.read_gsum(3600.0).to_bits(),
+                   prog.read_gsum_rect(3600.0, 0, 64, 0, 32).to_bits());
+        // a 2x2 tiling covers every device exactly once
+        let mut tgt = 0.0;
+        let mut now = 0.0;
+        for (k0, rows) in [(0usize, 40usize), (40, 24)] {
+            for (n0, cols) in [(0usize, 20usize), (20, 12)] {
+                tgt += prog.target_gsum_rect(k0, rows, n0, cols);
+                now += prog.read_gsum_rect(3600.0, k0, rows, n0, cols);
+            }
+        }
+        assert!((tgt - prog.target_gsum()).abs() < 1e-9, "{tgt}");
+        assert!((now - prog.read_gsum(3600.0)).abs() < 1e-9, "{now}");
     }
 
     #[test]

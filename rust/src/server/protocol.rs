@@ -77,7 +77,10 @@ pub struct ParsedReq {
 
 impl ParsedReq {
     pub fn opts(&self) -> InferOpts {
-        InferOpts { t_drift: self.t_drift, adc_bits: self.adc_bits }
+        // no wire field for fault scenarios (yet): wire requests serve the
+        // coordinator's deployment-default spec
+        InferOpts { t_drift: self.t_drift, adc_bits: self.adc_bits,
+                    faults: None }
     }
 }
 

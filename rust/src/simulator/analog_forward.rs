@@ -34,6 +34,7 @@ use std::sync::Arc;
 use crate::crossbar::ArrayGeom;
 use crate::mapping::{tile_grid, Tile};
 use crate::nn::ModelMeta;
+use crate::pcm::{AdcFault, LayerGdc};
 use crate::quant;
 use crate::simulator::pipeline::{LayerExecutor, MatmulCtx, MatmulEngine};
 use crate::simulator::pool::{Job, RawSlice, RawSliceMut, WorkerPool};
@@ -87,7 +88,8 @@ impl MatmulEngine for TileGridEngine {
             .as_deref()
             .expect("analog layer has a tile plan");
         tiled_mvm(ctx.pool, a, w, out, ctx.m, ctx.k, ctx.n, plan,
-                  ctx.layer.r_adc, ctx.adc_bits, ctx.alpha);
+                  ctx.layer.r_adc, ctx.adc_bits, ctx.gdc, ctx.adc_fault,
+                  ctx.layer_index);
     }
 }
 
@@ -144,10 +146,33 @@ impl AnalogModel {
     /// decomposition and lane count: every output element's accumulation
     /// order depends only on its own row and tile plan.
     pub fn forward<W: AsRef<[f32]>>(&self, x: &[f32], batch: usize,
-                                    weights: &[W], gdc: &[f32],
+                                    weights: &[W], gdc: &[LayerGdc],
                                     adc_bits: u32) -> Vec<f32> {
         self.exec.forward(&self.engine, x, batch, weights, gdc, adc_bits)
     }
+
+    /// [`forward`](Self::forward) under a per-tile ADC gain/offset fault
+    /// model: each tile's converter applies `code((p * gain + off * r_adc))`
+    /// instead of `code(p)`. `AdcFault::NONE` is bit-identical to
+    /// `forward` — the clean quantization expression is untouched.
+    pub fn forward_faulted<W: AsRef<[f32]>>(&self, x: &[f32], batch: usize,
+                                            weights: &[W], gdc: &[LayerGdc],
+                                            adc_bits: u32,
+                                            adc_fault: AdcFault) -> Vec<f32> {
+        self.exec.forward_faulted(&self.engine, x, batch, weights, gdc,
+                                  adc_bits, adc_fault)
+    }
+}
+
+/// One tile's resolved execution parameters: its GDC alpha (plan order)
+/// and its ADC converter's gain/offset draw — computed once per layer
+/// call, *before* tiles are regrouped into column bands, so the plan-index
+/// ↔ alpha correspondence set up by `gdc::calibrate` survives banding.
+#[derive(Clone, Copy)]
+struct TileParams {
+    alpha: f32,
+    gain: f32,
+    offset: f32,
 }
 
 /// One layer's tile-faithful MVM sweep: every crossbar tile of the [k x n]
@@ -164,16 +189,20 @@ impl AnalogModel {
 #[allow(clippy::too_many_arguments)]
 fn tiled_mvm(pool: &WorkerPool, a: &[f32], w: &[f32], out: &mut [f32],
              m: usize, k: usize, n: usize, tiles: &[Tile], r_adc: f32,
-             adc_bits: u32, alpha: f32) {
+             adc_bits: u32, gdc: &LayerGdc, adc_fault: AdcFault,
+             layer_index: usize) {
     assert_eq!(a.len(), m * k);
     assert_eq!(w.len(), k * n);
     assert_eq!(out.len(), m * n);
     out.fill(0.0);
-    // group tiles into column bands (all tiles of one `ct`)
+    // resolve each tile's alpha (by *plan* index — the order
+    // `gdc::calibrate` emitted) and its ADC fault draw before regrouping
     let n_bands = tiles.iter().map(|t| t.ct + 1).max().unwrap_or(0);
-    let mut bands: Vec<Vec<Tile>> = vec![Vec::new(); n_bands];
-    for t in tiles {
-        bands[t.ct].push(t.clone());
+    let mut bands: Vec<Vec<(Tile, TileParams)>> = vec![Vec::new(); n_bands];
+    for (i, t) in tiles.iter().enumerate() {
+        let (gain, offset) = adc_fault.tile_gain_offset(layer_index, t.kt, t.ct);
+        let p = TileParams { alpha: gdc.tile(i), gain, offset };
+        bands[t.ct].push((t.clone(), p));
     }
     // split the batch rows so every lane gets work even when the whole
     // layer fits one tile (the common AON-array case)
@@ -204,7 +233,7 @@ fn tiled_mvm(pool: &WorkerPool, a: &[f32], w: &[f32], out: &mut [f32],
                 // `slice_at` so no two live `&mut` views ever overlap.
                 unsafe {
                     tile_band(ra.get(), rw.get(), ro, r0, rows, k, n, &band,
-                              r_adc, step, inv, alpha);
+                              r_adc, step, inv);
                 }
             }));
             r0 += rows;
@@ -217,7 +246,10 @@ fn tiled_mvm(pool: &WorkerPool, a: &[f32], w: &[f32], out: &mut [f32],
 /// ADC quantization (clamp to the full-scale range, round to the GDC-scaled
 /// grid), digital f32 accumulation. The inner product streams K ascending
 /// with the same zero-skip as `gemm::gemm_into`, so a single-tile band at
-/// `alpha == 1` reproduces the native engine's bits exactly.
+/// `alpha == 1` reproduces the native engine's bits exactly. A faulted
+/// converter reads `p * gain + offset * r_adc` instead of `p`; the clean
+/// `(gain, offset) == (1, 0)` case keeps the original expression
+/// untouched, preserving no-fault bit-identity.
 ///
 /// SAFETY: the caller must guarantee `out` outlives the call and that no
 /// other live view overlaps this band's (row-chunk x column-band)
@@ -225,15 +257,16 @@ fn tiled_mvm(pool: &WorkerPool, a: &[f32], w: &[f32], out: &mut [f32],
 /// `slice_at` so concurrent bands never hold aliasing `&mut` views.
 #[allow(clippy::too_many_arguments)]
 unsafe fn tile_band(a: &[f32], w: &[f32], out: RawSliceMut, r0: usize,
-                    rows: usize, k: usize, n: usize, band: &[Tile],
-                    r_adc: f32, step: f32, inv: f32, alpha: f32) {
-    let n0 = band[0].n0;
-    let nc = band[0].cols;
+                    rows: usize, k: usize, n: usize,
+                    band: &[(Tile, TileParams)], r_adc: f32, step: f32,
+                    inv: f32) {
+    let n0 = band[0].0.n0;
+    let nc = band[0].0.cols;
     let mut part = vec![0f32; nc];
     for r in r0..r0 + rows {
         let arow = &a[r * k..(r + 1) * k];
         let orow = out.slice_at(r * n + n0, nc);
-        for t in band {
+        for (t, p) in band {
             debug_assert_eq!((t.n0, t.cols), (n0, nc), "band shares columns");
             part.fill(0.0);
             for (ki, &aik) in arow[t.k0..t.k0 + t.rows].iter().enumerate() {
@@ -247,8 +280,17 @@ unsafe fn tile_band(a: &[f32], w: &[f32], out: RawSliceMut, r0: usize,
             }
             // the tile's ADCs: clamp to full scale, snap to the code grid,
             // apply the digital GDC gain — then accumulate
-            for (oj, &pj) in orow.iter_mut().zip(part.iter()) {
-                *oj += (pj.clamp(-r_adc, r_adc) * inv).round() * step * alpha;
+            let alpha = p.alpha;
+            if p.gain == 1.0 && p.offset == 0.0 {
+                for (oj, &pj) in orow.iter_mut().zip(part.iter()) {
+                    *oj += (pj.clamp(-r_adc, r_adc) * inv).round() * step * alpha;
+                }
+            } else {
+                let (gain, off) = (p.gain, p.offset * r_adc);
+                for (oj, &pj) in orow.iter_mut().zip(part.iter()) {
+                    *oj += ((pj * gain + off).clamp(-r_adc, r_adc) * inv)
+                        .round() * step * alpha;
+                }
             }
         }
     }
@@ -287,12 +329,13 @@ mod tests {
         ModelMeta::from_json(&json::parse(src).unwrap()).unwrap()
     }
 
-    fn random_case(rng: &mut Rng) -> (Vec<f32>, Vec<Vec<f32>>, Vec<f32>) {
+    fn random_case(rng: &mut Rng)
+                   -> (Vec<f32>, Vec<Vec<f32>>, Vec<LayerGdc>) {
         let batch = 3;
         let x: Vec<f32> = (0..batch * 16).map(|_| rng.gauss(0.4, 0.3) as f32).collect();
         let w0: Vec<f32> = (0..18).map(|_| rng.gauss(0.0, 0.4) as f32).collect();
         let w1: Vec<f32> = (0..4).map(|_| rng.gauss(0.0, 0.4) as f32).collect();
-        (x, vec![w0, w1], vec![1.0, 1.0])
+        (x, vec![w0, w1], crate::pcm::gdc::unity(2))
     }
 
     #[test]
@@ -373,8 +416,46 @@ mod tests {
         w0[4 * 2 + 1] = 0.25;
         let w1 = vec![1.0, 0.0, 0.0, 1.0];
         let weights = vec![w0, w1];
-        let no_comp = analog.forward(&x, 1, &weights, &[1.0, 1.0], 8);
-        let comped = analog.forward(&x, 1, &weights, &[2.0, 1.0], 8);
+        let no_comp =
+            analog.forward(&x, 1, &weights, &crate::pcm::gdc::unity(2), 8);
+        let comped = analog.forward(&x, 1, &weights,
+                                    &crate::pcm::gdc::flat_vec(&[2.0, 1.0]), 8);
         assert!(comped[0] > no_comp[0] * 1.5);
+    }
+
+    #[test]
+    fn per_tile_alphas_are_applied_by_plan_index() {
+        // two K-tiles (4-row array on a 9-row layer): doubling only tile
+        // 0's alpha must scale just that tile's digitized partials
+        let geom = ArrayGeom::new(4, 2, 1).unwrap();
+        let analog = AnalogModel::with_threads(tiny_meta(), geom, 1);
+        let mut rng = Rng::new(15);
+        let (x, ws, _) = random_case(&mut rng);
+        let unity = crate::pcm::gdc::unity(2);
+        let mut split = unity.clone();
+        split[0] = LayerGdc { uniform: 1.0, tiles: vec![2.0, 1.0, 1.0] };
+        let base = analog.forward(&x, 3, &ws, &unity, 8);
+        let boosted = analog.forward(&x, 3, &ws, &split, 8);
+        assert_ne!(base, boosted, "tile-0 alpha must reach the output");
+        // and a per-tile vector of all-ones is exactly the uniform path
+        let mut ones = unity.clone();
+        ones[0] = LayerGdc { uniform: 1.0, tiles: vec![1.0, 1.0, 1.0] };
+        assert_eq!(analog.forward(&x, 3, &ws, &ones, 8), base);
+    }
+
+    #[test]
+    fn adc_faults_perturb_and_none_is_bit_identical() {
+        let analog = AnalogModel::new(tiny_meta());
+        let mut rng = Rng::new(16);
+        let (x, ws, gdc) = random_case(&mut rng);
+        let clean = analog.forward(&x, 3, &ws, &gdc, 8);
+        let same =
+            analog.forward_faulted(&x, 3, &ws, &gdc, 8, AdcFault::NONE);
+        assert_eq!(clean, same, "AdcFault::NONE must be a strict no-op");
+        let f = AdcFault { gain_sigma: 0.2, offset_sigma: 0.1, seed: 5 };
+        let faulted = analog.forward_faulted(&x, 3, &ws, &gdc, 8, f);
+        assert_ne!(clean, faulted, "a 20% gain sigma must move the codes");
+        assert_eq!(faulted, analog.forward_faulted(&x, 3, &ws, &gdc, 8, f),
+                   "fault draws are deterministic per (seed, layer, tile)");
     }
 }

@@ -19,6 +19,7 @@
 use std::sync::Arc;
 
 use crate::nn::ModelMeta;
+use crate::pcm::LayerGdc;
 use crate::simulator::pipeline::{LayerExecutor, NativeGemmEngine};
 
 pub struct NativeModel {
@@ -61,7 +62,7 @@ impl NativeModel {
     /// per-row accumulation order is batch-invariant (the layer-serial
     /// correctness invariant the coordinator's batcher relies on).
     pub fn forward<W: AsRef<[f32]>>(&self, x: &[f32], batch: usize,
-                                    weights: &[W], gdc: &[f32],
+                                    weights: &[W], gdc: &[LayerGdc],
                                     adc_bits: u32) -> Vec<f32> {
         self.exec.forward(&self.engine, x, batch, weights, gdc, adc_bits)
     }
@@ -116,7 +117,7 @@ mod tests {
         w0[4 * 2 + 1] = 0.5;   // center tap -> ch1
         let w1 = vec![1.0, 0.0, 0.0, 1.0];
         let weights = vec![w0, w1];
-        let gdc = vec![1.0, 1.0];
+        let gdc = crate::pcm::gdc::unity(2);
         let l1 = m.forward(&x, 1, &weights, &gdc, 8);
         let l2 = m.forward(&x, 1, &weights, &gdc, 8);
         assert_eq!(l1.len(), 2);
@@ -140,7 +141,7 @@ mod tests {
         let w0: Vec<f32> = (0..18).map(|_| rng.gauss(0.0, 0.4) as f32).collect();
         let w1: Vec<f32> = (0..4).map(|_| rng.gauss(0.0, 0.4) as f32).collect();
         let weights = vec![w0, w1];
-        let gdc = vec![1.1, 1.0];
+        let gdc = crate::pcm::gdc::flat_vec(&[1.1, 1.0]);
         let batched = m.forward(&x, batch, &weights, &gdc, 8);
         assert_eq!(batched.len(), batch * 2);
         for s in 0..batch {
@@ -159,8 +160,10 @@ mod tests {
         w0[4 * 2 + 1] = 0.25;
         let w1 = vec![1.0, 0.0, 0.0, 1.0];
         let weights = vec![w0, w1];
-        let no_comp = m.forward(&x, 1, &weights, &[1.0, 1.0], 8);
-        let comped = m.forward(&x, 1, &weights, &[2.0, 1.0], 8);
+        let no_comp =
+            m.forward(&x, 1, &weights, &crate::pcm::gdc::unity(2), 8);
+        let comped = m.forward(&x, 1, &weights,
+                               &crate::pcm::gdc::flat_vec(&[2.0, 1.0]), 8);
         assert!(comped[0] > no_comp[0] * 1.5);
     }
 
@@ -175,7 +178,7 @@ mod tests {
         let w0: Vec<f32> = (0..18).map(|_| rng.gauss(0.0, 0.4) as f32).collect();
         let w1: Vec<f32> = (0..4).map(|_| rng.gauss(0.0, 0.4) as f32).collect();
         let weights = vec![w0, w1];
-        let gdc = vec![1.0, 1.0];
+        let gdc = crate::pcm::gdc::unity(2);
         let l8 = m.forward(&x, 1, &weights, &gdc, 8);
         let l4 = m.forward(&x, 1, &weights, &gdc, 4);
         assert_ne!(l8, l4, "4-bit conversion must differ from 8-bit");

@@ -34,6 +34,7 @@
 use std::sync::{Arc, Mutex};
 
 use crate::nn::{LayerKind, LayerMeta, ModelMeta};
+use crate::pcm::{AdcFault, LayerGdc};
 use crate::quant;
 use crate::simulator::im2col;
 use crate::simulator::pool::WorkerPool;
@@ -118,8 +119,13 @@ pub struct MatmulCtx<'a> {
     pub k: usize,
     /// GEMM columns (crossbar columns / output channels)
     pub n: usize,
-    /// the layer's global drift compensation scale (1.0 fresh)
-    pub alpha: f32,
+    /// the layer's drift compensation: a uniform scale plus optional
+    /// per-tile alphas (tile-granular engines index
+    /// [`LayerGdc::tile`]; the native engine uses `uniform`)
+    pub gdc: &'a LayerGdc,
+    /// per-tile ADC gain/offset faults ([`AdcFault::NONE`] on the clean
+    /// path — engines must treat it as a strict no-op)
+    pub adc_fault: AdcFault,
     /// ADC bitwidth this call quantizes at (per-request capable via
     /// [`InferOpts`](crate::backend::InferOpts))
     pub adc_bits: u32,
@@ -128,7 +134,7 @@ pub struct MatmulCtx<'a> {
 /// The engine-specific step of the layer pipeline: multiply the staged,
 /// DAC-quantized `[m x k]` activation block `a` against the `[k x n]`
 /// effective weights `w` into `out`, applying the engine's ADC
-/// quantization model and the GDC gain `ctx.alpha`.
+/// quantization model and the GDC gain(s) in `ctx.gdc`.
 ///
 /// Contract (what [`LayerExecutor`] guarantees and expects):
 /// * `a` is already DAC fake-quantized at the layer's `r_dac` — every
@@ -168,7 +174,7 @@ impl MatmulEngine for NativeGemmEngine {
                      out: &mut [f32]) {
         ctx.pool.gemm_into(a, w, out, ctx.m, ctx.k, ctx.n);
         quant::fake_quant_slice(out, ctx.layer.r_adc, ctx.adc_bits);
-        let g = ctx.alpha;
+        let g = ctx.gdc.uniform;
         if (g - 1.0).abs() > 1e-9 {
             out.iter_mut().for_each(|v| *v *= g);
         }
@@ -238,7 +244,21 @@ impl LayerExecutor {
     /// coordinator's batcher relies on).
     pub fn forward<W: AsRef<[f32]>>(&self, engine: &dyn MatmulEngine,
                                     x: &[f32], batch: usize, weights: &[W],
-                                    gdc: &[f32], adc_bits: u32) -> Vec<f32> {
+                                    gdc: &[LayerGdc], adc_bits: u32)
+                                    -> Vec<f32> {
+        self.forward_faulted(engine, x, batch, weights, gdc, adc_bits,
+                             AdcFault::NONE)
+    }
+
+    /// [`forward`](Self::forward) with per-tile ADC gain/offset faults
+    /// threaded into every [`MatmulCtx`]. `AdcFault::NONE` is bit-identical
+    /// to `forward`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_faulted<W: AsRef<[f32]>>(&self, engine: &dyn MatmulEngine,
+                                            x: &[f32], batch: usize,
+                                            weights: &[W], gdc: &[LayerGdc],
+                                            adc_bits: u32,
+                                            adc_fault: AdcFault) -> Vec<f32> {
         let (ih, iw, ic) = self.meta.input_hwc;
         assert_eq!(x.len(), batch * ih * iw * ic, "input shape mismatch");
         assert_eq!(weights.len(), self.meta.layers.len());
@@ -339,7 +359,8 @@ impl LayerExecutor {
                             m: m_rows,
                             k,
                             n: n_cols,
-                            alpha: gdc[li],
+                            gdc: &gdc[li],
+                            adc_fault,
                             adc_bits,
                         };
                         engine.analog_matmul(&ctx, &cur[..m_rows * k], w,
@@ -436,7 +457,8 @@ mod tests {
         let mut w0 = vec![0f32; 18];
         w0[4 * 2] = 1.0;
         let w1 = vec![1.0, 0.0, 0.0, 1.0];
-        let out = exec.forward(&engine, &x, 1, &[w0, w1], &[1.0, 1.0], 8);
+        let out = exec.forward(&engine, &x, 1, &[w0, w1],
+                               &crate::pcm::gdc::unity(2), 8);
         assert_eq!(out.len(), 2);
         assert_eq!(engine.calls.load(std::sync::atomic::Ordering::SeqCst), 2);
     }
@@ -455,7 +477,7 @@ mod tests {
         let w0: Vec<f32> = (0..18).map(|_| rng.gauss(0.0, 0.4) as f32).collect();
         let w1: Vec<f32> = (0..4).map(|_| rng.gauss(0.0, 0.4) as f32).collect();
         let weights = vec![w0, w1];
-        let gdc = vec![1.1, 1.0];
+        let gdc = crate::pcm::gdc::flat_vec(&[1.1, 1.0]);
         let a = exec.forward(&engine, &x, 3, &weights, &gdc, 8);
         let b = exec.forward(&NativeGemmEngine, &x, 3, &weights, &gdc, 8);
         assert_eq!(a, b);

@@ -30,10 +30,10 @@ use analognets::util::rng::Rng;
 
 /// Exact stored weights as host tensors + unity GDC (no PCM in the loop).
 fn exact_weights(store: &ArtifactStore, vid: &str)
-                 -> (Vec<HostTensor>, Vec<f32>) {
+                 -> (Vec<HostTensor>, Vec<analognets::pcm::LayerGdc>) {
     let w = store.weights(vid).unwrap();
     let ws: Vec<HostTensor> = w.iter().map(HostTensor::from_tensor).collect();
-    let unity = vec![1.0f32; ws.len()];
+    let unity = analognets::pcm::gdc::unity(ws.len());
     (ws, unity)
 }
 

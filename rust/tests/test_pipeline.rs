@@ -119,7 +119,7 @@ fn prop_engines_observe_bit_identical_staged_inputs() {
     for case in 0..8 {
         let batch = 1 + case % 3;
         let (x, ws) = random_model(&mut rng, batch);
-        let gdc = vec![1.0f32; 3];
+        let gdc = analognets::pcm::gdc::unity(3);
 
         let rec_n = Recording::over(&native_engine);
         let out_n = native_exec.forward(&rec_n, &x, batch, &ws, &gdc, 8);
@@ -152,7 +152,7 @@ fn first_layer_staging_is_engine_independent() {
     assert!(tiled.tiles_total() > 3, "geometry must split layers");
 
     let mut rng = Rng::new(0xF00D);
-    let gdc = vec![1.0f32; 3];
+    let gdc = analognets::pcm::gdc::unity(3);
     let mut diverged = false;
     for case in 0..6 {
         let (x, ws) = random_model(&mut rng, 2);
@@ -183,7 +183,7 @@ fn single_tile_unity_gdc_matches_native_at_every_bitwidth() {
     let analog = TileGridEngine::new(&meta, ArrayGeom::AON);
     let mut rng = Rng::new(0xCAFE);
     let (x, ws) = random_model(&mut rng, 3);
-    let gdc = vec![1.0f32; 3];
+    let gdc = analognets::pcm::gdc::unity(3);
     for bits in [4u32, 6, 8, 12] {
         let out_n = exec.forward(&NativeGemmEngine, &x, 3, &ws, &gdc, bits);
         let out_a = exec.forward(&analog, &x, 3, &ws, &gdc, bits);

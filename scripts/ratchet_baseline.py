@@ -20,6 +20,12 @@ Floors only move up (a measured value below the committed floor is
 reported, not applied) unless --allow-lower is given. The gate in
 bench::check_regression allows a 30% drop below the floor, so fraction 0.5
 leaves ~2x headroom between a typical run and a failure.
+
+`fault_acc_gap_max` is the one inverted gate: it is an upper bound on the
+mild-cell accuracy drop of the device-variability fault sweep, so its
+ratchet direction flips — a measured BENCH_analog.json
+fault_sweep.mild_gap_max sets the bound to max(0.02, 2 * measured), it only
+moves DOWN (tightens), and --allow-lower is what permits loosening it.
 """
 import argparse
 import json
@@ -62,8 +68,14 @@ def main():
         updates.append(("req_s", float(native["req_s"])))
         if "wire" in native:
             updates.append(("wire_req_s", float(native["wire"]["req_s"])))
+    gap_updates = []  # (key, measured gap) — inverted (upper-bound) gates
     if args.analog:
-        updates.append(("analog_req_s", float(load(args.analog)["req_s"])))
+        analog = load(args.analog)
+        updates.append(("analog_req_s", float(analog["req_s"])))
+        if "fault_sweep" in analog:
+            gap_updates.append(
+                ("fault_acc_gap_max",
+                 float(analog["fault_sweep"]["mild_gap_max"])))
 
     changed = False
     for key, value in updates:
@@ -77,6 +89,23 @@ def main():
         print(f"  {key}: {old} -> {floor}  (measured {value:.1f}, "
               f"fraction {args.fraction})")
         base[key] = floor
+        measured[key] = True
+        changed = True
+
+    for key, value in gap_updates:
+        # upper-bound gate: 2x the measured mild-cell drop (floored at
+        # 0.02 so a perfectly-compensated run does not ratchet to zero and
+        # fail on the next run's sampling noise), tightening only
+        bound = round(max(0.02, 2.0 * value), 4)
+        old = base.get(key)
+        if old is not None and bound > old and not args.allow_lower:
+            print(f"  {key}: measured gap {value:.4f} -> bound {bound} is "
+                  f"LOOSER than the committed {old}; skipping (use "
+                  "--allow-lower to accept a regression as the new normal)")
+            continue
+        print(f"  {key}: {old} -> {bound}  (measured gap {value:.4f}, "
+              "bound = max(0.02, 2x))")
+        base[key] = bound
         measured[key] = True
         changed = True
 
