@@ -70,23 +70,31 @@ fn main() -> anyhow::Result<()> {
     coord.stop()?;
 
     // ---- native GEMM throughput (simulator substrate) ------------------
+    // blocked packed kernel (the serving path) vs the legacy row-parallel
+    // loop at each lane count, on one large representative shape
     let (m, k, n2) = (4096, 576, 128);
     let mut r = Rng::new(3);
     let a: Vec<f32> = (0..m * k).map(|_| r.gauss(0.0, 1.0) as f32).collect();
     let b: Vec<f32> = (0..k * n2).map(|_| r.gauss(0.0, 1.0) as f32).collect();
+    let macs = 2.0 * (m * k * n2) as f64;
     for threads in [1usize, 4, 8, 0] {
         let label = if threads == 0 {
             format!("auto({})", gemm::effective_threads(0))
         } else {
             threads.to_string()
         };
-        let timing = time_it(1, 5, || {
+        let t_blk = time_it(1, 5, || {
             let _ = gemm::gemm_parallel(&a, &b, m, k, n2, threads);
         });
-        let gflops = 2.0 * (m * k * n2) as f64 / (timing.min_us * 1e3);
+        let t_row = time_it(1, 5, || {
+            let _ = gemm::gemm_rowpar(&a, &b, m, k, n2, threads);
+        });
+        let gf_blk = macs / (t_blk.min_us * 1e3);
+        let gf_row = macs / (t_row.min_us * 1e3);
         t.row(&[format!("native GEMM 4096x576x128 t={label}"),
-                format!("{:.1}ms min, {gflops:.1} GFLOP/s",
-                        timing.min_us / 1e3)]);
+                format!("blocked {:.1}ms min, {gf_blk:.1} GFLOP/s \
+                         (rowpar {gf_row:.1}, {:.2}x)",
+                        t_blk.min_us / 1e3, gf_blk / gf_row)]);
     }
 
     t.print();

@@ -45,6 +45,13 @@ impl AnalogCimBackend {
     /// --backend analog --rows/--cols/--mux`). Smaller arrays split layers
     /// across more tiles, which means more independent ADC quantizations
     /// per output — the Table-3 accuracy/utilization trade-off.
+    ///
+    /// Like the native backend, construction triggers the one-time
+    /// process-wide GEMM tiling autotune (via the shared executor): the
+    /// analog path's *digital* layers and per-request staging ride the
+    /// blocked packed kernel, while the per-tile analog MVM
+    /// (`analog_forward::tiled_mvm`) keeps its naive-order accumulation
+    /// bit-identical by design.
     pub fn with_geom(meta: impl Into<Arc<ModelMeta>>, bits: u32,
                      geom: ArrayGeom, threads: usize) -> Self {
         AnalogCimBackend {

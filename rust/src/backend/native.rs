@@ -24,9 +24,13 @@ impl NativeBackend {
         Self::with_threads(meta, bits, 1)
     }
 
-    /// GEMM parallelised over `threads` row chunks (`0` = all available
-    /// cores) on a persistent worker pool owned by the model — spawned
-    /// here, parked between launches, never re-created on the hot path.
+    /// GEMM parallelised over `threads` lanes (`0` = all available cores)
+    /// of blocked macro-tiles on a persistent worker pool owned by the
+    /// model — spawned here, parked between launches, never re-created on
+    /// the hot path. Construction also runs the process-wide GEMM tiling
+    /// autotune on this model's real layer shapes (one time-boxed probe,
+    /// cached per process; `ANALOGNETS_TILING` pins it for reproducible
+    /// runs) so serving never pays the probe on a request.
     pub fn with_threads(meta: impl Into<Arc<ModelMeta>>, bits: u32,
                         threads: usize) -> Self {
         NativeBackend {

@@ -245,8 +245,12 @@ fn tiled_mvm(pool: &WorkerPool, a: &[f32], w: &[f32], out: &mut [f32],
 /// Rows [r0, r0+rows) of one column band: per K-tile analog MVM, per-tile
 /// ADC quantization (clamp to the full-scale range, round to the GDC-scaled
 /// grid), digital f32 accumulation. The inner product streams K ascending
-/// with the same zero-skip as `gemm::gemm_into`, so a single-tile band at
-/// `alpha == 1` reproduces the native engine's bits exactly. A faulted
+/// with the same zero-skip as `gemm::gemm_naive_into` — the accumulation
+/// order the blocked packed kernel is property-tested bit-exact against
+/// for single-k-block schemes — so a single-tile band at `alpha == 1`
+/// reproduces the native engine's bits exactly. This per-tile path is
+/// deliberately *not* blocked/packed: the ADC-before-accumulate ordering
+/// is the hardware contract and its bits must not move. A faulted
 /// converter reads `p * gain + offset * r_adc` instead of `p`; the clean
 /// `(gain, offset) == (1, 0)` case keeps the original expression
 /// untouched, preserving no-fault bit-identity.

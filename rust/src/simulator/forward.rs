@@ -37,7 +37,10 @@ impl NativeModel {
     pub fn with_threads(meta: impl Into<Arc<ModelMeta>>, threads: usize) -> Self {
         NativeModel {
             exec: LayerExecutor::new(meta, threads),
-            engine: NativeGemmEngine,
+            // default engine: blocked packed GEMM under the process-wide
+            // autotuned single-k-block scheme (bit-exact with the naive
+            // reference; executor construction ran the one-time autotune)
+            engine: NativeGemmEngine::default(),
         }
     }
 

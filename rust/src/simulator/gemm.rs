@@ -1,20 +1,58 @@
-//! Blocked f32 GEMM for the native simulator.
+//! Blocked, packed f32 GEMM for the native simulator.
 //!
-//! C[M,N] = A[M,K] @ B[K,N], row-major.  The kernel is a straightforward
-//! i-k-j loop with a register-blocked inner loop — the B row reuse along `j`
-//! autovectorizes well.  Thread-level parallelism over row chunks runs on
-//! the persistent [`pool::WorkerPool`](crate::simulator::pool::WorkerPool)
-//! (no per-call thread spawning; each output row is computed independently
-//! with an identical accumulation order, so chunking never changes results).
+//! `C[M,N] = A[M,K] @ B[K,N]`, row-major. Two kernels live here:
+//!
+//! * [`gemm_naive_into`] — the historical i-k-j reference loop (zero-skip
+//!   on the A operand, ascending-k accumulation). It defines the
+//!   bit-pattern every other path is measured against, and it is what the
+//!   analog per-tile MVM (`analog_forward::tile_band`) replicates — so it
+//!   must never change.
+//! * The blocked kernel — A and B are packed into contiguous
+//!   register-block panels ([`tiling::MR`]-row groups, [`tiling::NR`]-column
+//!   strips), a register-blocked microkernel sweeps packed panels, and a
+//!   [`TilingScheme`] names the macro-tile / k-slice dimensions. The
+//!   persistent [`pool::WorkerPool`] distributes (m-block x n-block)
+//!   macro-tiles; each output element is owned by exactly one tile, so the
+//!   parallel result is bit-identical to the serial one for *any* scheme.
+//!
+//! ## Bit-exactness
+//!
+//! Within one k-block the microkernel accumulates each output element in
+//! ascending-k order from `+0.0` — the same per-element sequence as the
+//! naive loop. The naive loop's zero-skip (`aik == 0.0 => skip`) is
+//! dropped in the packed kernel, which is still bit-identical for finite
+//! operands: adding `±0.0 * b` to an accumulator that started at `+0.0`
+//! can neither change its value nor flip it to `-0.0` (IEEE-754
+//! round-to-nearest: `+0.0 + ±0.0 = +0.0`, and a cancelling sum of
+//! nonzero terms yields `+0.0`). Rust never contracts `a*b + c` into an
+//! FMA, so single-k-block schemes are bit-exact with [`gemm_naive_into`]
+//! (property-tested below, including exact-zero-laden operands).
+//!
+//! Splitting k into several blocks stores `c = block0 + block1 + ...`,
+//! which regroups the f32 sums — close (f64-bounded, tested) but not
+//! bit-identical. Default entry points therefore clamp the process-wide
+//! scheme through [`TilingScheme::full_k`]; k-split runs only through the
+//! explicit-scheme entry points ([`gemm_blocked_into`],
+//! [`gemm_with_scheme_into`]) that `NativeGemmEngine::with_scheme` opts
+//! into.
 
-use crate::simulator::pool;
+use std::cell::RefCell;
+
+use crate::simulator::pool::{self, RawSlice, RawSliceMut, WorkerPool};
+use crate::simulator::tiling::{self, TilingScheme, MR, NR};
 
 /// Row count below which parallel dispatch is not worth the latch overhead:
-/// a chunked launch costs ~2 channel/condvar round trips per lane, which at
-/// fewer than this many rows exceeds the GEMM work itself for the layer
+/// a macro-tile launch costs ~2 channel/condvar round trips per lane, which
+/// at fewer than this many rows exceeds the GEMM work itself for the layer
 /// shapes we serve.  Callers asking for many threads on a small `m` are
 /// deliberately (and now visibly) run single-threaded.
 pub const PAR_ROW_THRESHOLD: usize = 64;
+
+/// Below this many multiply-adds the blocked path's packing traffic
+/// rivals the multiply itself; [`gemm_into`] falls through to the naive
+/// kernel instead (bit-identical either way — single-k-block blocked and
+/// naive agree, this is purely a latency knob).
+const BLOCKED_MIN_MACS: usize = 4096;
 
 /// Resolve a thread-count knob: `0` means "use every available core"
 /// (`std::thread::available_parallelism`), anything else is taken as-is.
@@ -28,7 +66,7 @@ pub fn effective_threads(threads: usize) -> usize {
     }
 }
 
-/// Single-threaded blocked GEMM.
+/// Single-threaded GEMM (blocked kernel, process-wide scheme).
 pub fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     let mut c = vec![0f32; m * n];
     gemm_into(a, b, &mut c, m, k, n);
@@ -36,7 +74,24 @@ pub fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
 }
 
 /// GEMM into a preallocated buffer (hot path; avoids allocation).
+/// Runs the blocked kernel under the process-wide [`tiling::global`]
+/// scheme clamped to a single k-block — bit-identical to
+/// [`gemm_naive_into`], which tiny shapes fall through to directly.
 pub fn gemm_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    if m * k * n < BLOCKED_MIN_MACS {
+        gemm_naive_into(a, b, c, m, k, n);
+    } else {
+        gemm_blocked_into(a, b, c, m, k, n, tiling::global().full_k());
+    }
+}
+
+/// The historical reference kernel: i-k-j loop, ascending-k accumulation,
+/// zero-skip on the A operand. This is the bit-pattern oracle for the
+/// blocked kernel's single-k-block property tests and the accumulation
+/// order `analog_forward::tile_band` replicates per crossbar tile — do
+/// not change its numerics.
+pub fn gemm_naive_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize,
+                       k: usize, n: usize) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     assert_eq!(c.len(), m * n);
@@ -57,8 +112,8 @@ pub fn gemm_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usi
     }
 }
 
-/// Multi-threaded GEMM over row chunks on the process-wide persistent
-/// worker pool ([`pool::global`]).  `threads == 0` means
+/// Multi-threaded GEMM over packed macro-tiles on the process-wide
+/// persistent worker pool ([`pool::global`]).  `threads == 0` means
 /// [`effective_threads`] (all cores); `m < `[`PAR_ROW_THRESHOLD`] always
 /// runs single-threaded regardless of `threads` (see the constant's docs).
 /// Engines that own a pool (`NativeModel`) call it directly instead.
@@ -76,8 +131,264 @@ pub fn gemm_parallel_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize,
     if lanes <= 1 || m < PAR_ROW_THRESHOLD {
         gemm_into(a, b, c, m, k, n);
     } else {
+        gemm_blocked_pool_into(pool::global(), a, b, c, m, k, n,
+                               tiling::global().full_k(), lanes);
+    }
+}
+
+/// The pre-blocked row-parallel path, kept verbatim for comparison: naive
+/// kernel over `threads` row chunks on the global pool (what
+/// `gemm_parallel` was before the packed kernel landed). The bench's
+/// `gemm` section measures the blocked kernel against this.
+pub fn gemm_rowpar(a: &[f32], b: &[f32], m: usize, k: usize, n: usize,
+                   threads: usize) -> Vec<f32> {
+    let mut c = vec![0f32; m * n];
+    gemm_rowpar_into(a, b, &mut c, m, k, n, threads);
+    c
+}
+
+/// [`gemm_rowpar`] into a preallocated buffer.
+pub fn gemm_rowpar_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize,
+                        k: usize, n: usize, threads: usize) {
+    let lanes = effective_threads(threads);
+    if lanes <= 1 || m < PAR_ROW_THRESHOLD {
+        gemm_naive_into(a, b, c, m, k, n);
+    } else {
         pool::global().gemm_chunks(a, b, c, m, k, n, lanes);
     }
+}
+
+/// Explicit-scheme GEMM on a caller-owned pool: the entry point
+/// `NativeGemmEngine::with_scheme` opts into (k-split schemes included —
+/// see the module docs for what that does to f32 accumulation). Applies
+/// the same small-`m` serial policy as the default paths.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_with_scheme_into(pool: &WorkerPool, a: &[f32], b: &[f32],
+                             c: &mut [f32], m: usize, k: usize, n: usize,
+                             scheme: TilingScheme) {
+    if pool.lanes() <= 1 || m < PAR_ROW_THRESHOLD {
+        gemm_blocked_into(a, b, c, m, k, n, scheme);
+    } else {
+        gemm_blocked_pool_into(pool, a, b, c, m, k, n, scheme, pool.lanes());
+    }
+}
+
+thread_local! {
+    /// Per-thread packing scratch (A panels, B panels): steady-state the
+    /// hot path packs into capacity it already owns, allocating nothing.
+    static PACK: RefCell<(Vec<f32>, Vec<f32>)> =
+        const { RefCell::new((Vec::new(), Vec::new())) };
+}
+
+/// Pack `A[M,K]` into MR-row groups: `pa[g][kk*MR + ri]` holds
+/// `A[g*MR + ri][kk]`, edge-group rows zero-padded. Each group's k-slice
+/// `[k0, k0+kc)` is the contiguous run `pa[g*k*MR + k0*MR ..][.. kc*MR]`.
+fn pack_a(a: &[f32], m: usize, k: usize, pa: &mut Vec<f32>) {
+    let groups = m.div_ceil(MR);
+    pa.clear();
+    pa.resize(groups * k * MR, 0.0); // clear+resize zero-fills everything
+    for g in 0..groups {
+        let row0 = g * MR;
+        let vrows = MR.min(m - row0);
+        let dst = &mut pa[g * k * MR..(g + 1) * k * MR];
+        for ri in 0..vrows {
+            let src = &a[(row0 + ri) * k..(row0 + ri + 1) * k];
+            for (kk, &v) in src.iter().enumerate() {
+                dst[kk * MR + ri] = v;
+            }
+        }
+    }
+}
+
+/// Pack `B[K,N]` into NR-column strips: `pb[s][kk*NR + j]` holds
+/// `B[kk][s*NR + j]`, edge-strip columns zero-padded. Each strip's
+/// k-slice is the contiguous run `pb[s*k*NR + k0*NR ..][.. kc*NR]`.
+fn pack_b(b: &[f32], k: usize, n: usize, pb: &mut Vec<f32>) {
+    let strips = n.div_ceil(NR);
+    pb.clear();
+    pb.resize(strips * k * NR, 0.0);
+    for s in 0..strips {
+        let col0 = s * NR;
+        let vcols = NR.min(n - col0);
+        let dst = &mut pb[s * k * NR..(s + 1) * k * NR];
+        for kk in 0..k {
+            dst[kk * NR..kk * NR + vcols]
+                .copy_from_slice(&b[kk * n + col0..kk * n + col0 + vcols]);
+        }
+    }
+}
+
+/// The register-blocked microkernel: accumulate one MR x NR tile over a
+/// packed k-slice. Ascending-k, per-lane-independent accumulation — the
+/// per-element order is exactly the naive kernel's (see module docs).
+#[inline]
+fn micro_acc(pa: &[f32], pb: &[f32], acc: &mut [[f32; NR]; MR]) {
+    debug_assert_eq!(pa.len() / MR, pb.len() / NR);
+    for (arow, brow) in pa.chunks_exact(MR).zip(pb.chunks_exact(NR)) {
+        for (accr, &aval) in acc.iter_mut().zip(arow.iter()) {
+            for (accj, &bval) in accr.iter_mut().zip(brow.iter()) {
+                *accj += aval * bval;
+            }
+        }
+    }
+}
+
+/// Compute one macro-tile (rows `[i0, i0+mc)`, cols `[j0, j0+nc)`) of C
+/// from packed panels, sweeping the whole inner dimension in
+/// `k_block`-sized slices: the first slice stores, later slices add.
+///
+/// `i0`/`j0` must be multiples of [`MR`]/[`NR`] (macro-tile origins are —
+/// block sizes are validated multiples of the register blocks).
+///
+/// # Safety
+/// `rc` must point at the live `m x n` output buffer, and this tile's
+/// rows x cols must not be written by anyone else while the call runs
+/// (macro-tiles partition C, so concurrent jobs on distinct tiles are
+/// disjoint by construction).
+#[allow(clippy::too_many_arguments)]
+unsafe fn tile_kernel(pa: &[f32], pb: &[f32], rc: RawSliceMut, k: usize,
+                      n: usize, i0: usize, mc: usize, j0: usize, nc: usize,
+                      k_block: usize) {
+    debug_assert_eq!(i0 % MR, 0);
+    debug_assert_eq!(j0 % NR, 0);
+    let g0 = i0 / MR;
+    let g1 = (i0 + mc).div_ceil(MR);
+    let s0 = j0 / NR;
+    let s1 = (j0 + nc).div_ceil(NR);
+    let mut k0 = 0usize;
+    let mut first = true;
+    while k0 < k {
+        let kc = k_block.min(k - k0);
+        for g in g0..g1 {
+            let row0 = g * MR;
+            let vrows = MR.min(i0 + mc - row0);
+            let pa_g = &pa[g * k * MR + k0 * MR..][..kc * MR];
+            for s in s0..s1 {
+                let col0 = s * NR;
+                let vcols = NR.min(j0 + nc - col0);
+                let pb_s = &pb[s * k * NR + k0 * NR..][..kc * NR];
+                let mut acc = [[0f32; NR]; MR];
+                micro_acc(pa_g, pb_s, &mut acc);
+                for (ri, accr) in acc.iter().enumerate().take(vrows) {
+                    // SAFETY: row segments of distinct (group, strip)
+                    // pairs never overlap, and the caller guarantees this
+                    // tile is exclusively ours and `rc` outlives the call.
+                    let crow =
+                        unsafe { rc.slice_at((row0 + ri) * n + col0, vcols) };
+                    if first {
+                        crow.copy_from_slice(&accr[..vcols]);
+                    } else {
+                        for (cj, &av) in crow.iter_mut().zip(accr.iter()) {
+                            *cj += av;
+                        }
+                    }
+                }
+            }
+        }
+        first = false;
+        k0 += kc;
+    }
+}
+
+/// Serial blocked GEMM under an explicit [`TilingScheme`]. Single-k-block
+/// schemes are bit-identical to [`gemm_naive_into`]; k-split schemes
+/// regroup the f32 sums (see the module docs).
+pub fn gemm_blocked_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize,
+                         k: usize, n: usize, scheme: TilingScheme) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    if c.is_empty() {
+        return;
+    }
+    if k == 0 {
+        c.fill(0.0);
+        return;
+    }
+    let s = scheme.validated();
+    PACK.with(|cell| {
+        let (pa, pb) = &mut *cell.borrow_mut();
+        pack_a(a, m, k, pa);
+        pack_b(b, k, n, pb);
+        let rc = RawSliceMut::of(c);
+        let mut i0 = 0;
+        while i0 < m {
+            let mc = s.m_block.min(m - i0);
+            let mut j0 = 0;
+            while j0 < n {
+                let nc = s.n_block.min(n - j0);
+                // SAFETY: serial loop — every tile is written from this
+                // thread only, and `c` is borrowed for the whole call.
+                unsafe {
+                    tile_kernel(pa, pb, rc, k, n, i0, mc, j0, nc, s.k_block);
+                }
+                j0 += nc;
+            }
+            i0 += mc;
+        }
+    });
+}
+
+/// Blocked GEMM with (m-block x n-block) macro-tiles distributed over
+/// `pool` (at most `max_lanes` concurrent jobs; contiguous tile runs per
+/// job). The caller thread packs both panels, then becomes a lane.
+/// Bit-identical to [`gemm_blocked_into`] under the same scheme for any
+/// lane count: each output element is owned by exactly one macro-tile.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_blocked_pool_into(pool: &WorkerPool, a: &[f32], b: &[f32],
+                              c: &mut [f32], m: usize, k: usize, n: usize,
+                              scheme: TilingScheme, max_lanes: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    if c.is_empty() {
+        return;
+    }
+    if k == 0 {
+        c.fill(0.0);
+        return;
+    }
+    let s = scheme.validated();
+    let mtiles = m.div_ceil(s.m_block);
+    let ntiles = n.div_ceil(s.n_block);
+    let tiles = mtiles * ntiles;
+    let lanes = max_lanes.min(pool.lanes()).min(tiles).max(1);
+    if lanes <= 1 {
+        gemm_blocked_into(a, b, c, m, k, n, s);
+        return;
+    }
+    PACK.with(|cell| {
+        let (pa, pb) = &mut *cell.borrow_mut();
+        pack_a(a, m, k, pa);
+        pack_b(b, k, n, pb);
+        let rpa = RawSlice::of(pa);
+        let rpb = RawSlice::of(pb);
+        let rc = RawSliceMut::of(c);
+        let per = tiles.div_ceil(lanes);
+        let mut jobs: Vec<pool::Job> = Vec::with_capacity(lanes);
+        let mut t0 = 0usize;
+        while t0 < tiles {
+            let t1 = (t0 + per).min(tiles);
+            jobs.push(Box::new(move || {
+                for t in t0..t1 {
+                    let i0 = (t / ntiles) * s.m_block;
+                    let j0 = (t % ntiles) * s.n_block;
+                    let mc = s.m_block.min(m - i0);
+                    let nc = s.n_block.min(n - j0);
+                    // SAFETY: `run_all` blocks the dispatching thread
+                    // until every job has run, so the packed panels and
+                    // `c` outlive the job; tiles partition C and each
+                    // tile index lands in exactly one job.
+                    unsafe {
+                        tile_kernel(rpa.get(), rpb.get(), rc, k, n, i0, mc,
+                                    j0, nc, s.k_block);
+                    }
+                }
+            }));
+            t0 = t1;
+        }
+        pool.run_all(jobs);
+    });
 }
 
 #[cfg(test)]
@@ -85,7 +396,7 @@ mod tests {
     use super::*;
     use crate::util::rng::Rng;
 
-    fn naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    fn naive_f64(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
         let mut c = vec![0f32; m * n];
         for i in 0..m {
             for j in 0..n {
@@ -99,6 +410,21 @@ mod tests {
         c
     }
 
+    /// Gaussian data with an exact-zero fraction — quantized activations
+    /// are often exactly 0.0, and the packed kernel drops the naive
+    /// loop's zero-skip, so zeros must be exercised deliberately.
+    fn zero_laden(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len)
+            .map(|_| {
+                if rng.below(4) == 0 {
+                    0.0
+                } else {
+                    rng.gauss(0.0, 1.0) as f32
+                }
+            })
+            .collect()
+    }
+
     #[test]
     fn matches_naive() {
         let mut rng = Rng::new(1);
@@ -106,7 +432,7 @@ mod tests {
             let a: Vec<f32> = (0..m * k).map(|_| rng.gauss(0.0, 1.0) as f32).collect();
             let b: Vec<f32> = (0..k * n).map(|_| rng.gauss(0.0, 1.0) as f32).collect();
             let c = gemm(&a, &b, m, k, n);
-            let want = naive(&a, &b, m, k, n);
+            let want = naive_f64(&a, &b, m, k, n);
             for (x, y) in c.iter().zip(want.iter()) {
                 assert!((x - y).abs() < 1e-3, "{x} vs {y}");
             }
@@ -122,6 +448,71 @@ mod tests {
         let c1 = gemm(&a, &b, m, k, n);
         let c2 = gemm_parallel(&a, &b, m, k, n, 4);
         assert_eq!(c1, c2);
+    }
+
+    /// Tentpole invariant: the blocked kernel under any single-k-block
+    /// scheme is bit-exact against the naive reference across ragged
+    /// shapes — including `m < PAR_ROW_THRESHOLD`, register-block edges,
+    /// and exact-zero-laden operands (the dropped zero-skip).
+    #[test]
+    fn prop_blocked_single_k_bit_exact_vs_naive() {
+        let mut rng = Rng::new(0xD1CE);
+        for trial in 0..60 {
+            let m = 1 + rng.below(160);
+            let k = 1 + rng.below(96);
+            let n = 1 + rng.below(48);
+            let scheme = TilingScheme::new(
+                MR * (1 + rng.below(24)),
+                usize::MAX,
+                NR * (1 + rng.below(8)),
+            );
+            let a = zero_laden(&mut rng, m * k);
+            let b = zero_laden(&mut rng, k * n);
+            let mut want = vec![0f32; m * n];
+            gemm_naive_into(&a, &b, &mut want, m, k, n);
+            let mut got = vec![7f32; m * n]; // must be fully overwritten
+            gemm_blocked_into(&a, &b, &mut got, m, k, n, scheme);
+            assert_eq!(got, want,
+                       "trial {trial}: serial {scheme} at {m}x{k}x{n}");
+            let mut got_p = vec![7f32; m * n];
+            gemm_blocked_pool_into(pool::global(), &a, &b, &mut got_p, m, k,
+                                   n, scheme, 8);
+            assert_eq!(got_p, want,
+                       "trial {trial}: pooled {scheme} at {m}x{k}x{n}");
+        }
+    }
+
+    /// Multi-k-block schemes regroup f32 sums: not bit-identical, but
+    /// bounded against the f64 reference, and the pooled dispatch stays
+    /// bit-identical to the serial blocked kernel (tile ownership).
+    #[test]
+    fn prop_multi_k_block_bounded_and_pool_exact() {
+        let mut rng = Rng::new(0xFADE);
+        for trial in 0..30 {
+            let m = 1 + rng.below(120);
+            let k = 2 + rng.below(96);
+            let n = 1 + rng.below(40);
+            let scheme = TilingScheme::new(
+                MR * (1 + rng.below(16)),
+                1 + rng.below(k), // genuine k-split most trials
+                NR * (1 + rng.below(4)),
+            );
+            let a = zero_laden(&mut rng, m * k);
+            let b = zero_laden(&mut rng, k * n);
+            let want = naive_f64(&a, &b, m, k, n);
+            let mut got = vec![0f32; m * n];
+            gemm_blocked_into(&a, &b, &mut got, m, k, n, scheme);
+            for (i, (x, y)) in got.iter().zip(want.iter()).enumerate() {
+                assert!((x - y).abs() < 1e-3,
+                        "trial {trial}: {scheme} at {m}x{k}x{n} elem {i}: \
+                         {x} vs {y}");
+            }
+            let mut got_p = vec![0f32; m * n];
+            gemm_blocked_pool_into(pool::global(), &a, &b, &mut got_p, m, k,
+                                   n, scheme, 5);
+            assert_eq!(got_p, got,
+                       "trial {trial}: pooled k-split {scheme} at {m}x{k}x{n}");
+        }
     }
 
     /// Satellite invariant: chunked parallel dispatch is bit-exact against
@@ -141,6 +532,45 @@ mod tests {
             let c2 = gemm_parallel(&a, &b, m, k, n, threads);
             assert_eq!(c1, c2,
                        "trial {trial}: m={m} k={k} n={n} threads={threads}");
+        }
+    }
+
+    /// The legacy row-parallel path (kept for the bench's blocked-vs-rowpar
+    /// section) still equals the naive kernel bit for bit — and therefore
+    /// the blocked default too.
+    #[test]
+    fn rowpar_legacy_path_matches_naive() {
+        let mut rng = Rng::new(0xCAFE);
+        for (m, k, n) in [(40, 9, 8), (200, 36, 40), (65, 7, 17)] {
+            let a = zero_laden(&mut rng, m * k);
+            let b = zero_laden(&mut rng, k * n);
+            let mut want = vec![0f32; m * n];
+            gemm_naive_into(&a, &b, &mut want, m, k, n);
+            for threads in [1, 4, 0] {
+                let got = gemm_rowpar(&a, &b, m, k, n, threads);
+                assert_eq!(got, want, "rowpar {m}x{k}x{n} threads={threads}");
+            }
+            assert_eq!(gemm(&a, &b, m, k, n), want, "blocked {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn blocked_handles_degenerate_and_edge_shapes() {
+        // k = 0: a defined all-zeros result
+        let mut c = vec![5f32; 6];
+        gemm_blocked_into(&[], &[], &mut c, 2, 0, 3, TilingScheme::DEFAULT);
+        assert_eq!(c, vec![0f32; 6]);
+        // single row/column and register-block edges (m % MR, n % NR != 0)
+        let mut rng = Rng::new(77);
+        for (m, k, n) in [(1, 8, 1), (1, 64, 17), (5, 3, 16), (4, 1, 33)] {
+            let a = zero_laden(&mut rng, m * k);
+            let b = zero_laden(&mut rng, k * n);
+            let mut want = vec![0f32; m * n];
+            gemm_naive_into(&a, &b, &mut want, m, k, n);
+            let mut got = vec![9f32; m * n];
+            gemm_blocked_into(&a, &b, &mut got, m, k, n,
+                              TilingScheme::new(8, usize::MAX, 16));
+            assert_eq!(got, want, "{m}x{k}x{n}");
         }
     }
 

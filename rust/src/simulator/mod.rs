@@ -27,8 +27,10 @@ pub mod gemm;
 pub mod im2col;
 pub mod pipeline;
 pub mod pool;
+pub mod tiling;
 
 pub use analog_forward::{AnalogModel, TileGridEngine};
 pub use forward::NativeModel;
 pub use pipeline::{LayerExecutor, MatmulCtx, MatmulEngine, NativeGemmEngine};
 pub use pool::WorkerPool;
+pub use tiling::TilingScheme;

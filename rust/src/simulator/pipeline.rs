@@ -36,8 +36,10 @@ use std::sync::{Arc, Mutex};
 use crate::nn::{LayerKind, LayerMeta, ModelMeta};
 use crate::pcm::{AdcFault, LayerGdc};
 use crate::quant;
+use crate::simulator::gemm;
 use crate::simulator::im2col;
 use crate::simulator::pool::WorkerPool;
+use crate::simulator::tiling::{self, TilingScheme};
 
 /// Ping-pong activation scratch: two buffers, each sized for the largest
 /// intermediate (patch matrix or activation block) of the model at the
@@ -162,8 +164,33 @@ pub trait MatmulEngine {
 /// fake-quantization *after* accumulation, GDC as one output scale —
 /// numerically the exported HLO graph, and the reference the tile-faithful
 /// engine degenerates to on single-tile layers at unity GDC.
+///
+/// By default the multiply runs the blocked packed kernel under the
+/// process-wide autotuned **single-k-block** scheme, which is bit-exact
+/// with the naive reference — so every bit-identity property in the test
+/// suite (and the analog argmax-consistency gate) is preserved. An
+/// executor may opt a specific engine instance into an explicit
+/// [`TilingScheme`] via [`with_scheme`](Self::with_scheme) — including
+/// k-split schemes, whose f32 sums regroup (f64-bounded, never default).
 #[derive(Clone, Copy, Debug, Default)]
-pub struct NativeGemmEngine;
+pub struct NativeGemmEngine {
+    scheme: Option<TilingScheme>,
+}
+
+impl NativeGemmEngine {
+    /// Opt this engine into an explicit tiling scheme. A single-k-block
+    /// scheme stays bit-exact with the default engine; a k-split scheme
+    /// trades bit-exactness for cache-resident inner panels (the bound is
+    /// property-tested in `simulator::gemm`).
+    pub fn with_scheme(scheme: TilingScheme) -> Self {
+        NativeGemmEngine { scheme: Some(scheme.validated()) }
+    }
+
+    /// The explicit scheme this engine was opted into, if any.
+    pub fn scheme(&self) -> Option<TilingScheme> {
+        self.scheme
+    }
+}
 
 impl MatmulEngine for NativeGemmEngine {
     fn name(&self) -> &'static str {
@@ -172,7 +199,11 @@ impl MatmulEngine for NativeGemmEngine {
 
     fn analog_matmul(&self, ctx: &MatmulCtx<'_>, a: &[f32], w: &[f32],
                      out: &mut [f32]) {
-        ctx.pool.gemm_into(a, w, out, ctx.m, ctx.k, ctx.n);
+        match self.scheme {
+            Some(s) => gemm::gemm_with_scheme_into(ctx.pool, a, w, out,
+                                                   ctx.m, ctx.k, ctx.n, s),
+            None => ctx.pool.gemm_into(a, w, out, ctx.m, ctx.k, ctx.n),
+        }
         quant::fake_quant_slice(out, ctx.layer.r_adc, ctx.adc_bits);
         let g = ctx.gdc.uniform;
         if (g - 1.0).abs() > 1e-9 {
@@ -205,10 +236,27 @@ pub struct LayerExecutor {
 impl LayerExecutor {
     /// `threads` GEMM lanes (`0` = all available cores); the worker pool
     /// is spawned here, never on the execution path.
+    ///
+    /// Construction also triggers the process-wide GEMM tiling autotune
+    /// ([`tiling::ensure_autotuned`]) on this model's real layer shapes at
+    /// the nominal serving batch — a one-time, time-boxed probe cached in
+    /// a `OnceLock`, so backends pay it once before the first request and
+    /// the hot path only ever reads the cached scheme. The
+    /// `ANALOGNETS_TILING` env override wins over the probe (reproducible
+    /// CI runs).
     pub fn new(meta: impl Into<Arc<ModelMeta>>, threads: usize) -> Self {
+        let meta: Arc<ModelMeta> = meta.into();
+        let pool = Arc::new(WorkerPool::new(threads));
+        let shapes: Vec<(usize, usize, usize)> = meta
+            .layers
+            .iter()
+            .map(|lm| crate::timing::perf::layer_gemm_dims(
+                lm, tiling::AUTOTUNE_BATCH))
+            .collect();
+        tiling::ensure_autotuned(&shapes, &pool);
         LayerExecutor {
-            meta: meta.into(),
-            pool: Arc::new(WorkerPool::new(threads)),
+            meta,
+            pool,
             scratch: Mutex::new(Scratch::default()),
         }
     }
@@ -450,7 +498,7 @@ mod tests {
     fn executor_consults_engine_once_per_analog_layer() {
         let exec = LayerExecutor::new(tiny_meta(), 1);
         let engine = Counting {
-            inner: NativeGemmEngine,
+            inner: NativeGemmEngine::default(),
             calls: std::sync::atomic::AtomicUsize::new(0),
         };
         let x: Vec<f32> = (0..16).map(|i| (i as f32) / 16.0).collect();
@@ -469,7 +517,7 @@ mod tests {
         // native engine on the same executor
         let exec = LayerExecutor::new(tiny_meta(), 2);
         let engine = Counting {
-            inner: NativeGemmEngine,
+            inner: NativeGemmEngine::default(),
             calls: std::sync::atomic::AtomicUsize::new(0),
         };
         let mut rng = crate::util::rng::Rng::new(21);
@@ -479,8 +527,35 @@ mod tests {
         let weights = vec![w0, w1];
         let gdc = crate::pcm::gdc::flat_vec(&[1.1, 1.0]);
         let a = exec.forward(&engine, &x, 3, &weights, &gdc, 8);
-        let b = exec.forward(&NativeGemmEngine, &x, 3, &weights, &gdc, 8);
+        let b = exec.forward(&NativeGemmEngine::default(), &x, 3, &weights,
+                             &gdc, 8);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn explicit_scheme_opt_in_semantics() {
+        // a pinned single-k-block scheme is bit-identical to the default
+        // engine; a k-split scheme is the explicit opt-OUT of bit-exactness
+        // and must stay within quantization-step distance
+        let exec = LayerExecutor::new(tiny_meta(), 2);
+        let mut rng = crate::util::rng::Rng::new(33);
+        let x: Vec<f32> = (0..3 * 16).map(|_| rng.gauss(0.4, 0.3) as f32).collect();
+        let w0: Vec<f32> = (0..18).map(|_| rng.gauss(0.0, 0.4) as f32).collect();
+        let w1: Vec<f32> = (0..4).map(|_| rng.gauss(0.0, 0.4) as f32).collect();
+        let weights = vec![w0, w1];
+        let gdc = crate::pcm::gdc::unity(2);
+        let base = exec.forward(&NativeGemmEngine::default(), &x, 3, &weights,
+                                &gdc, 8);
+        let pinned = NativeGemmEngine::with_scheme(
+            TilingScheme::new(32, usize::MAX, 32));
+        assert_eq!(pinned.scheme().unwrap().k_block, usize::MAX);
+        assert_eq!(exec.forward(&pinned, &x, 3, &weights, &gdc, 8), base);
+        let split = NativeGemmEngine::with_scheme(TilingScheme::new(32, 4, 32));
+        let out = exec.forward(&split, &x, 3, &weights, &gdc, 8);
+        assert_eq!(out.len(), base.len());
+        for (a, b) in out.iter().zip(base.iter()) {
+            assert!((a - b).abs() < 0.2, "{a} vs {b}");
+        }
     }
 
     #[test]

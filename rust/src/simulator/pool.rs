@@ -1,11 +1,12 @@
-//! Persistent worker pool for row-parallel GEMM.
+//! Persistent worker pool for parallel GEMM macro-tiles (and arbitrary
+//! jobs such as the AnalogCim per-tile MVMs).
 //!
 //! The serving hot path used to spawn scoped threads on *every*
 //! `gemm_parallel` call; at serving rates that is thousands of
 //! thread-spawn/join cycles per second. A [`WorkerPool`] is created once
 //! (owned by `NativeModel`, or process-wide via [`global`]) and its workers
 //! park on a job queue between launches, so a batched GEMM costs one channel
-//! send per row chunk instead of one thread spawn.
+//! send per macro-tile job instead of one thread spawn.
 //!
 //! The pool is std-only: `mpsc` job queue + `Mutex`/`Condvar` completion
 //! latch. Jobs carry raw-pointer views of the caller's slices; soundness
@@ -19,6 +20,7 @@ use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 use crate::simulator::gemm;
+use crate::simulator::tiling;
 
 /// A unit of pool work. Jobs may capture raw views ([`RawSlice`],
 /// [`RawSliceMut`]) of caller-owned buffers; the dispatch protocol
@@ -116,16 +118,28 @@ impl WorkerPool {
         latch.wait(submitted);
     }
 
-    /// `C[M,N] = A[M,K] @ B[K,N]` over this pool's lanes. Falls back to the
-    /// single-threaded kernel below [`gemm::PAR_ROW_THRESHOLD`] rows.
+    /// `C[M,N] = A[M,K] @ B[K,N]` over this pool's lanes: the blocked,
+    /// packed kernel under the process-wide single-k-block scheme
+    /// ([`tiling::global`] clamped through [`tiling::TilingScheme::full_k`]
+    /// — bit-identical to [`gemm::gemm_naive_into`]), with (m-block x
+    /// n-block) macro-tiles distributed across the workers. Falls back to
+    /// the single-threaded kernel below [`gemm::PAR_ROW_THRESHOLD`] rows.
     pub fn gemm_into(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize,
                      k: usize, n: usize) {
-        self.gemm_chunks(a, b, c, m, k, n, self.lanes);
+        if self.workers.is_empty() || m < gemm::PAR_ROW_THRESHOLD {
+            gemm::gemm_into(a, b, c, m, k, n);
+        } else {
+            gemm::gemm_blocked_pool_into(self, a, b, c, m, k, n,
+                                         tiling::global().full_k(),
+                                         self.lanes);
+        }
     }
 
-    /// Like [`gemm_into`](Self::gemm_into) with an explicit chunk count
-    /// (`lanes` row chunks are dispatched; parallelism is additionally
-    /// bounded by the pool's worker count).
+    /// The legacy row-chunk dispatch: `lanes` contiguous row chunks of the
+    /// *naive* kernel (what [`gemm_into`](Self::gemm_into) was before the
+    /// packed kernel landed). Kept verbatim so the bench's `gemm` section
+    /// can measure blocked-vs-rowpar on identical pool machinery; not on
+    /// any serving path.
     #[allow(clippy::too_many_arguments)]
     pub fn gemm_chunks(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize,
                        k: usize, n: usize, lanes: usize) {
@@ -134,7 +148,7 @@ impl WorkerPool {
         assert_eq!(c.len(), m * n);
         let lanes = lanes.min(m).max(1);
         if lanes <= 1 || m < gemm::PAR_ROW_THRESHOLD || self.workers.is_empty() {
-            gemm::gemm_into(a, b, c, m, k, n);
+            gemm::gemm_naive_into(a, b, c, m, k, n);
             return;
         }
         let chunk = m.div_ceil(lanes);
@@ -155,14 +169,15 @@ impl WorkerPool {
                 // has arrived, so `a`, `b` and this (disjoint) chunk of `c`
                 // outlive the job.
                 unsafe {
-                    gemm::gemm_into(ra.get(), rb.get(), rc.get_mut(), rows, k, n);
+                    gemm::gemm_naive_into(ra.get(), rb.get(), rc.get_mut(),
+                                          rows, k, n);
                 }
                 latch.arrive();
             }));
         }
         // the calling thread is a lane too: it computes the first chunk
         let head_rows = head.len() / n;
-        gemm::gemm_into(&a[..head_rows * k], b, head, head_rows, k, n);
+        gemm::gemm_naive_into(&a[..head_rows * k], b, head, head_rows, k, n);
         latch.wait(submitted);
     }
 }

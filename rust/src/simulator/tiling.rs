@@ -1,0 +1,353 @@
+//! Tiling configuration and startup autotune for the blocked GEMM engine.
+//!
+//! A [`TilingScheme`] names the three cache-blocking dimensions of the
+//! packed kernel in `simulator::gemm`: output macro-tiles are
+//! `m_block x n_block`, and the inner dimension is swept in `k_block`
+//! slices (`k_block == usize::MAX` — rendered `0` in the string form —
+//! means "one k-block": the whole inner dimension in a single sweep,
+//! which is the bit-exactness-preserving configuration, see below).
+//!
+//! ## Accumulation-order contract
+//!
+//! The blocked microkernel accumulates each output element in ascending-k
+//! order inside a k-block, starting from `+0.0`, exactly like the naive
+//! reference kernel (`gemm::gemm_naive_into`). With a **single k-block**
+//! the result is therefore bit-identical to the naive kernel (property
+//! tested in `gemm`). Splitting k into several blocks regroups the f32
+//! sums (`c = block0 + block1 + ...`) and is *not* bit-identical — only
+//! bounded against an f64 reference — so k-split schemes are never chosen
+//! here: the candidate set is single-k-block only, the default scheme is
+//! single-k-block, and every default GEMM entry point clamps the scheme
+//! through [`TilingScheme::full_k`]. A k-split scheme runs only when an
+//! executor opts in explicitly (`NativeGemmEngine::with_scheme`).
+//!
+//! ## Autotune
+//!
+//! [`ensure_autotuned`] probes a small fixed candidate set on the first
+//! real layer GEMM shapes (deterministic candidate order, time-boxed to
+//! [`AUTOTUNE_BUDGET_MS`]) and caches the winner in a process-wide
+//! `OnceLock`, so serving pays the probe once at backend construction.
+//! The env override `ANALOGNETS_TILING=MxKxN` (e.g. `64x0x64`; `K = 0`
+//! means full-K) pins the scheme for reproducible CI runs and wins over
+//! the probe.
+
+use std::fmt;
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+use crate::simulator::gemm;
+use crate::simulator::pool::WorkerPool;
+
+/// Microkernel register-block rows: each packed-A group interleaves `MR`
+/// output rows. `m_block` is kept a multiple of this.
+pub const MR: usize = 4;
+
+/// Microkernel register-block columns: each packed-B strip holds `NR`
+/// output columns contiguously per k step. `n_block` is kept a multiple
+/// of this (and `NR` f32 lanes autovectorize to a few SIMD registers).
+pub const NR: usize = 16;
+
+/// Env var pinning the process-wide scheme: `MxKxN` with `K = 0` for
+/// full-K, e.g. `ANALOGNETS_TILING=64x0x128`.
+pub const TILING_ENV: &str = "ANALOGNETS_TILING";
+
+/// Wall-clock budget for the startup autotune probe, in milliseconds.
+/// The first candidate (the default scheme) is always timed in full;
+/// later candidates are skipped once the budget is exhausted.
+pub const AUTOTUNE_BUDGET_MS: u64 = 60;
+
+/// Nominal batch the first-real-layer-shapes probe is sized at (the
+/// serving coordinator's usual `max_batch`).
+pub const AUTOTUNE_BATCH: usize = 32;
+
+/// Cache-blocking dimensions for the packed GEMM kernel: output
+/// macro-tiles are `m_block x n_block`, the inner dimension is swept in
+/// `k_block` slices. See the module docs for the accumulation-order
+/// contract attached to `k_block`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TilingScheme {
+    /// Output-row extent of one macro-tile (multiple of [`MR`]).
+    pub m_block: usize,
+    /// Inner-dimension slice length; `usize::MAX` = one k-block (the
+    /// bit-exact configuration, and the only one default paths use).
+    pub k_block: usize,
+    /// Output-column extent of one macro-tile (multiple of [`NR`]).
+    pub n_block: usize,
+}
+
+impl TilingScheme {
+    /// The scheme used when no autotune has run and no override is set:
+    /// 64x64 macro-tiles, single k-block.
+    pub const DEFAULT: TilingScheme = TilingScheme {
+        m_block: 64,
+        k_block: usize::MAX,
+        n_block: 64,
+    };
+
+    pub const fn new(m_block: usize, k_block: usize, n_block: usize) -> Self {
+        TilingScheme { m_block, k_block, n_block }
+    }
+
+    /// Clamp into the shape the kernel requires: `m_block` a positive
+    /// multiple of [`MR`], `n_block` a positive multiple of [`NR`]
+    /// (rounded down, floored at one register block), `k_block >= 1`
+    /// with `0` normalized to `usize::MAX` (full-K).
+    pub fn validated(self) -> TilingScheme {
+        let m = self.m_block.max(MR);
+        let n = self.n_block.max(NR);
+        let k = if self.k_block == 0 { usize::MAX } else { self.k_block };
+        TilingScheme {
+            m_block: m - m % MR,
+            k_block: k,
+            n_block: n - n % NR,
+        }
+    }
+
+    /// This scheme with the k-split removed (`k_block = usize::MAX`):
+    /// the bit-exactness-preserving form every default GEMM entry point
+    /// routes through.
+    pub fn full_k(self) -> TilingScheme {
+        TilingScheme { k_block: usize::MAX, ..self }
+    }
+
+    /// Whether an inner dimension of `k` fits in one k-block under this
+    /// scheme (the bit-exact regime).
+    pub fn is_single_k(&self, k: usize) -> bool {
+        self.k_block >= k
+    }
+
+    /// Parse the `MxKxN` string form (`K = 0` means full-K), e.g.
+    /// `64x0x128`. Inverse of the `Display` rendering.
+    pub fn parse(s: &str) -> Result<TilingScheme, String> {
+        let parts: Vec<&str> = s.trim().split('x').collect();
+        if parts.len() != 3 {
+            return Err(format!(
+                "tiling scheme `{s}`: want MxKxN (K=0 for full-K)"));
+        }
+        let field = |i: usize, name: &str| -> Result<usize, String> {
+            parts[i].trim().parse::<usize>().map_err(|e| {
+                format!("tiling scheme `{s}`: bad {name} `{}`: {e}", parts[i])
+            })
+        };
+        Ok(TilingScheme {
+            m_block: field(0, "m_block")?,
+            k_block: field(1, "k_block")?,
+            n_block: field(2, "n_block")?,
+        }
+        .validated())
+    }
+}
+
+impl fmt::Display for TilingScheme {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let k = if self.k_block == usize::MAX { 0 } else { self.k_block };
+        write!(f, "{}x{k}x{}", self.m_block, self.n_block)
+    }
+}
+
+/// The fixed autotune candidate set, probed in this order. All
+/// single-k-block (see the module docs); the default scheme is first so
+/// the time-box can never skip it.
+pub fn candidates() -> &'static [TilingScheme] {
+    const C: &[TilingScheme] = &[
+        TilingScheme::DEFAULT, // 64x64
+        TilingScheme::new(64, usize::MAX, 128),
+        TilingScheme::new(128, usize::MAX, 64),
+        TilingScheme::new(128, usize::MAX, 128),
+        TilingScheme::new(32, usize::MAX, 128),
+        TilingScheme::new(32, usize::MAX, 64),
+    ];
+    C
+}
+
+/// Read and parse [`TILING_ENV`]. A malformed value is reported on
+/// stderr and ignored (serving should not refuse to start over a typo'd
+/// tuning knob).
+pub fn env_override() -> Option<TilingScheme> {
+    let raw = std::env::var(TILING_ENV).ok()?;
+    match TilingScheme::parse(&raw) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("[tiling] ignoring {TILING_ENV}: {e}");
+            None
+        }
+    }
+}
+
+// Probe caps: shapes are clamped so one rep costs at most a couple of
+// milliseconds and the whole probe respects AUTOTUNE_BUDGET_MS.
+const PROBE_CAP_M: usize = 256;
+const PROBE_CAP_K: usize = 1024;
+const PROBE_CAP_N: usize = 256;
+const PROBE_MAX_SHAPES: usize = 4;
+const PROBE_REPS: usize = 2;
+
+/// Clamp, dedupe and rank the layer shapes the probe will time:
+/// largest-flops first, at most [`PROBE_MAX_SHAPES`].
+fn probe_shapes(shapes: &[(usize, usize, usize)]) -> Vec<(usize, usize, usize)> {
+    let mut v: Vec<(usize, usize, usize)> = shapes
+        .iter()
+        .map(|&(m, k, n)| {
+            (m.clamp(1, PROBE_CAP_M), k.clamp(1, PROBE_CAP_K),
+             n.clamp(1, PROBE_CAP_N))
+        })
+        .collect();
+    v.sort_by_key(|&(m, k, n)| std::cmp::Reverse(m * k * n));
+    v.dedup();
+    v.truncate(PROBE_MAX_SHAPES);
+    v
+}
+
+/// Time every candidate on the (clamped) layer shapes and return the
+/// fastest. Deterministic candidate order, min-of-[`PROBE_REPS`] per
+/// shape, time-boxed: once [`AUTOTUNE_BUDGET_MS`] is spent, remaining
+/// candidates are skipped (the default candidate always completes).
+/// Which candidate wins is machine-dependent by nature — for
+/// reproducible runs pin the scheme via [`TILING_ENV`] instead.
+pub fn autotune(shapes: &[(usize, usize, usize)], pool: &WorkerPool)
+                -> TilingScheme {
+    let shapes = probe_shapes(shapes);
+    if shapes.is_empty() {
+        return TilingScheme::DEFAULT;
+    }
+    let (mut mm, mut mk, mut mn) = (0usize, 0usize, 0usize);
+    for &(m, k, n) in &shapes {
+        mm = mm.max(m);
+        mk = mk.max(k);
+        mn = mn.max(n);
+    }
+    // deterministic probe operands (values are irrelevant to timing)
+    let a: Vec<f32> =
+        (0..mm * mk).map(|i| ((i % 31) as f32 - 15.0) * 0.05).collect();
+    let b: Vec<f32> =
+        (0..mk * mn).map(|i| ((i % 29) as f32 - 14.0) * 0.04).collect();
+    let mut c = vec![0f32; mm * mn];
+
+    let budget = Duration::from_millis(AUTOTUNE_BUDGET_MS);
+    let start = Instant::now();
+    let mut best: Option<(TilingScheme, Duration)> = None;
+    for (ci, cand) in candidates().iter().enumerate() {
+        let mut total = Duration::ZERO;
+        for &(m, k, n) in &shapes {
+            let mut fastest = Duration::MAX;
+            for _ in 0..PROBE_REPS {
+                let t0 = Instant::now();
+                gemm::gemm_blocked_pool_into(pool, &a[..m * k], &b[..k * n],
+                                             &mut c[..m * n], m, k, n, *cand,
+                                             pool.lanes());
+                fastest = fastest.min(t0.elapsed());
+            }
+            total += fastest;
+        }
+        if best.map(|(_, t)| total < t).unwrap_or(true) {
+            best = Some((*cand, total));
+        }
+        if ci + 1 < candidates().len() && start.elapsed() > budget {
+            break; // time-boxed: later candidates keep the current winner
+        }
+    }
+    best.map(|(s, _)| s).unwrap_or(TilingScheme::DEFAULT)
+}
+
+/// Resolve the scheme a process should run: an explicit pin (validated)
+/// wins, otherwise [`autotune`]. Pure in its inputs — the determinism
+/// property tests pin a scheme through this instead of mutating the
+/// process env.
+pub fn resolve(pinned: Option<TilingScheme>,
+               shapes: &[(usize, usize, usize)], pool: &WorkerPool)
+               -> TilingScheme {
+    match pinned {
+        Some(s) => s.validated(),
+        None => autotune(shapes, pool).validated(),
+    }
+}
+
+static CHOSEN: OnceLock<TilingScheme> = OnceLock::new();
+
+/// Run the startup autotune once per process (env override wins, see
+/// [`TILING_ENV`]) and cache the winner; every later call — and every
+/// [`global`] lookup — returns the cached scheme. Called by
+/// `LayerExecutor::new`, i.e. by backend construction, so serving pays
+/// the probe exactly once before the first request.
+pub fn ensure_autotuned(shapes: &[(usize, usize, usize)], pool: &WorkerPool)
+                        -> TilingScheme {
+    *CHOSEN.get_or_init(|| resolve(env_override(), shapes, pool))
+}
+
+/// The process-wide scheme. If no autotune has run yet (a raw
+/// `gemm_parallel` call before any backend exists), the env override or
+/// [`TilingScheme::DEFAULT`] is locked in instead — every candidate is
+/// single-k-block, so which one wins never changes results, only speed.
+pub fn global() -> TilingScheme {
+    *CHOSEN.get_or_init(|| {
+        env_override().map(TilingScheme::validated)
+                      .unwrap_or(TilingScheme::DEFAULT)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_display_round_trip() {
+        let s = TilingScheme::parse("64x0x128").unwrap();
+        assert_eq!(s, TilingScheme::new(64, usize::MAX, 128));
+        assert_eq!(s.to_string(), "64x0x128");
+        let s = TilingScheme::parse(" 32x7x16 ").unwrap();
+        assert_eq!(s, TilingScheme::new(32, 7, 16));
+        assert_eq!(s.to_string(), "32x7x16");
+        assert_eq!(TilingScheme::parse(&s.to_string()).unwrap(), s);
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for bad in ["", "64", "64x64", "64xax64", "64x64x64x64", "-1x0x64"] {
+            assert!(TilingScheme::parse(bad).is_err(), "{bad:?} parsed");
+        }
+    }
+
+    #[test]
+    fn validated_clamps_to_register_blocks() {
+        let s = TilingScheme::new(0, 0, 0).validated();
+        assert_eq!(s, TilingScheme::new(MR, usize::MAX, NR));
+        let s = TilingScheme::new(65, 5, 20).validated();
+        assert_eq!(s, TilingScheme::new(64, 5, 16));
+        // validated is idempotent
+        assert_eq!(s.validated(), s);
+    }
+
+    #[test]
+    fn candidates_are_single_k_block_and_validated() {
+        // the bit-exactness contract: autotune can only ever pick a
+        // single-k-block scheme, whatever the layer shapes are
+        assert!(!candidates().is_empty());
+        assert_eq!(candidates()[0], TilingScheme::DEFAULT);
+        for c in candidates() {
+            assert_eq!(c.k_block, usize::MAX, "{c} is not single-k-block");
+            assert_eq!(c.validated(), *c, "{c} is not validated");
+            assert!(c.is_single_k(1 << 20));
+        }
+    }
+
+    #[test]
+    fn resolve_pinned_is_deterministic() {
+        let pool = WorkerPool::new(2);
+        let shapes = [(128, 64, 32), (32, 576, 64)];
+        let pin = TilingScheme::new(32, 9, 32);
+        for _ in 0..3 {
+            assert_eq!(resolve(Some(pin), &shapes, &pool), pin.validated());
+        }
+        // unpinned resolution picks from the candidate set
+        let tuned = resolve(None, &shapes, &pool);
+        assert!(candidates().contains(&tuned), "{tuned} not a candidate");
+    }
+
+    #[test]
+    fn global_is_stable_across_calls() {
+        let g = global();
+        assert_eq!(global(), g);
+        assert_eq!(g.validated(), g);
+        assert!(g.is_single_k(usize::MAX - 1) || g.k_block > 0);
+    }
+}
