@@ -103,6 +103,14 @@ impl InferenceBackend for AnalogCimBackend {
         Some(self.geom())
     }
 
+    /// Launch schedule on this engine's *configured* geometry — identical
+    /// to the native backend's on the default AON array, per-tile under
+    /// ablation geometries. `None` only if the model needs split-GEMM on
+    /// this geometry (the estimator prices whole-layer mappings).
+    fn schedule_model(&self) -> Option<crate::timing::ScheduleModel> {
+        self.model.schedule_model().ok()
+    }
+
     fn run_batch(&self, x: &[f32], batch: usize, weights: &[HostTensor],
                  gdc: &[LayerGdc], opts: &InferOpts) -> anyhow::Result<Vec<f32>> {
         self.validate_args(x, batch, weights, gdc, opts)?;

@@ -97,6 +97,15 @@ pub struct InferOpts {
     pub t_drift: Option<f64>,
     /// ADC bitwidth override (`None` = the backend's configured bits)
     pub adc_bits: Option<u32>,
+    /// lowest ADC bitwidth this request is *willing* to be served at —
+    /// an explicit opt-in to the coordinator's SLO policy: under
+    /// `ServeConfig::latency_slo_us`, the batcher may serve the request
+    /// anywhere in `[adc_bits_floor, effective_bits]`, trading precision
+    /// for modeled launch latency. `None` (the default) means the request
+    /// is never requantized below its pinned/configured bitwidth, so
+    /// accuracy can only change for requests that asked for the trade.
+    /// Ignored when the coordinator has no latency SLO.
+    pub adc_bits_floor: Option<u32>,
     /// device-variability scenario override (`None` = deployment default)
     pub faults: Option<FaultSpec>,
 }
@@ -120,6 +129,13 @@ impl InferOpts {
         self
     }
 
+    /// Builder-style bitwidth floor (opt-in to the SLO policy's bitwidth
+    /// range; see the field docs).
+    pub fn with_adc_bits_floor(mut self, floor: u32) -> Self {
+        self.adc_bits_floor = Some(floor);
+        self
+    }
+
     /// The bitwidth a backend configured at `backend_bits` quantizes this
     /// request at.
     pub fn effective_bits(&self, backend_bits: u32) -> u32 {
@@ -137,12 +153,16 @@ impl InferOpts {
     /// spec collapses to 0 and `None` ("deployment default") stays its own
     /// `u64::MAX` class — the coordinator, not the key, resolves what the
     /// default means, so requests relying on it must not share launches
-    /// with requests pinning an explicit spec.
-    pub fn batch_key(&self) -> (u64, u32, u64) {
+    /// with requests pinning an explicit spec. `adc_bits_floor` keys the
+    /// same way (`u32::MAX` = no floor): a launch executes at exactly one
+    /// bitwidth, and the SLO policy picks it per group, so requests with
+    /// different permitted ranges must not share a launch.
+    pub fn batch_key(&self) -> (u64, u32, u32, u64) {
         (
             self.t_drift
                 .map_or(u64::MAX, |t| crate::pcm::clamp_age(t).to_bits()),
             self.adc_bits.unwrap_or(u32::MAX),
+            self.adc_bits_floor.unwrap_or(u32::MAX),
             self.faults.map_or(u64::MAX, |f| f.key()),
         )
     }
@@ -175,6 +195,23 @@ pub fn validate_opts(kind: BackendKind, backend_bits: u32,
              {backend_bits} (the pjrt backend cannot requantize per \
              request; per-request bitwidths need a weight-fed engine: \
              --backend native|analog)"
+        );
+    }
+    if let Some(f) = opts.adc_bits_floor {
+        anyhow::ensure!(
+            (2..=16).contains(&f),
+            "adc_bits_floor {f} outside the supported 2..=16 range"
+        );
+        let ceil = opts.adc_bits.unwrap_or(backend_bits);
+        anyhow::ensure!(
+            f <= ceil,
+            "adc_bits_floor {f} exceeds the request's bitwidth {ceil} \
+             (the floor bounds an SLO-policy range [floor, bits])"
+        );
+        anyhow::ensure!(
+            kind != BackendKind::Pjrt,
+            "the pjrt backend cannot serve a bitwidth range (its graphs \
+             are compiled at one bitwidth); use --backend native|analog"
         );
     }
     if let Some(t) = opts.t_drift {
@@ -255,6 +292,18 @@ pub trait InferenceBackend {
     /// engine quantizes per tile ([`AnalogCimBackend`] returns its array
     /// geometry; full-K engines return `None` and get uniform GDC).
     fn calib_geom(&self) -> Option<ArrayGeom> {
+        None
+    }
+
+    /// Launch-schedule estimator for the array this engine simulates
+    /// ([`ScheduleModel`](crate::timing::ScheduleModel)): modeled
+    /// latency/energy of the batched layer-serial launches, used by the
+    /// coordinator for energy metrics and the `latency_slo_us` policy.
+    /// Weight-fed engines map their meta onto their engine's geometry;
+    /// `None` (the PJRT default — real-hardware timing is unknown to the
+    /// host) makes the coordinator fall back to mapping the meta onto the
+    /// paper's AON array.
+    fn schedule_model(&self) -> Option<crate::timing::ScheduleModel> {
         None
     }
 
@@ -489,6 +538,7 @@ mod tests {
         let aged2 = InferOpts {
             t_drift: Some(86_400.0),
             adc_bits: None,
+            adc_bits_floor: None,
             faults: None,
         };
         assert_eq!(aged, aged2);
@@ -515,7 +565,15 @@ mod tests {
         // and distinct seeds split launches
         let none_spec = InferOpts::default().with_faults(FaultSpec::none());
         assert_ne!(none_spec, d);
-        assert_eq!(none_spec.batch_key().2, 0);
+        assert_eq!(none_spec.batch_key().3, 0);
+
+        // a bitwidth floor is part of the launch-compatibility key: the
+        // SLO policy picks one bitwidth per group, so different permitted
+        // ranges must not share a launch
+        let ranged = InferOpts::default().with_adc_bits_floor(4);
+        assert_ne!(ranged, d);
+        assert_ne!(ranged.batch_key(), d.batch_key());
+        assert_eq!(ranged, InferOpts::default().with_adc_bits_floor(4));
         let s1 = FaultSpec { stuck_min: 0.01, seed: 1, ..FaultSpec::none() };
         let s2 = FaultSpec { seed: 2, ..s1 };
         assert_ne!(InferOpts::default().with_faults(s1),
@@ -544,5 +602,27 @@ mod tests {
         assert!(ok(BackendKind::AnalogCim, adc).is_ok());
         // explicit none is servable everywhere
         assert!(ok(BackendKind::Pjrt, FaultSpec::none()).is_ok());
+    }
+
+    #[test]
+    fn validate_opts_gates_bitwidth_floors() {
+        let v = |k, o: &InferOpts| validate_opts(k, 8, o);
+        // a sane range is fine on weight-fed engines
+        let ranged = InferOpts::default().with_adc_bits_floor(4);
+        assert!(v(BackendKind::Native, &ranged).is_ok());
+        assert!(v(BackendKind::AnalogCim, &ranged).is_ok());
+        // ...but PJRT cannot requantize at all
+        assert!(v(BackendKind::Pjrt, &ranged).is_err());
+        // floor must stay inside 2..=16 and below the effective bits
+        assert!(v(BackendKind::Native,
+                  &InferOpts::default().with_adc_bits_floor(1)).is_err());
+        assert!(v(BackendKind::Native,
+                  &InferOpts::default().with_adc_bits_floor(17)).is_err());
+        assert!(v(BackendKind::Native,
+                  &InferOpts::default().with_adc_bits_floor(10)).is_err());
+        // against a pinned per-request bitwidth, the pin is the ceiling
+        let pinned = InferOpts::default().with_adc_bits(6);
+        assert!(v(BackendKind::Native, &pinned.with_adc_bits_floor(4)).is_ok());
+        assert!(v(BackendKind::Native, &pinned.with_adc_bits_floor(7)).is_err());
     }
 }

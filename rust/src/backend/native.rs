@@ -71,6 +71,14 @@ impl InferenceBackend for NativeBackend {
         weight_fed_batch_sizes(self.meta(), self.bits)
     }
 
+    /// The native engine numerically mirrors the AON array's exported
+    /// graph, so its launch schedule is the model mapped onto
+    /// `ArrayGeom::AON`. `None` only if the model does not fit the array
+    /// whole (schedule estimation needs the whole-layer mapping).
+    fn schedule_model(&self) -> Option<crate::timing::ScheduleModel> {
+        self.model.schedule_model().ok()
+    }
+
     fn run_batch(&self, x: &[f32], batch: usize, weights: &[HostTensor],
                  gdc: &[LayerGdc], opts: &InferOpts) -> anyhow::Result<Vec<f32>> {
         self.validate_args(x, batch, weights, gdc, opts)?;

@@ -14,6 +14,13 @@
 //! per-request options ([`group_fifo`]): a launch executes under exactly
 //! one `InferOpts` (one device age, one ADC bitwidth), so requests with
 //! differing options never share a batch.
+//!
+//! When the coordinator runs with `ServeConfig::latency_slo_us`, the
+//! per-group batch cap (and, for requests that opted into a bitwidth
+//! range, the launch bitwidth) comes from the launch-schedule estimator
+//! instead of the fixed config — see [`slo_operating_point`].
+
+use crate::timing::ScheduleModel;
 
 /// A planned sequence of graph launches for `queued` requests.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -63,6 +70,29 @@ pub fn group_fifo<T, K: PartialEq>(items: Vec<T>,
         }
     }
     groups.into_iter().map(|(_, g)| g).collect()
+}
+
+/// The SLO policy: pick one launch-compatible group's operating point
+/// `(adc_bits, batch cap)` from the modeled launch schedule.
+///
+/// * Requests pinned to one bitwidth (`floor_bits == None`) keep it;
+///   the estimator only caps the batch so the modeled launch latency
+///   stays within `slo_us` ([`ScheduleModel::max_batch_within`]).
+/// * Requests that permitted a range (`InferOpts::adc_bits_floor`) may
+///   additionally be requantized: the policy keeps the highest bitwidth
+///   in `[floor, bits]` whose single-inference modeled latency fits the
+///   SLO, then batches at that bitwidth ([`ScheduleModel::choose`]).
+///
+/// Deterministic for fixed shapes: the estimator is a pure function of
+/// the mapping, never of host speed. The cap is a *planning* bound — an
+/// impossible SLO still serves batch-1 rather than rejecting.
+pub fn slo_operating_point(sched: &ScheduleModel, slo_us: f64,
+                           floor_bits: Option<u32>, bits: u32,
+                           cap: usize) -> (u32, usize) {
+    match floor_bits {
+        Some(floor) => sched.choose(slo_us, floor, bits, cap),
+        None => (bits, sched.max_batch_within(slo_us, bits, cap)),
+    }
 }
 
 /// FIFO plan for dynamically-shaped engines: full `max_batch` launches
@@ -154,6 +184,34 @@ mod tests {
         let one = group_fifo(vec![1, 2, 3], |_| 0u8);
         assert_eq!(one, vec![vec![1, 2, 3]]);
         assert!(group_fifo(Vec::<u8>::new(), |_| 0u8).is_empty());
+    }
+
+    #[test]
+    fn slo_policy_tight_shrinks_loose_grows() {
+        use crate::crossbar::ArrayGeom;
+        use crate::nn::analognets::analognet_kws;
+
+        // fixed shapes => fully deterministic policy: one 8-bit KWS
+        // inference models at exactly 696 MVMs x 130 ns = 90.48 us
+        let sched =
+            ScheduleModel::new(&analognet_kws(), ArrayGeom::AON).unwrap();
+        let (b_tight, n_tight) =
+            slo_operating_point(&sched, 200.0, None, 8, 64);
+        let (b_loose, n_loose) =
+            slo_operating_point(&sched, 5_000.0, None, 8, 64);
+        // pinned bitwidth is never changed without an opt-in floor
+        assert_eq!((b_tight, b_loose), (8, 8));
+        assert_eq!(n_tight, 2);
+        assert_eq!(n_loose, 55);
+        assert!(n_tight < n_loose);
+
+        // with a floor, a sub-single-inference SLO trades bits for latency
+        let (b, n) = slo_operating_point(&sched, 50.0, Some(4), 8, 64);
+        assert!(b < 8 && b >= 4, "bits={b}");
+        assert!(n >= 1);
+        // ...and a loose SLO keeps full precision even with a floor
+        let (b, n) = slo_operating_point(&sched, 100_000.0, Some(4), 8, 64);
+        assert_eq!((b, n), (8, 64));
     }
 
     #[test]

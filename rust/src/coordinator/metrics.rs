@@ -1,10 +1,58 @@
-//! Serving metrics: counters, throughput clock, latency reservoir.
+//! Serving metrics: counters, throughput clock, latency reservoir, and
+//! the modeled accelerator energy ledger (launches priced by the
+//! launch-schedule estimator, plus refresh/reprogram overhead events).
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::util::json::Json;
+
+/// Modeled accelerator totals for one `(model, adc_bits)` serving class.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ModeledClass {
+    /// samples launched in this class (including padded slots — the
+    /// array executes them whether or not a client asked)
+    pub inferences: u64,
+    /// modeled launch energy, nJ
+    pub energy_nj: f64,
+    /// modeled MAC ops (2 per MAC)
+    pub ops: f64,
+}
+
+impl ModeledClass {
+    /// Modeled µJ per launched sample.
+    pub fn uj_per_inf(&self) -> f64 {
+        if self.inferences == 0 {
+            0.0
+        } else {
+            self.energy_nj * 1e-3 / self.inferences as f64
+        }
+    }
+
+    /// Modeled compute efficiency, TOPS/W.
+    pub fn tops_w(&self) -> f64 {
+        if self.energy_nj > 0.0 {
+            self.ops / self.energy_nj / 1000.0
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The modeled-energy ledger behind one mutex: per-launch totals plus
+/// event overheads (refresh reads, reprogramming) that have no ops.
+#[derive(Clone, Debug, Default)]
+struct ModeledLedger {
+    /// total modeled energy, nJ: launches + overhead events
+    energy_nj: f64,
+    /// modeled ops across all launches
+    ops: f64,
+    /// per-"model@bits" launch breakdown (overheads excluded — they
+    /// belong to the deployment, not a serving class)
+    by_class: BTreeMap<String, ModeledClass>,
+}
 
 pub struct Metrics {
     /// wall-clock origin for throughput (created with the coordinator)
@@ -45,6 +93,8 @@ pub struct Metrics {
     lat_us: Mutex<Vec<f64>>,
     /// simulated accelerator energy, nanojoules
     pub sim_energy_nj: Mutex<f64>,
+    /// modeled accelerator energy/ops ledger (see [`ModeledLedger`])
+    modeled: Mutex<ModeledLedger>,
 }
 
 impl Default for Metrics {
@@ -66,6 +116,7 @@ impl Default for Metrics {
             canary_total: AtomicU64::new(0),
             lat_us: Mutex::new(Vec::new()),
             sim_energy_nj: Mutex::new(0.0),
+            modeled: Mutex::new(ModeledLedger::default()),
         }
     }
 }
@@ -77,6 +128,28 @@ impl Metrics {
 
     pub fn add_energy_nj(&self, nj: f64) {
         *self.sim_energy_nj.lock().unwrap() += nj;
+    }
+
+    /// Account one modeled launch: `slots` samples of `model` at `bits`
+    /// costing `energy_nj` nJ for `ops` MAC ops (2 per MAC), as priced by
+    /// `timing::ScheduleModel::launch`.
+    pub fn add_modeled_launch(&self, model: &str, bits: u32, slots: u64,
+                              energy_nj: f64, ops: f64) {
+        let mut led = self.modeled.lock().unwrap();
+        led.energy_nj += energy_nj;
+        led.ops += ops;
+        let c = led.by_class.entry(format!("{model}@{bits}b")).or_default();
+        c.inferences += slots;
+        c.energy_nj += energy_nj;
+        c.ops += ops;
+    }
+
+    /// Account a modeled overhead event (a cadence conductance-refresh
+    /// read or a full reprogramming): pure energy, no ops — it dilutes
+    /// `modeled_tops_w` and amortizes into `modeled_uj_per_inf` over the
+    /// traffic that shares the deployment.
+    pub fn add_modeled_overhead_nj(&self, nj: f64) {
+        self.modeled.lock().unwrap().energy_nj += nj;
     }
 
     pub fn latencies_us(&self) -> Vec<f64> {
@@ -125,6 +198,23 @@ impl Metrics {
             } else {
                 *self.sim_energy_nj.lock().unwrap() * 1e-3 / completed as f64
             },
+            modeled_uj_per_inf: {
+                let led = self.modeled.lock().unwrap();
+                if completed == 0 {
+                    0.0
+                } else {
+                    led.energy_nj * 1e-3 / completed as f64
+                }
+            },
+            modeled_tops_w: {
+                let led = self.modeled.lock().unwrap();
+                if led.energy_nj > 0.0 {
+                    led.ops / led.energy_nj / 1000.0
+                } else {
+                    0.0
+                }
+            },
+            modeled_by_class: self.modeled.lock().unwrap().by_class.clone(),
         }
     }
 }
@@ -159,6 +249,15 @@ pub struct MetricsSummary {
     pub p99_us: f64,
     pub mean_us: f64,
     pub sim_uj_per_inf: f64,
+    /// total modeled accelerator energy (launches, including padded
+    /// slots, plus refresh/reprogram overhead events) per *completed*
+    /// request, µJ — the honest serving cost of one answered request
+    pub modeled_uj_per_inf: f64,
+    /// modeled compute efficiency across all launches, TOPS/W (overhead
+    /// events add energy but no ops, so they dilute this number)
+    pub modeled_tops_w: f64,
+    /// modeled launch totals per `"model@bits"` serving class
+    pub modeled_by_class: BTreeMap<String, ModeledClass>,
 }
 
 impl MetricsSummary {
@@ -191,6 +290,18 @@ impl MetricsSummary {
         m.insert("p99_us".to_string(), num(self.p99_us));
         m.insert("mean_us".to_string(), num(self.mean_us));
         m.insert("sim_uj_per_inf".to_string(), num(self.sim_uj_per_inf));
+        m.insert("modeled_uj_per_inf".to_string(),
+                 num(self.modeled_uj_per_inf));
+        m.insert("modeled_tops_w".to_string(), num(self.modeled_tops_w));
+        let mut by = BTreeMap::new();
+        for (class, c) in &self.modeled_by_class {
+            let mut e = BTreeMap::new();
+            e.insert("inferences".to_string(), num(c.inferences as f64));
+            e.insert("uj_per_inf".to_string(), num(c.uj_per_inf()));
+            e.insert("tops_w".to_string(), num(c.tops_w()));
+            by.insert(class.clone(), Json::Obj(e));
+        }
+        m.insert("modeled".to_string(), Json::Obj(by));
         Json::Obj(m)
     }
 }
@@ -201,13 +312,14 @@ impl std::fmt::Display for MetricsSummary {
             f,
             "req={} done={} launches={} batch={:.1} padded={} refreshes={} \
              submit_rej={} wire={}/{} degraded={} probes={}:{}/{} rps={:.0} \
-             lat p50={:.0}us p99={:.0}us mean={:.0}us sim_energy={:.2}uJ/inf",
+             lat p50={:.0}us p99={:.0}us mean={:.0}us sim_energy={:.2}uJ/inf \
+             modeled={:.2}uJ/inf@{:.2}TOPS/W",
             self.requests, self.completed, self.launches, self.mean_batch,
             self.padded_slots, self.weight_refreshes, self.submit_rejects,
             self.wire_requests, self.wire_rejects, self.degraded_responses,
             self.health_probes, self.canary_agree, self.canary_total,
             self.req_per_sec, self.p50_us, self.p99_us, self.mean_us,
-            self.sim_uj_per_inf
+            self.sim_uj_per_inf, self.modeled_uj_per_inf, self.modeled_tops_w
         )
     }
 }
@@ -262,6 +374,41 @@ mod tests {
         assert!(txt.contains("\"wire_requests\":7"), "{txt}");
         assert!(txt.contains("\"wire_rejects\":3"), "{txt}");
         assert!(s.to_string().contains("wire=7/3"), "{s}");
+    }
+
+    #[test]
+    fn modeled_ledger_surfaces_everywhere() {
+        let m = Metrics::default();
+        m.completed.store(10, Ordering::Relaxed);
+        // two launches: 8 samples at 8 bits, 2 at 4 bits; 2 ops per nJ at
+        // 8 bits => 2 TOPS/W before overheads
+        m.add_modeled_launch("kws", 8, 8, 4_000.0, 8.0e6);
+        m.add_modeled_launch("kws", 4, 2, 500.0, 2.0e6);
+        // plus one refresh event: energy, no ops
+        m.add_modeled_overhead_nj(500.0);
+        let s = m.summary();
+        // (4000 + 500 + 500) nJ over 10 completed = 0.5 uJ/inf
+        assert!((s.modeled_uj_per_inf - 0.5).abs() < 1e-12,
+                "{}", s.modeled_uj_per_inf);
+        // 10e6 ops / 5000 nJ / 1000 = 2.0 TOPS/W
+        assert!((s.modeled_tops_w - 2.0).abs() < 1e-12, "{}", s.modeled_tops_w);
+        // per-class breakdown excludes the overhead event
+        let c8 = &s.modeled_by_class["kws@8b"];
+        assert_eq!(c8.inferences, 8);
+        assert!((c8.uj_per_inf() - 0.5).abs() < 1e-12);
+        assert!((c8.tops_w() - 2.0).abs() < 1e-12);
+        let c4 = &s.modeled_by_class["kws@4b"];
+        assert_eq!(c4.inferences, 2);
+        assert!((c4.tops_w() - 4.0).abs() < 1e-12);
+        // json + display surfacing
+        let txt = crate::util::json::write(&s.to_json());
+        assert!(txt.contains("\"modeled_uj_per_inf\":0.5"), "{txt}");
+        assert!(txt.contains("\"modeled_tops_w\":2"), "{txt}");
+        assert!(txt.contains("\"kws@8b\""), "{txt}");
+        assert!(txt.contains("\"kws@4b\""), "{txt}");
+        assert!(crate::util::json::parse(&txt).is_ok());
+        assert!(s.to_string().contains("modeled=0.50uJ/inf@2.00TOPS/W"),
+                "{s}");
     }
 
     #[test]

@@ -24,6 +24,14 @@
 //! layer across the whole batch — the AON-CiM layer-serial schedule.
 //! Static-shape engines (PJRT) keep the padded multi-launch plan over
 //! their exported graph sizes.
+//!
+//! Every launch is also priced on the modeled AON-CiM schedule
+//! ([`crate::timing::ScheduleModel`]): the metrics ledger accumulates
+//! modeled nJ and ops per drain (plus refresh/reprogram overheads), which
+//! surface as `modeled_uj_per_inf` / `modeled_tops_w` in
+//! [`MetricsSummary`](crate::coordinator::metrics::MetricsSummary). With
+//! [`ServeConfig::latency_slo_us`] set, the same estimator drives the
+//! batcher: see [`batcher::slo_operating_point`].
 
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
@@ -37,11 +45,10 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::state::PcmState;
 use crate::crossbar::ArrayGeom;
 use crate::eval::DeployedModel;
-use crate::mapping::map_model;
 use crate::nn::{expand_dw_dense, LayerKind};
 use crate::pcm::{FaultSpec, PcmParams};
 use crate::runtime::ArtifactStore;
-use crate::timing::{model_perf, EnergyModel};
+use crate::timing::ScheduleModel;
 use crate::util::logits;
 use crate::util::rng::Rng;
 
@@ -87,6 +94,17 @@ pub struct ServeConfig {
     /// that request. [`FaultSpec::none()`] (the default) serves the
     /// pristine array bit for bit.
     pub faults: FaultSpec,
+    /// per-launch latency SLO in microseconds, priced against the modeled
+    /// AON-CiM launch schedule ([`ScheduleModel`]). When set, each drained
+    /// group's batch cap comes from the estimator — the largest batch whose
+    /// *modeled* accelerator latency stays within the SLO — instead of the
+    /// fixed `max_batch`; requests that opted into a bitwidth range
+    /// ([`InferOpts::adc_bits_floor`]) may additionally be requantized down
+    /// to the highest bitwidth whose single-inference model fits. `None`
+    /// (the default) keeps the fixed-config batcher exactly as before.
+    /// The SLO governs *planning*, not admission: an impossible SLO still
+    /// serves at batch 1 rather than rejecting traffic.
+    pub latency_slo_us: Option<f64>,
     pub artifacts_dir: std::path::PathBuf,
 }
 
@@ -105,6 +123,7 @@ impl ServeConfig {
             refresh_every_s: 60.0,
             reprogram: false,
             faults: FaultSpec::none(),
+            latency_slo_us: None,
             artifacts_dir: crate::nn::manifest::artifacts_dir(),
         }
     }
@@ -133,6 +152,13 @@ impl ServeConfig {
     /// [`faults`](Self::faults)).
     pub fn with_faults(mut self, faults: FaultSpec) -> Self {
         self.faults = faults;
+        self
+    }
+
+    /// Builder-style modeled-latency SLO (see
+    /// [`latency_slo_us`](Self::latency_slo_us)).
+    pub fn with_latency_slo_us(mut self, slo_us: f64) -> Self {
+        self.latency_slo_us = Some(slo_us);
         self
     }
 }
@@ -362,7 +388,12 @@ struct Dispatcher<'a> {
     xbuf: Vec<f32>,
     feat_len: usize,
     classes: usize,
-    nj_per_inf: f64,
+    /// modeled AON-CiM launch schedule for the served model: prices every
+    /// launch (nJ, ns) for the metrics ledger and, when `slo_us` is set,
+    /// picks each group's operating point
+    sched: ScheduleModel,
+    /// `ServeConfig::latency_slo_us` — `None` keeps the fixed-config batcher
+    slo_us: Option<f64>,
     /// latest health-probe verdict: while true, every response dispatched
     /// counts under `Metrics::degraded_responses` (the coordinator keeps
     /// serving — degradation is graceful, not fatal)
@@ -403,9 +434,24 @@ impl Dispatcher<'_> {
     fn drain_group(&mut self, state: &mut PcmState, group: &[Request])
                    -> anyhow::Result<()> {
         let opts = group[0].opts;
+        // operating point for this group: without an SLO it is exactly the
+        // fixed config (requested bits, configured max_batch); with one,
+        // the modeled launch schedule caps the batch — and, for requests
+        // that opted into a bitwidth range, may lower the bits — so the
+        // modeled accelerator latency of every launch stays within the SLO
+        let base_bits = opts.effective_bits(self.be.bits());
+        let (adc_bits, cap) = match self.slo_us {
+            Some(slo) => batcher::slo_operating_point(
+                &self.sched, slo, opts.adc_bits_floor, base_bits,
+                self.max_batch),
+            None => (base_bits, self.max_batch),
+        };
         let plan = if self.dynamic {
-            batcher::plan_dynamic(group.len(), self.max_batch)
+            batcher::plan_dynamic(group.len(), cap)
         } else {
+            // static-shape engines keep their exported-graph launch sizes
+            // (the SLO cannot resize a compiled graph); the estimator still
+            // prices each launch below
             batcher::plan(group.len(), self.batch_sizes.clone())
         };
         self.metrics
@@ -429,14 +475,21 @@ impl Dispatcher<'_> {
             self.metrics
                 .weight_refreshes
                 .fetch_add(1, Ordering::Relaxed);
+            // a refresh is one full single-sample read+calibrate pass on
+            // the array; charge its modeled energy so amortized µJ/inf
+            // reflects the maintenance the accelerator actually performed
+            self.metrics.add_modeled_overhead_nj(self.sched.refresh_nj());
         }
-        let adc_bits = opts.effective_bits(self.be.bits());
         // the ADC-side faults execute inside the backend, so the resolved
         // scenario must ride the launch options (weight-side faults already
         // live in the conductances read above); a none-equivalent spec
-        // stays out so the clean path is bit-identical to pre-fault serving
+        // stays out so the clean path is bit-identical to pre-fault serving.
+        // The operating-point bits are pinned explicitly: with an SLO they
+        // may sit below the request's own bits (opt-in floor), and the
+        // response echoes what actually ran.
         let run_opts = InferOpts {
             faults: (!spec.is_none()).then_some(spec),
+            adc_bits: Some(adc_bits),
             ..opts
         };
 
@@ -461,6 +514,14 @@ impl Dispatcher<'_> {
             self.metrics
                 .batched_slots
                 .fetch_add(count as u64, Ordering::Relaxed);
+            // price the launch actually dispatched (padded slots execute
+            // too, so the full `launch` is charged) and amortize it over
+            // the `count` real responses it carried — padding shows up as
+            // a higher modeled µJ/inf, exactly as it would on silicon
+            let ls = self.sched.launch(launch, adc_bits);
+            self.metrics.add_modeled_launch(self.sched.model(), adc_bits,
+                                            count as u64, ls.energy_nj,
+                                            ls.ops);
             if self.degraded {
                 self.metrics
                     .degraded_responses
@@ -476,7 +537,7 @@ impl Dispatcher<'_> {
                 self.metrics.completed.fetch_add(1, Ordering::Relaxed);
                 self.metrics
                     .record_latency_us((now - r.submitted).as_secs_f64() * 1e6);
-                self.metrics.add_energy_nj(self.nj_per_inf);
+                self.metrics.add_energy_nj(ls.energy_nj / count as f64);
                 let _ = r.reply.send(Response {
                     pred,
                     logits: row.to_vec(),
@@ -560,11 +621,15 @@ fn worker(cfg: ServeConfig, rx: mpsc::Receiver<Msg>, metrics: Arc<Metrics>)
         be.prepare(b)?;
     }
 
-    // simulated accelerator energy per inference (timing model, Table 2 row)
+    // modeled AON-CiM launch schedule for this deployment: the backend's
+    // own geometry when it reports one (native/analog — identical on the
+    // default AON array), the AON mapping otherwise (PJRT). Resolved once
+    // here; the dispatch path only evaluates closed-form per-launch costs.
     let meta = store.meta(&cfg.vid)?;
-    let mapping = map_model(&meta, ArrayGeom::AON)?;
-    let perf = model_perf(&mapping, cfg.bits, &EnergyModel::default());
-    let nj_per_inf = perf.energy_nj;
+    let sched = match be.schedule_model() {
+        Some(s) => s,
+        None => ScheduleModel::new(&meta, ArrayGeom::AON)?,
+    };
 
     // deploy onto PCM
     let params = PcmParams::default();
@@ -635,7 +700,8 @@ fn worker(cfg: ServeConfig, rx: mpsc::Receiver<Msg>, metrics: Arc<Metrics>)
         xbuf: vec![0f32; xcap * feat_len],
         feat_len,
         classes,
-        nj_per_inf,
+        sched,
+        slo_us: cfg.latency_slo_us,
         degraded: false,
     };
 
@@ -687,6 +753,10 @@ fn worker(cfg: ServeConfig, rx: mpsc::Receiver<Msg>, metrics: Arc<Metrics>)
         let mut reprogrammed = false;
         if cfg.reprogram && state.needs_reprogram() {
             state.reprogram(&store, &cfg.vid)?;
+            // a reprogram rewrites every allocated cell: charge its modeled
+            // energy as serving overhead so amortized µJ/inf carries the
+            // maintenance cost of keeping the array in spec
+            metrics.add_modeled_overhead_nj(disp.sched.reprogram_nj());
             reprogrammed = true;
         }
         // re-probe whenever the weights moved since the last verdict

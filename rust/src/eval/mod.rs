@@ -214,6 +214,7 @@ pub fn drift_accuracy_on(be: &dyn InferenceBackend, store: &ArtifactStore,
     let iopts = InferOpts {
         t_drift: None,
         adc_bits: opts.adc_bits,
+        adc_bits_floor: None,
         faults: (!opts.faults.is_none()).then_some(opts.faults),
     };
     // per-tile GDC calibration kicks in only for engines that quantize

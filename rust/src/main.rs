@@ -113,6 +113,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let req_opts = InferOpts {
         t_drift: args.opt("t-drift").map(|v| v.parse().expect("float --t-drift")),
         adc_bits: opt_adc_bits(args),
+        adc_bits_floor: None,
         faults: None,
     };
     let store = ArtifactStore::open_default()?;

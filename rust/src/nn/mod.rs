@@ -1,6 +1,7 @@
 //! Model descriptions and artifact loading (the Rust side of the
 //! python-export contract — see DESIGN.md section 7).
 
+pub mod analognets;
 pub mod manifest;
 pub mod meta;
 pub mod weights;

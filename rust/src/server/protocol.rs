@@ -80,7 +80,7 @@ impl ParsedReq {
         // no wire field for fault scenarios (yet): wire requests serve the
         // coordinator's deployment-default spec
         InferOpts { t_drift: self.t_drift, adc_bits: self.adc_bits,
-                    faults: None }
+                    adc_bits_floor: None, faults: None }
     }
 }
 

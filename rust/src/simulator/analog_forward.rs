@@ -91,6 +91,10 @@ impl MatmulEngine for TileGridEngine {
                   ctx.layer.r_adc, ctx.adc_bits, ctx.gdc, ctx.adc_fault,
                   ctx.layer_index);
     }
+
+    fn schedule_geom(&self) -> ArrayGeom {
+        self.geom
+    }
 }
 
 /// The [`LayerExecutor`] driven by a [`TileGridEngine`]: the drop-in
@@ -133,6 +137,12 @@ impl AnalogModel {
     /// Crossbar tiles the model occupies across all analog layers.
     pub fn tiles_total(&self) -> usize {
         self.engine.tiles_total()
+    }
+
+    /// Launch-schedule estimator on this engine's configured geometry
+    /// (see [`LayerExecutor::schedule_model`]).
+    pub fn schedule_model(&self) -> anyhow::Result<crate::timing::ScheduleModel> {
+        self.exec.schedule_model(&self.engine)
     }
 
     /// Forward a batch: `x` is [batch, H, W, C] flat; returns logits

@@ -53,6 +53,12 @@ impl NativeModel {
         self.exec.lanes()
     }
 
+    /// Launch-schedule estimator for the AON array this engine numerically
+    /// mirrors (see [`LayerExecutor::schedule_model`]).
+    pub fn schedule_model(&self) -> anyhow::Result<crate::timing::ScheduleModel> {
+        self.exec.schedule_model(&self.engine)
+    }
+
     /// Forward a batch: `x` is [batch, H, W, C] flat; returns logits
     /// [batch, classes].
     ///

@@ -33,6 +33,7 @@
 
 use std::sync::{Arc, Mutex};
 
+use crate::crossbar::ArrayGeom;
 use crate::nn::{LayerKind, LayerMeta, ModelMeta};
 use crate::pcm::{AdcFault, LayerGdc};
 use crate::quant;
@@ -158,6 +159,18 @@ pub trait MatmulEngine {
     /// docs for the exact contract.
     fn analog_matmul(&self, ctx: &MatmulCtx<'_>, a: &[f32], w: &[f32],
                      out: &mut [f32]);
+
+    /// Array geometry this engine's analog multiply stands in for — the
+    /// basis of the launch-schedule estimator
+    /// ([`LayerExecutor::schedule_model`]). The native GEMM engine
+    /// numerically mirrors the exported HLO graph of the AON array, so the
+    /// default is [`ArrayGeom::AON`]; the tile-grid engine overrides this
+    /// with its configured geometry. Host GEMM speed never enters the
+    /// schedule — two engines with the same geometry report the same
+    /// modeled latency/energy.
+    fn schedule_geom(&self) -> ArrayGeom {
+        ArrayGeom::AON
+    }
 }
 
 /// The native matmul step: full-K batched GEMM on the pool, ADC
@@ -274,6 +287,16 @@ impl LayerExecutor {
     /// Parallel lanes the pool can drive (workers + the calling thread).
     pub fn lanes(&self) -> usize {
         self.pool.lanes()
+    }
+
+    /// Launch-schedule estimator for this model on the array geometry
+    /// `engine` simulates: maps the meta onto
+    /// [`schedule_geom`](MatmulEngine::schedule_geom) and prices batched
+    /// layer-serial launches with the Table-2-calibrated energy model.
+    /// Fails only if the model does not fit the engine's array whole.
+    pub fn schedule_model(&self, engine: &dyn MatmulEngine)
+                          -> anyhow::Result<crate::timing::ScheduleModel> {
+        crate::timing::ScheduleModel::new(&self.meta, engine.schedule_geom())
     }
 
     /// Forward a batch through `engine`: `x` is [batch, H, W, C] flat;

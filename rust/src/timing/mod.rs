@@ -7,10 +7,28 @@
 //! array current) and BETA the per-conversion ADC + per-word digital energy.
 //! Per-layer numbers scale these components by the rows/columns the layer
 //! actually uses (unused DACs/ADCs are clock-gated, Section 5.2).
+//!
+//! The full derivation of the fit (units, the mux-rotation "always pay the
+//! full phases" assumption, the β split rationale, and how close the model
+//! rows land to Table 1/2) lives in `docs/ENERGY_MODEL.md`.
+//!
+//! # Example: the Table-2 8-bit peak row
+//!
+//! ```
+//! use analognets::crossbar::ArrayGeom;
+//! use analognets::timing::{peak, EnergyModel};
+//!
+//! // Table 2, "peak performance" at 8 bits: 2 TOPS, 13.55 TOPS/W
+//! let (tops, tops_w) = peak(ArrayGeom::AON, 8, &EnergyModel::default());
+//! assert!((tops - 2.02).abs() < 0.03);
+//! assert!((tops_w - 13.55).abs() / 13.55 < 0.02);
+//! ```
 
 pub mod perf;
+pub mod schedule;
 
 pub use perf::{layer_gemm_dims, layer_perf, model_perf, LayerPerf, ModelPerf};
+pub use schedule::{LaunchSchedule, ScheduleModel};
 
 use crate::crossbar::ArrayGeom;
 
@@ -127,6 +145,25 @@ mod tests {
         assert_eq!(t_cim_ns(8), 130.0);
         assert_eq!(t_cim_ns(6), 34.0);
         assert_eq!(t_cim_ns(4), 10.0);
+    }
+
+    #[test]
+    fn full_mvm_energy_hits_the_three_fit_points() {
+        // The Table-2 peak TOPS/W rows pin the full-MVM energy at each
+        // bitwidth: E = 2*cells / (TOPS/W * 1000). The linear fit
+        // E = alpha*T + beta reproduces all three within 0.5%.
+        let em = EnergyModel::default();
+        let g = ArrayGeom::AON;
+        let ops = 2.0 * g.cells() as f64;
+        for (bits, tops_w) in [(8u32, 13.55), (6, 45.55), (4, 112.44)] {
+            let want_nj = ops / (tops_w * 1000.0);
+            let got_nj =
+                em.mvm_energy_nj(g, g.rows, g.cols, g.adc_phases(g.cols), bits);
+            assert!(
+                (got_nj - want_nj).abs() / want_nj < 0.005,
+                "{bits}b: {got_nj:.3} nJ vs Table-2-implied {want_nj:.3} nJ"
+            );
+        }
     }
 
     #[test]

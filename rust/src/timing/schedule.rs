@@ -1,0 +1,346 @@
+//! Launch-schedule estimator: modeled latency/energy for the batched,
+//! layer-serial launches the coordinator actually runs.
+//!
+//! [`model_perf`](crate::timing::model_perf) prices one inference of a
+//! mapped model; serving executes *launches* — `batch` samples pushed
+//! through every layer in sequence, with occasional conductance-refresh
+//! reads and full array reprogramming in between. [`ScheduleModel`] prices
+//! exactly that unit of work so the coordinator can (a) account modeled
+//! energy per drain and (b) run an SLO policy: pick the largest batch (and,
+//! when a request permits a bitwidth range, the highest `adc_bits`) whose
+//! modeled launch latency still fits `ServeConfig::latency_slo_us`.
+//!
+//! Batch amortization falls out of the layer-serial schedule: launch
+//! latency and array energy are linear in `batch`, while refresh and
+//! reprogram costs are charged per *event*, so their share of µJ/inference
+//! shrinks as traffic and batch size grow.
+//!
+//! # Example: one Table-2 model row
+//!
+//! Reproduce the modeled AnalogNet-KWS 8-bit row (paper: 0.6 TOPS,
+//! 8.58 TOPS/W — the model lands within the committed tolerance, see
+//! `docs/ENERGY_MODEL.md` for the calibration story):
+//!
+//! ```
+//! use analognets::crossbar::ArrayGeom;
+//! use analognets::nn::analognets::analognet_kws;
+//! use analognets::timing::schedule::ScheduleModel;
+//!
+//! let sched = ScheduleModel::new(&analognet_kws(), ArrayGeom::AON).unwrap();
+//! let one = sched.launch(1, 8);
+//! // 696 MVMs x 130 ns = 90.48 us per inference
+//! assert!((one.latency_ns - 90_480.0).abs() < 1e-6);
+//! // ~0.59 modeled TOPS vs the paper's 0.6
+//! let tops = one.ops / one.latency_ns / 1000.0;
+//! assert!((tops - 0.6).abs() / 0.6 < 0.05);
+//! ```
+
+use crate::crossbar::ArrayGeom;
+use crate::mapping::{map_model, ModelMapping};
+use crate::nn::ModelMeta;
+use crate::timing::{layer_perf, EnergyModel};
+
+/// Modeled PCM program-and-verify energy per programmed cell, nJ.
+///
+/// Order-of-magnitude constant: iterative program-and-verify converges in
+/// ~8 pulses of ~10 pJ apiece (SET/RESET partial pulses plus verify
+/// reads). Reprogramming the full KWS mapping (~300k cells) then costs
+/// ~30 µJ — a few inferences' worth, which is why the coordinator
+/// reprograms on a cadence instead of per request.
+pub const REPROGRAM_NJ_PER_CELL: f64 = 0.1;
+
+/// Modeled cost of one batched, layer-serial launch.
+///
+/// All three totals are linear in `batch`: the schedule runs every layer's
+/// `batch x mvms` MVMs back to back, so there is no cross-sample overlap
+/// to model.
+#[derive(Clone, Copy, Debug)]
+pub struct LaunchSchedule {
+    /// samples in the launch (including any padding the batcher added)
+    pub batch: usize,
+    /// ADC/activation precision the launch runs at
+    pub adc_bits: u32,
+    /// modeled end-to-end launch latency, ns
+    pub latency_ns: f64,
+    /// modeled array + ADC + digital energy, nJ
+    pub energy_nj: f64,
+    /// MAC ops performed (2 ops per MAC), across the whole batch
+    pub ops: f64,
+}
+
+impl LaunchSchedule {
+    /// Modeled energy per sample in this launch, nJ.
+    pub fn nj_per_inf(&self) -> f64 {
+        if self.batch == 0 {
+            0.0
+        } else {
+            self.energy_nj / self.batch as f64
+        }
+    }
+
+    /// Modeled compute efficiency of the launch, TOPS/W.
+    pub fn tops_w(&self) -> f64 {
+        if self.energy_nj > 0.0 {
+            self.ops / self.energy_nj / 1000.0
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Prices the coordinator's launches for one mapped model.
+///
+/// Built once per serving session from the backend's [`ModelMeta`] and the
+/// array geometry its engine simulates (see
+/// `InferenceBackend::schedule_model`), then consulted per drain. Native
+/// and tile-grid engines report the same schedule for the same geometry:
+/// the estimator depends only on the mapping, never on host GEMM speed.
+#[derive(Clone, Debug)]
+pub struct ScheduleModel {
+    model: String,
+    mapping: ModelMapping,
+    em: EnergyModel,
+}
+
+impl ScheduleModel {
+    /// Map `meta` onto `geom` (shelf-packing tiler) and price launches
+    /// with the default Table-2-calibrated [`EnergyModel`].
+    ///
+    /// Fails only if the model does not fit the array whole.
+    pub fn new(meta: &ModelMeta, geom: ArrayGeom) -> anyhow::Result<Self> {
+        Ok(Self::from_mapping(
+            meta.model.clone(),
+            map_model(meta, geom)?,
+            EnergyModel::default(),
+        ))
+    }
+
+    /// Wrap an existing mapping with an explicit energy calibration.
+    pub fn from_mapping(model: String, mapping: ModelMapping, em: EnergyModel) -> Self {
+        ScheduleModel { model, mapping, em }
+    }
+
+    /// Model name (used as the metrics breakdown key).
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    /// Array geometry the schedule is priced against.
+    pub fn geom(&self) -> ArrayGeom {
+        self.mapping.geom
+    }
+
+    /// Per-inference (latency ns, energy nJ, ops) at `adc_bits`.
+    fn per_inference(&self, adc_bits: u32) -> (f64, f64, f64) {
+        let (mut ns, mut nj, mut ops) = (0f64, 0f64, 0f64);
+        for l in &self.mapping.layers {
+            let (l_ns, l_nj, l_ops) =
+                layer_perf(self.mapping.geom, l.rows, l.cols, l.mvms, adc_bits, &self.em);
+            ns += l_ns;
+            nj += l_nj;
+            ops += l_ops;
+        }
+        (ns, nj, ops)
+    }
+
+    /// Price one launch of `batch` samples at `adc_bits`.
+    pub fn launch(&self, batch: usize, adc_bits: u32) -> LaunchSchedule {
+        let (ns, nj, ops) = self.per_inference(adc_bits);
+        let b = batch as f64;
+        LaunchSchedule {
+            batch,
+            adc_bits,
+            latency_ns: ns * b,
+            energy_nj: nj * b,
+            ops: ops * b,
+        }
+    }
+
+    /// Modeled cost of one cadence conductance refresh, nJ: the refresh
+    /// replays one calibration sample through every mapped layer at 8 bits
+    /// (a full-precision read of the drifted conductances) to rescale the
+    /// global drift compensation.
+    pub fn refresh_nj(&self) -> f64 {
+        self.per_inference(8).1
+    }
+
+    /// Modeled cost of fully reprogramming the mapping, nJ
+    /// (program-and-verify over every allocated cell).
+    pub fn reprogram_nj(&self) -> f64 {
+        let cells: usize = self.mapping.layers.iter().map(|l| l.cells()).sum();
+        cells as f64 * REPROGRAM_NJ_PER_CELL
+    }
+
+    /// Largest batch whose modeled launch latency fits `slo_us`, clamped
+    /// to `1..=cap`.
+    ///
+    /// Launch latency is linear in batch, so this is
+    /// `floor(slo / latency(1))`. Returns 1 even when a single inference
+    /// misses the SLO — the coordinator must still serve; the policy only
+    /// stops it from making things worse by batching.
+    pub fn max_batch_within(&self, slo_us: f64, adc_bits: u32, cap: usize) -> usize {
+        let lat1_ns = self.per_inference(adc_bits).0;
+        if lat1_ns <= 0.0 || !lat1_ns.is_finite() || !slo_us.is_finite() {
+            return cap.max(1);
+        }
+        let fit = (slo_us * 1000.0 / lat1_ns).floor() as usize;
+        fit.clamp(1, cap.max(1))
+    }
+
+    /// SLO operating point over a permitted bitwidth range: the highest
+    /// `adc_bits` in `floor_bits..=ceil_bits` whose *single-inference*
+    /// modeled latency fits `slo_us` (accuracy-first), then the largest
+    /// batch at that bitwidth ([`Self::max_batch_within`]). Falls back to
+    /// `(floor_bits, 1)` when even one inference at the floor misses the
+    /// SLO. Deterministic for fixed shapes.
+    pub fn choose(
+        &self,
+        slo_us: f64,
+        floor_bits: u32,
+        ceil_bits: u32,
+        cap: usize,
+    ) -> (u32, usize) {
+        let lo = floor_bits.min(ceil_bits);
+        let slo_ns = slo_us * 1000.0;
+        for bits in (lo..=ceil_bits).rev() {
+            if self.per_inference(bits).0 <= slo_ns {
+                return (bits, self.max_batch_within(slo_us, bits, cap));
+            }
+        }
+        (lo, 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::analognets::{analognet_kws, analognet_vww};
+
+    /// Committed tolerance for the paper's Table-1/2 model-row anchors —
+    /// keep in sync with `energy_tol_rel` in `ci/bench_baseline.json` and
+    /// the deviation table in `docs/ENERGY_MODEL.md`. The linear-fit
+    /// calibration pins the Table-2 *peak* rows within 2%; whole-model
+    /// rows land within ~55% because the bits-independent per-MVM
+    /// overhead (fixed_nj) dominates small-MVM layers at 4 bits and the
+    /// paper's own model rows are not mutually consistent with its
+    /// µJ/inference and inferences/s columns (see docs/ENERGY_MODEL.md).
+    const ANCHOR_TOL: f64 = 0.60;
+
+    fn kws() -> ScheduleModel {
+        ScheduleModel::new(&analognet_kws(), ArrayGeom::AON).unwrap()
+    }
+    fn vww() -> ScheduleModel {
+        ScheduleModel::new(&analognet_vww(), ArrayGeom::AON).unwrap()
+    }
+
+    #[test]
+    fn paper_tops_w_anchors_within_tolerance() {
+        // Table 1 / Table 2 model rows: (model, bits, paper TOPS/W)
+        let anchors = [
+            ("kws", 8u32, 8.58),
+            ("kws", 4u32, 57.39),
+            ("vww", 8u32, 4.37),
+            ("vww", 4u32, 25.69),
+        ];
+        for (m, bits, paper) in anchors {
+            let sched = if m == "kws" { kws() } else { vww() };
+            let l = sched.launch(1, bits);
+            let dev = (l.tops_w() - paper).abs() / paper;
+            assert!(
+                dev <= ANCHOR_TOL,
+                "{m}@{bits}b: modeled {:.2} TOPS/W vs paper {paper} (dev {dev:.2})",
+                l.tops_w()
+            );
+        }
+    }
+
+    #[test]
+    fn paper_tops_anchors_are_tight() {
+        // Modeled TOPS (pure latency) tracks the paper's KWS rows much
+        // closer than TOPS/W: 0.6 / 2.29 / 7.8 at 8/6/4 bits.
+        let sched = kws();
+        for (bits, paper) in [(8u32, 0.6), (6, 2.29), (4, 7.8)] {
+            let l = sched.launch(1, bits);
+            let tops = l.ops / l.latency_ns / 1000.0;
+            assert!(
+                (tops - paper).abs() / paper < 0.05,
+                "kws@{bits}b: modeled {tops:.3} TOPS vs paper {paper}"
+            );
+        }
+    }
+
+    #[test]
+    fn launch_is_linear_in_batch() {
+        let sched = kws();
+        let one = sched.launch(1, 8);
+        let eight = sched.launch(8, 8);
+        assert!((eight.latency_ns - 8.0 * one.latency_ns).abs() < 1e-6);
+        assert!((eight.energy_nj - 8.0 * one.energy_nj).abs() < 1e-6);
+        assert!((eight.ops - 8.0 * one.ops).abs() < 1e-3);
+        assert!((eight.nj_per_inf() - one.nj_per_inf()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kws_launch_latency_is_exact() {
+        // 696 MVMs, every layer <=128 cols => 1 mux phase => 130 ns/MVM
+        let one = kws().launch(1, 8);
+        assert!((one.latency_ns - 696.0 * 130.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slo_tight_shrinks_batch_loose_grows_it() {
+        let sched = kws();
+        // single 8-bit KWS inference models at 90.48 us
+        let tight = sched.max_batch_within(200.0, 8, 64);
+        let loose = sched.max_batch_within(5_000.0, 8, 64);
+        assert_eq!(tight, 2, "200us SLO fits exactly two 90.48us inferences");
+        assert_eq!(loose, 55);
+        assert!(tight < loose);
+        // impossible SLO still serves one at a time
+        assert_eq!(sched.max_batch_within(10.0, 8, 64), 1);
+        // cap always wins
+        assert_eq!(sched.max_batch_within(1e9, 8, 64), 64);
+    }
+
+    #[test]
+    fn choose_prefers_accuracy_then_drops_bits() {
+        let sched = kws();
+        // loose SLO: stay at the requested 8 bits, batch to the cap
+        let (bits, batch) = sched.choose(100_000.0, 4, 8, 32);
+        assert_eq!(bits, 8);
+        assert_eq!(batch, 32);
+        // 50 us SLO: one 8-bit inference (90.48 us) misses, 4-bit serves
+        let (bits, batch) = sched.choose(50.0, 4, 8, 32);
+        assert!(bits < 8, "tight SLO must drop bits, got {bits}");
+        assert!(batch >= 1);
+        // hopeless SLO: floor bits, batch 1
+        let (bits, batch) = sched.choose(0.001, 4, 8, 32);
+        assert_eq!((bits, batch), (4, 1));
+    }
+
+    #[test]
+    fn refresh_and_reprogram_are_positive_and_ordered() {
+        let sched = kws();
+        let refresh = sched.refresh_nj();
+        let reprogram = sched.reprogram_nj();
+        assert!(refresh > 0.0 && reprogram > 0.0);
+        // a full program-and-verify dwarfs one calibration read
+        assert!(reprogram > refresh);
+        // ~300k allocated cells at 0.1 nJ each
+        assert!((reprogram - 307_392.0 * REPROGRAM_NJ_PER_CELL).abs() < 1e-6);
+    }
+
+    #[test]
+    fn engines_with_same_geom_report_same_schedule() {
+        let meta = analognet_kws();
+        let a = ScheduleModel::new(&meta, ArrayGeom::AON).unwrap();
+        let b = ScheduleModel::from_mapping(
+            meta.model.clone(),
+            map_model(&meta, ArrayGeom::AON).unwrap(),
+            EnergyModel::default(),
+        );
+        let (la, lb) = (a.launch(4, 6), b.launch(4, 6));
+        assert_eq!(la.latency_ns, lb.latency_ns);
+        assert_eq!(la.energy_nj, lb.energy_nj);
+    }
+}

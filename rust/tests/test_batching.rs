@@ -93,6 +93,78 @@ fn timeout_flushes_a_partial_batch() {
 }
 
 #[test]
+fn slo_policy_caps_batches_below_fixed_config() {
+    // the identity model is one dense [4 x 4] layer: mapped on the AON
+    // array it models at exactly 1 MVM x t_cim(8) = 130 ns per inference,
+    // so a 0.4 us SLO admits floor(400/130) = 3 inferences per launch —
+    // strictly below the configured max_batch of 8. The policy is pure
+    // arithmetic on the mapping, so this holds on any host.
+    let spec = SynthSpec::identity_dense("ident_slo", CLASSES);
+    let dir = synth::write_bundle_tmp("slo_cap", &spec).unwrap();
+    let mut cfg = ServeConfig::new("ident_slo", 8);
+    cfg.artifacts_dir = dir.clone();
+    cfg.max_batch = 8;
+    cfg.max_wait = Duration::from_millis(300);
+    cfg.latency_slo_us = Some(0.4);
+    let coord = Coordinator::start(cfg).unwrap();
+
+    let n = 12;
+    let rxs: Vec<_> = (0..n).map(|i| coord.submit(features(i)).unwrap()).collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.logits, features(i), "request {i}");
+        assert_eq!(resp.adc_bits, 8, "no bitwidth floor => bits stay pinned");
+    }
+    let m = coord.metrics.summary();
+    assert_eq!(m.completed as usize, n);
+    // the fixed config would plan ceil(12/8) = 2 launches; the SLO cap of
+    // 3 forces at least ceil(12/3) = 4, however the windows split
+    assert!(m.launches >= 4, "SLO cap ignored: {m}");
+    assert!(m.mean_batch <= 3.0 + 1e-9, "modeled-latency cap exceeded: {m}");
+    assert_eq!(m.padded_slots, 0, "{m}");
+    // every launch was priced on the modeled schedule
+    assert!(m.modeled_uj_per_inf > 0.0, "{m}");
+    assert!(m.modeled_tops_w > 0.0, "{m}");
+    assert!(m.to_json().contains("\"modeled\""), "{}", m.to_json());
+    coord.stop().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn slo_policy_requantizes_only_with_an_optin_floor() {
+    use analognets::backend::InferOpts;
+    // 100 ns SLO < the 130 ns single-inference model at 8 bits: a request
+    // that opted into a bitwidth range is requantized down to the highest
+    // bitwidth that fits (t_cim(7) = 65 ns), a pinned request serves at
+    // its own bits at batch 1 (planning never rejects)
+    let spec = SynthSpec::identity_dense("ident_requant", CLASSES);
+    let dir = synth::write_bundle_tmp("slo_requant", &spec).unwrap();
+    let mut cfg = ServeConfig::new("ident_requant", 8);
+    cfg.artifacts_dir = dir.clone();
+    cfg.max_batch = 8;
+    cfg.max_wait = Duration::from_millis(5);
+    cfg.latency_slo_us = Some(0.1);
+    let coord = Coordinator::start(cfg).unwrap();
+
+    let ranged = coord
+        .infer_with(features(1), InferOpts::default().with_adc_bits_floor(4))
+        .unwrap();
+    assert!(ranged.adc_bits < 8 && ranged.adc_bits >= 4,
+            "floor opt-in must trade bits for latency, got {}",
+            ranged.adc_bits);
+    // the identity layer is digital (exact at any bitwidth): requantizing
+    // must not touch the payload
+    assert_eq!(ranged.logits, features(1));
+
+    let pinned = coord.infer(features(2)).unwrap();
+    assert_eq!(pinned.adc_bits, 8,
+               "accuracy is never traded without the opt-in");
+    assert_eq!(pinned.logits, features(2));
+    coord.stop().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn concurrent_clients_get_their_own_responses() {
     let (coord, dir) = identity_coord("integrity", 8, 1);
     let coord = Arc::new(coord);

@@ -34,11 +34,14 @@ reported, not applied) unless --allow-lower is given. The gate in
 bench::check_regression allows a 30% drop below the floor, so fraction 0.5
 leaves ~2x headroom between a typical run and a failure.
 
-`fault_acc_gap_max` is the one inverted gate: it is an upper bound on the
-mild-cell accuracy drop of the device-variability fault sweep, so its
-ratchet direction flips — a measured BENCH_analog.json
-fault_sweep.mild_gap_max sets the bound to max(0.02, 2 * measured), it only
-moves DOWN (tightens), and --allow-lower is what permits loosening it.
+`fault_acc_gap_max` and `energy_tol_rel` are inverted gates: upper bounds,
+so their ratchet direction flips — they only move DOWN (tighten), and
+--allow-lower is what permits loosening them. A measured BENCH_analog.json
+fault_sweep.mild_gap_max sets fault_acc_gap_max to max(0.02, 2 * measured)
+(2x headroom: the accuracy sweep is sampling-noisy at 64 samples); a
+measured energy.max_rel_dev sets energy_tol_rel to max(0.05, 1.1 *
+measured) (1.1x headroom is enough because the modeled-energy deviation is
+pure arithmetic, identical on every host).
 """
 import argparse
 import json
@@ -96,16 +99,21 @@ def main():
         updates.append(("req_s", pick(native, "req_s")))
         if "wire" in native:
             updates.append(("wire_req_s", pick(native, "wire", "req_s")))
-    gap_updates = []  # (key, measured gap) — inverted (upper-bound) gates
+    # inverted (upper-bound) gates: (key, measured, floor, headroom factor)
+    gap_updates = []
     if args.analog:
         analog = load(args.analog)
         updates.append(("analog_req_s", pick(analog, "req_s")))
         if "fault_sweep" in analog:
             gap_updates.append(
                 ("fault_acc_gap_max",
-                 pick(analog, "fault_sweep", "mild_gap_max")))
+                 pick(analog, "fault_sweep", "mild_gap_max"), 0.02, 2.0))
+        if "energy" in analog:
+            gap_updates.append(
+                ("energy_tol_rel",
+                 pick(analog, "energy", "max_rel_dev"), 0.05, 1.1))
     updates = [(k, v) for k, v in updates if v is not None]
-    gap_updates = [(k, v) for k, v in gap_updates if v is not None]
+    gap_updates = [u for u in gap_updates if u[1] is not None]
 
     changed = False
     for key, value in updates:
@@ -122,19 +130,19 @@ def main():
         measured[key] = True
         changed = True
 
-    for key, value in gap_updates:
-        # upper-bound gate: 2x the measured mild-cell drop (floored at
-        # 0.02 so a perfectly-compensated run does not ratchet to zero and
-        # fail on the next run's sampling noise), tightening only
-        bound = round(max(0.02, 2.0 * value), 4)
+    for key, value, lo, factor in gap_updates:
+        # upper-bound gate: headroom-scaled measured value (floored at `lo`
+        # so a perfect run does not ratchet to zero and fail on the next
+        # run's noise), tightening only
+        bound = round(max(lo, factor * value), 4)
         old = base.get(key)
         if old is not None and bound > old and not args.allow_lower:
-            print(f"  {key}: measured gap {value:.4f} -> bound {bound} is "
+            print(f"  {key}: measured {value:.4f} -> bound {bound} is "
                   f"LOOSER than the committed {old}; skipping (use "
                   "--allow-lower to accept a regression as the new normal)")
             continue
-        print(f"  {key}: {old} -> {bound}  (measured gap {value:.4f}, "
-              "bound = max(0.02, 2x))")
+        print(f"  {key}: {old} -> {bound}  (measured {value:.4f}, "
+              f"bound = max({lo}, {factor}x))")
         base[key] = bound
         measured[key] = True
         changed = True
