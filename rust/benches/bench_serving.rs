@@ -280,6 +280,15 @@ fn main() -> anyhow::Result<()> {
         save_json("BENCH_native.json", &Json::Obj(root));
     }
 
+    // mixed-traffic multi-model serving: two shards behind one router,
+    // clients alternating models; per-model req/s merge into
+    // BENCH_native.json under `multi` and gate against the committed
+    // `kws_req_s` / `vww_req_s` floors (the CI bench-smoke job runs this
+    // via --native-only)
+    if !analog_only && !wire_only {
+        run_multi(per_client, max_batch, &opts)?;
+    }
+
     // analog sections (serving load, consistency + accuracy gates, drift
     // sweep, BENCH_analog.json): owned by the CI analog-smoke job, so the
     // bench-smoke job skips them with --native-only instead of running the
@@ -313,6 +322,122 @@ fn main() -> anyhow::Result<()> {
             }
             eprintln!("[bench_serving] warning: {msg}");
         }
+    }
+    Ok(())
+}
+
+/// The multi-model half of the bench: a KWS-flavored and a VWW-flavored
+/// synthetic variant behind one `MultiCoordinator`, `CLIENTS` pipelined
+/// threads alternating models request by request. Per-model throughput
+/// lands in BENCH_native.json under `multi` (with the router's per-model
+/// metrics) and gates against the `kws_req_s` / `vww_req_s` floors when
+/// `--baseline` is given.
+fn run_multi(per_client: usize, max_batch: usize, opts: &BenchOpts)
+             -> anyhow::Result<()> {
+    use analognets::coordinator::{MultiCoordinator, ShardConfig};
+
+    // distinct tasks give each model its own dataset file; the vww twin
+    // reshapes so the two feature lengths differ like the real pair does
+    let kws = SynthSpec::bench("bench_multi_kws");
+    let mut vww = SynthSpec::bench("bench_multi_vww");
+    vww.task = "vww".to_string();
+    vww.hw = 8; // distinct feature length, like the real KWS/VWW pair
+    vww.seed = 23;
+    let dir = synth::write_multi_bundle_tmp("bench_multi",
+                                            &[kws.clone(), vww.clone()])?;
+    println!("[bench_serving] mixed-traffic multi-model serving \
+              (`{}` + `{}`, max_batch={max_batch})...",
+             kws.vid, vww.vid);
+
+    let shards = vec![
+        ShardConfig::new(&kws.vid, bench_cfg(&kws.vid, &dir, max_batch)),
+        ShardConfig::new(&vww.vid, bench_cfg(&vww.vid, &dir, max_batch)),
+    ];
+    let mc = Arc::new(MultiCoordinator::start(shards)?);
+    let ids = [kws.vid.clone(), vww.vid.clone()];
+    let feats = [kws.feat_len(), vww.feat_len()];
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..CLIENTS {
+        let mc = mc.clone();
+        let ids = ids.clone();
+        handles.push(std::thread::spawn(move || -> [usize; 2] {
+            let mut sent = [0usize; 2];
+            let mut pending = VecDeque::with_capacity(WINDOW);
+            for i in 0..per_client {
+                let m = (c + i) % 2;
+                let v = 0.1 + 0.8 * (((c * per_client + i) % 13) as f32 / 13.0);
+                let rx = mc
+                    .submit(&ids[m], vec![v; feats[m]], InferOpts::default())
+                    .expect("multi submit");
+                sent[m] += 1;
+                pending.push_back(rx);
+                if pending.len() >= WINDOW {
+                    let _ = pending.pop_front().unwrap().recv().expect("recv");
+                }
+            }
+            for rx in pending {
+                let _ = rx.recv().expect("recv tail");
+            }
+            sent
+        }));
+    }
+    let mut sent = [0usize; 2];
+    for h in handles {
+        let s = h.join().expect("multi client thread");
+        sent[0] += s[0];
+        sent[1] += s[1];
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let kws_req_s = sent[0] as f64 / elapsed;
+    let vww_req_s = sent[1] as f64 / elapsed;
+    let m = mc.metrics.summary();
+    anyhow::ensure!(m.submit_rejects == 0,
+                    "mixed load was rejected at submit time: {} rejects",
+                    m.submit_rejects);
+    anyhow::ensure!(m.completed as usize == sent[0] + sent[1],
+                    "router completed {} of {} mixed requests",
+                    m.completed, sent[0] + sent[1]);
+    println!("  multi: {} `{}` + {} `{}` requests in {elapsed:.2}s -> \
+              {kws_req_s:.0} + {vww_req_s:.0} req/s",
+             sent[0], ids[0], sent[1], ids[1]);
+    println!("  {m}");
+    match Arc::try_unwrap(mc) {
+        Ok(c) => c.stop()?,
+        Err(_) => anyhow::bail!("router handle still shared"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // ---- merge the `multi` section into BENCH_native.json ---------------
+    let mut sec = BTreeMap::new();
+    sec.insert("models".to_string(),
+               Json::Arr(ids.iter().map(|i| Json::Str(i.clone())).collect()));
+    sec.insert("clients".to_string(), num(CLIENTS as f64));
+    sec.insert("requests_per_client".to_string(), num(per_client as f64));
+    sec.insert("duration_s".to_string(), num(elapsed));
+    sec.insert("kws_req_s".to_string(), num(kws_req_s));
+    sec.insert("vww_req_s".to_string(), num(vww_req_s));
+    sec.insert("coordinator".to_string(), m.to_json());
+    let path = bench::out_dir().join("BENCH_native.json");
+    let mut root = match json::parse_file(&path) {
+        Ok(Json::Obj(o)) => o,
+        _ => {
+            let mut o = BTreeMap::new();
+            o.insert("schema".to_string(), num(2.0));
+            o.insert("bench".to_string(), Json::Str("serving".to_string()));
+            o.insert("backend".to_string(), Json::Str("native".to_string()));
+            o
+        }
+    };
+    root.insert("multi".to_string(), Json::Obj(sec));
+    save_json("BENCH_native.json", &Json::Obj(root));
+
+    if let Some(baseline) = &opts.baseline {
+        bench::check_regression(kws_req_s, Path::new(baseline), "kws_req_s",
+                                0.30)?;
+        bench::check_regression(vww_req_s, Path::new(baseline), "vww_req_s",
+                                0.30)?;
     }
     Ok(())
 }

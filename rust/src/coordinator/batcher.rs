@@ -72,6 +72,19 @@ pub fn group_fifo<T, K: PartialEq>(items: Vec<T>,
     groups.into_iter().map(|(_, g)| g).collect()
 }
 
+/// The batch key the serving drain actually groups on: the per-request
+/// [`InferOpts::batch_key`](crate::backend::InferOpts::batch_key)
+/// extended with the shard's model index. Two requests share a launch iff
+/// their options AND their model agree — a multi-model router can never
+/// mix models into one launch even when their option sets collide
+/// (single-model coordinators pass index 0, which degenerates to the
+/// plain options key).
+pub fn model_batch_key(model_idx: usize,
+                       opts: &crate::backend::InferOpts)
+                       -> (usize, (u64, u32, u32, u64)) {
+    (model_idx, opts.batch_key())
+}
+
 /// The SLO policy: pick one launch-compatible group's operating point
 /// `(adc_bits, batch cap)` from the modeled launch schedule.
 ///
@@ -184,6 +197,27 @@ mod tests {
         let one = group_fifo(vec![1, 2, 3], |_| 0u8);
         assert_eq!(one, vec![vec![1, 2, 3]]);
         assert!(group_fifo(Vec::<u8>::new(), |_| 0u8).is_empty());
+    }
+
+    #[test]
+    fn model_batch_key_separates_identical_opts_across_models() {
+        use crate::backend::InferOpts;
+        // identical per-request options: the model index alone must split
+        // the launch groups
+        let opts = InferOpts::default();
+        assert_ne!(model_batch_key(0, &opts), model_batch_key(1, &opts));
+        // same model + same options still batch together
+        assert_eq!(model_batch_key(1, &opts), model_batch_key(1, &opts));
+        // ...and differing options split within one model, exactly as the
+        // plain key does
+        let aged = InferOpts::default().with_t_drift(86_400.0);
+        assert_ne!(model_batch_key(1, &opts), model_batch_key(1, &aged));
+        // grouping by the model-aware key never merges models
+        let items = vec![(0usize, "a"), (1, "b"), (0, "c"), (1, "d")];
+        let groups = group_fifo(items, |&(m, _)| model_batch_key(m, &opts));
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0], vec![(0, "a"), (0, "c")]);
+        assert_eq!(groups[1], vec![(1, "b"), (1, "d")]);
     }
 
     #[test]

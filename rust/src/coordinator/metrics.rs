@@ -41,6 +41,45 @@ impl ModeledClass {
     }
 }
 
+/// Raw per-model serving tallies behind the `per_model` mutex. Only the
+/// multi-model router records these (a single-model coordinator leaves
+/// the map empty, so its summary output is unchanged).
+#[derive(Clone, Debug, Default)]
+struct PerModel {
+    requests: u64,
+    completed: u64,
+    submit_rejects: u64,
+    launches: u64,
+    batched_slots: u64,
+    /// modeled launch energy attributed to this model, nJ
+    modeled_nj: f64,
+    /// end-to-end latencies of this model's completed requests, µs
+    lat_us: Vec<f64>,
+}
+
+/// Per-model slice of a [`MetricsSummary`]: the counters a mixed-traffic
+/// operator actually watches per model (throughput, rejects, mean batch,
+/// tail latency, modeled energy per answered request).
+#[derive(Clone, Debug, Default)]
+pub struct PerModelSummary {
+    pub requests: u64,
+    pub completed: u64,
+    /// submit-time rejects for this model (admission-control queue-full,
+    /// bad feature length, unserveable options)
+    pub submit_rejects: u64,
+    pub launches: u64,
+    /// mean dispatched batch size for this model's launches
+    pub mean_batch: f64,
+    /// this model's completed requests per wall second since start
+    pub req_per_sec: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    /// modeled launch energy per completed request of this model, µJ
+    /// (deployment-wide overheads like refresh/reprogram are not split
+    /// per model — see [`MetricsSummary::modeled_uj_per_inf`])
+    pub modeled_uj_per_inf: f64,
+}
+
 /// The modeled-energy ledger behind one mutex: per-launch totals plus
 /// event overheads (refresh reads, reprogramming) that have no ops.
 #[derive(Clone, Debug, Default)]
@@ -95,6 +134,9 @@ pub struct Metrics {
     pub sim_energy_nj: Mutex<f64>,
     /// modeled accelerator energy/ops ledger (see [`ModeledLedger`])
     modeled: Mutex<ModeledLedger>,
+    /// per-model serving tallies, keyed by model id; populated only by
+    /// the multi-model router (see [`PerModel`])
+    per_model: Mutex<BTreeMap<String, PerModel>>,
 }
 
 impl Default for Metrics {
@@ -117,6 +159,7 @@ impl Default for Metrics {
             lat_us: Mutex::new(Vec::new()),
             sim_energy_nj: Mutex::new(0.0),
             modeled: Mutex::new(ModeledLedger::default()),
+            per_model: Mutex::new(BTreeMap::new()),
         }
     }
 }
@@ -150,6 +193,40 @@ impl Metrics {
     /// traffic that shares the deployment.
     pub fn add_modeled_overhead_nj(&self, nj: f64) {
         self.modeled.lock().unwrap().energy_nj += nj;
+    }
+
+    /// Count one accepted submit for `model` (multi-model router only;
+    /// the global `requests` counter is bumped separately).
+    pub fn model_request(&self, model: &str) {
+        let mut pm = self.per_model.lock().unwrap();
+        pm.entry(model.to_string()).or_default().requests += 1;
+    }
+
+    /// Count one submit-time reject for `model` (queue full, bad feature
+    /// length, unserveable options; the global `submit_rejects` counter
+    /// is bumped separately).
+    pub fn model_reject(&self, model: &str) {
+        let mut pm = self.per_model.lock().unwrap();
+        pm.entry(model.to_string()).or_default().submit_rejects += 1;
+    }
+
+    /// Account one launch of `slots` request slots for `model`, with its
+    /// modeled launch energy in nJ (0 when no schedule model priced it).
+    pub fn model_launch(&self, model: &str, slots: u64, energy_nj: f64) {
+        let mut pm = self.per_model.lock().unwrap();
+        let e = pm.entry(model.to_string()).or_default();
+        e.launches += 1;
+        e.batched_slots += slots;
+        e.modeled_nj += energy_nj;
+    }
+
+    /// Record one completed request for `model` with its end-to-end
+    /// latency (the global reservoir receives the same value separately).
+    pub fn model_completed(&self, model: &str, lat_us: f64) {
+        let mut pm = self.per_model.lock().unwrap();
+        let e = pm.entry(model.to_string()).or_default();
+        e.completed += 1;
+        e.lat_us.push(lat_us);
     }
 
     pub fn latencies_us(&self) -> Vec<f64> {
@@ -215,6 +292,38 @@ impl Metrics {
                 }
             },
             modeled_by_class: self.modeled.lock().unwrap().by_class.clone(),
+            per_model: {
+                let pm = self.per_model.lock().unwrap();
+                pm.iter()
+                    .map(|(model, e)| {
+                        (model.clone(), PerModelSummary {
+                            requests: e.requests,
+                            completed: e.completed,
+                            submit_rejects: e.submit_rejects,
+                            launches: e.launches,
+                            mean_batch: if e.launches == 0 {
+                                0.0
+                            } else {
+                                e.batched_slots as f64 / e.launches as f64
+                            },
+                            req_per_sec: if elapsed_s > 0.0 {
+                                e.completed as f64 / elapsed_s
+                            } else {
+                                0.0
+                            },
+                            p50_us: crate::util::stats::percentile(&e.lat_us,
+                                                                   50.0),
+                            p99_us: crate::util::stats::percentile(&e.lat_us,
+                                                                   99.0),
+                            modeled_uj_per_inf: if e.completed == 0 {
+                                0.0
+                            } else {
+                                e.modeled_nj * 1e-3 / e.completed as f64
+                            },
+                        })
+                    })
+                    .collect()
+            },
         }
     }
 }
@@ -258,6 +367,10 @@ pub struct MetricsSummary {
     pub modeled_tops_w: f64,
     /// modeled launch totals per `"model@bits"` serving class
     pub modeled_by_class: BTreeMap<String, ModeledClass>,
+    /// per-model serving breakdown, keyed by model id; empty unless a
+    /// [`MultiCoordinator`](crate::coordinator::MultiCoordinator) is
+    /// recording (single-model output is unchanged)
+    pub per_model: BTreeMap<String, PerModelSummary>,
 }
 
 impl MetricsSummary {
@@ -302,6 +415,23 @@ impl MetricsSummary {
             by.insert(class.clone(), Json::Obj(e));
         }
         m.insert("modeled".to_string(), Json::Obj(by));
+        let mut pm = BTreeMap::new();
+        for (model, p) in &self.per_model {
+            let mut e = BTreeMap::new();
+            e.insert("requests".to_string(), num(p.requests as f64));
+            e.insert("completed".to_string(), num(p.completed as f64));
+            e.insert("submit_rejects".to_string(),
+                     num(p.submit_rejects as f64));
+            e.insert("launches".to_string(), num(p.launches as f64));
+            e.insert("mean_batch".to_string(), num(p.mean_batch));
+            e.insert("req_per_sec".to_string(), num(p.req_per_sec));
+            e.insert("p50_us".to_string(), num(p.p50_us));
+            e.insert("p99_us".to_string(), num(p.p99_us));
+            e.insert("modeled_uj_per_inf".to_string(),
+                     num(p.modeled_uj_per_inf));
+            pm.insert(model.clone(), Json::Obj(e));
+        }
+        m.insert("per_model".to_string(), Json::Obj(pm));
         Json::Obj(m)
     }
 }
@@ -320,7 +450,19 @@ impl std::fmt::Display for MetricsSummary {
             self.health_probes, self.canary_agree, self.canary_total,
             self.req_per_sec, self.p50_us, self.p99_us, self.mean_us,
             self.sim_uj_per_inf, self.modeled_uj_per_inf, self.modeled_tops_w
-        )
+        )?;
+        // multi-model suffix; absent for single-model summaries so their
+        // one-line form is byte-identical to the pre-router output
+        for (model, p) in &self.per_model {
+            write!(
+                f,
+                " [{model}: req={} done={} rej={} rps={:.0} batch={:.1} \
+                 p99={:.0}us {:.2}uJ/inf]",
+                p.requests, p.completed, p.submit_rejects, p.req_per_sec,
+                p.mean_batch, p.p99_us, p.modeled_uj_per_inf
+            )?;
+        }
+        Ok(())
     }
 }
 
@@ -409,6 +551,51 @@ mod tests {
         assert!(crate::util::json::parse(&txt).is_ok());
         assert!(s.to_string().contains("modeled=0.50uJ/inf@2.00TOPS/W"),
                 "{s}");
+    }
+
+    #[test]
+    fn per_model_surfaces_everywhere() {
+        let m = Metrics::default();
+        // single-model path records nothing per model: map empty, and the
+        // Display line carries no per-model suffix
+        let s0 = m.summary();
+        assert!(s0.per_model.is_empty());
+        assert!(!s0.to_string().contains('['), "{s0}");
+        // a router serving kws + vww
+        for _ in 0..4 {
+            m.model_request("kws");
+        }
+        m.model_request("vww");
+        m.model_reject("kws");
+        m.model_launch("kws", 3, 1_500.0);
+        m.model_completed("kws", 10.0);
+        m.model_completed("kws", 20.0);
+        m.model_completed("kws", 30.0);
+        m.model_completed("vww", 100.0);
+        let s = m.summary();
+        let kws = &s.per_model["kws"];
+        assert_eq!((kws.requests, kws.completed, kws.submit_rejects,
+                    kws.launches),
+                   (4, 3, 1, 1));
+        assert!((kws.mean_batch - 3.0).abs() < 1e-12);
+        // 1500 nJ over 3 completed = 0.5 uJ/inf
+        assert!((kws.modeled_uj_per_inf - 0.5).abs() < 1e-12);
+        assert!((kws.p50_us - 20.0).abs() < 1e-9, "{}", kws.p50_us);
+        assert!(kws.req_per_sec > 0.0);
+        let vww = &s.per_model["vww"];
+        assert_eq!((vww.requests, vww.completed, vww.launches), (1, 1, 0));
+        assert_eq!(vww.mean_batch, 0.0);
+        assert_eq!(vww.modeled_uj_per_inf, 0.0);
+        // json + display surfacing
+        let txt = crate::util::json::write(&s.to_json());
+        assert!(txt.contains("\"per_model\""), "{txt}");
+        assert!(txt.contains("\"kws\""), "{txt}");
+        assert!(txt.contains("\"vww\""), "{txt}");
+        assert!(txt.contains("\"submit_rejects\":1"), "{txt}");
+        assert!(crate::util::json::parse(&txt).is_ok());
+        let line = s.to_string();
+        assert!(line.contains("[kws: req=4 done=3 rej=1"), "{line}");
+        assert!(line.contains("[vww: req=1 done=1 rej=0"), "{line}");
     }
 
     #[test]

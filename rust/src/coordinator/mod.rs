@@ -14,13 +14,25 @@
 //! path). Wire traffic is visible in [`Metrics`] as `wire_requests` /
 //! `wire_rejects`; shared coordinators stop gracefully via
 //! [`Coordinator::request_stop`].
+//!
+//! One process can also serve *several* models at once: a
+//! [`MultiCoordinator`] owns N model shards ([`ShardConfig`] each — its
+//! own backend, PCM state, fault scenario, drift clock, and schedule
+//! pricing) behind a single `submit(model_id, x, opts)` API, with
+//! per-model admission control and a weighted round-robin drain so a hot
+//! model cannot starve a quiet one. Batch grouping keys on
+//! [`batcher::model_batch_key`], so launches never mix models.
 
 pub mod batcher;
 pub mod metrics;
+pub mod router;
 pub mod server;
+pub mod shard;
 pub mod state;
 
 pub use batcher::BatchPlan;
 pub use metrics::Metrics;
+pub use router::{ModelInfo, MultiCoordinator};
 pub use server::{Coordinator, HealthReport, Request, Response, ServeConfig};
+pub use shard::ShardConfig;
 pub use state::PcmState;

@@ -1,0 +1,380 @@
+//! The multi-model router: one worker thread, N model shards, one submit
+//! API.
+//!
+//! [`MultiCoordinator::start`] takes a [`ShardConfig`] per model and
+//! fail-fast-probes each one on the caller thread (missing variants, bad
+//! fault specs, backends without serving graphs all error here, not
+//! inside the worker). The router worker then builds every
+//! [`Shard`](crate::coordinator::shard::Shard) *inside* its own thread —
+//! backend trait objects never cross threads, so they need no `Send`
+//! bound — and runs the serving loop:
+//!
+//! 1. block for the first message, route requests into their shard's
+//!    staging queue;
+//! 2. gather a shared batching window (`max_wait` of the first shard)
+//!    until it expires or any shard's queue is full;
+//! 3. drain in **weighted round-robin** passes with a rotating cursor:
+//!    each pass grants every non-empty shard one quantum (its weight x
+//!    its largest launch) before any shard gets a second turn, so a
+//!    flooded model cannot starve a quiet one — the quiet model's
+//!    requests are always at most one pass away from dispatch;
+//! 4. per-shard drift maintenance (reprogram + re-probe).
+//!
+//! Admission control is per model: each shard bounds its in-flight
+//! (admitted but not yet drained) requests at
+//! [`ShardConfig::queue_depth`]; submits beyond the bound reject
+//! immediately — counted both globally (`submit_rejects`) and per model —
+//! instead of queueing without limit. That bound is what makes the
+//! fairness guarantee real: a hot model's backlog is capped, so the
+//! round-robin drain reaches the quiet model after a bounded amount of
+//! work.
+//!
+//! Responses, metrics, and health probes keep per-model identity: the
+//! ledger records req/s, mean batch, latency quantiles, rejects, and
+//! modeled µJ/inf under each `model_id`
+//! ([`MetricsSummary::per_model`](crate::coordinator::metrics::MetricsSummary)),
+//! and [`MultiCoordinator::probe_health`] probes one named shard's
+//! canary.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::backend::{self, BackendKind, InferOpts};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::server::{HealthReport, Request, Response};
+use crate::coordinator::shard::{Shard, ShardConfig};
+use crate::runtime::ArtifactStore;
+
+/// What the router resolved about one served model at start time; the
+/// submit path validates against this without touching the worker.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    /// name requests route on
+    pub model_id: String,
+    pub feat_len: usize,
+    pub classes: usize,
+    pub backend: BackendKind,
+    pub bits: u32,
+    /// resolved admission bound (a configured `queue_depth` of 0 becomes
+    /// 4x the shard's largest launch)
+    pub queue_depth: usize,
+    /// weighted-round-robin share at drain time
+    pub weight: u32,
+}
+
+enum RMsg {
+    Req(usize, Request),
+    Probe(usize, mpsc::Sender<HealthReport>),
+    Stop,
+}
+
+/// Handle to a running multi-model router. The first configured shard is
+/// the *primary*: wire requests without a `"model"` field route to it.
+pub struct MultiCoordinator {
+    tx: mpsc::Sender<RMsg>,
+    handle: Option<JoinHandle<anyhow::Result<()>>>,
+    pub metrics: Arc<Metrics>,
+    models: Vec<ModelInfo>,
+    /// per-shard in-flight (admitted, not yet drained) request counts:
+    /// incremented at submit, decremented by the worker when a drain pops
+    /// the requests off the staging queue
+    depth: Arc<Vec<AtomicUsize>>,
+}
+
+impl MultiCoordinator {
+    /// Start the router worker over one shard per config. Fails fast on
+    /// the caller thread — per shard — for exactly the reasons
+    /// [`Coordinator::start`](crate::coordinator::Coordinator::start)
+    /// does: missing variant, invalid deployment fault spec, backend
+    /// without serving graphs at the configured bits.
+    pub fn start(shards: Vec<ShardConfig>)
+                 -> anyhow::Result<MultiCoordinator> {
+        anyhow::ensure!(!shards.is_empty(),
+                        "MultiCoordinator needs at least one shard");
+        for (i, a) in shards.iter().enumerate() {
+            anyhow::ensure!(
+                !shards[..i].iter().any(|b| b.model_id == a.model_id),
+                "duplicate model id `{}`",
+                a.model_id
+            );
+        }
+        let metrics = Arc::new(Metrics::default());
+        let mut models = Vec::with_capacity(shards.len());
+        let mut resolved = Vec::with_capacity(shards.len());
+        for mut sc in shards {
+            let cfg = &sc.serve;
+            let store = ArtifactStore::open(&cfg.artifacts_dir)?;
+            let meta = store.meta(&cfg.vid)?;
+            backend::validate_opts(cfg.backend, cfg.bits, &InferOpts {
+                faults: Some(cfg.faults),
+                ..InferOpts::default()
+            })?;
+            let (dynamic, largest) = {
+                let be =
+                    backend::create(cfg.backend, &store, &cfg.vid, cfg.bits)?;
+                be.probe()?;
+                anyhow::ensure!(
+                    !be.batch_sizes().is_empty(),
+                    "variant {} has no {}b serving graphs for backend `{}`",
+                    cfg.vid,
+                    cfg.bits,
+                    be.name()
+                );
+                (be.supports_dynamic_batch(), *be.batch_sizes().last().unwrap())
+            };
+            let (ih, iw, ic) = meta.input_hwc;
+            // resolve the admission bound with the same rule the shard
+            // applies (4x the largest launch), so submit-side admission
+            // and worker-side staging agree on one number
+            let xcap = if dynamic && cfg.max_batch > 0 {
+                cfg.max_batch
+            } else {
+                largest
+            };
+            let queue_depth =
+                if sc.queue_depth > 0 { sc.queue_depth } else { xcap * 4 };
+            sc.queue_depth = queue_depth;
+            sc.weight = sc.weight.max(1);
+            models.push(ModelInfo {
+                model_id: sc.model_id.clone(),
+                feat_len: ih * iw * ic,
+                classes: meta.num_classes,
+                backend: cfg.backend,
+                bits: cfg.bits,
+                queue_depth,
+                weight: sc.weight,
+            });
+            resolved.push(sc);
+        }
+        let depth: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..resolved.len()).map(|_| AtomicUsize::new(0)).collect());
+        // the batching window is a router-level knob: the primary shard's
+        // max_wait governs the shared gather loop
+        let max_wait = resolved[0].serve.max_wait;
+        let (tx, rx) = mpsc::channel::<RMsg>();
+        let m2 = metrics.clone();
+        let d2 = depth.clone();
+        let handle = std::thread::Builder::new()
+            .name("aon-cim-router".into())
+            .spawn(move || router_worker(resolved, rx, m2, d2, max_wait))?;
+        Ok(MultiCoordinator { tx, handle: Some(handle), metrics, models, depth })
+    }
+
+    /// The models served, in configuration order (index 0 is the
+    /// primary).
+    pub fn models(&self) -> &[ModelInfo] {
+        &self.models
+    }
+
+    /// The primary model: the default route for requests that name no
+    /// model.
+    pub fn primary(&self) -> &ModelInfo {
+        &self.models[0]
+    }
+
+    /// Index of a model id in [`models`](Self::models), if served.
+    pub fn model_index(&self, model: &str) -> Option<usize> {
+        self.models.iter().position(|m| m.model_id == model)
+    }
+
+    fn model_list(&self) -> String {
+        let ids: Vec<&str> =
+            self.models.iter().map(|m| m.model_id.as_str()).collect();
+        ids.join(", ")
+    }
+
+    /// Submit a request to a model by name. Unknown models, bad feature
+    /// lengths, options the shard's backend cannot serve, and a full
+    /// shard queue all reject here — counted per model — without ever
+    /// reaching the worker.
+    pub fn submit(&self, model: &str, features: Vec<f32>, opts: InferOpts)
+                  -> anyhow::Result<mpsc::Receiver<Response>> {
+        match self.model_index(model) {
+            Some(idx) => self.submit_to(idx, features, opts),
+            None => {
+                self.metrics.submit_rejects.fetch_add(1, Ordering::Relaxed);
+                anyhow::bail!("unknown model `{}` (serving: {})", model,
+                              self.model_list())
+            }
+        }
+    }
+
+    /// Submit to a model by index (see [`model_index`](Self::model_index);
+    /// the wire front end resolves the name once and routes by index).
+    pub fn submit_to(&self, idx: usize, features: Vec<f32>, opts: InferOpts)
+                     -> anyhow::Result<mpsc::Receiver<Response>> {
+        let info = &self.models[idx];
+        if features.len() != info.feat_len {
+            self.reject(info);
+            anyhow::bail!("bad feature length {} for model `{}` (wants {})",
+                          features.len(), info.model_id, info.feat_len);
+        }
+        if let Err(e) = backend::validate_opts(info.backend, info.bits, &opts)
+        {
+            self.reject(info);
+            return Err(e);
+        }
+        // per-model admission: claim an in-flight slot before sending; the
+        // worker releases slots when a drain pops the requests. A full
+        // shard rejects *this* model's submit — other models' lanes are
+        // unaffected, which is the whole point of per-shard bounds.
+        let d = &self.depth[idx];
+        if d.fetch_add(1, Ordering::AcqRel) >= info.queue_depth {
+            d.fetch_sub(1, Ordering::AcqRel);
+            self.reject(info);
+            anyhow::bail!("model `{}` queue full (depth {})", info.model_id,
+                          info.queue_depth);
+        }
+        let (rtx, rrx) = mpsc::channel();
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        self.metrics.model_request(&info.model_id);
+        self.tx
+            .send(RMsg::Req(idx, Request {
+                features,
+                opts,
+                reply: rtx,
+                submitted: Instant::now(),
+            }))
+            .map_err(|_| {
+                d.fetch_sub(1, Ordering::AcqRel);
+                self.reject(info);
+                anyhow::anyhow!("coordinator stopped")
+            })?;
+        Ok(rrx)
+    }
+
+    fn reject(&self, info: &ModelInfo) {
+        self.metrics.submit_rejects.fetch_add(1, Ordering::Relaxed);
+        self.metrics.model_reject(&info.model_id);
+    }
+
+    /// Blocking single inference against a named model.
+    pub fn infer(&self, model: &str, features: Vec<f32>, opts: InferOpts)
+                 -> anyhow::Result<Response> {
+        let rx = self.submit(model, features, opts)?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("coordinator dropped request"))
+    }
+
+    /// Run a health probe on one named shard now and return its report
+    /// (the canary replay described at
+    /// [`Coordinator::probe_health`](crate::coordinator::Coordinator::probe_health),
+    /// scoped to that model's engine and PCM state).
+    pub fn probe_health(&self, model: &str) -> anyhow::Result<HealthReport> {
+        let idx = self.model_index(model).ok_or_else(|| {
+            anyhow::anyhow!("unknown model `{}` (serving: {})", model,
+                            self.model_list())
+        })?;
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(RMsg::Probe(idx, rtx))
+            .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
+        rrx.recv().map_err(|_| anyhow::anyhow!("coordinator stopped"))
+    }
+
+    /// Graceful-shutdown hook for shared (`Arc`-held) routers: ask the
+    /// worker to finish the current window and exit. Later submits fail
+    /// with "coordinator stopped" (and count as submit rejects).
+    pub fn request_stop(&self) {
+        let _ = self.tx.send(RMsg::Stop);
+    }
+
+    pub fn stop(mut self) -> anyhow::Result<()> {
+        let _ = self.tx.send(RMsg::Stop);
+        if let Some(h) = self.handle.take() {
+            h.join()
+                .map_err(|_| anyhow::anyhow!("router worker panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for MultiCoordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(RMsg::Stop);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn router_worker(cfgs: Vec<ShardConfig>, rx: mpsc::Receiver<RMsg>,
+                 metrics: Arc<Metrics>, depth: Arc<Vec<AtomicUsize>>,
+                 max_wait: Duration) -> anyhow::Result<()> {
+    // shards are built on this thread: each owns its backend (PJRT
+    // handles, when in play, stay on-thread) and runs its startup probe
+    let mut shards = Vec::with_capacity(cfgs.len());
+    for (i, sc) in cfgs.into_iter().enumerate() {
+        shards.push(Shard::build(sc, i, true, &metrics)?);
+    }
+    let n = shards.len();
+    let mut cursor = 0usize;
+    let mut stopping = false;
+
+    while !stopping {
+        // block for the first message
+        match rx.recv() {
+            Ok(RMsg::Req(i, r)) => shards[i].queue.push(r),
+            Ok(RMsg::Probe(i, reply)) => {
+                let hr = shards[i].probe_now(&metrics)?;
+                let _ = reply.send(hr);
+                continue;
+            }
+            Ok(RMsg::Stop) | Err(_) => break,
+        }
+        // shared batching window: gather more until max_wait expires or
+        // any shard's staging queue fills (admission caps each at its
+        // queue_depth, so "full" is bounded per model)
+        let deadline = Instant::now() + max_wait;
+        while shards.iter().all(|s| s.queue.len() < s.max_queue) {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(RMsg::Req(i, r)) => shards[i].queue.push(r),
+                Ok(RMsg::Probe(i, reply)) => {
+                    let hr = shards[i].probe_now(&metrics)?;
+                    let _ = reply.send(hr);
+                }
+                // a stop mid-window still drains what was admitted below
+                Ok(RMsg::Stop) => {
+                    stopping = true;
+                    break;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    stopping = true;
+                    break;
+                }
+            }
+        }
+        // weighted round-robin drain with a rotating cursor: every
+        // non-empty shard gets one quantum per pass, the pass origin
+        // rotates so no shard is systematically first, and the loop runs
+        // until every staging queue is empty — the shared worker budget
+        // is divided by weight, never monopolized
+        loop {
+            let mut any = false;
+            for k in 0..n {
+                let i = (cursor + k) % n;
+                let popped = shards[i].drain_chunk(&metrics)?;
+                if popped > 0 {
+                    depth[i].fetch_sub(popped, Ordering::AcqRel);
+                    any = true;
+                }
+            }
+            cursor = (cursor + 1) % n;
+            if !any {
+                break;
+            }
+        }
+        // per-shard drift management between dispatches
+        for s in shards.iter_mut() {
+            s.maintain(&metrics)?;
+        }
+    }
+    Ok(())
+}

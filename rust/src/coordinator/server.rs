@@ -1,16 +1,24 @@
 //! The serving loop: request intake -> dynamic batcher -> backend executor,
 //! with PCM drift management in the background of every dispatch.
 //!
-//! The executor is any [`InferenceBackend`] — the native simulator by
-//! default (hermetic: no XLA, no exported HLO), the tile-faithful AnalogCim
-//! engine (`ServeConfig::backend = BackendKind::AnalogCim`), or the
-//! compiled PJRT graphs when built with the `pjrt` feature.
+//! The executor is any [`crate::backend::InferenceBackend`] — the native
+//! simulator by default (hermetic: no XLA, no exported HLO), the
+//! tile-faithful AnalogCim engine
+//! (`ServeConfig::backend = BackendKind::AnalogCim`), or the compiled
+//! PJRT graphs when built with the `pjrt` feature. The dispatch machinery
+//! itself — dispatch state, canary probe, drain — lives in
+//! [`crate::coordinator::shard`], shared with the multi-model
+//! [`MultiCoordinator`](crate::coordinator::MultiCoordinator) router.
 //!
 //! Every request carries its own [`InferOpts`] (device age `t_drift`, ADC
 //! bitwidth `adc_bits`): the drain partitions the queue into
-//! option-compatible groups ([`batcher::group_fifo`]) and executes each
-//! group as its own launch sequence, reading PCM weights at the group's
-//! requested age ([`PcmState::weights_at`]) and quantizing at the group's
+//! option-compatible groups
+//! ([`crate::coordinator::batcher::group_fifo`], keyed with the shard's
+//! model index via [`crate::coordinator::batcher::model_batch_key`]) and
+//! executes each group as its own launch sequence, reading PCM weights at
+//! the group's requested age
+//! ([`PcmState::weights_at`](crate::coordinator::PcmState::weights_at))
+//! and quantizing at the group's
 //! bitwidth. Requests without options (`InferOpts::default()` —
 //! [`Coordinator::submit`]) serve at the coordinator clock's current
 //! device age and the backend's configured bits, exactly as before the
@@ -31,26 +39,18 @@
 //! surface as `modeled_uj_per_inf` / `modeled_tops_w` in
 //! [`MetricsSummary`](crate::coordinator::metrics::MetricsSummary). With
 //! [`ServeConfig::latency_slo_us`] set, the same estimator drives the
-//! batcher: see [`batcher::slo_operating_point`].
+//! batcher: see [`crate::coordinator::batcher::slo_operating_point`].
 
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::backend::{self, BackendKind, HostTensor, InferOpts,
-                     InferenceBackend};
-use crate::coordinator::batcher;
+use crate::backend::{self, BackendKind, InferOpts};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::state::PcmState;
-use crate::crossbar::ArrayGeom;
-use crate::eval::DeployedModel;
-use crate::nn::{expand_dw_dense, LayerKind};
-use crate::pcm::{FaultSpec, PcmParams};
+use crate::coordinator::shard::{Shard, ShardConfig};
+use crate::pcm::FaultSpec;
 use crate::runtime::ArtifactStore;
-use crate::timing::ScheduleModel;
-use crate::util::logits;
-use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -88,14 +88,17 @@ pub struct ServeConfig {
     /// reprogram the array when mean GDC alpha exceeds 1.15
     pub reprogram: bool,
     /// deployment-default device-variability scenario: stamped onto the
-    /// programmed array at worker start ([`PcmState::set_faults`]) and
+    /// programmed array at worker start
+    /// ([`PcmState::set_faults`](crate::coordinator::PcmState::set_faults))
+    /// and
     /// re-stamped after every reprogram. Option-less requests serve this
     /// scenario; requests carrying their own [`InferOpts::faults`] win for
     /// that request. [`FaultSpec::none()`] (the default) serves the
     /// pristine array bit for bit.
     pub faults: FaultSpec,
     /// per-launch latency SLO in microseconds, priced against the modeled
-    /// AON-CiM launch schedule ([`ScheduleModel`]). When set, each drained
+    /// AON-CiM launch schedule ([`crate::timing::ScheduleModel`]). When
+    /// set, each drained
     /// group's batch cap comes from the estimator — the largest batch whose
     /// *modeled* accelerator latency stays within the SLO — instead of the
     /// fixed `max_batch`; requests that opted into a bitwidth range
@@ -166,9 +169,9 @@ impl ServeConfig {
 pub struct Request {
     pub features: Vec<f32>,
     /// per-request options this request must be served under
-    opts: InferOpts,
-    reply: mpsc::Sender<Response>,
-    submitted: Instant,
+    pub(crate) opts: InferOpts,
+    pub(crate) reply: mpsc::Sender<Response>,
+    pub(crate) submitted: Instant,
 }
 
 #[derive(Clone, Debug)]
@@ -374,401 +377,52 @@ impl Drop for Coordinator {
     }
 }
 
-/// Everything the drain path needs besides the queue and the PCM state;
-/// resolved once at worker start, never on the dispatch path.
-struct Dispatcher<'a> {
-    be: &'a (dyn InferenceBackend + 'a),
-    metrics: &'a Metrics,
-    /// static launch shapes (ascending), for the padded plan
-    batch_sizes: Vec<usize>,
-    /// true: FIFO zero-padding plan over `max_batch`-sized chunks
-    dynamic: bool,
-    max_batch: usize,
-    /// reusable input buffer (largest launch) — no hot-path allocation
-    xbuf: Vec<f32>,
-    feat_len: usize,
-    classes: usize,
-    /// modeled AON-CiM launch schedule for the served model: prices every
-    /// launch (nJ, ns) for the metrics ledger and, when `slo_us` is set,
-    /// picks each group's operating point
-    sched: ScheduleModel,
-    /// `ServeConfig::latency_slo_us` — `None` keeps the fixed-config batcher
-    slo_us: Option<f64>,
-    /// latest health-probe verdict: while true, every response dispatched
-    /// counts under `Metrics::degraded_responses` (the coordinator keeps
-    /// serving — degradation is graceful, not fatal)
-    degraded: bool,
-}
-
-impl Dispatcher<'_> {
-    /// Drain the queue: partition by per-request options, then execute
-    /// each option group as its own launch sequence. With uniform options
-    /// (the common case) this is exactly the pre-options single-group
-    /// drain.
-    fn drain(&mut self, state: &mut PcmState, queue: &mut Vec<Request>)
-             -> anyhow::Result<()> {
-        if queue.is_empty() {
-            return Ok(());
-        }
-        // fast path: uniform options (the overwhelmingly common case,
-        // and everything that existed before per-request options) — the
-        // queue is executed in place with zero grouping allocations
-        let k0 = queue[0].opts.batch_key();
-        if queue.iter().all(|r| r.opts.batch_key() == k0) {
-            self.drain_group(state, queue)?;
-            queue.clear();
-            return Ok(());
-        }
-        // mixed options: partition into option-homogeneous groups.
-        // drain(..) (not mem::take) keeps the queue's preallocated
-        // capacity alive across windows.
-        let drained: Vec<Request> = queue.drain(..).collect();
-        let groups = batcher::group_fifo(drained, |r| r.opts.batch_key());
-        for group in groups {
-            self.drain_group(state, &group)?;
-        }
-        Ok(())
-    }
-
-    /// Execute one option-homogeneous group of requests.
-    fn drain_group(&mut self, state: &mut PcmState, group: &[Request])
-                   -> anyhow::Result<()> {
-        let opts = group[0].opts;
-        // operating point for this group: without an SLO it is exactly the
-        // fixed config (requested bits, configured max_batch); with one,
-        // the modeled launch schedule caps the batch — and, for requests
-        // that opted into a bitwidth range, may lower the bits — so the
-        // modeled accelerator latency of every launch stays within the SLO
-        let base_bits = opts.effective_bits(self.be.bits());
-        let (adc_bits, cap) = match self.slo_us {
-            Some(slo) => batcher::slo_operating_point(
-                &self.sched, slo, opts.adc_bits_floor, base_bits,
-                self.max_batch),
-            None => (base_bits, self.max_batch),
-        };
-        let plan = if self.dynamic {
-            batcher::plan_dynamic(group.len(), cap)
-        } else {
-            // static-shape engines keep their exported-graph launch sizes
-            // (the SLO cannot resize a compiled graph); the estimator still
-            // prices each launch below
-            batcher::plan(group.len(), self.batch_sizes.clone())
-        };
-        self.metrics
-            .padded_slots
-            .fetch_add(plan.padding as u64, Ordering::Relaxed);
-
-        // which fault scenario this group serves under: the request's own
-        // spec when it carries one, the deployment default otherwise
-        let spec = opts.faults.unwrap_or_else(|| state.faults());
-        // effective weights for this group's device age and scenario: an
-        // explicit-age read for `t_drift` requests, the clock-driven cache
-        // otherwise. Either way the borrow is straight out of the state
-        // cache — no per-drain clone of the full weight set (the PJRT path
-        // copies inside run_batch, the native paths read the slices in
-        // place).
-        let (ws, alphas, sim_age, refreshed) = match opts.t_drift {
-            Some(t) => state.weights_at_spec(t, &spec),
-            None => state.current_weights_spec(&spec),
-        };
-        if refreshed {
-            self.metrics
-                .weight_refreshes
-                .fetch_add(1, Ordering::Relaxed);
-            // a refresh is one full single-sample read+calibrate pass on
-            // the array; charge its modeled energy so amortized µJ/inf
-            // reflects the maintenance the accelerator actually performed
-            self.metrics.add_modeled_overhead_nj(self.sched.refresh_nj());
-        }
-        // the ADC-side faults execute inside the backend, so the resolved
-        // scenario must ride the launch options (weight-side faults already
-        // live in the conductances read above); a none-equivalent spec
-        // stays out so the clean path is bit-identical to pre-fault serving.
-        // The operating-point bits are pinned explicitly: with an SLO they
-        // may sit below the request's own bits (opt-in floor), and the
-        // response echoes what actually ran.
-        let run_opts = InferOpts {
-            faults: (!spec.is_none()).then_some(spec),
-            adc_bits: Some(adc_bits),
-            ..opts
-        };
-
-        let feat_len = self.feat_len;
-        let mut taken = 0usize;
-        for &launch in &plan.launches {
-            let count = launch.min(group.len() - taken);
-
-            let xb = &mut self.xbuf[..launch * feat_len];
-            for (i, r) in group[taken..taken + count].iter().enumerate() {
-                xb[i * feat_len..(i + 1) * feat_len].copy_from_slice(&r.features);
-            }
-            for i in count..launch {
-                // pad with the first request's features (static plans only;
-                // dynamic launches are always exact)
-                let (a, b) = xb.split_at_mut(i * feat_len);
-                b[..feat_len].copy_from_slice(&a[..feat_len]);
-            }
-
-            let out = self.be.run_batch(xb, launch, ws, alphas, &run_opts)?;
-            self.metrics.launches.fetch_add(1, Ordering::Relaxed);
-            self.metrics
-                .batched_slots
-                .fetch_add(count as u64, Ordering::Relaxed);
-            // price the launch actually dispatched (padded slots execute
-            // too, so the full `launch` is charged) and amortize it over
-            // the `count` real responses it carried — padding shows up as
-            // a higher modeled µJ/inf, exactly as it would on silicon
-            let ls = self.sched.launch(launch, adc_bits);
-            self.metrics.add_modeled_launch(self.sched.model(), adc_bits,
-                                            count as u64, ls.energy_nj,
-                                            ls.ops);
-            if self.degraded {
-                self.metrics
-                    .degraded_responses
-                    .fetch_add(count as u64, Ordering::Relaxed);
-            }
-
-            let now = Instant::now();
-            for (i, r) in group[taken..taken + count].iter().enumerate() {
-                let row = &out[i * self.classes..(i + 1) * self.classes];
-                let pred = logits::argmax(row);
-                // account BEFORE replying: clients must observe settled
-                // metrics
-                self.metrics.completed.fetch_add(1, Ordering::Relaxed);
-                self.metrics
-                    .record_latency_us((now - r.submitted).as_secs_f64() * 1e6);
-                self.metrics.add_energy_nj(ls.energy_nj / count as f64);
-                let _ = r.reply.send(Response {
-                    pred,
-                    logits: row.to_vec(),
-                    latency: now - r.submitted,
-                    sim_age_s: sim_age,
-                    adc_bits,
-                });
-            }
-            taken += count;
-        }
-        Ok(())
-    }
-}
-
-/// The worker's canary: a deterministic synthetic batch plus the clean
-/// native reference predictions it was graded against at startup. The
-/// probe replays `x` through the *serving* engine (current device age,
-/// default fault scenario) and counts argmax agreement — a cheap
-/// end-to-end spot-check that the analog path still computes the same
-/// answers as an ideal digital execution.
-struct Canary {
-    x: Vec<f32>,
-    n: usize,
-    ref_preds: Vec<u32>,
-}
-
-/// Run one health probe: serve the canary batch under the deployment
-/// default and grade it against the clean reference. Updates the probe
-/// counters; the caller owns propagating `degraded` to the dispatcher.
-fn probe(be: &dyn InferenceBackend, state: &mut PcmState, canary: &Canary,
-         classes: usize, metrics: &Metrics) -> anyhow::Result<HealthReport> {
-    let spec = state.faults();
-    let popts = InferOpts {
-        faults: (!spec.is_none()).then_some(spec),
-        ..InferOpts::default()
-    };
-    let (ws, alphas, refreshed) = state.current_weights();
-    if refreshed {
-        metrics.weight_refreshes.fetch_add(1, Ordering::Relaxed);
-    }
-    let out = be.run_batch(&canary.x, canary.n, ws, alphas, &popts)?;
-    let agree = (0..canary.n)
-        .filter(|&i| {
-            logits::argmax(&out[i * classes..(i + 1) * classes])
-                == canary.ref_preds[i]
-        })
-        .count();
-    // degraded below 3/4 agreement: drift read noise may flip a borderline
-    // canary, a stuck-cell cluster flips most of them
-    let degraded = agree * 4 < canary.n * 3;
-    metrics.health_probes.fetch_add(1, Ordering::Relaxed);
-    metrics.canary_agree.fetch_add(agree as u64, Ordering::Relaxed);
-    metrics.canary_total.fetch_add(canary.n as u64, Ordering::Relaxed);
-    Ok(HealthReport { canary: canary.n, agree, degraded })
-}
-
+/// The single-model worker: one [`Shard`] driven whole — block for the
+/// first request, gather a batching window, drain the entire staging
+/// queue, then run drift management. All dispatch machinery lives in
+/// [`crate::coordinator::shard`], shared verbatim with the multi-model
+/// router.
 fn worker(cfg: ServeConfig, rx: mpsc::Receiver<Msg>, metrics: Arc<Metrics>)
           -> anyhow::Result<()> {
-    // the worker owns the artifact store and the backend (PJRT handles,
-    // when in play, stay on-thread)
-    let store = ArtifactStore::open(&cfg.artifacts_dir)?;
-    let be = backend::create_with_threads(cfg.backend, &store, &cfg.vid,
-                                          cfg.bits, cfg.threads)?;
-    // model geometry is invariant across launches: resolve it once here,
-    // never on the dispatch path
-    let feat_len = be.feat_len();
-    let classes = be.num_classes();
-
-    // serving batch sizes available at this bitwidth (ascending, per the
-    // trait contract). Coordinator::start already rejected an empty set
-    // with a descriptive error; this only guards against the artifact
-    // bundle changing on disk between the probe and the worker's re-open.
-    let batch_sizes = be.batch_sizes();
-    anyhow::ensure!(
-        !batch_sizes.is_empty(),
-        "serving graphs for {} disappeared between probe and worker start",
-        cfg.vid
-    );
-    // compile/load every batch size up front (never on the hot path)
-    for &b in &batch_sizes {
-        be.prepare(b)?;
-    }
-
-    // modeled AON-CiM launch schedule for this deployment: the backend's
-    // own geometry when it reports one (native/analog — identical on the
-    // default AON array), the AON mapping otherwise (PJRT). Resolved once
-    // here; the dispatch path only evaluates closed-form per-launch costs.
-    let meta = store.meta(&cfg.vid)?;
-    let sched = match be.schedule_model() {
-        Some(s) => s,
-        None => ScheduleModel::new(&meta, ArrayGeom::AON)?,
-    };
-
-    // deploy onto PCM
-    let params = PcmParams::default();
-    let mut rng = Rng::new(cfg.seed);
-    let deployed = DeployedModel::program(&store, &cfg.vid, &params, &mut rng)?;
-    let mut state = PcmState::new(deployed, params, cfg.seed ^ 0xD1F7, cfg.time_scale);
-    state.refresh_every_s = cfg.refresh_every_s;
-    // deployment-default fault scenario + per-tile calibration target,
-    // both installed before the clock starts so the first read already
-    // serves the faulted, tile-calibrated array
-    state.set_faults(cfg.faults);
-    state.set_calib_geom(be.calib_geom());
-    state.set_initial_age(cfg.drift_time);
-
-    let dynamic = be.supports_dynamic_batch();
-    let largest_static = *batch_sizes.last().unwrap();
-    let max_batch = if cfg.max_batch > 0 {
-        cfg.max_batch
-    } else {
-        largest_static
-    };
-    // largest single launch either plan can produce, sizing the input buffer
-    let xcap = if dynamic { max_batch } else { largest_static };
-    if dynamic {
-        be.prepare(max_batch)?;
-    }
-    // canary batch for the health probe: deterministic synthetic features
-    // (a function of the seed alone), graded once against the exact FP
-    // weights on the clean native engine. Static-shape engines probe at
-    // their smallest exported graph size; dynamic engines use 4 samples.
-    let canary_n = if dynamic { 4.min(max_batch.max(1)) } else { batch_sizes[0] };
-    let canary = {
-        let mut crng = Rng::new(cfg.seed ^ 0xCA9A_11A5);
-        let x: Vec<f32> = (0..canary_n * feat_len)
-            .map(|_| crng.uniform() as f32)
-            .collect();
-        let tensors = store.weights(&cfg.vid)?;
-        let mut exact = Vec::with_capacity(tensors.len());
-        for (lm, t) in meta.layers.iter().zip(tensors.iter()) {
-            // same depthwise expansion the PCM programming applies, so the
-            // reference sees the exact weights in the deployed layout
-            if lm.analog && lm.kind == LayerKind::Dw3x3 {
-                exact.push(HostTensor::from_tensor(&expand_dw_dense(t)));
-            } else {
-                exact.push(HostTensor::from_tensor(t));
-            }
-        }
-        let unity = crate::pcm::gdc::unity(exact.len());
-        let nref = backend::create_with_threads(BackendKind::Native, &store,
-                                                &cfg.vid, cfg.bits, 1)?;
-        nref.prepare(canary_n)?;
-        let rout = nref.run_batch(&x, canary_n, &exact, &unity,
-                                  &InferOpts::default())?;
-        let ref_preds: Vec<u32> = (0..canary_n)
-            .map(|i| logits::argmax(&rout[i * classes..(i + 1) * classes]))
-            .collect();
-        Canary { x, n: canary_n, ref_preds }
-    };
-
-    let max_queue = xcap * 4;
-    let mut queue: Vec<Request> = Vec::with_capacity(max_queue);
-    let mut disp = Dispatcher {
-        be: be.as_ref(),
-        metrics: &metrics,
-        batch_sizes,
-        dynamic,
-        max_batch,
-        xbuf: vec![0f32; xcap * feat_len],
-        feat_len,
-        classes,
-        sched,
-        slo_us: cfg.latency_slo_us,
-        degraded: false,
-    };
-
-    // startup probe: the verdict on the just-deployed (possibly faulted)
-    // array, before any traffic is served under it
-    disp.degraded = probe(disp.be, &mut state, &canary, classes,
-                          &metrics)?.degraded;
-    let mut probed_at_refresh = metrics.weight_refreshes.load(Ordering::Relaxed);
+    let max_wait = cfg.max_wait;
+    let model_id = cfg.vid.clone();
+    // per_model = false: the single-model ledger stays exactly as it was
+    // before sharding existed (no per-model breakdown for one model)
+    let mut sh = Shard::build(ShardConfig::new(&model_id, cfg), 0, false,
+                              &metrics)?;
 
     loop {
         // block for the first request
         match rx.recv() {
-            Ok(Msg::Req(r)) => queue.push(r),
+            Ok(Msg::Req(r)) => sh.queue.push(r),
             Ok(Msg::Probe(reply)) => {
-                let hr = probe(disp.be, &mut state, &canary, classes,
-                               &metrics)?;
-                disp.degraded = hr.degraded;
-                probed_at_refresh =
-                    metrics.weight_refreshes.load(Ordering::Relaxed);
+                let hr = sh.probe_now(&metrics)?;
                 let _ = reply.send(hr);
                 continue;
             }
             Ok(Msg::Stop) | Err(_) => break,
         }
         // batching window: gather more until max_wait or queue full
-        let deadline = Instant::now() + cfg.max_wait;
-        while queue.len() < max_queue {
+        let deadline = Instant::now() + max_wait;
+        while sh.queue.len() < sh.max_queue {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
             match rx.recv_timeout(deadline - now) {
-                Ok(Msg::Req(r)) => queue.push(r),
+                Ok(Msg::Req(r)) => sh.queue.push(r),
                 Ok(Msg::Probe(reply)) => {
-                    let hr = probe(disp.be, &mut state, &canary, classes,
-                                   &metrics)?;
-                    disp.degraded = hr.degraded;
-                    probed_at_refresh =
-                        metrics.weight_refreshes.load(Ordering::Relaxed);
+                    let hr = sh.probe_now(&metrics)?;
                     let _ = reply.send(hr);
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
         }
-        disp.drain(&mut state, &mut queue)?;
-
-        // drift management between dispatches
-        let mut reprogrammed = false;
-        if cfg.reprogram && state.needs_reprogram() {
-            state.reprogram(&store, &cfg.vid)?;
-            // a reprogram rewrites every allocated cell: charge its modeled
-            // energy as serving overhead so amortized µJ/inf carries the
-            // maintenance cost of keeping the array in spec
-            metrics.add_modeled_overhead_nj(disp.sched.reprogram_nj());
-            reprogrammed = true;
-        }
-        // re-probe whenever the weights moved since the last verdict
-        // (cadence refresh or the reprogram above): the health answer is a
-        // property of the weights actually being served
-        let refreshes = metrics.weight_refreshes.load(Ordering::Relaxed);
-        if reprogrammed || refreshes != probed_at_refresh {
-            disp.degraded = probe(disp.be, &mut state, &canary, classes,
-                                  &metrics)?.degraded;
-            probed_at_refresh =
-                metrics.weight_refreshes.load(Ordering::Relaxed);
-        }
+        sh.drain_all(&metrics)?;
+        // drift management between dispatches (reprogram + re-probe when
+        // the served weights moved)
+        sh.maintain(&metrics)?;
     }
     Ok(())
 }

@@ -1,0 +1,546 @@
+//! One model shard: everything a single served model owns — its
+//! [`InferenceBackend`], its [`PcmState`] (drift clock, fault scenario,
+//! refresh cadence), its [`ScheduleModel`] pricing, its canary health
+//! probe, and its staging queue — plus the drain machinery that turns a
+//! queue of [`Request`]s into batched launches.
+//!
+//! The single-model [`Coordinator`](crate::coordinator::Coordinator)
+//! worker and the multi-model
+//! [`MultiCoordinator`](crate::coordinator::MultiCoordinator) router are
+//! both thin loops over this module: the coordinator drives exactly one
+//! shard and drains it whole, the router owns N shards and drains them in
+//! weighted round-robin quanta so one hot model cannot starve another.
+//! Batch grouping always keys on [`batcher::model_batch_key`] — the
+//! per-request [`InferOpts`] key extended with the shard's model index —
+//! so two models can never share a launch even if their option sets
+//! collide.
+
+use std::sync::atomic::Ordering;
+
+use crate::backend::{self, BackendKind, HostTensor, InferOpts,
+                     InferenceBackend};
+use crate::coordinator::batcher;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::server::{HealthReport, Request, Response,
+                                 ServeConfig};
+use crate::coordinator::state::PcmState;
+use crate::crossbar::ArrayGeom;
+use crate::eval::DeployedModel;
+use crate::nn::{expand_dw_dense, LayerKind};
+use crate::pcm::PcmParams;
+use crate::runtime::ArtifactStore;
+use crate::timing::ScheduleModel;
+use crate::util::logits;
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+/// Configuration of one model shard inside a
+/// [`MultiCoordinator`](crate::coordinator::MultiCoordinator): the full
+/// single-model [`ServeConfig`] (every knob — backend, bits, faults,
+/// drift clock, SLO — stays per model) plus the shard-level scheduling
+/// knobs the router adds on top.
+#[derive(Clone, Debug)]
+pub struct ShardConfig {
+    /// name requests route on (`submit(model_id, ..)`, the wire `"model"`
+    /// field); conventionally the artifact variant id
+    pub model_id: String,
+    /// the shard's own serving configuration — exactly what a standalone
+    /// [`Coordinator`](crate::coordinator::Coordinator) would take
+    pub serve: ServeConfig,
+    /// admission bound: maximum in-flight (admitted but not yet drained)
+    /// requests for this model; `0` = automatic (4x the largest launch,
+    /// the same staging bound the single-model coordinator uses). Submits
+    /// beyond the bound are rejected — counted per model — instead of
+    /// growing the queue without limit.
+    pub queue_depth: usize,
+    /// weighted-round-robin share at drain time: each drain pass grants
+    /// this shard `weight x` its largest launch before moving on (min 1)
+    pub weight: u32,
+}
+
+impl ShardConfig {
+    pub fn new(model_id: &str, serve: ServeConfig) -> Self {
+        ShardConfig {
+            model_id: model_id.to_string(),
+            serve,
+            queue_depth: 0,
+            weight: 1,
+        }
+    }
+}
+
+/// Everything the drain path needs besides the queue and the PCM state;
+/// resolved once at shard build, never on the dispatch path. Owns no
+/// borrows, so the shard can hand out `(&mut DispatchState, &dyn
+/// InferenceBackend, &mut PcmState)` as disjoint field borrows.
+pub(crate) struct DispatchState {
+    /// static launch shapes (ascending), for the padded plan
+    pub(crate) batch_sizes: Vec<usize>,
+    /// true: FIFO zero-padding plan over `max_batch`-sized chunks
+    pub(crate) dynamic: bool,
+    pub(crate) max_batch: usize,
+    /// reusable input buffer (largest launch) — no hot-path allocation
+    pub(crate) xbuf: Vec<f32>,
+    pub(crate) feat_len: usize,
+    pub(crate) classes: usize,
+    /// modeled AON-CiM launch schedule for the served model: prices every
+    /// launch (nJ, ns) for the metrics ledger and, when `slo_us` is set,
+    /// picks each group's operating point
+    pub(crate) sched: ScheduleModel,
+    /// `ServeConfig::latency_slo_us` — `None` keeps the fixed-config
+    /// batcher
+    pub(crate) slo_us: Option<f64>,
+    /// latest health-probe verdict: while true, every response dispatched
+    /// counts under `Metrics::degraded_responses` (the shard keeps
+    /// serving — degradation is graceful, not fatal)
+    pub(crate) degraded: bool,
+    /// weight refreshes observed by THIS shard's drains and probes; the
+    /// re-probe-on-refresh logic tracks this instead of the global
+    /// `Metrics::weight_refreshes` counter so co-resident shards cannot
+    /// trigger each other's probes
+    pub(crate) refresh_events: u64,
+    /// position in the router's shard table, folded into every batch key
+    /// ([`batcher::model_batch_key`]) so launches never mix models
+    pub(crate) model_idx: usize,
+    /// `Some(model_id)`: record per-model metrics under this label
+    /// (multi-model serving); `None` keeps the single-model ledger exactly
+    /// as before sharding existed
+    pub(crate) model_label: Option<String>,
+}
+
+/// Drain a staging queue: partition by per-request options (and the
+/// shard's model index), then execute each group as its own launch
+/// sequence. With uniform options (the common case) the queue is executed
+/// in place with zero grouping allocations. The queue is empty on return.
+pub(crate) fn drain(ds: &mut DispatchState, be: &dyn InferenceBackend,
+                    metrics: &Metrics, state: &mut PcmState,
+                    queue: &mut Vec<Request>) -> anyhow::Result<()> {
+    if queue.is_empty() {
+        return Ok(());
+    }
+    // fast path: uniform options (the overwhelmingly common case, and
+    // everything that existed before per-request options)
+    let k0 = batcher::model_batch_key(ds.model_idx, &queue[0].opts);
+    if queue
+        .iter()
+        .all(|r| batcher::model_batch_key(ds.model_idx, &r.opts) == k0)
+    {
+        drain_group(ds, be, metrics, state, queue)?;
+        queue.clear();
+        return Ok(());
+    }
+    // mixed options: partition into option-homogeneous groups.
+    // drain(..) (not mem::take) keeps the queue's preallocated capacity
+    // alive across windows.
+    let drained: Vec<Request> = queue.drain(..).collect();
+    let groups = batcher::group_fifo(drained, |r| {
+        batcher::model_batch_key(ds.model_idx, &r.opts)
+    });
+    for group in groups {
+        drain_group(ds, be, metrics, state, &group)?;
+    }
+    Ok(())
+}
+
+/// Execute one option-homogeneous group of requests.
+fn drain_group(ds: &mut DispatchState, be: &dyn InferenceBackend,
+               metrics: &Metrics, state: &mut PcmState, group: &[Request])
+               -> anyhow::Result<()> {
+    let opts = group[0].opts;
+    // operating point for this group: without an SLO it is exactly the
+    // fixed config (requested bits, configured max_batch); with one, the
+    // modeled launch schedule caps the batch — and, for requests that
+    // opted into a bitwidth range, may lower the bits — so the modeled
+    // accelerator latency of every launch stays within the SLO
+    let base_bits = opts.effective_bits(be.bits());
+    let (adc_bits, cap) = match ds.slo_us {
+        Some(slo) => batcher::slo_operating_point(&ds.sched, slo,
+                                                  opts.adc_bits_floor,
+                                                  base_bits, ds.max_batch),
+        None => (base_bits, ds.max_batch),
+    };
+    let plan = if ds.dynamic {
+        batcher::plan_dynamic(group.len(), cap)
+    } else {
+        // static-shape engines keep their exported-graph launch sizes
+        // (the SLO cannot resize a compiled graph); the estimator still
+        // prices each launch below
+        batcher::plan(group.len(), ds.batch_sizes.clone())
+    };
+    metrics
+        .padded_slots
+        .fetch_add(plan.padding as u64, Ordering::Relaxed);
+
+    // which fault scenario this group serves under: the request's own
+    // spec when it carries one, the deployment default otherwise
+    let spec = opts.faults.unwrap_or_else(|| state.faults());
+    // effective weights for this group's device age and scenario: an
+    // explicit-age read for `t_drift` requests, the clock-driven cache
+    // otherwise. Either way the borrow is straight out of the state
+    // cache — no per-drain clone of the full weight set (the PJRT path
+    // copies inside run_batch, the native paths read the slices in
+    // place).
+    let (ws, alphas, sim_age, refreshed) = match opts.t_drift {
+        Some(t) => state.weights_at_spec(t, &spec),
+        None => state.current_weights_spec(&spec),
+    };
+    if refreshed {
+        metrics.weight_refreshes.fetch_add(1, Ordering::Relaxed);
+        ds.refresh_events += 1;
+        // a refresh is one full single-sample read+calibrate pass on the
+        // array; charge its modeled energy so amortized µJ/inf reflects
+        // the maintenance the accelerator actually performed
+        metrics.add_modeled_overhead_nj(ds.sched.refresh_nj());
+    }
+    // the ADC-side faults execute inside the backend, so the resolved
+    // scenario must ride the launch options (weight-side faults already
+    // live in the conductances read above); a none-equivalent spec stays
+    // out so the clean path is bit-identical to pre-fault serving. The
+    // operating-point bits are pinned explicitly: with an SLO they may
+    // sit below the request's own bits (opt-in floor), and the response
+    // echoes what actually ran.
+    let run_opts = InferOpts {
+        faults: (!spec.is_none()).then_some(spec),
+        adc_bits: Some(adc_bits),
+        ..opts
+    };
+
+    let feat_len = ds.feat_len;
+    let mut taken = 0usize;
+    for &launch in &plan.launches {
+        let count = launch.min(group.len() - taken);
+
+        let xb = &mut ds.xbuf[..launch * feat_len];
+        for (i, r) in group[taken..taken + count].iter().enumerate() {
+            xb[i * feat_len..(i + 1) * feat_len].copy_from_slice(&r.features);
+        }
+        for i in count..launch {
+            // pad with the first request's features (static plans only;
+            // dynamic launches are always exact)
+            let (a, b) = xb.split_at_mut(i * feat_len);
+            b[..feat_len].copy_from_slice(&a[..feat_len]);
+        }
+
+        let out = be.run_batch(xb, launch, ws, alphas, &run_opts)?;
+        metrics.launches.fetch_add(1, Ordering::Relaxed);
+        metrics
+            .batched_slots
+            .fetch_add(count as u64, Ordering::Relaxed);
+        // price the launch actually dispatched (padded slots execute too,
+        // so the full `launch` is charged) and amortize it over the
+        // `count` real responses it carried — padding shows up as a
+        // higher modeled µJ/inf, exactly as it would on silicon
+        let ls = ds.sched.launch(launch, adc_bits);
+        metrics.add_modeled_launch(ds.sched.model(), adc_bits, count as u64,
+                                   ls.energy_nj, ls.ops);
+        if let Some(label) = &ds.model_label {
+            metrics.model_launch(label, count as u64, ls.energy_nj);
+        }
+        if ds.degraded {
+            metrics
+                .degraded_responses
+                .fetch_add(count as u64, Ordering::Relaxed);
+        }
+
+        let now = Instant::now();
+        for (i, r) in group[taken..taken + count].iter().enumerate() {
+            let row = &out[i * ds.classes..(i + 1) * ds.classes];
+            let pred = logits::argmax(row);
+            // account BEFORE replying: clients must observe settled
+            // metrics
+            let lat_us = (now - r.submitted).as_secs_f64() * 1e6;
+            metrics.completed.fetch_add(1, Ordering::Relaxed);
+            metrics.record_latency_us(lat_us);
+            metrics.add_energy_nj(ls.energy_nj / count as f64);
+            if let Some(label) = &ds.model_label {
+                metrics.model_completed(label, lat_us);
+            }
+            let _ = r.reply.send(Response {
+                pred,
+                logits: row.to_vec(),
+                latency: now - r.submitted,
+                sim_age_s: sim_age,
+                adc_bits,
+            });
+        }
+        taken += count;
+    }
+    Ok(())
+}
+
+/// The shard's canary: a deterministic synthetic batch plus the clean
+/// native reference predictions it was graded against at startup. The
+/// probe replays `x` through the *serving* engine (current device age,
+/// default fault scenario) and counts argmax agreement — a cheap
+/// end-to-end spot-check that the analog path still computes the same
+/// answers as an ideal digital execution.
+pub(crate) struct Canary {
+    x: Vec<f32>,
+    n: usize,
+    ref_preds: Vec<u32>,
+}
+
+/// Run one health probe: serve the canary batch under the deployment
+/// default and grade it against the clean reference. Updates the probe
+/// counters and the dispatch state's `degraded` flag.
+pub(crate) fn probe(be: &dyn InferenceBackend, state: &mut PcmState,
+                    canary: &Canary, ds: &mut DispatchState,
+                    metrics: &Metrics) -> anyhow::Result<HealthReport> {
+    let spec = state.faults();
+    let popts = InferOpts {
+        faults: (!spec.is_none()).then_some(spec),
+        ..InferOpts::default()
+    };
+    let (ws, alphas, refreshed) = state.current_weights();
+    if refreshed {
+        metrics.weight_refreshes.fetch_add(1, Ordering::Relaxed);
+        ds.refresh_events += 1;
+    }
+    let out = be.run_batch(&canary.x, canary.n, ws, alphas, &popts)?;
+    let agree = (0..canary.n)
+        .filter(|&i| {
+            logits::argmax(&out[i * ds.classes..(i + 1) * ds.classes])
+                == canary.ref_preds[i]
+        })
+        .count();
+    // degraded below 3/4 agreement: drift read noise may flip a borderline
+    // canary, a stuck-cell cluster flips most of them
+    let degraded = agree * 4 < canary.n * 3;
+    metrics.health_probes.fetch_add(1, Ordering::Relaxed);
+    metrics.canary_agree.fetch_add(agree as u64, Ordering::Relaxed);
+    metrics.canary_total.fetch_add(canary.n as u64, Ordering::Relaxed);
+    ds.degraded = degraded;
+    Ok(HealthReport { canary: canary.n, agree, degraded })
+}
+
+/// One running model shard. Built *inside* the owning worker thread (the
+/// backend trait object never crosses a thread boundary, so it needs no
+/// `Send` bound), it owns the backend, the PCM state, the artifact store
+/// (for reprogramming), the canary, and the staging queue.
+pub(crate) struct Shard {
+    pub(crate) cfg: ServeConfig,
+    pub(crate) store: ArtifactStore,
+    pub(crate) be: Box<dyn InferenceBackend>,
+    pub(crate) state: PcmState,
+    pub(crate) ds: DispatchState,
+    pub(crate) canary: Canary,
+    /// requests routed to this shard, staged until the next drain
+    pub(crate) queue: Vec<Request>,
+    /// staging bound: the batching window stops gathering when any
+    /// shard's queue reaches this (also the admission bound the router
+    /// enforces at submit)
+    pub(crate) max_queue: usize,
+    /// requests one weighted-round-robin turn may pop (`weight x` the
+    /// largest launch)
+    pub(crate) quantum: usize,
+    /// reused per-chunk drain buffer (weighted draining pops the front of
+    /// `queue` into it, preserving FIFO order)
+    scratch: Vec<Request>,
+    /// `ds.refresh_events` at the last probe: re-probe when they diverge
+    probed_at_refresh: u64,
+}
+
+impl Shard {
+    /// Build the shard and run its startup probe. Mirrors everything the
+    /// pre-shard coordinator worker resolved at start: backend creation,
+    /// graph preparation, schedule pricing, PCM programming, canary
+    /// grading against a clean native reference.
+    pub(crate) fn build(sc: ShardConfig, model_idx: usize, per_model: bool,
+                        metrics: &Metrics) -> anyhow::Result<Shard> {
+        let model_id = sc.model_id;
+        let cfg = sc.serve;
+        // the shard owns the artifact store and the backend (PJRT
+        // handles, when in play, stay on-thread)
+        let store = ArtifactStore::open(&cfg.artifacts_dir)?;
+        let be = backend::create_with_threads(cfg.backend, &store, &cfg.vid,
+                                              cfg.bits, cfg.threads)?;
+        // model geometry is invariant across launches: resolve it once
+        // here, never on the dispatch path
+        let feat_len = be.feat_len();
+        let classes = be.num_classes();
+
+        // serving batch sizes available at this bitwidth (ascending, per
+        // the trait contract). The coordinator/router start paths already
+        // rejected an empty set with a descriptive error; this only guards
+        // against the artifact bundle changing on disk between the probe
+        // and the worker's re-open.
+        let batch_sizes = be.batch_sizes();
+        anyhow::ensure!(
+            !batch_sizes.is_empty(),
+            "serving graphs for {} disappeared between probe and worker start",
+            cfg.vid
+        );
+        // compile/load every batch size up front (never on the hot path)
+        for &b in &batch_sizes {
+            be.prepare(b)?;
+        }
+
+        // modeled AON-CiM launch schedule for this deployment: the
+        // backend's own geometry when it reports one (native/analog —
+        // identical on the default AON array), the AON mapping otherwise
+        // (PJRT). Resolved once here; the dispatch path only evaluates
+        // closed-form per-launch costs.
+        let meta = store.meta(&cfg.vid)?;
+        let sched = match be.schedule_model() {
+            Some(s) => s,
+            None => ScheduleModel::new(&meta, ArrayGeom::AON)?,
+        };
+
+        // deploy onto PCM
+        let params = PcmParams::default();
+        let mut rng = Rng::new(cfg.seed);
+        let deployed =
+            DeployedModel::program(&store, &cfg.vid, &params, &mut rng)?;
+        let mut state =
+            PcmState::new(deployed, params, cfg.seed ^ 0xD1F7, cfg.time_scale);
+        state.refresh_every_s = cfg.refresh_every_s;
+        // deployment-default fault scenario + per-tile calibration target,
+        // both installed before the clock starts so the first read already
+        // serves the faulted, tile-calibrated array
+        state.set_faults(cfg.faults);
+        state.set_calib_geom(be.calib_geom());
+        state.set_initial_age(cfg.drift_time);
+
+        let dynamic = be.supports_dynamic_batch();
+        let largest_static = *batch_sizes.last().unwrap();
+        let max_batch = if cfg.max_batch > 0 {
+            cfg.max_batch
+        } else {
+            largest_static
+        };
+        // largest single launch either plan can produce, sizing the input
+        // buffer
+        let xcap = if dynamic { max_batch } else { largest_static };
+        if dynamic {
+            be.prepare(max_batch)?;
+        }
+        // canary batch for the health probe: deterministic synthetic
+        // features (a function of the seed alone), graded once against
+        // the exact FP weights on the clean native engine. Static-shape
+        // engines probe at their smallest exported graph size; dynamic
+        // engines use 4 samples.
+        let canary_n =
+            if dynamic { 4.min(max_batch.max(1)) } else { batch_sizes[0] };
+        let canary = {
+            let mut crng = Rng::new(cfg.seed ^ 0xCA9A_11A5);
+            let x: Vec<f32> = (0..canary_n * feat_len)
+                .map(|_| crng.uniform() as f32)
+                .collect();
+            let tensors = store.weights(&cfg.vid)?;
+            let mut exact = Vec::with_capacity(tensors.len());
+            for (lm, t) in meta.layers.iter().zip(tensors.iter()) {
+                // same depthwise expansion the PCM programming applies, so
+                // the reference sees the exact weights in the deployed
+                // layout
+                if lm.analog && lm.kind == LayerKind::Dw3x3 {
+                    exact.push(HostTensor::from_tensor(&expand_dw_dense(t)));
+                } else {
+                    exact.push(HostTensor::from_tensor(t));
+                }
+            }
+            let unity = crate::pcm::gdc::unity(exact.len());
+            let nref = backend::create_with_threads(BackendKind::Native,
+                                                    &store, &cfg.vid,
+                                                    cfg.bits, 1)?;
+            nref.prepare(canary_n)?;
+            let rout = nref.run_batch(&x, canary_n, &exact, &unity,
+                                      &InferOpts::default())?;
+            let ref_preds: Vec<u32> = (0..canary_n)
+                .map(|i| logits::argmax(&rout[i * classes..(i + 1) * classes]))
+                .collect();
+            Canary { x, n: canary_n, ref_preds }
+        };
+
+        let max_queue = if sc.queue_depth > 0 {
+            sc.queue_depth
+        } else {
+            xcap * 4
+        };
+        let quantum = sc.weight.max(1) as usize * xcap;
+        let ds = DispatchState {
+            batch_sizes,
+            dynamic,
+            max_batch,
+            xbuf: vec![0f32; xcap * feat_len],
+            feat_len,
+            classes,
+            sched,
+            slo_us: cfg.latency_slo_us,
+            degraded: false,
+            refresh_events: 0,
+            model_idx,
+            model_label: per_model.then_some(model_id),
+        };
+        let mut shard = Shard {
+            cfg,
+            store,
+            be,
+            state,
+            ds,
+            canary,
+            queue: Vec::with_capacity(max_queue),
+            max_queue,
+            quantum,
+            scratch: Vec::with_capacity(quantum),
+            probed_at_refresh: 0,
+        };
+        // startup probe: the verdict on the just-deployed (possibly
+        // faulted) array, before any traffic is served under it
+        shard.probe_now(metrics)?;
+        Ok(shard)
+    }
+
+    /// Drain the whole staging queue (single-model coordinator
+    /// semantics).
+    pub(crate) fn drain_all(&mut self, metrics: &Metrics)
+                            -> anyhow::Result<()> {
+        drain(&mut self.ds, self.be.as_ref(), metrics, &mut self.state,
+              &mut self.queue)
+    }
+
+    /// Pop and serve at most one weighted-round-robin quantum from the
+    /// queue front (FIFO within the shard). Returns how many requests
+    /// were popped so the router can release their admission slots.
+    pub(crate) fn drain_chunk(&mut self, metrics: &Metrics)
+                              -> anyhow::Result<usize> {
+        let n = self.queue.len().min(self.quantum);
+        if n == 0 {
+            return Ok(0);
+        }
+        self.scratch.extend(self.queue.drain(..n));
+        drain(&mut self.ds, self.be.as_ref(), metrics, &mut self.state,
+              &mut self.scratch)?;
+        Ok(n)
+    }
+
+    /// Run a health probe now (startup, on demand, after weight
+    /// movement).
+    pub(crate) fn probe_now(&mut self, metrics: &Metrics)
+                            -> anyhow::Result<HealthReport> {
+        let hr = probe(self.be.as_ref(), &mut self.state, &self.canary,
+                       &mut self.ds, metrics)?;
+        self.probed_at_refresh = self.ds.refresh_events;
+        Ok(hr)
+    }
+
+    /// Post-drain drift management: reprogram the array when the GDC says
+    /// so, then re-probe whenever the served weights moved since the last
+    /// verdict (cadence refresh or the reprogram) — the health answer is
+    /// a property of the weights actually being served.
+    pub(crate) fn maintain(&mut self, metrics: &Metrics)
+                           -> anyhow::Result<()> {
+        let mut reprogrammed = false;
+        if self.cfg.reprogram && self.state.needs_reprogram() {
+            self.state.reprogram(&self.store, &self.cfg.vid)?;
+            // a reprogram rewrites every allocated cell: charge its
+            // modeled energy as serving overhead so amortized µJ/inf
+            // carries the maintenance cost of keeping the array in spec
+            metrics.add_modeled_overhead_nj(self.ds.sched.reprogram_nj());
+            reprogrammed = true;
+        }
+        if reprogrammed || self.ds.refresh_events != self.probed_at_refresh {
+            self.probe_now(metrics)?;
+        }
+        Ok(())
+    }
+}

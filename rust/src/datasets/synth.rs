@@ -98,13 +98,33 @@ impl SynthSpec {
 
 /// Write the complete bundle into `dir` (created if missing).
 pub fn write_bundle(dir: &Path, spec: &SynthSpec) -> anyhow::Result<()> {
-    std::fs::create_dir_all(dir)?;
-    let meta = meta_json(spec);
-    std::fs::write(dir.join(format!("{}.meta.json", spec.vid)),
-                   json::write(&meta))?;
-    write_weights(&dir.join(format!("{}.weights.bin", spec.vid)), spec)?;
-    write_dataset(&dir.join(format!("{}_test.bin", spec.task)), spec)?;
+    write_multi_bundle(dir, std::slice::from_ref(spec))
+}
 
+/// Write several model variants into one bundle directory sharing a single
+/// `manifest.json` — the layout a multi-model coordinator loads. Each
+/// spec's dataset file is keyed by its `task`, so specs that should serve
+/// distinct datasets (e.g. a KWS-wake / VWW-confirm pair) need distinct
+/// task names; same-task specs share (the last writer's) dataset file.
+pub fn write_multi_bundle(dir: &Path, specs: &[SynthSpec])
+                          -> anyhow::Result<()> {
+    anyhow::ensure!(!specs.is_empty(), "write_multi_bundle: no specs");
+    std::fs::create_dir_all(dir)?;
+    let mut entries = Vec::with_capacity(specs.len());
+    for spec in specs {
+        let meta = meta_json(spec);
+        std::fs::write(dir.join(format!("{}.meta.json", spec.vid)),
+                       json::write(&meta))?;
+        write_weights(&dir.join(format!("{}.weights.bin", spec.vid)), spec)?;
+        write_dataset(&dir.join(format!("{}_test.bin", spec.task)), spec)?;
+        entries.push(manifest_entry(spec));
+    }
+    let manifest = Json::Arr(entries);
+    std::fs::write(dir.join("manifest.json"), json::write(&manifest))?;
+    Ok(())
+}
+
+fn manifest_entry(spec: &SynthSpec) -> Json {
     let mut entry = BTreeMap::new();
     entry.insert("vid".to_string(), Json::Str(spec.vid.clone()));
     entry.insert("task".to_string(), Json::Str(spec.task.clone()));
@@ -116,18 +136,22 @@ pub fn write_bundle(dir: &Path, spec: &SynthSpec) -> anyhow::Result<()> {
                  Json::Str(format!("{}.meta.json", spec.vid)));
     entry.insert("weights".to_string(),
                  Json::Str(format!("{}.weights.bin", spec.vid)));
-    let manifest = Json::Arr(vec![Json::Obj(entry)]);
-    std::fs::write(dir.join("manifest.json"), json::write(&manifest))?;
-    Ok(())
+    Json::Obj(entry)
 }
 
 /// Write the bundle into a fresh process-unique temp directory and return
 /// its path (callers may delete it when done).
 pub fn write_bundle_tmp(tag: &str, spec: &SynthSpec)
                         -> anyhow::Result<std::path::PathBuf> {
+    write_multi_bundle_tmp(tag, std::slice::from_ref(spec))
+}
+
+/// [`write_multi_bundle`] into a fresh process-unique temp directory.
+pub fn write_multi_bundle_tmp(tag: &str, specs: &[SynthSpec])
+                              -> anyhow::Result<std::path::PathBuf> {
     let dir = std::env::temp_dir()
         .join(format!("analognets_synth_{}_{tag}", std::process::id()));
-    write_bundle(&dir, spec)?;
+    write_multi_bundle(&dir, specs)?;
     Ok(dir)
 }
 
@@ -306,6 +330,32 @@ mod tests {
             .unwrap();
         assert_eq!(out.len(), 4 * 2);
         assert!(out.iter().all(|v| v.is_finite()));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn multi_bundle_carries_every_variant_in_one_manifest() {
+        let kws = SynthSpec::identity_dense("multi_kws", 3);
+        let mut vww = SynthSpec::identity_dense("multi_vww", 5);
+        vww.task = "vww".to_string();
+        let dir = write_multi_bundle_tmp("multimod", &[kws, vww]).unwrap();
+        let store = ArtifactStore::open(&dir).unwrap();
+        // both variants resolve from the shared manifest, with their own
+        // shapes and their own task-keyed datasets
+        let mk = store.meta("multi_kws").unwrap();
+        let mv = store.meta("multi_vww").unwrap();
+        assert_eq!(mk.num_classes, 3);
+        assert_eq!(mv.num_classes, 5);
+        assert_eq!(mk.input_hwc, (1, 1, 3));
+        assert_eq!(mv.input_hwc, (1, 1, 5));
+        assert_eq!(store.dataset("kws").unwrap().feat_len(), 3);
+        assert_eq!(store.dataset("vww").unwrap().feat_len(), 5);
+        // each variant's weights stay its own (identity at its own size)
+        for (vid, classes) in [("multi_kws", 3usize), ("multi_vww", 5)] {
+            let w = store.weights(vid).unwrap();
+            assert_eq!(w.len(), 1);
+            assert_eq!(w[0].shape, vec![classes, classes]);
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 

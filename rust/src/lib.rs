@@ -45,6 +45,18 @@
 //! the CLI), parsing requests with a zero-allocation visiting JSON
 //! reader and dispatching them through the same `submit_with` path as
 //! in-process callers.
+//!
+//! Always-on deployments serve several models from one process:
+//! [`coordinator::MultiCoordinator`] owns one shard per model — each with
+//! its own backend, PCM drift clock, fault scenario, and modeled launch
+//! schedule — behind a single `submit(model_id, x, opts)` API, with
+//! per-model admission bounds and a weighted round-robin drain so a hot
+//! model cannot starve a quiet one (the paper's KWS-wake -> VWW-confirm
+//! pipeline is the motivating shape). The wire protocol addresses models
+//! with an optional `"model"` field (`serve --models kws,vww --listen ..`
+//! on the CLI, [`server::WireServer::start_multi`] in-process), and
+//! per-model throughput/latency/energy land in
+//! [`coordinator::metrics::MetricsSummary::per_model`].
 
 pub mod backend;
 pub mod bench;

@@ -23,6 +23,12 @@ use analognets::util::table::Table;
 const USAGE: &str = "usage: analognets <serve|eval|map|report|selftest> [options]
   serve    --vid kws_full_e10_8b [--bits 8] [--requests 500] [--time-scale 1e4]
            [--max-batch N (0=auto)] [--threads N (0=auto)]
+           [--models vidA,vidB (serve several variants behind one
+                                multi-model router instead of --vid; the
+                                first is the primary, wire requests pick
+                                one with a \"model\" field)]
+           [--queue-depth N (multi-model: per-shard admission bound,
+                             0=auto 4x the largest launch)]
            [--t-drift SECONDS (stamp every request with this device age;
                                also seeds the serving clock, default 25)]
            [--adc-bits B (stamp every request with this ADC bitwidth,
@@ -91,6 +97,9 @@ fn opt_faults(args: &Args) -> anyhow::Result<Option<FaultSpec>> {
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    if args.opt("models").is_some() {
+        return cmd_serve_multi(args);
+    }
     let vid = default_vid(args);
     let bits = args.opt_usize("bits", 8) as u32;
     let n_requests = args.opt_usize("requests", 500);
@@ -148,6 +157,132 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     println!("[serve] streaming accuracy {:.2}% over {} requests",
              100.0 * correct as f64 / n_requests as f64, n_requests);
     coord.stop()?;
+    Ok(())
+}
+
+/// `serve --models vidA,vidB`: one multi-model router serving every
+/// listed variant (the first is the primary). Shares the single-model
+/// knobs (`--bits`, `--backend`, `--time-scale`, ... apply to every
+/// shard); without `--listen` a synthetic driver round-robins requests
+/// across the models.
+fn cmd_serve_multi(args: &Args) -> anyhow::Result<()> {
+    use analognets::coordinator::{MultiCoordinator, ShardConfig};
+
+    let spec = args.opt("models").unwrap_or_default();
+    let vids: Vec<String> = spec
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    anyhow::ensure!(!vids.is_empty(), "--models needs at least one variant id");
+    let bits = args.opt_usize("bits", 8) as u32;
+    let n_requests = args.opt_usize("requests", 500);
+    let queue_depth = args.opt_usize("queue-depth", 0);
+    let req_opts = InferOpts {
+        t_drift: args.opt("t-drift").map(|v| v.parse().expect("float --t-drift")),
+        adc_bits: opt_adc_bits(args),
+        adc_bits_floor: None,
+        faults: None,
+    };
+    let store = ArtifactStore::open_default()?;
+    let mut shards = Vec::with_capacity(vids.len());
+    let mut datasets = Vec::with_capacity(vids.len());
+    for vid in &vids {
+        let mut cfg = ServeConfig::new(vid, bits);
+        cfg.backend = BackendKind::from_args(args)?;
+        cfg.time_scale = args.opt_f64("time-scale", 1e4);
+        cfg.max_batch = args.opt_usize("max-batch", 0);
+        cfg.threads = args.opt_usize("threads", 0);
+        cfg.drift_time = args.opt_f64("t-drift", T_C_SECONDS);
+        if let Some(f) = opt_faults(args)? {
+            cfg.faults = f;
+        }
+        let meta = store.meta(vid)?;
+        let task = if meta.model.contains("vww") { "vww" } else { "kws" };
+        datasets.push(store.dataset(task)?);
+        let mut sc = ShardConfig::new(vid, cfg);
+        sc.queue_depth = queue_depth;
+        shards.push(sc);
+    }
+    drop(store);
+
+    println!("[serve] starting multi-model router ({bits}-bit): serving {} \
+              (primary `{}`)",
+             vids.join(", "), vids[0]);
+
+    if let Some(listen) = args.opt("listen") {
+        return serve_wire_multi(args, shards, listen, datasets);
+    }
+
+    let mc = MultiCoordinator::start(shards)?;
+    let mut correct = 0usize;
+    for i in 0..n_requests {
+        let m = i % vids.len();
+        let ds = &datasets[m];
+        let feat = ds.feat_len();
+        let s = (i / vids.len()) % ds.len();
+        let resp = mc.infer(&vids[m],
+                            ds.x[s * feat..(s + 1) * feat].to_vec(),
+                            req_opts)?;
+        if resp.pred == ds.y[s] {
+            correct += 1;
+        }
+    }
+    println!("[serve] {}", mc.metrics.summary());
+    println!("[serve] streaming accuracy {:.2}% over {} mixed requests",
+             100.0 * correct as f64 / n_requests.max(1) as f64, n_requests);
+    mc.stop()?;
+    Ok(())
+}
+
+/// `serve --models --listen`: the wire server fronting the router; one
+/// dataset per model backs `"sample"` requests.
+fn serve_wire_multi(args: &Args, shards: Vec<analognets::coordinator::ShardConfig>,
+                    listen: &str, datasets: Vec<analognets::datasets::Dataset>)
+                    -> anyhow::Result<()> {
+    use analognets::coordinator::MultiCoordinator;
+    use analognets::server::{WireConfig, WireServer};
+    use std::sync::Arc;
+
+    let wcfg = WireConfig {
+        listen: listen.to_string(),
+        max_conns: args.opt_usize("max-conns", 64),
+        max_line_bytes: args.opt_usize("max-line-bytes", 256 * 1024),
+    };
+    let mc = Arc::new(MultiCoordinator::start(shards)?);
+    let slots: Vec<_> =
+        datasets.into_iter().map(|d| Some(Arc::new(d))).collect();
+    let mut server = WireServer::start_multi(mc.clone(), slots, wcfg.clone())?;
+    println!("[serve] wire protocol on {} (max_conns={}, max_line_bytes={})",
+             server.local_addr(), wcfg.max_conns, wcfg.max_line_bytes);
+    for info in mc.models() {
+        println!("[serve] model `{}`: {} floats (`x`), queue depth {}",
+                 info.model_id, info.feat_len, info.queue_depth);
+    }
+    println!("[serve] route with {{\"model\":\"{}\"}} (default: `{}`)",
+             mc.models().last().unwrap().model_id, mc.primary().model_id);
+
+    match args.opt("duration") {
+        Some(_) => {
+            let secs = args.opt_f64("duration", 0.0).max(0.0);
+            std::thread::sleep(std::time::Duration::from_secs_f64(secs));
+        }
+        None => {
+            println!("[serve] serving until stdin EOF (Ctrl-D)...");
+            let mut sink = String::new();
+            while std::io::stdin().read_line(&mut sink)? > 0 {
+                sink.clear();
+            }
+        }
+    }
+
+    server.shutdown();
+    drop(server);
+    println!("[serve] {}", mc.metrics.summary());
+    match Arc::try_unwrap(mc) {
+        Ok(c) => c.stop()?,
+        Err(c) => c.request_stop(),
+    }
     Ok(())
 }
 

@@ -53,8 +53,16 @@ impl WireClient {
     /// Send a request carrying an explicit input tensor.
     pub fn send_x(&mut self, id: &str, x: &[f32], t_drift: Option<f64>,
                   adc_bits: Option<u32>) -> anyhow::Result<()> {
+        self.send_x_model(id, None, x, t_drift, adc_bits)
+    }
+
+    /// Send a tensor request addressed to a named model on a multi-model
+    /// server (`None` routes to the server's primary model).
+    pub fn send_x_model(&mut self, id: &str, model: Option<&str>, x: &[f32],
+                        t_drift: Option<f64>, adc_bits: Option<u32>)
+                        -> anyhow::Result<()> {
         self.out.clear();
-        build_x_line(&mut self.out, id, x, t_drift, adc_bits);
+        build_x_line_for(&mut self.out, id, model, x, t_drift, adc_bits);
         self.write.write_all(self.out.as_bytes())?;
         Ok(())
     }
@@ -98,6 +106,16 @@ impl WireClient {
         self.send_x(id, x, t_drift, adc_bits)?;
         self.recv()
     }
+
+    /// Convenience: one model-addressed tensor request, wait for its
+    /// reply.
+    pub fn roundtrip_x_model(&mut self, id: &str, model: Option<&str>,
+                             x: &[f32], t_drift: Option<f64>,
+                             adc_bits: Option<u32>)
+                             -> anyhow::Result<WireReply> {
+        self.send_x_model(id, model, x, t_drift, adc_bits)?;
+        self.recv()
+    }
 }
 
 /// Build a `{"id":..,"x":[..],...}` request line (newline-terminated)
@@ -105,9 +123,21 @@ impl WireClient {
 /// itself.
 pub fn build_x_line(out: &mut String, id: &str, x: &[f32],
                     t_drift: Option<f64>, adc_bits: Option<u32>) {
+    build_x_line_for(out, id, None, x, t_drift, adc_bits)
+}
+
+/// [`build_x_line`] with an optional `"model"` field for multi-model
+/// servers (`None` omits the field, routing to the primary model).
+pub fn build_x_line_for(out: &mut String, id: &str, model: Option<&str>,
+                        x: &[f32], t_drift: Option<f64>,
+                        adc_bits: Option<u32>) {
     use std::fmt::Write as _;
     out.push_str("{\"id\":");
     push_json_str(out, id);
+    if let Some(m) = model {
+        out.push_str(",\"model\":");
+        push_json_str(out, m);
+    }
     out.push_str(",\"x\":[");
     for (i, v) in x.iter().enumerate() {
         if i > 0 {
@@ -176,6 +206,26 @@ mod tests {
         assert_eq!(sc.features, vec![0.25, -1.5]);
         assert_eq!(p.t_drift, Some(86_400.0));
         assert_eq!(p.adc_bits, Some(4));
+    }
+
+    #[test]
+    fn model_addressed_lines_carry_the_field() {
+        let mut out = String::new();
+        build_x_line_for(&mut out, "w1", Some("vww"), &[1.0, 2.0], None, None);
+        let mut sc = crate::server::protocol::ReqScratch::new(2);
+        let p = crate::server::protocol::parse_request_cap(
+            out.trim_end().as_bytes(), 2, &mut sc)
+            .unwrap();
+        assert!(p.has_model);
+        assert_eq!(sc.model, "vww");
+        assert_eq!(sc.features, vec![1.0, 2.0]);
+        // None omits the field entirely (identical to build_x_line)
+        let mut plain = String::new();
+        build_x_line_for(&mut plain, "w1", None, &[1.0, 2.0], None, None);
+        let mut reference = String::new();
+        build_x_line(&mut reference, "w1", &[1.0, 2.0], None, None);
+        assert_eq!(plain, reference);
+        assert!(!plain.contains("model"));
     }
 
     #[test]

@@ -23,15 +23,54 @@ use std::net::{Shutdown, TcpStream};
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
 
-use crate::coordinator::{Coordinator, Response};
+use crate::coordinator::{Coordinator, Metrics, MultiCoordinator, Response};
 use crate::datasets::Dataset;
 use crate::server::protocol::{self, ReqBody, ReqScratch};
 
+/// What this listener fronts: one coordinator, or a multi-model router.
+pub(super) enum ServeTarget {
+    /// classic single-model serving: lines carrying `"model"` are
+    /// rejected so a client cannot silently assume routing that is not
+    /// there
+    Single {
+        coord: Arc<Coordinator>,
+        /// test set for `"sample"` requests (absent: such requests error)
+        dataset: Option<Arc<Dataset>>,
+    },
+    /// multi-model serving: `"model"` picks the shard (default: primary,
+    /// index 0); one optional dataset per model, in `models()` order
+    Multi {
+        mc: Arc<MultiCoordinator>,
+        datasets: Vec<Option<Arc<Dataset>>>,
+    },
+}
+
+impl ServeTarget {
+    pub(super) fn metrics(&self) -> &Metrics {
+        match self {
+            ServeTarget::Single { coord, .. } => &coord.metrics,
+            ServeTarget::Multi { mc, .. } => &mc.metrics,
+        }
+    }
+
+    /// Parse-time feature capacity: the largest served feature length
+    /// (per-model exactness is checked after routing).
+    fn feat_cap(&self) -> usize {
+        match self {
+            ServeTarget::Single { coord, .. } => coord.feat_len,
+            ServeTarget::Multi { mc, .. } => mc
+                .models()
+                .iter()
+                .map(|m| m.feat_len)
+                .max()
+                .unwrap_or(0),
+        }
+    }
+}
+
 /// Connection-independent serving state, shared by every reader.
 pub(super) struct ConnShared {
-    pub coord: Arc<Coordinator>,
-    /// test set for `"sample"` requests (absent: such requests error)
-    pub dataset: Option<Arc<Dataset>>,
+    pub target: ServeTarget,
     /// request lines above this many bytes are rejected with an error
     /// line — the line buffer never grows past it, so a hostile client
     /// cannot OOM the server
@@ -69,7 +108,7 @@ pub(super) fn run_connection(stream: TcpStream, shared: Arc<ConnShared>) {
 
 fn reader_loop(mut stream: TcpStream, sh: &ConnShared,
                jobs: &mpsc::Sender<Job>, free: &mpsc::Receiver<String>) {
-    let mut scratch = ReqScratch::new(sh.coord.feat_len);
+    let mut scratch = ReqScratch::new(sh.target.feat_cap());
     let mut line: Vec<u8> = Vec::with_capacity(sh.max_line_bytes.min(64 * 1024));
     let mut chunk = [0u8; 4096];
     let mut oversized = false;
@@ -84,7 +123,7 @@ fn reader_loop(mut stream: TcpStream, sh: &ConnShared,
             if b == b'\n' {
                 let alive = if oversized {
                     oversized = false;
-                    let m = &sh.coord.metrics;
+                    let m = sh.target.metrics();
                     m.wire_requests.fetch_add(1, Ordering::Relaxed);
                     m.wire_rejects.fetch_add(1, Ordering::Relaxed);
                     jobs.send(Job::Error {
@@ -123,10 +162,22 @@ fn handle_line(line: &[u8], sh: &ConnShared, scratch: &mut ReqScratch,
     if line.is_empty() {
         return true; // blank keep-alive line (e.g. an interactive `nc`)
     }
-    let m = &sh.coord.metrics;
+    let m = sh.target.metrics();
     m.wire_requests.fetch_add(1, Ordering::Relaxed);
 
-    let parsed = match protocol::parse_request(line, sh.coord.feat_len, scratch) {
+    let parsed = match &sh.target {
+        // single-model: exact feature length enforced at parse time (the
+        // zero-alloc path, unchanged)
+        ServeTarget::Single { coord, .. } => {
+            protocol::parse_request(line, coord.feat_len, scratch)
+        }
+        // multi-model: capacity bound only — the exact length depends on
+        // which model the line routes to
+        ServeTarget::Multi { .. } => {
+            protocol::parse_request_cap(line, sh.target.feat_cap(), scratch)
+        }
+    };
+    let parsed = match parsed {
         Ok(p) => p,
         Err(e) => {
             m.wire_rejects.fetch_add(1, Ordering::Relaxed);
@@ -138,12 +189,67 @@ fn handle_line(line: &[u8], sh: &ConnShared, scratch: &mut ReqScratch,
         }
     };
 
+    // route: which model serves this line, with its exact feature length
+    // and its dataset for `"sample"` requests
+    let routed: Result<(usize, usize, Option<&Arc<Dataset>>), Cow<'static, str>> =
+        match &sh.target {
+            ServeTarget::Single { coord, dataset } => {
+                if parsed.has_model {
+                    Err(Cow::Borrowed(
+                        "`model` is not accepted here: this server fronts a \
+                         single model"))
+                } else {
+                    Ok((0, coord.feat_len, dataset.as_ref()))
+                }
+            }
+            ServeTarget::Multi { mc, datasets } => {
+                let idx = if parsed.has_model {
+                    mc.model_index(&scratch.model)
+                } else {
+                    Some(0) // default route: the primary model
+                };
+                match idx {
+                    Some(i) => {
+                        let want = mc.models()[i].feat_len;
+                        if parsed.body == ReqBody::Features
+                            && scratch.features.len() != want
+                        {
+                            Err(Cow::Owned(format!(
+                                "`x` has {} values but model `{}` wants {}",
+                                scratch.features.len(),
+                                mc.models()[i].model_id, want)))
+                        } else {
+                            Ok((i, want, datasets[i].as_ref()))
+                        }
+                    }
+                    None => {
+                        let ids: Vec<&str> = mc
+                            .models()
+                            .iter()
+                            .map(|mi| mi.model_id.as_str())
+                            .collect();
+                        Err(Cow::Owned(format!(
+                            "unknown model `{}` (serving: {})",
+                            scratch.model, ids.join(", "))))
+                    }
+                }
+            }
+        };
+    let (model_idx, _feat_len, dataset) = match routed {
+        Ok(r) => r,
+        Err(msg) => {
+            m.wire_rejects.fetch_add(1, Ordering::Relaxed);
+            let id = Some(take_id(scratch, free));
+            return jobs.send(Job::Error { id, msg }).is_ok();
+        }
+    };
+
     // resolve the input tensor: queue ownership of the feature vector is
     // the one deliberate per-request allocation on this path (see module
     // docs); the parse scratch keeps its capacity either way
     let features: Vec<f32> = match parsed.body {
         ReqBody::Features => scratch.features.clone(),
-        ReqBody::Sample(s) => match &sh.dataset {
+        ReqBody::Sample(s) => match dataset {
             None => {
                 m.wire_rejects.fetch_add(1, Ordering::Relaxed);
                 let id = Some(take_id(scratch, free));
@@ -170,9 +276,18 @@ fn handle_line(line: &[u8], sh: &ConnShared, scratch: &mut ReqScratch,
     };
 
     let id = take_id(scratch, free);
-    match sh.coord.submit_with(features, parsed.opts()) {
-        // submit-time rejects (bad options, stopped coordinator) are
-        // counted by the coordinator itself as `submit_rejects`
+    // submit-time rejects (bad options, full shard queue, stopped
+    // coordinator) are counted by the coordinator itself as
+    // `submit_rejects` (and per model on the router)
+    let submitted = match &sh.target {
+        ServeTarget::Single { coord, .. } => {
+            coord.submit_with(features, parsed.opts())
+        }
+        ServeTarget::Multi { mc, .. } => {
+            mc.submit_to(model_idx, features, parsed.opts())
+        }
+    };
+    match submitted {
         Ok(rx) => jobs.send(Job::Reply { id, rx }).is_ok(),
         Err(e) => jobs
             .send(Job::Error { id: Some(id), msg: Cow::Owned(format!("{e:#}")) })

@@ -9,9 +9,9 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::coordinator::Coordinator;
+use crate::coordinator::{Coordinator, MultiCoordinator};
 use crate::datasets::Dataset;
-use crate::server::connection::{self, ConnShared};
+use crate::server::connection::{self, ConnShared, ServeTarget};
 
 /// Wire-server knobs (the coordinator's own knobs live in `ServeConfig`).
 #[derive(Clone, Debug)]
@@ -66,6 +66,28 @@ impl WireServer {
     /// requests (pass `None` to reject them).
     pub fn start(coord: Arc<Coordinator>, dataset: Option<Arc<Dataset>>,
                  cfg: WireConfig) -> anyhow::Result<WireServer> {
+        Self::start_target(ServeTarget::Single { coord, dataset }, cfg)
+    }
+
+    /// Bind `cfg.listen` in front of a multi-model router: request lines
+    /// pick their model with `"model"` (default: the primary). `datasets`
+    /// backs `"sample"` requests per model, in
+    /// [`MultiCoordinator::models`] order — it must have exactly one
+    /// entry per served model.
+    pub fn start_multi(mc: Arc<MultiCoordinator>,
+                       datasets: Vec<Option<Arc<Dataset>>>, cfg: WireConfig)
+                       -> anyhow::Result<WireServer> {
+        anyhow::ensure!(
+            datasets.len() == mc.models().len(),
+            "need one dataset slot per served model ({} models, {} slots)",
+            mc.models().len(),
+            datasets.len()
+        );
+        Self::start_target(ServeTarget::Multi { mc, datasets }, cfg)
+    }
+
+    fn start_target(target: ServeTarget, cfg: WireConfig)
+                    -> anyhow::Result<WireServer> {
         let listener = TcpListener::bind(&cfg.listen)
             .map_err(|e| anyhow::anyhow!("bind {}: {e}", cfg.listen))?;
         listener.set_nonblocking(true)?;
@@ -76,8 +98,7 @@ impl WireServer {
             max_conns: cfg.max_conns.max(1),
             conns: Mutex::new(Vec::new()),
             shared: Arc::new(ConnShared {
-                coord,
-                dataset,
+                target,
                 max_line_bytes: cfg.max_line_bytes.max(2),
             }),
         });
@@ -175,7 +196,7 @@ fn spawn_connection(stream: TcpStream, inner: &Arc<Inner>) {
 /// Over the connection cap: answer with one error line and close (the
 /// client sees a structured reason, not a silent RST).
 fn refuse(mut stream: TcpStream, inner: &Inner) {
-    let m = &inner.shared.coord.metrics;
+    let m = inner.shared.target.metrics();
     m.wire_requests.fetch_add(1, Ordering::Relaxed);
     m.wire_rejects.fetch_add(1, Ordering::Relaxed);
     let line = format!(

@@ -29,6 +29,14 @@
 //! [`connection`] module docs; pinned by `tests/test_wire.rs`). Wire
 //! traffic shows up in the coordinator metrics as `wire_requests` /
 //! `wire_rejects`.
+//!
+//! A listener can also front a multi-model router
+//! ([`WireServer::start_multi`] over a
+//! [`MultiCoordinator`](crate::coordinator::MultiCoordinator)): request
+//! lines pick their model with an optional `"model"` field (default: the
+//! primary model), unknown model ids get a structured error line, and a
+//! single-model listener rejects the field outright rather than silently
+//! ignoring it.
 
 pub mod client;
 mod connection;

@@ -5,6 +5,10 @@
 //!
 //! ```text
 //! {"id": <string|integer>,            required; echoed on the reply
+//!  "model": <string>,                 optional model id; only meaningful
+//!                                     on a multi-model listener (default:
+//!                                     the configured primary model); a
+//!                                     single-model listener rejects it
 //!  "x": [f32, ...],                   exactly one of `x` (an input tensor
 //!  "sample": <integer>,               of model feature length) or `sample`
 //!                                     (a test-set index on the server)
@@ -46,6 +50,8 @@ pub struct ReqScratch {
     pub json: json::Scratch,
     pub features: Vec<f32>,
     pub id: String,
+    /// requested model id (empty unless the line carried `"model"`)
+    pub model: String,
 }
 
 impl ReqScratch {
@@ -54,6 +60,7 @@ impl ReqScratch {
             json: json::Scratch::new(),
             features: Vec::with_capacity(feat_len),
             id: String::with_capacity(32),
+            model: String::with_capacity(32),
         }
     }
 }
@@ -73,6 +80,9 @@ pub struct ParsedReq {
     pub body: ReqBody,
     pub t_drift: Option<f64>,
     pub adc_bits: Option<u32>,
+    /// the line carried a `"model"` field (its text is in
+    /// [`ReqScratch::model`]); single-model listeners reject such lines
+    pub has_model: bool,
 }
 
 impl ParsedReq {
@@ -88,9 +98,11 @@ impl ParsedReq {
 struct ReqVisitor<'a> {
     feat: &'a mut Vec<f32>,
     id: &'a mut String,
+    model: &'a mut String,
     feat_cap: usize,
     has_id: bool,
     has_x: bool,
+    has_model: bool,
     sample: Option<usize>,
     t_drift: Option<f64>,
     adc_bits: Option<u32>,
@@ -122,6 +134,14 @@ impl Visit for ReqVisitor<'_> {
                 }
                 self.has_id = true;
             }
+            "model" => match val {
+                Scalar::Str(s) => {
+                    self.model.clear();
+                    self.model.push_str(s);
+                    self.has_model = true;
+                }
+                _ => return Err(ParseError::msg("`model` must be a string")),
+            },
             "t_drift" => match val {
                 Scalar::Num(n) => self.t_drift = Some(n),
                 _ => return Err(ParseError::msg("`t_drift` must be a number")),
@@ -145,7 +165,8 @@ impl Visit for ReqVisitor<'_> {
             },
             "x" => return Err(ParseError::msg("`x` must be an array of numbers")),
             _ => return Err(ParseError::msg(
-                "unknown field (expected id, x, sample, t_drift, adc_bits)")),
+                "unknown field (expected id, model, x, sample, t_drift, \
+                 adc_bits)")),
         }
         Ok(())
     }
@@ -177,19 +198,27 @@ impl Visit for ReqVisitor<'_> {
     }
 }
 
-/// Parse one request line into `scratch`. On success the id is in
-/// `scratch.id` and (for [`ReqBody::Features`]) the tensor is in
-/// `scratch.features`, exactly `feat_len` long.
-pub fn parse_request(line: &[u8], feat_len: usize, scratch: &mut ReqScratch)
-                     -> Result<ParsedReq, ParseError> {
+/// Parse one request line into `scratch` with only a *capacity* bound on
+/// `x` (an over-long tensor still errors; a shorter one is accepted as
+/// is). Multi-model listeners use this — the exact length depends on
+/// which model the line routes to, so the per-model check happens after
+/// routing. On success the id is in `scratch.id`, the model id (when
+/// present) in `scratch.model`, and (for [`ReqBody::Features`]) the
+/// tensor is in `scratch.features`.
+pub fn parse_request_cap(line: &[u8], feat_cap: usize,
+                         scratch: &mut ReqScratch)
+                         -> Result<ParsedReq, ParseError> {
     scratch.features.clear();
     scratch.id.clear();
+    scratch.model.clear();
     let mut v = ReqVisitor {
         feat: &mut scratch.features,
         id: &mut scratch.id,
-        feat_cap: feat_len,
+        model: &mut scratch.model,
+        feat_cap,
         has_id: false,
         has_x: false,
+        has_model: false,
         sample: None,
         t_drift: None,
         adc_bits: None,
@@ -199,20 +228,28 @@ pub fn parse_request(line: &[u8], feat_len: usize, scratch: &mut ReqScratch)
         return Err(ParseError::msg("missing `id`"));
     }
     let body = match (v.has_x, v.sample) {
-        (true, None) => {
-            if v.feat.len() != feat_len {
-                return Err(ParseError::msg(
-                    "`x` is shorter than the model feature length"));
-            }
-            ReqBody::Features
-        }
+        (true, None) => ReqBody::Features,
         (false, Some(s)) => ReqBody::Sample(s),
         _ => {
             return Err(ParseError::msg(
                 "pass exactly one of `x` or `sample`"))
         }
     };
-    Ok(ParsedReq { body, t_drift: v.t_drift, adc_bits: v.adc_bits })
+    Ok(ParsedReq { body, t_drift: v.t_drift, adc_bits: v.adc_bits,
+                   has_model: v.has_model })
+}
+
+/// Parse one request line into `scratch`. On success the id is in
+/// `scratch.id` and (for [`ReqBody::Features`]) the tensor is in
+/// `scratch.features`, exactly `feat_len` long.
+pub fn parse_request(line: &[u8], feat_len: usize, scratch: &mut ReqScratch)
+                     -> Result<ParsedReq, ParseError> {
+    let p = parse_request_cap(line, feat_len, scratch)?;
+    if p.body == ReqBody::Features && scratch.features.len() != feat_len {
+        return Err(ParseError::msg(
+            "`x` is shorter than the model feature length"));
+    }
+    Ok(p)
 }
 
 // ---------------------------------------------------------------------------
@@ -349,6 +386,41 @@ mod tests {
         ] {
             assert!(parse(line, 2).0.is_err(), "accepted bad request: {why}");
         }
+    }
+
+    #[test]
+    fn model_field_parses_and_resets() {
+        let (r, sc) = parse(r#"{"id": "a", "model": "vww", "x": [1, 2]}"#, 2);
+        let p = r.unwrap();
+        assert!(p.has_model);
+        assert_eq!(sc.model, "vww");
+        assert_eq!(p.body, ReqBody::Features);
+        // absent model leaves the flag clear and the buffer empty
+        let (r, sc) = parse(r#"{"id": "b", "sample": 0}"#, 2);
+        assert!(!r.unwrap().has_model);
+        assert!(sc.model.is_empty());
+        // non-string model is rejected
+        let (r, _) = parse(r#"{"id": "c", "model": 3, "x": [1, 2]}"#, 2);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn cap_parse_accepts_short_x_but_never_long() {
+        let mut sc = ReqScratch::new(4);
+        // shorter than the cap: accepted (exact check is per model,
+        // downstream)
+        let p = parse_request_cap(br#"{"id": "a", "x": [1, 2]}"#, 4, &mut sc)
+            .unwrap();
+        assert_eq!(p.body, ReqBody::Features);
+        assert_eq!(sc.features, vec![1.0, 2.0]);
+        // longer than the cap still errors without growing the buffer
+        let r = parse_request_cap(br#"{"id": "a", "x": [1, 2, 3, 4, 5]}"#, 4,
+                                  &mut sc);
+        assert!(r.is_err());
+        assert_eq!(sc.features.capacity(), 4);
+        // the strict wrapper keeps demanding the exact length
+        assert!(parse_request(br#"{"id": "a", "x": [1, 2]}"#, 4, &mut sc)
+            .is_err());
     }
 
     #[test]

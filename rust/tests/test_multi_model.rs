@@ -1,0 +1,231 @@
+//! Multi-model router integration tests, hermetic via a two-variant
+//! synthetic bundle: the KWS-wake -> VWW-confirm pipeline, response
+//! integrity under mixed concurrent traffic (the model-extended batch key
+//! must never mix models in one launch), per-model admission control, and
+//! the weighted round-robin fairness guarantee — a flooded shard cannot
+//! starve the quiet model.
+//!
+//! Both shards serve identity models (logits bit-identical to the
+//! submitted features) with *different* feature lengths, so any
+//! cross-model routing or batching mixup corrupts a payload or its length
+//! and fails an exact assertion — no statistical accuracy arguments.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use analognets::backend::InferOpts;
+use analognets::coordinator::{MultiCoordinator, ServeConfig, ShardConfig};
+use analognets::datasets::synth::{self, SynthSpec};
+
+const KWS: &str = "wake_kws";
+const VWW: &str = "confirm_vww";
+const KWS_CLASSES: usize = 3;
+const VWW_CLASSES: usize = 5;
+
+/// Two identity shards in one bundle dir: a 3-feature "kws" wake model
+/// (the primary) and a 5-feature "vww" confirm model.
+fn shard_pair(tag: &str, max_wait_ms: u64, kws_depth: usize)
+              -> (Vec<ShardConfig>, std::path::PathBuf) {
+    let kws = SynthSpec::identity_dense(KWS, KWS_CLASSES);
+    let mut vww = SynthSpec::identity_dense(VWW, VWW_CLASSES);
+    vww.task = "vww".to_string();
+    vww.seed = 11;
+    let dir = synth::write_multi_bundle_tmp(tag, &[kws, vww]).unwrap();
+    let mk = |vid: &str| {
+        let mut cfg = ServeConfig::new(vid, 8);
+        cfg.artifacts_dir = dir.clone();
+        cfg.max_batch = 8;
+        cfg.max_wait = Duration::from_millis(max_wait_ms);
+        ShardConfig::new(vid, cfg)
+    };
+    let mut sk = mk(KWS);
+    sk.queue_depth = kws_depth;
+    (vec![sk, mk(VWW)], dir)
+}
+
+fn kws_x(i: usize) -> Vec<f32> {
+    (0..KWS_CLASSES).map(|j| i as f32 + 0.125 * j as f32).collect()
+}
+
+fn vww_x(i: usize) -> Vec<f32> {
+    (0..VWW_CLASSES).map(|j| i as f32 + 0.25 * j as f32).collect()
+}
+
+#[test]
+fn kws_wake_then_vww_confirm_pipeline() {
+    let (shards, dir) = shard_pair("pipeline", 5, 0);
+    let mc = MultiCoordinator::start(shards).unwrap();
+    assert_eq!(mc.primary().model_id, KWS, "first configured shard is primary");
+    assert_eq!(mc.models().len(), 2);
+    assert_eq!(mc.models()[0].feat_len, KWS_CLASSES);
+    assert_eq!(mc.models()[1].feat_len, VWW_CLASSES);
+
+    // always-on wake stage: the tiny KWS model screens the frame
+    let wake = mc.infer(KWS, kws_x(4), InferOpts::default()).unwrap();
+    assert_eq!(wake.logits, kws_x(4));
+    let woke = wake.pred as usize == KWS_CLASSES - 1;
+    assert!(woke, "monotone features argmax to the last channel");
+    // wake fired -> the confirm stage routes to the VWW model, same router
+    let confirm = mc.infer(VWW, vww_x(9), InferOpts::default()).unwrap();
+    assert_eq!(confirm.logits, vww_x(9));
+    assert_eq!(confirm.pred as usize, VWW_CLASSES - 1);
+
+    // each shard keeps its own canary health verdict
+    assert!(!mc.probe_health(KWS).unwrap().degraded);
+    assert!(!mc.probe_health(VWW).unwrap().degraded);
+
+    let m = mc.metrics.summary();
+    assert_eq!(m.completed, 2);
+    assert_eq!(m.per_model[KWS].completed, 1, "{m}");
+    assert_eq!(m.per_model[VWW].completed, 1, "{m}");
+    assert!(m.per_model[VWW].modeled_uj_per_inf > 0.0, "{m}");
+    mc.stop().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn mixed_traffic_responses_never_cross_models() {
+    let (shards, dir) = shard_pair("mixed", 1, 0);
+    let mc = Arc::new(MultiCoordinator::start(shards).unwrap());
+    let mut handles = Vec::new();
+    for c in 0..4usize {
+        let mc = mc.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..25usize {
+                let id = c * 1000 + i;
+                // alternate models within and across clients so both
+                // shards' staging queues are populated in the same windows
+                if (c + i) % 2 == 0 {
+                    let r = mc.infer(KWS, kws_x(id), InferOpts::default())
+                        .unwrap();
+                    assert_eq!(r.logits, kws_x(id),
+                               "client {c} request {i} got foreign logits");
+                } else {
+                    let r = mc.infer(VWW, vww_x(id), InferOpts::default())
+                        .unwrap();
+                    assert_eq!(r.logits, vww_x(id),
+                               "client {c} request {i} got foreign logits");
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = mc.metrics.summary();
+    assert_eq!(m.completed, 100);
+    assert_eq!(m.submit_rejects, 0, "{m}");
+    assert_eq!(m.per_model[KWS].completed, 50, "{m}");
+    assert_eq!(m.per_model[VWW].completed, 50, "{m}");
+    // a launch that mixed models would already have failed the exact
+    // logits assertions above (the feature lengths differ); the per-model
+    // launch ledgers must also partition the global launch count exactly
+    assert_eq!(m.per_model[KWS].launches + m.per_model[VWW].launches,
+               m.launches, "{m}");
+    let mc = Arc::try_unwrap(mc).ok().expect("clients joined");
+    mc.stop().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn flooded_kws_shard_cannot_starve_quiet_vww() {
+    // tiny admission bound on the hot shard: the flood must reject (not
+    // queue without limit), and the round-robin drain must keep serving
+    // the quiet model from its own lane
+    let (shards, dir) = shard_pair("starve", 1, 8);
+    let mc = Arc::new(MultiCoordinator::start(shards).unwrap());
+    assert_eq!(mc.models()[0].queue_depth, 8);
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut floods = Vec::new();
+    for _ in 0..2 {
+        let mc = mc.clone();
+        let stop = stop.clone();
+        floods.push(std::thread::spawn(move || {
+            // open-loop flood far beyond the shard's admission bound;
+            // rejects are the expected outcome. At most 64 accepted
+            // requests stay outstanding so the flood never blocks on the
+            // drain, yet memory stays bounded.
+            let mut rxs = std::collections::VecDeque::new();
+            let mut i = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                if let Ok(rx) = mc.submit(KWS, kws_x(i), InferOpts::default())
+                {
+                    rxs.push_back(rx);
+                }
+                if rxs.len() > 64 {
+                    let _ = rxs.pop_front().unwrap()
+                        .recv_timeout(Duration::from_secs(10));
+                }
+                i += 1;
+            }
+            for rx in rxs {
+                let _ = rx.recv_timeout(Duration::from_secs(10));
+            }
+        }));
+    }
+
+    // the quiet model: a closed-loop client that must keep being served
+    // with ms-scale latency while the other shard is saturated
+    for i in 0..25usize {
+        let rx = mc.submit(VWW, vww_x(i), InferOpts::default())
+            .expect("quiet model must never reject: its lane is its own");
+        let r = rx.recv_timeout(Duration::from_secs(10))
+            .expect("quiet model starved: confirm request never answered");
+        assert_eq!(r.logits, vww_x(i), "request {i}");
+    }
+    stop.store(true, Ordering::Relaxed);
+    for h in floods {
+        h.join().unwrap();
+    }
+
+    let m = mc.metrics.summary();
+    let kws = &m.per_model[KWS];
+    let vww = &m.per_model[VWW];
+    assert_eq!(vww.completed, 25, "{m}");
+    assert_eq!(vww.submit_rejects, 0, "admission is per model: {m}");
+    assert!(kws.submit_rejects > 0,
+            "the flood never hit the admission bound: {m}");
+    assert!(kws.completed > 0, "rejecting everything is not fairness: {m}");
+    // generous CI bound: weighted round-robin keeps the quiet model at
+    // most one drain pass away, so its tail latency stays far below the
+    // starvation regime even under scheduler jitter
+    assert!(vww.p99_us < 5_000_000.0, "quiet-model p99 {}us: {m}",
+            vww.p99_us);
+    let mc = Arc::try_unwrap(mc).ok().expect("floods joined");
+    mc.stop().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn unknown_models_and_bad_lengths_reject_before_the_worker() {
+    let (shards, dir) = shard_pair("rejects", 2, 0);
+    // duplicate ids are a start-time configuration error
+    let dup = vec![shards[0].clone(), shards[0].clone()];
+    let err = MultiCoordinator::start(dup).unwrap_err();
+    assert!(format!("{err}").contains("duplicate model id"), "{err}");
+
+    let mc = MultiCoordinator::start(shards).unwrap();
+    let err =
+        mc.submit("nope", kws_x(0), InferOpts::default()).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("unknown model `nope`"), "{msg}");
+    assert!(msg.contains(KWS) && msg.contains(VWW),
+            "the error must list the served models: {msg}");
+    // wrong per-model length: a vww-sized payload on the kws shard
+    let err = mc.submit(KWS, vww_x(0), InferOpts::default()).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("bad feature length"), "{msg}");
+
+    let m = mc.metrics.summary();
+    assert_eq!(m.submit_rejects, 2, "{m}");
+    assert_eq!(m.per_model[KWS].submit_rejects, 1, "{m}");
+    // the unknown-model reject belongs to no shard, and an untouched
+    // model has no per-model entry at all (single-model ledgers stay
+    // empty the same way)
+    assert!(!m.per_model.contains_key(VWW), "{m}");
+    assert_eq!(m.completed, 0);
+    mc.stop().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -13,7 +13,8 @@ use std::cell::Cell;
 use std::sync::Arc;
 use std::time::Duration;
 
-use analognets::coordinator::{Coordinator, ServeConfig};
+use analognets::coordinator::{Coordinator, MultiCoordinator, ServeConfig,
+                              ShardConfig};
 use analognets::datasets::synth::{self, SynthSpec};
 use analognets::pcm::{T_1Y, T_C_SECONDS};
 use analognets::server::protocol::{self, ReqBody, ReqScratch};
@@ -371,5 +372,153 @@ fn sample_requests_serve_dataset_rows_and_check_bounds() {
     server2.shutdown();
     drop(server2);
 
+    stop_all(server, coord, &dir);
+}
+
+// ---------------------------------------------------------------------------
+// Multi-model listeners: the `"model"` field
+// ---------------------------------------------------------------------------
+
+/// Two identity shards with *different* feature lengths (4 and 6) behind
+/// one listener; the primary ("wake") model carries the dataset slot, the
+/// "confirm" model deliberately has none. Returns (server, router, dir).
+fn start_multi_identity(tag: &str)
+                        -> (WireServer, Arc<MultiCoordinator>,
+                            std::path::PathBuf) {
+    let wake = SynthSpec::identity_dense(&format!("wake_{tag}"), CLASSES);
+    let mut confirm =
+        SynthSpec::identity_dense(&format!("confirm_{tag}"), CLASSES + 2);
+    confirm.task = "vww".to_string();
+    confirm.seed = 11;
+    let dir = synth::write_multi_bundle_tmp(&format!("wire_{tag}"),
+                                            &[wake.clone(), confirm.clone()])
+        .unwrap();
+    let mk = |vid: &str| {
+        let mut cfg = ServeConfig::new(vid, 8);
+        cfg.artifacts_dir = dir.clone();
+        cfg.max_wait = Duration::from_millis(2);
+        ShardConfig::new(vid, cfg)
+    };
+    let mc = Arc::new(
+        MultiCoordinator::start(vec![mk(&wake.vid), mk(&confirm.vid)])
+            .unwrap());
+    let store = analognets::runtime::ArtifactStore::open(&dir).unwrap();
+    let ds = Arc::new(store.dataset(&wake.task).unwrap());
+    let server = WireServer::start_multi(mc.clone(), vec![Some(ds), None],
+                                         WireConfig::default())
+        .unwrap();
+    (server, mc, dir)
+}
+
+fn stop_multi(mut server: WireServer, mc: Arc<MultiCoordinator>,
+              dir: &std::path::Path) {
+    server.shutdown();
+    drop(server); // releases the ConnShared -> MultiCoordinator Arc
+    match Arc::try_unwrap(mc) {
+        Ok(c) => c.stop().unwrap(),
+        Err(c) => c.request_stop(),
+    }
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn model_field_routes_on_a_multi_server() {
+    let (server, mc, dir) = start_multi_identity("multi");
+    let wake_id = mc.models()[0].model_id.clone();
+    let confirm_id = mc.models()[1].model_id.clone();
+    let mut cl = WireClient::connect(server.local_addr()).unwrap();
+
+    // the wake -> confirm pipeline, explicitly addressed per line
+    let wx = vec![1.0f32, 2.0, 3.0, 4.0];
+    let cx = vec![9.0f32, 8.0, 7.0, 6.0, 5.0, 4.5];
+    let rep = cl.roundtrip_x_model("w0", Some(&wake_id), &wx, None, None)
+        .unwrap();
+    assert!(rep.ok, "{:?}", rep.error);
+    assert_eq!(rep.logits, wx, "wake logits are the exact identity echo");
+    let rep = cl.roundtrip_x_model("c0", Some(&confirm_id), &cx, None, None)
+        .unwrap();
+    assert!(rep.ok, "{:?}", rep.error);
+    assert_eq!(rep.logits, cx, "confirm logits are the exact identity echo");
+
+    // no `"model"`: the primary serves, exactly like a single-model server
+    let rep = cl.roundtrip_x("w1", &wx, None, None).unwrap();
+    assert!(rep.ok, "{:?}", rep.error);
+    assert_eq!(rep.logits, wx);
+
+    // unknown model: structured error with the id echoed and the served
+    // ids listed — and the connection stays alive
+    let rep = cl.roundtrip_x_model("uk", Some("nope"), &wx, None, None)
+        .unwrap();
+    assert!(!rep.ok);
+    let err = rep.error.unwrap_or_default();
+    assert!(err.contains("unknown model `nope`"), "{err}");
+    assert!(err.contains(wake_id.as_str()) && err.contains(confirm_id.as_str()),
+            "the error must list the served models: {err}");
+    assert_eq!(rep.id, "uk");
+
+    // per-model exact length: a confirm-sized payload on the wake model
+    let rep = cl.roundtrip_x_model("len", Some(&wake_id), &cx, None, None)
+        .unwrap();
+    assert!(!rep.ok);
+    let err = rep.error.unwrap_or_default();
+    assert!(err.contains("wants"), "{err}");
+    assert_eq!(rep.id, "len");
+
+    // beyond every served model's length: rejected at parse time (the
+    // capacity bound is the largest served feature length)
+    let over = vec![0.5f32; CLASSES + 3];
+    let rep = cl.roundtrip_x_model("ov", Some(&confirm_id), &over, None, None)
+        .unwrap();
+    assert!(!rep.ok);
+    assert!(rep.error.unwrap_or_default().contains("longer than"));
+
+    // `sample` requests route through the per-model dataset slots: the
+    // primary has one, the confirm model answers a structured error
+    let store = analognets::runtime::ArtifactStore::open(&dir).unwrap();
+    let row0: Vec<f32> = store.dataset("kws").unwrap().batch(0, 1).to_vec();
+    cl.send_sample("s0", 0, None, None).unwrap();
+    let rep = cl.recv().unwrap();
+    assert!(rep.ok, "{:?}", rep.error);
+    assert_eq!(rep.logits, row0, "primary sample serves dataset row 0");
+    cl.send_raw(&format!(
+        r#"{{"id": "nods", "model": "{confirm_id}", "sample": 0}}"#))
+        .unwrap();
+    let rep = cl.recv().unwrap();
+    assert!(!rep.ok);
+    assert!(rep.error.unwrap_or_default().contains("no dataset"));
+    assert_eq!(rep.id, "nods");
+
+    let m = mc.metrics.summary();
+    assert_eq!(m.wire_requests, 8);
+    assert_eq!(m.wire_rejects, 4);
+    assert_eq!(m.per_model[wake_id.as_str()].completed, 3);
+    assert_eq!(m.per_model[confirm_id.as_str()].completed, 1);
+
+    drop(cl);
+    stop_multi(server, mc, &dir);
+}
+
+#[test]
+fn single_model_listener_rejects_the_model_field() {
+    let (server, coord, dir, _feat) = start_identity("nomulti", |_| {});
+    let mut cl = WireClient::connect(server.local_addr()).unwrap();
+
+    let x = vec![1.0f32, 2.0, 3.0, 4.0];
+    let rep = cl.roundtrip_x_model("m0", Some("ident_nomulti"), &x, None, None)
+        .unwrap();
+    assert!(!rep.ok, "a single-model listener must not silently ignore \
+                      `model`");
+    assert!(rep.error.unwrap_or_default().contains("not accepted here"));
+    assert_eq!(rep.id, "m0");
+
+    // the connection survives and unaddressed requests still serve
+    let rep = cl.roundtrip_x("m1", &x, None, None).unwrap();
+    assert!(rep.ok, "{:?}", rep.error);
+    assert_eq!(rep.logits, x);
+
+    let m = coord.metrics.summary();
+    assert_eq!(m.wire_rejects, 1);
+    assert_eq!(m.wire_requests, 2);
+    drop(cl);
     stop_all(server, coord, &dir);
 }

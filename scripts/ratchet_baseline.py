@@ -26,6 +26,8 @@ BENCH_native.json) feed the committed smoke floors:
     req_s        <- fraction * BENCH_native.json req_s
     analog_req_s <- fraction * BENCH_analog.json req_s
     wire_req_s   <- fraction * BENCH_native.json wire.req_s
+    kws_req_s    <- fraction * BENCH_native.json multi.kws_req_s
+    vww_req_s    <- fraction * BENCH_native.json multi.vww_req_s
 
 Each ratcheted key is marked `measured: true` in the baseline's `measured`
 map so readers can tell a real ratchet from a hand-picked smoke value.
@@ -99,6 +101,9 @@ def main():
         updates.append(("req_s", pick(native, "req_s")))
         if "wire" in native:
             updates.append(("wire_req_s", pick(native, "wire", "req_s")))
+        if "multi" in native:
+            updates.append(("kws_req_s", pick(native, "multi", "kws_req_s")))
+            updates.append(("vww_req_s", pick(native, "multi", "vww_req_s")))
     # inverted (upper-bound) gates: (key, measured, floor, headroom factor)
     gap_updates = []
     if args.analog:
